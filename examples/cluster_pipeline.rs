@@ -1,0 +1,60 @@
+//! The paper's headline unsupervised pipeline (section II): autoencoder
+//! dimensionality reduction on the memristor cores feeding k-means on
+//! the digital clustering core.
+//!
+//! MNIST-like 784-dim data → layerwise-pretrained 784→…→20 encoder →
+//! 20-dim codes → k-means (k = 10) on the clustering core → purity.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example cluster_pipeline
+//! ```
+
+use restream::config::apps;
+use restream::coordinator::Engine;
+use restream::{datasets, metrics};
+
+fn main() -> anyhow::Result<()> {
+    let dr = apps::network("mnist_dr").unwrap();
+    let km = apps::kmeans_app("mnist_kmeans").unwrap();
+    let engine = Engine::open_default()?;
+
+    let ds = datasets::mnist(512, 1);
+    let xs = ds.rows();
+
+    // Stage-by-stage AE pre-training (chip reconfigured between stages).
+    println!("layerwise pre-training {} ({} stages)…",
+             dr.name, dr.layers.len() - 1);
+    let (encoder, reports) = engine.train_dr(dr, &xs, 1, 0.6, 0)?;
+    for (s, r) in reports.iter().enumerate() {
+        println!(
+            "  stage {s}: loss {:.4} ({} samples, {:.1}s)",
+            r.loss_curve.last().unwrap(),
+            r.samples_seen,
+            r.wall_s
+        );
+    }
+
+    // Encode through the full encoder stack (the *_fwd artifact).
+    let codes = engine.encode(dr, &encoder, &xs)?;
+    println!("encoded {} samples to {} dims", codes.len(), codes[0].len());
+
+    // Cluster the codes on the digital clustering core model.
+    let (_, assign) = engine.kmeans(km, &codes, 12, 0)?;
+    let purity = metrics::purity(&assign, &ds.y, km.clusters, ds.classes);
+    println!("k-means purity over AE codes: {purity:.3}");
+
+    // Baseline: cluster the raw 784-dim pixels with the Rust reference
+    // k-means (what the chip avoids by reducing dimensionality first).
+    let mut rng = restream::testing::Rng::seeded(0);
+    let flat: Vec<f32> = xs.iter().flatten().copied().collect();
+    let mut raw = restream::kmeans::KMeans::init(&flat, xs.len(), 784, 10, &mut rng);
+    let (raw_assign, _) = raw.fit(&flat, xs.len(), 12, 1e-5);
+    let raw_purity = metrics::purity(&raw_assign, &ds.y, 10, ds.classes);
+    println!("k-means purity on raw pixels:  {raw_purity:.3}");
+    println!(
+        "(the clustering core cannot even hold 784 dims — max {} — \
+         which is the paper's point)",
+        restream::config::hwspec::KMEANS_MAX_DIM
+    );
+    Ok(())
+}

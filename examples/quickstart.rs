@@ -1,0 +1,47 @@
+//! Quickstart: train the paper's Iris classifier (Fig 16 workload) on
+//! the simulated chip and print the learning curve, the test accuracy,
+//! and where the chip's time/energy goes.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use restream::config::{apps, SystemConfig};
+use restream::coordinator::Engine;
+use restream::{datasets, metrics, report, sim};
+
+fn main() -> anyhow::Result<()> {
+    let sys = SystemConfig::default();
+    println!("{}", report::chip_summary(&sys));
+
+    // 1. data: the Iris workload of paper section VI.A
+    let ds = datasets::iris(0);
+    let (train, test) = ds.split(0.8, 0);
+    let xs = train.rows();
+
+    // 2. train on-chip: stochastic BP through the memristor constraints,
+    //    functionally executed by the AOT-compiled XLA artifact
+    let net = apps::network("iris_class").unwrap();
+    let engine = Engine::open_default()?;
+    let (params, rep) =
+        engine.train(net, &xs, |i| train.target(i, 1), 20, 1.0, 0)?;
+    println!("loss curve (every 4th epoch):");
+    for (e, l) in rep.loss_curve.iter().enumerate().step_by(4) {
+        println!("  epoch {e:>2}: {l:.4}");
+    }
+
+    // 3. evaluate (binary: setosa vs rest — the net has one output)
+    let preds = engine.classify(net, &params, &test.rows())?;
+    let truth: Vec<usize> = test.y.iter().map(|&y| y.min(1)).collect();
+    println!("test accuracy: {:.3}", metrics::accuracy(&preds, &truth));
+
+    // 4. what would this cost on the chip? (paper Tables III/IV)
+    let t = sim::train_cost(net, &sys).map_err(anyhow::Error::msg)?;
+    let r = sim::recognition_cost(net, &sys).map_err(anyhow::Error::msg)?;
+    println!(
+        "\nchip cost model: train {:.2} us / {:.2e} J per sample; \
+         recognition {:.2} us / {:.2e} J",
+        t.time_s * 1e6, t.total_j, r.time_s * 1e6, r.total_j
+    );
+    Ok(())
+}

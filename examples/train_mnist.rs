@@ -1,0 +1,101 @@
+//! End-to-end driver: train the paper's MNIST classifier
+//! (784→300→200→100→10, Table I) on the full three-layer stack for a few
+//! hundred steps and log the loss curve — the repository's whole-system
+//! proof that L1 Pallas kernels → L2 JAX graph → HLO artifacts → Rust
+//! PJRT runtime → streaming coordinator compose.
+//!
+//! Uses the batched (b16) training artifact: each step is one XLA
+//! execution over 16 samples of stochastic-gradient accumulation.
+//! Results are recorded in EXPERIMENTS.md.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example train_mnist [steps]
+//! ```
+
+use anyhow::anyhow;
+use restream::config::{apps, SystemConfig};
+use restream::coordinator::init_conductances;
+use restream::runtime::{ArrayF32, Runtime};
+use restream::{datasets, gpu, metrics, sim};
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300);
+    let batch = apps::BIG_TRAIN_BATCH;
+    let net = apps::network("mnist_class").unwrap();
+    let sys = SystemConfig::default();
+
+    // synthetic MNIST (784-dim, 10 classes; see DESIGN.md substitutions)
+    let ds = datasets::mnist(2048, 0);
+    let (train, test) = ds.split(0.85, 0);
+    println!(
+        "training {} on {} samples, batch {batch}, {steps} steps",
+        net.name,
+        train.len()
+    );
+
+    let rt = Runtime::open_default()?;
+    let exe = rt.load(&format!("mnist_class_train_b{batch}"))?;
+    let mut params = init_conductances(net.layers, 0);
+    let lr = ArrayF32::scalar(0.25);
+
+    let start = std::time::Instant::now();
+    let mut curve = Vec::new();
+    for step in 0..steps {
+        // next batch (wrapping over the training set)
+        let mut xb = Vec::with_capacity(batch * 784);
+        let mut tb = Vec::with_capacity(batch * 10);
+        for k in 0..batch {
+            let i = (step * batch + k) % train.len();
+            xb.extend_from_slice(train.sample(i));
+            tb.extend_from_slice(&train.target(i, 10));
+        }
+        let mut ins = params.clone();
+        ins.push(ArrayF32::matrix(batch, 784, xb).map_err(|e| anyhow!(e))?);
+        ins.push(ArrayF32::matrix(batch, 10, tb).map_err(|e| anyhow!(e))?);
+        ins.push(lr.clone());
+        let mut outs = exe.run(&ins)?;
+        let loss = outs.pop().unwrap().data[0];
+        params = outs;
+        curve.push(loss);
+        if step % 25 == 0 || step + 1 == steps {
+            println!("step {step:>4}  loss {loss:.5}");
+        }
+    }
+    let wall = start.elapsed().as_secs_f64();
+    println!(
+        "\n{} steps ({} samples) in {wall:.1}s = {:.1} samples/s",
+        steps,
+        steps * batch,
+        (steps * batch) as f64 / wall
+    );
+    let first5 = metrics::mean(&curve[..5].iter().map(|&x| x as f64).collect::<Vec<_>>());
+    let last5 = metrics::mean(&curve[curve.len() - 5..].iter().map(|&x| x as f64).collect::<Vec<_>>());
+    println!("loss: first-5 mean {first5:.4} -> last-5 mean {last5:.4}");
+
+    // accuracy through the recognition artifact
+    let engine = restream::coordinator::Engine::new(rt);
+    let preds = engine.classify(net, &params, &test.rows())?;
+    let acc = metrics::accuracy(&preds, &test.y);
+    println!("test accuracy: {acc:.3} (10 classes, chance = 0.100)");
+
+    // chip-model context: what the paper's architecture would do
+    let row = sim::train_cost(net, &sys).map_err(anyhow::Error::msg)?;
+    let g = gpu::train_cost(net);
+    println!(
+        "\nchip model: {:.2} us / {:.2e} J per sample on {} cores; \
+         K20 baseline {:.1} us -> speedup {:.1}x, energy eff {:.1e}x",
+        row.time_s * 1e6,
+        row.total_j,
+        row.cores,
+        g.time_s * 1e6,
+        g.time_s / row.time_s,
+        g.energy_j / row.total_j
+    );
+    anyhow::ensure!(last5 < first5 * 0.8, "loss did not fall");
+    anyhow::ensure!(acc > 0.5, "accuracy {acc} too low");
+    println!("END-TO-END OK");
+    Ok(())
+}

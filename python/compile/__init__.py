@@ -1,0 +1,1 @@
+"""Build-time compile path for ReStream (never imported at runtime)."""

@@ -1,0 +1,192 @@
+"""AOT lowering: JAX model graphs -> HLO text artifacts for the Rust runtime.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published ``xla`` crate) rejects; the text parser
+reassigns ids and round-trips cleanly. Lowering goes through stablehlo ->
+XlaComputation with ``return_tuple=True``; the Rust side unwraps the tuple.
+
+Each artifact gets a ``.meta`` sidecar listing the exact parameter and
+result shapes so the Rust runtime can validate its buffers at load time.
+
+Run via ``make artifacts`` (which is a no-op when inputs are unchanged);
+``python -m compile.aot --out ../artifacts [--only REGEX]``.
+"""
+
+import argparse
+import os
+import re
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import apps, hwspec as hw, model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def net_param_specs(layers):
+    specs = []
+    for n_in, n_out in zip(layers[:-1], layers[1:]):
+        specs += [f32(n_in + 1, n_out), f32(n_in + 1, n_out)]
+    return specs
+
+
+def train_fn(n_layers):
+    def fn(*args):
+        params, (x, t, lr) = args[: 2 * n_layers], args[2 * n_layers:]
+        return model.mlp_train_step(list(params), x, t, lr)
+    return fn
+
+
+def train_chunk_fn(n_layers):
+    def fn(*args):
+        params, (xs, ts, lr) = args[: 2 * n_layers], args[2 * n_layers:]
+        return model.mlp_train_chunk(list(params), xs, ts, lr)
+    return fn
+
+
+def infer_fn(n_layers):
+    def fn(*args):
+        params, (x,) = args[: 2 * n_layers], args[2 * n_layers:]
+        return model.mlp_infer(list(params), x)
+    return fn
+
+
+def ae_fwd_fn(n_layers):
+    def fn(*args):
+        params, (x,) = args[: 2 * n_layers], args[2 * n_layers:]
+        return model.ae_fwd(list(params), x)
+    return fn
+
+
+def registry():
+    """Yield (artifact_name, fn, arg_specs) for every export."""
+    entries = []
+
+    def add(name, fn, specs):
+        entries.append((name, fn, specs))
+
+    for name, layers in apps.NETWORKS.items():
+        nl = len(layers) - 1
+        p = net_param_specs(layers)
+        is_dr = name.endswith("_dr")
+        is_ae = name.endswith("_ae")
+        # training graphs: per-sample reference + scan-chunked hot path
+        if not is_dr:
+            add(
+                f"{name}_train_b{apps.TRAIN_BATCH}",
+                train_fn(nl),
+                p + [f32(apps.TRAIN_BATCH, layers[0]),
+                     f32(apps.TRAIN_BATCH, layers[-1]),
+                     f32(1, 1)],
+            )
+            add(
+                f"{name}_trainchunk_c{apps.TRAIN_CHUNK}",
+                train_chunk_fn(nl),
+                p + [f32(apps.TRAIN_CHUNK, layers[0]),
+                     f32(apps.TRAIN_CHUNK, layers[-1]),
+                     f32(1, 1)],
+            )
+        # forward graph
+        fwd = ae_fwd_fn(nl) if is_ae else infer_fn(nl)
+        add(f"{name}_fwd_b{apps.FWD_BATCH}", fwd,
+            p + [f32(apps.FWD_BATCH, layers[0])])
+        # dimensionality-reduction apps: layerwise AE stage training +
+        # encoder-only forward
+        if is_dr:
+            for i, (n_in, n_hid) in enumerate(apps.dr_stages(name)):
+                sp = net_param_specs([n_in, n_hid, n_in])
+                add(
+                    f"{name}_stage{i}_train_b{apps.TRAIN_BATCH}",
+                    train_fn(2),
+                    sp + [f32(apps.TRAIN_BATCH, n_in),
+                          f32(apps.TRAIN_BATCH, n_in),
+                          f32(1, 1)],
+                )
+                add(
+                    f"{name}_stage{i}_trainchunk_c{apps.TRAIN_CHUNK}",
+                    train_chunk_fn(2),
+                    sp + [f32(apps.TRAIN_CHUNK, n_in),
+                          f32(apps.TRAIN_CHUNK, n_in),
+                          f32(1, 1)],
+                )
+
+    # batched-training variant for the end-to-end example
+    layers = apps.NETWORKS["mnist_class"]
+    add(
+        f"mnist_class_train_b{apps.BIG_TRAIN_BATCH}",
+        train_fn(len(layers) - 1),
+        net_param_specs(layers)
+        + [f32(apps.BIG_TRAIN_BATCH, layers[0]),
+           f32(apps.BIG_TRAIN_BATCH, layers[-1]),
+           f32(1, 1)],
+    )
+
+    # clustering-core step
+    for name, (d, k) in apps.KMEANS.items():
+        add(
+            f"{name}_step_b{apps.FWD_BATCH}",
+            model.kmeans_step,
+            [f32(apps.FWD_BATCH, d), f32(k, d)],
+        )
+    return entries
+
+
+def shape_str(s):
+    dims = "x".join(str(d) for d in s.shape)
+    return f"f32[{dims or 'scalar'}]"
+
+
+def export_one(name, fn, specs, out_dir):
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    out_tree = jax.eval_shape(fn, *specs)
+    flat_out = jax.tree_util.tree_leaves(out_tree)
+    meta_path = os.path.join(out_dir, f"{name}.meta")
+    with open(meta_path, "w") as f:
+        for i, s in enumerate(specs):
+            f.write(f"input {i} {shape_str(s)}\n")
+        for i, s in enumerate(flat_out):
+            f.write(f"output {i} {shape_str(s)}\n")
+    return len(text)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="regex filter over artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    pat = re.compile(args.only) if args.only else None
+    n = 0
+    for name, fn, specs in registry():
+        if pat and not pat.search(name):
+            continue
+        size = export_one(name, fn, specs, args.out)
+        n += 1
+        print(f"[aot] {name}: {size} chars", flush=True)
+    if n == 0:
+        print("[aot] nothing matched --only filter", file=sys.stderr)
+        sys.exit(1)
+    print(f"[aot] wrote {n} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Application registry — paper Table I, single source of truth.
+
+Mirrored by ``rust/src/config/apps.rs``; the artifact names produced here
+are the names the Rust runtime loads, so the two sides must agree. Keep
+this file dependency-free (imported by both model code and tests).
+"""
+
+# name -> layer sizes (Table I)
+NETWORKS = {
+    "iris_class": [4, 10, 1],          # section VI.A supervised demo
+    "iris_ae": [4, 2, 4],              # section VI.B unsupervised demo
+    "kdd_ae": [41, 15, 41],            # anomaly detection
+    "mnist_class": [784, 300, 200, 100, 10],
+    "mnist_dr": [784, 300, 200, 100, 20],
+    "isolet_class": [617, 2000, 1000, 500, 250, 26],
+    "isolet_dr": [617, 2000, 1000, 500, 250, 20],
+}
+
+# autoencoder apps train layer-by-layer: each stage is an n->h->n AE
+def dr_stages(name):
+    layers = NETWORKS[name]
+    return [(layers[i], layers[i + 1]) for i in range(len(layers) - 1)]
+
+# clustering-core problems: (dims, clusters) after dimensionality reduction
+KMEANS = {
+    "mnist_kmeans": (20, 10),
+    "isolet_kmeans": (20, 26),
+}
+
+TRAIN_BATCH = 1      # stochastic BP, per-sample, as on chip
+FWD_BATCH = 64       # recognition batch the coordinator streams
+BIG_TRAIN_BATCH = 16  # batched-training variant for the e2e example
+TRAIN_CHUNK = 32      # samples scanned inside one chunked train artifact

@@ -1,0 +1,45 @@
+"""Hardware constraint constants for the ReStream memristor chip.
+
+Single source of truth on the python (compile) side; mirrored in
+``rust/src/config/hwspec.rs``. Every number traces to the paper:
+
+* neuron output range [-0.5, 0.5]  — op-amp rails V_DD=0.5 V, V_SS=-0.5 V
+  (section III.B).
+* activation h(x) = x/4 clipped to the rails (Eq. 3 / Fig 6); it
+  approximates f(x) = sigmoid(x) - 0.5.
+* neuron outputs crossing the NoC are discretised by a 3-bit ADC
+  (section IV.A).
+* back-propagated errors are discretised to 8 bits: 1 sign + 7 magnitude
+  (section III.F step 1).
+* f'(DP) is looked up from a table (section III.F step 3) — we model a
+  64-entry LUT over the clipped DP range.
+* a neural core is a 400x200 crossbar = 400 inputs x 100 differential
+  neurons (section IV.A); one input row is reserved for the bias.
+* conductances are bounded: R_on ~ 10 kOhm, R_off/R_on ~ 1000 (section
+  III.A), i.e. normalised g in [G_MIN, G_MAX] = [0.001, 1.0].
+"""
+
+# Op-amp output rails (volts, also the numeric range of all activations).
+V_RAIL = 0.5
+
+# h(x) linear-region slope and clip point: h(x) = x/4 for |x| < 2.
+H_SLOPE = 0.25
+H_CLIP_IN = 2.0
+
+# ADC/DAC precisions.
+OUT_BITS = 3          # neuron output ADC (section IV.A)
+ERR_BITS = 8          # error discretisation: 1 sign + 7 magnitude bits
+ERR_MAX = 1.0         # full-scale range of the error ADC (|t - y| <= 2*V_RAIL)
+LUT_SIZE = 64         # f'(DP) lookup table entries
+
+# Crossbar geometry: 400 rows x 200 columns = 400 inputs x 100 neurons
+# (two columns per neuron: sigma+ and sigma-).
+CORE_INPUTS = 400     # includes the bias row
+CORE_NEURONS = 100
+
+# Normalised conductance bounds (g = 1/R scaled so g_on = 1).
+G_MIN = 0.001         # R_off = 1000 * R_on
+G_MAX = 1.0
+
+# Weight w = g+ - g-  =>  w in [-(G_MAX-G_MIN), +(G_MAX-G_MIN)].
+W_MAX = G_MAX - G_MIN

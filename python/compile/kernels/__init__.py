@@ -1,0 +1,13 @@
+"""Pallas kernels modelling the ReStream chip's compute hot-spots."""
+
+from .crossbar_fwd import crossbar_fwd
+from .crossbar_bwd import crossbar_bwd
+from .weight_update import weight_update
+from .kmeans import kmeans_distances
+
+__all__ = [
+    "crossbar_fwd",
+    "crossbar_bwd",
+    "weight_update",
+    "kmeans_distances",
+]

@@ -1,0 +1,65 @@
+"""Shared helpers for the Pallas kernels.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so interpret-mode lowering (plain HLO ops) is the only
+way the rust runtime can run them. The BlockSpec structure is still written
+for the TPU deployment target (see DESIGN.md section 6): each grid step is
+one MXU-shaped matmul whose operand blocks fit comfortably in VMEM.
+"""
+
+import jax.numpy as jnp
+
+from .. import hwspec as hw
+
+INTERPRET = True
+
+
+def choose_block(dim: int, target: int) -> int:
+    """Largest divisor of ``dim`` that is <= ``target``.
+
+    Pallas blocks must tile the array exactly (edge masking is a TPU
+    lowering detail we cannot rely on under interpret mode), so block sizes
+    are chosen as divisors. Falls back to the full dimension when no
+    divisor is close enough to be worth a grid (< 2 blocks).
+    """
+    if dim <= target:
+        return dim
+    for b in range(target, 0, -1):
+        if dim % b == 0:
+            # A divisor so small it explodes the grid is worse than no grid.
+            if dim // b > 64 and b < target // 4:
+                return dim
+            return b
+    return dim
+
+
+def quantize_unit(x, bits):
+    """In-kernel clone of ref.quantize_unit (kept free of module deps)."""
+    levels = float(2**bits - 1)
+    x = jnp.clip(x, -hw.V_RAIL, hw.V_RAIL)
+    return jnp.round((x + hw.V_RAIL) * levels) / levels - hw.V_RAIL
+
+
+def quantize_err(x, bits=hw.ERR_BITS, full_scale=hw.ERR_MAX):
+    """In-kernel clone of ref.quantize_err (sign-magnitude ADC)."""
+    mag_levels = float(2 ** (bits - 1) - 1)
+    mag = jnp.clip(jnp.abs(x), 0.0, full_scale)
+    code = jnp.round(mag / full_scale * mag_levels)
+    return jnp.sign(x) * code / mag_levels * full_scale
+
+
+def activation(dp):
+    """Op-amp activation h(x): slope 1/4, clipped to the +-0.5 V rails."""
+    return jnp.clip(dp * hw.H_SLOPE, -hw.V_RAIL, hw.V_RAIL)
+
+
+def activation_deriv_lut(dp):
+    """LUT model of f'(DP); matches ref.activation_deriv_lut bit-exactly."""
+    idx = jnp.clip(
+        jnp.round((dp + hw.H_CLIP_IN) / (2 * hw.H_CLIP_IN) * (hw.LUT_SIZE - 1)),
+        0,
+        hw.LUT_SIZE - 1,
+    )
+    centre = idx / (hw.LUT_SIZE - 1) * (2 * hw.H_CLIP_IN) - hw.H_CLIP_IN
+    s = 1.0 / (1.0 + jnp.exp(-centre))
+    return s * (1.0 - s)

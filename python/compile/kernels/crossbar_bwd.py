@@ -1,0 +1,54 @@
+"""Pallas kernel: error back-propagation through the transposed crossbar.
+
+Models the backward phase circuit (paper Fig 9, Eq. 7): the discretised
+output errors +-delta_j are applied to the crossbar *columns* and the
+row-wise currents give delta_i = sum_j (g+_ij - g-_ij) delta_j. The result
+is discretised by the 8-bit (1 sign + 7 magnitude) error ADC before being
+latched into the buffer (section III.F step 2).
+
+TPU mapping: delta @ (g+ - g-)^T as a single MXU matmul per grid step;
+grid = (batch blocks, input-row blocks), so the conductance operand block
+is (bm x N_out) — the transpose is expressed through dot_general, no
+materialised transpose of the crossbar.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, choose_block, quantize_err
+
+
+def _bwd_kernel(delta_ref, gpos_ref, gneg_ref, out_ref):
+    w = gpos_ref[...] - gneg_ref[...]
+    back = jax.lax.dot_general(
+        delta_ref[...],
+        w,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    out_ref[...] = quantize_err(back)
+
+
+@jax.jit
+def crossbar_bwd(delta, gpos, gneg):
+    """(B, N_out) errors -> (B, N_in) previous-layer errors."""
+    b, n_out = delta.shape
+    n_in = gpos.shape[0]
+    bb = choose_block(b, 64)
+    bm = choose_block(n_in, 512)
+    grid = (b // bb, n_in // bm)
+    return pl.pallas_call(
+        _bwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, n_out), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, n_out), lambda i, j: (j, 0)),
+            pl.BlockSpec((bm, n_out), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, bm), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n_in), jnp.float32),
+        interpret=INTERPRET,
+    )(delta, gpos, gneg)

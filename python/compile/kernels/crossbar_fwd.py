@@ -1,0 +1,59 @@
+"""Pallas kernel: differential memristor crossbar forward pass.
+
+Models one evaluation cycle of a neural core (paper Figs 5 & 8): the input
+voltage vector is applied to the crossbar rows, every differential column
+pair produces DP_j = sum_i x_i (g+_ij - g-_ij), the op-amp applies
+h(DP_j), and a 3-bit ADC discretises the output for the routing network.
+
+TPU mapping (DESIGN.md section 6 / "Hardware adaptation"): the analog
+crossbar is one matmul on the MXU. The differential pair is folded into a
+single matmul against (g+ - g-) inside the kernel — one pass over the
+operands instead of two — and the ADC is VPU elementwise work fused in the
+same kernel, exactly where the paper fuses the ADC at the column output.
+Grid = (batch blocks, neuron blocks); each step's operand blocks
+(bb x N_in, N_in x bn) are sized to sit in VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import hwspec as hw
+from .common import INTERPRET, activation, choose_block, quantize_unit
+
+
+def _fwd_kernel(x_ref, gpos_ref, gneg_ref, y_ref, dp_ref, *, out_bits):
+    w = gpos_ref[...] - gneg_ref[...]
+    dp = jnp.dot(x_ref[...], w, preferred_element_type=jnp.float32)
+    dp_ref[...] = dp
+    y_ref[...] = quantize_unit(activation(dp), out_bits)
+
+
+@functools.partial(jax.jit, static_argnames=("out_bits",))
+def crossbar_fwd(x, gpos, gneg, out_bits=hw.OUT_BITS):
+    """(B, N_in) x (N_in, N_out) -> (y, dp), both (B, N_out)."""
+    b, n_in = x.shape
+    n_out = gpos.shape[1]
+    bb = choose_block(b, 64)
+    bn = choose_block(n_out, 512)
+    grid = (b // bb, n_out // bn)
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, out_bits=out_bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, n_in), lambda i, j: (i, 0)),
+            pl.BlockSpec((n_in, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((n_in, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bb, bn), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n_out), jnp.float32),
+            jax.ShapeDtypeStruct((b, n_out), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(x, gpos, gneg)

@@ -1,0 +1,45 @@
+"""Pallas kernel: digital clustering core distance datapath.
+
+Models the k-means core (paper Fig 13, section IV.B): for each input
+sample the Manhattan distances to all current cluster centres are
+evaluated in parallel subtract/accumulate lanes. The core supports up to
+32 centres of up to 32 dimensions; the kernel itself is shape-generic and
+the L3 mapper enforces the core's limits.
+
+TPU mapping: |x - c| reduction is VPU elementwise + reduce work; grid over
+batch blocks with the (small) centre matrix resident per step.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, choose_block
+
+
+def _dist_kernel(x_ref, c_ref, out_ref):
+    x = x_ref[...]            # (bb, D)
+    c = c_ref[...]            # (K, D)
+    out_ref[...] = jnp.sum(
+        jnp.abs(x[:, None, :] - c[None, :, :]), axis=-1
+    )
+
+
+@jax.jit
+def kmeans_distances(x, centres):
+    """(B, D), (K, D) -> (B, K) Manhattan distances."""
+    b, d = x.shape
+    k = centres.shape[0]
+    bb = choose_block(b, 128)
+    grid = (b // bb,)
+    return pl.pallas_call(
+        _dist_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, k), jnp.float32),
+        interpret=INTERPRET,
+    )(x, centres)

@@ -1,0 +1,109 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These implement the memristor-chip math at the same abstraction the paper's
+MATLAB model uses, with none of the Pallas tiling. Every Pallas kernel in
+this package is pytest-checked against these functions (see
+``python/tests``), and the L2 model graphs are themselves built from the
+kernels, so the oracle chain is: paper equations -> ref.py -> kernels ->
+model -> HLO artifacts -> rust runtime.
+"""
+
+import jax.numpy as jnp
+
+from .. import hwspec as hw
+
+
+def quantize_unit(x, bits):
+    """Uniform mid-rise quantiser of [-0.5, 0.5] to 2**bits levels.
+
+    Models the output ADC at a crossbar column (section IV.A). Values are
+    clipped to the op-amp rails first, exactly as the analog circuit does.
+    """
+    levels = float(2**bits - 1)
+    x = jnp.clip(x, -hw.V_RAIL, hw.V_RAIL)
+    return jnp.round((x + hw.V_RAIL) * levels) / levels - hw.V_RAIL
+
+
+def quantize_err(x, bits=hw.ERR_BITS, full_scale=hw.ERR_MAX):
+    """Sign-magnitude error quantiser (1 sign + bits-1 magnitude bits).
+
+    Models the error ADC of the back-propagation circuit (section III.F,
+    step 1: "errors are discretized into 8 bit representations").
+    """
+    mag_levels = float(2 ** (bits - 1) - 1)
+    mag = jnp.clip(jnp.abs(x), 0.0, full_scale)
+    code = jnp.round(mag / full_scale * mag_levels)
+    return jnp.sign(x) * code / mag_levels * full_scale
+
+
+def activation(dp):
+    """Op-amp activation h(x) (Eq. 3 / Fig 6): x/4 clipped to the rails."""
+    return jnp.clip(dp * hw.H_SLOPE, -hw.V_RAIL, hw.V_RAIL)
+
+
+def activation_deriv_lut(dp):
+    """f'(DP) via the training unit's lookup table (section III.F step 3).
+
+    The chip stores the derivative of the *target* activation
+    f(x) = sigmoid(x) - 0.5 in a LUT_SIZE-entry table indexed by the
+    discretised DP value over [-H_CLIP_IN, H_CLIP_IN].
+    """
+    idx = jnp.clip(
+        jnp.round(
+            (dp + hw.H_CLIP_IN) / (2 * hw.H_CLIP_IN) * (hw.LUT_SIZE - 1)
+        ),
+        0,
+        hw.LUT_SIZE - 1,
+    )
+    # Reconstruct the LUT entry analytically: centre of the indexed bin.
+    centre = idx / (hw.LUT_SIZE - 1) * (2 * hw.H_CLIP_IN) - hw.H_CLIP_IN
+    s = 1.0 / (1.0 + jnp.exp(-centre))
+    return s * (1.0 - s)
+
+
+def crossbar_fwd(x, gpos, gneg, out_bits=hw.OUT_BITS):
+    """Forward pass through one differential memristor crossbar.
+
+    x:     (B, N_in)  input voltages (bias row included by the caller)
+    gpos:  (N_in, N_out) sigma+ conductances
+    gneg:  (N_in, N_out) sigma- conductances
+    Returns (y, dp): quantised neuron outputs and the raw dot products
+    (DP_j is re-measured on chip during the update step; we return it so
+    the functional path matches the chip dataflow without a second pass).
+    """
+    dp = x @ (gpos - gneg)
+    y = quantize_unit(activation(dp), out_bits)
+    return y, dp
+
+
+def crossbar_bwd(delta, gpos, gneg):
+    """Back-propagate errors through the transposed crossbar (Fig 9, Eq 7).
+
+    delta: (B, N_out) errors at this layer's neurons
+    Returns (B, N_in) errors for the previous layer, discretised by the
+    8-bit error ADC.
+    """
+    back = delta @ (gpos - gneg).T
+    return quantize_err(back)
+
+
+def weight_update(gpos, gneg, x, delta, dp, lr):
+    """Training-pulse weight update (Eq. 6 / Fig 11).
+
+    dw = 2*eta * delta * f'(DP) * x, applied as +dw/2 on sigma+ and -dw/2 on
+    sigma-, each clipped to the physical conductance range.
+    """
+    factor = quantize_err(delta * activation_deriv_lut(dp))
+    dw = lr * (x.T @ factor)
+    gp = jnp.clip(gpos + 0.5 * dw, hw.G_MIN, hw.G_MAX)
+    gn = jnp.clip(gneg - 0.5 * dw, hw.G_MIN, hw.G_MAX)
+    return gp, gn
+
+
+def kmeans_distances(x, centres):
+    """Manhattan distances from each sample to each cluster centre.
+
+    Models the digital clustering core's subtract/accumulate datapath
+    (Fig 13): x (B, D), centres (K, D) -> (B, K).
+    """
+    return jnp.sum(jnp.abs(x[:, None, :] - centres[None, :, :]), axis=-1)

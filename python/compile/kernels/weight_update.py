@@ -1,0 +1,79 @@
+"""Pallas kernel: training-pulse weight update.
+
+Models the chip's weight-update step (paper Eq. 6, Fig 11): the training
+unit forms eta * delta_j * f'(DP_j) (f' from a lookup table, the product
+re-discretised by the 8-bit DAC that drives the pulse generator), the pulse
+amplitude is modulated by the input x_i on the row wire, and the combined
+voltage updates each differential pair by +dw/2 on sigma+ and -dw/2 on
+sigma-. Conductances are clipped to the physical [G_MIN, G_MAX] range —
+the device cannot be driven past R_on/R_off.
+
+TPU mapping: the update is a rank-B outer product x^T @ factor computed as
+one MXU matmul per conductance block; grid = (row blocks, column blocks).
+Both conductance matrices are updated in the same kernel so the factor
+matmul is computed once per block pair (the chip likewise shares the pulse
+generator between the odd and even columns, section III.F step 3).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import hwspec as hw
+from .common import (
+    INTERPRET,
+    activation_deriv_lut,
+    choose_block,
+    quantize_err,
+)
+
+
+def _update_kernel(x_ref, delta_ref, dp_ref, lr_ref, gpos_ref, gneg_ref,
+                   gp_out_ref, gn_out_ref):
+    factor = quantize_err(delta_ref[...] * activation_deriv_lut(dp_ref[...]))
+    dw = lr_ref[0, 0] * jax.lax.dot_general(
+        x_ref[...],
+        factor,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    gp_out_ref[...] = jnp.clip(gpos_ref[...] + 0.5 * dw, hw.G_MIN, hw.G_MAX)
+    gn_out_ref[...] = jnp.clip(gneg_ref[...] - 0.5 * dw, hw.G_MIN, hw.G_MAX)
+
+
+@jax.jit
+def weight_update(gpos, gneg, x, delta, dp, lr):
+    """Apply one training pulse; returns (gpos', gneg').
+
+    gpos/gneg: (N_in, N_out); x: (B, N_in); delta/dp: (B, N_out);
+    lr: (1, 1) learning-rate scalar (2*eta in the paper's Eq. 6 — the
+    factor of 2 from the differential pair is folded into lr).
+    """
+    n_in, n_out = gpos.shape
+    b = x.shape[0]
+    bm = choose_block(n_in, 1024)
+    bn = choose_block(n_out, 512)
+    grid = (n_in // bm, n_out // bn)
+    return pl.pallas_call(
+        _update_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, bm), lambda i, j: (0, i)),
+            pl.BlockSpec((b, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((b, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_in, n_out), jnp.float32),
+            jax.ShapeDtypeStruct((n_in, n_out), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(x, delta, dp, lr, gpos, gneg)

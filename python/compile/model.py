@@ -1,0 +1,193 @@
+"""Layer-2 JAX model graphs for the ReStream chip, built on the L1 kernels.
+
+These are the *functional* (numerics-only) models of what the chip
+computes; the architectural behaviour (timing, energy, NoC traffic) is
+simulated in the Rust layer. Everything here is build-time Python: the
+graphs are lowered once by ``aot.py`` to HLO text and executed from Rust
+over PJRT. No function in this module may appear on the request path.
+
+Faithfulness notes (paper section III):
+
+* weights are differential conductance pairs (g+, g-), bounded to the
+  device range [G_MIN, G_MAX];
+* every neuron output crossing a core boundary is 3-bit quantised
+  (section IV.A) and the op-amp clips to +-0.5 V (Eq. 3);
+* back-propagated errors are 8-bit sign-magnitude quantised (section
+  III.F); f'(DP) comes from a lookup table;
+* the bias is an extra crossbar row driven at the positive rail;
+* training is stochastic (per-sample) BP, exactly section III.E. The
+  f'(DP) factor is applied where the training unit forms the pulse
+  (Eq. 6); for nets deeper than two layers the same discretised product
+  drives the backward column DACs so the chain rule holds through depth.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import hwspec as hw
+from .kernels import (
+    crossbar_bwd,
+    crossbar_fwd,
+    kmeans_distances,
+    weight_update,
+)
+from .kernels.common import activation_deriv_lut, quantize_err
+
+
+# --------------------------------------------------------------------------
+# parameter helpers
+# --------------------------------------------------------------------------
+
+def init_params(layers, key, scale=1.0):
+    """Initialise differential conductance pairs for a layer list.
+
+    The paper initialises memristors to "high random resistances" (low
+    conductance); we centre both g+ and g- near G_MIN plus headroom and
+    encode a small random weight in the pair difference.
+    """
+    params = []
+    base = hw.G_MIN + 0.12  # programming headroom above R_off
+    for n_in, n_out in zip(layers[:-1], layers[1:]):
+        key, sub = jax.random.split(key)
+        w = (
+            jax.random.uniform(sub, (n_in + 1, n_out), jnp.float32,
+                               -scale, scale)
+            / jnp.sqrt(jnp.float32(n_in))
+        )
+        gpos = jnp.clip(base + 0.5 * w, hw.G_MIN, hw.G_MAX)
+        gneg = jnp.clip(base - 0.5 * w, hw.G_MIN, hw.G_MAX)
+        params += [gpos, gneg]
+    return params
+
+
+def _with_bias(x):
+    """Append the bias row: one input pinned at the positive rail."""
+    b = x.shape[0]
+    return jnp.concatenate(
+        [x, jnp.full((b, 1), hw.V_RAIL, dtype=x.dtype)], axis=1
+    )
+
+
+# --------------------------------------------------------------------------
+# forward / training graphs
+# --------------------------------------------------------------------------
+
+def mlp_forward(params, x, out_bits=hw.OUT_BITS):
+    """Run x through every crossbar layer; returns (y, acts, dps).
+
+    acts[l] is the (bias-augmented) input applied to layer l's rows —
+    exactly what the chip re-applies during the weight-update step.
+    """
+    acts, dps = [], []
+    h = jnp.clip(x, -hw.V_RAIL, hw.V_RAIL)
+    for l in range(0, len(params), 2):
+        a = _with_bias(h)
+        acts.append(a)
+        h, dp = crossbar_fwd(a, params[l], params[l + 1], out_bits=out_bits)
+        dps.append(dp)
+    return h, acts, dps
+
+
+def mlp_infer(params, x):
+    """Inference-only graph: returns the final-layer outputs."""
+    y, _, _ = mlp_forward(params, x)
+    return (y,)
+
+
+def ae_fwd(params, x):
+    """Autoencoder forward: returns (reconstruction, bottleneck code).
+
+    For a stack deeper than two crossbars the code is the output of the
+    middle layer (the encoder half).
+    """
+    acts, h = [], jnp.clip(x, -hw.V_RAIL, hw.V_RAIL)
+    outs = []
+    for l in range(0, len(params), 2):
+        a = _with_bias(h)
+        h, _ = crossbar_fwd(a, params[l], params[l + 1])
+        outs.append(h)
+    n_layers = len(params) // 2
+    code = outs[n_layers // 2 - 1] if n_layers > 1 else outs[-1]
+    return h, code
+
+
+def encode(params, x):
+    """Encoder-only stack (dimensionality-reduction path)."""
+    y, _, _ = mlp_forward(params, x)
+    return (y,)
+
+
+def mlp_train_step(params, x, t, lr):
+    """One stochastic-BP step (paper section III.E); returns params' + loss.
+
+    Forward -> output error (Eq. 4) -> per-layer backward (Eq. 5, through
+    the crossbar-transpose circuit of Fig 9) -> per-layer pulse update
+    (Eq. 6). All errors pass the 8-bit error ADC; the f'(DP) LUT product is
+    applied at each layer's training unit before propagating further.
+    """
+    y, acts, dps = mlp_forward(params, x)
+    n_layers = len(params) // 2
+    delta = quantize_err(t - y)                      # Eq. 4 + error ADC
+    new_params = list(params)
+    for l in range(n_layers - 1, -1, -1):
+        gpos, gneg = params[2 * l], params[2 * l + 1]
+        if l > 0:
+            # The training unit's discretised delta*f'(DP) product drives
+            # the backward column DACs (Fig 10 multiplexes this circuit).
+            eff = quantize_err(delta * activation_deriv_lut(dps[l]))
+            prev_delta = crossbar_bwd(eff, gpos, gneg)[:, :-1]  # drop bias
+        gp, gn = weight_update(gpos, gneg, acts[l], delta, dps[l], lr)
+        new_params[2 * l], new_params[2 * l + 1] = gp, gn
+        if l > 0:
+            delta = prev_delta
+    loss = jnp.mean((t - y) ** 2)
+    return tuple(new_params) + (loss,)
+
+
+def ae_train_step(params, x, lr):
+    """One layerwise-pretraining step: a 2-crossbar AE learns h(x) ~= x."""
+    return mlp_train_step(params, x, jnp.clip(x, -hw.V_RAIL, hw.V_RAIL), lr)
+
+
+# --------------------------------------------------------------------------
+# clustering-core graphs
+# --------------------------------------------------------------------------
+
+def kmeans_step(x, centres):
+    """One clustering-core pass over a batch (Fig 13 datapath).
+
+    Returns (assignments, per-centre accumulator, per-centre count) so the
+    Rust coordinator can fold batches into an epoch and divide at the end,
+    exactly like the core's centre-accumulator registers and counters.
+    """
+    dists = kmeans_distances(x, centres)
+    assign = jnp.argmin(dists, axis=1).astype(jnp.int32)
+    k = centres.shape[0]
+    acc = jax.ops.segment_sum(x, assign, num_segments=k)
+    counts = jax.ops.segment_sum(
+        jnp.ones((x.shape[0],), jnp.float32), assign, num_segments=k
+    )
+    # assignments cross the runtime boundary as f32 (uniform dtype keeps
+    # the Rust side's tensor type single-typed); they are exact small ints
+    return assign.astype(jnp.float32), acc, counts
+
+
+def mlp_train_chunk(params, xs, ts, lr):
+    """Scan stochastic BP over a chunk of samples inside one XLA program.
+
+    Semantically identical to calling :func:`mlp_train_step` per sample
+    in order (same per-sample updates); existence reason is performance:
+    the Rust runtime's PJRT wrapper cannot untuple device buffers, so a
+    per-sample artifact round-trips every conductance matrix through the
+    host on each step. Scanning K samples inside the artifact amortises
+    that boundary crossing K-fold (see EXPERIMENTS.md section Perf).
+
+    xs: (K, n_in); ts: (K, n_out); returns params' + (K,) losses.
+    """
+    def body(ps, xt):
+        x, t = xt
+        out = mlp_train_step(list(ps), x[None, :], t[None, :], lr)
+        return tuple(out[:-1]), out[-1]
+
+    final, losses = jax.lax.scan(body, tuple(params), (xs, ts))
+    return tuple(final) + (losses,)

@@ -1,0 +1,44 @@
+"""The Rust and Python hwspec files are twin sources of truth; this test
+pins them together by parsing the Rust constants."""
+
+import os
+import re
+
+from compile import hwspec as hw
+
+RUST = os.path.join(
+    os.path.dirname(__file__), "..", "..", "rust", "src", "config",
+    "hwspec.rs",
+)
+
+
+def rust_consts():
+    text = open(RUST).read()
+    out = {}
+    for m in re.finditer(
+        r"pub const (\w+):\s*\w+\s*=\s*([0-9.eE_+-]+);", text
+    ):
+        out[m.group(1)] = float(m.group(2).replace("_", ""))
+    return out
+
+
+def test_hwspec_constants_match():
+    rust = rust_consts()
+    expected = {
+        "V_RAIL": hw.V_RAIL,
+        "H_SLOPE": hw.H_SLOPE,
+        "H_CLIP_IN": hw.H_CLIP_IN,
+        "OUT_BITS": hw.OUT_BITS,
+        "ERR_BITS": hw.ERR_BITS,
+        "ERR_MAX": hw.ERR_MAX,
+        "LUT_SIZE": hw.LUT_SIZE,
+        "CORE_INPUTS": hw.CORE_INPUTS,
+        "CORE_NEURONS": hw.CORE_NEURONS,
+        "G_MIN": hw.G_MIN,
+        "G_MAX": hw.G_MAX,
+    }
+    for name, want in expected.items():
+        assert name in rust, f"{name} missing from hwspec.rs"
+        assert abs(rust[name] - want) < 1e-9, (
+            f"{name}: rust {rust[name]} != python {want}"
+        )

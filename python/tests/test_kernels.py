@@ -1,0 +1,119 @@
+"""Pallas kernels vs the pure-jnp oracle (hypothesis shape/seed sweeps)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import hwspec as hw
+from compile.kernels import (
+    crossbar_bwd,
+    crossbar_fwd,
+    kmeans_distances,
+    ref,
+    weight_update,
+)
+from compile.kernels.common import choose_block
+
+dims = st.integers(1, 70)
+batches = st.sampled_from([1, 2, 3, 4, 8, 16, 64])
+seeds = st.integers(0, 2**31 - 1)
+
+
+def _rand(rng, shape, lo, hi):
+    return jnp.asarray(rng.uniform(lo, hi, shape), jnp.float32)
+
+
+@given(batches, dims, dims, seeds)
+@settings(max_examples=25, deadline=None)
+def test_crossbar_fwd_matches_ref(b, n_in, n_out, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (b, n_in), -0.5, 0.5)
+    gp = _rand(rng, (n_in, n_out), hw.G_MIN, hw.G_MAX)
+    gn = _rand(rng, (n_in, n_out), hw.G_MIN, hw.G_MAX)
+    y, dp = crossbar_fwd(x, gp, gn)
+    yr, dpr = ref.crossbar_fwd(x, gp, gn)
+    np.testing.assert_allclose(np.asarray(dp), np.asarray(dpr),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-6)
+
+
+@given(batches, dims, dims, seeds)
+@settings(max_examples=25, deadline=None)
+def test_crossbar_bwd_matches_ref(b, n_in, n_out, seed):
+    rng = np.random.default_rng(seed)
+    d = _rand(rng, (b, n_out), -1.5, 1.5)
+    gp = _rand(rng, (n_in, n_out), hw.G_MIN, hw.G_MAX)
+    gn = _rand(rng, (n_in, n_out), hw.G_MIN, hw.G_MAX)
+    np.testing.assert_allclose(
+        np.asarray(crossbar_bwd(d, gp, gn)),
+        np.asarray(ref.crossbar_bwd(d, gp, gn)),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+@given(batches, dims, dims, seeds,
+       st.floats(0.001953125, 0.5, allow_nan=False, width=32))
+@settings(max_examples=25, deadline=None)
+def test_weight_update_matches_ref(b, n_in, n_out, seed, lr):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (b, n_in), -0.5, 0.5)
+    d = _rand(rng, (b, n_out), -1.0, 1.0)
+    dp = _rand(rng, (b, n_out), -3.0, 3.0)
+    gp = _rand(rng, (n_in, n_out), hw.G_MIN, hw.G_MAX)
+    gn = _rand(rng, (n_in, n_out), hw.G_MIN, hw.G_MAX)
+    lr_arr = jnp.full((1, 1), lr, jnp.float32)
+    gp2, gn2 = weight_update(gp, gn, x, d, dp, lr_arr)
+    gp2r, gn2r = ref.weight_update(gp, gn, x, d, dp, lr)
+    np.testing.assert_allclose(np.asarray(gp2), np.asarray(gp2r),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gn2), np.asarray(gn2r),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(batches, st.integers(1, 32), st.integers(1, 32), seeds)
+@settings(max_examples=25, deadline=None)
+def test_kmeans_distances_matches_ref(b, d, k, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (b, d), -0.5, 0.5)
+    c = _rand(rng, (k, d), -0.5, 0.5)
+    np.testing.assert_allclose(
+        np.asarray(kmeans_distances(x, c)),
+        np.asarray(ref.kmeans_distances(x, c)),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_weight_update_respects_conductance_bounds():
+    """No pulse may drive a device past its physical resistance range."""
+    rng = np.random.default_rng(7)
+    gp = _rand(rng, (20, 10), hw.G_MIN, hw.G_MAX)
+    gn = _rand(rng, (20, 10), hw.G_MIN, hw.G_MAX)
+    x = _rand(rng, (4, 20), -0.5, 0.5)
+    d = _rand(rng, (4, 10), -1, 1)
+    dp = _rand(rng, (4, 10), -3, 3)
+    lr = jnp.full((1, 1), 100.0, jnp.float32)   # absurdly large pulse
+    gp2, gn2 = weight_update(gp, gn, x, d, dp, lr)
+    assert float(jnp.min(gp2)) >= hw.G_MIN - 1e-6
+    assert float(jnp.max(gp2)) <= hw.G_MAX + 1e-6
+    assert float(jnp.min(gn2)) >= hw.G_MIN - 1e-6
+    assert float(jnp.max(gn2)) <= hw.G_MAX + 1e-6
+
+
+def test_fwd_output_is_3bit_grid():
+    """Outputs land exactly on the 8-level ADC grid (section IV.A)."""
+    rng = np.random.default_rng(3)
+    x = _rand(rng, (8, 50), -0.5, 0.5)
+    gp = _rand(rng, (50, 30), hw.G_MIN, hw.G_MAX)
+    gn = _rand(rng, (50, 30), hw.G_MIN, hw.G_MAX)
+    y, _ = crossbar_fwd(x, gp, gn)
+    levels = 2**hw.OUT_BITS - 1
+    codes = (np.asarray(y) + hw.V_RAIL) * levels
+    np.testing.assert_allclose(codes, np.round(codes), atol=1e-4)
+
+
+@given(st.integers(1, 4096), st.integers(1, 512))
+@settings(max_examples=200, deadline=None)
+def test_choose_block_divides(dim, target):
+    b = choose_block(dim, target)
+    assert 1 <= b <= dim
+    assert dim % b == 0

@@ -1,0 +1,122 @@
+"""L2 model graph tests: shapes, convergence, clustering semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import apps, hwspec as hw, model
+
+
+def _params(layers, seed=0):
+    return model.init_params(layers, jax.random.PRNGKey(seed))
+
+
+def test_forward_shapes_and_range():
+    params = _params([7, 5, 3])
+    x = jnp.zeros((4, 7), jnp.float32)
+    y, acts, dps = model.mlp_forward(params, x)
+    assert y.shape == (4, 3)
+    assert [a.shape for a in acts] == [(4, 8), (4, 6)]  # bias-augmented
+    assert [d.shape for d in dps] == [(4, 5), (4, 3)]
+    assert float(jnp.max(jnp.abs(y))) <= hw.V_RAIL + 1e-6
+
+
+def test_ae_fwd_code_is_bottleneck():
+    params = _params([6, 2, 6])
+    x = jnp.zeros((3, 6), jnp.float32)
+    recon, code = model.ae_fwd(params, x)
+    assert recon.shape == (3, 6)
+    assert code.shape == (3, 2)
+
+
+def test_train_step_learns_classifier():
+    """Stochastic BP learns a decision boundary through the chip
+    constraints (the paper's Fig 16 claim, miniaturised). Note: h(x) is
+    near-linear until rail saturation, so — like the paper's own demos —
+    the target is a separable boundary, not an XOR-style product."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.uniform(-0.5, 0.5, (64, 4)), jnp.float32)
+    t = (jnp.sign(x[:, :1] + x[:, 1:2] - 0.15) * 0.4).astype(jnp.float32)
+    params = _params([4, 10, 1], seed=3)
+    lr = jnp.full((1, 1), 1.0, jnp.float32)
+
+    def stats(ps):
+        y, _, _ = model.mlp_forward(ps, x)
+        return (float(jnp.mean((t - y) ** 2)),
+                float(jnp.mean(jnp.sign(y) == jnp.sign(t))))
+
+    before, _ = stats(params)
+    ps = list(params)
+    for epoch in range(25):
+        for i in range(x.shape[0]):
+            out = model.mlp_train_step(ps, x[i:i + 1], t[i:i + 1], lr)
+            ps = list(out[:-1])
+    after, acc = stats(ps)
+    assert after < before * 0.6, (before, after)
+    assert acc > 0.9, acc
+
+
+def test_ae_train_step_reconstructs():
+    rng = np.random.default_rng(1)
+    # rank-1 structured data: an AE with a 2-wide bottleneck can learn it
+    basis = rng.uniform(-0.5, 0.5, (2, 6))
+    coef = rng.uniform(-1, 1, (32, 2))
+    x = jnp.asarray(np.clip(coef @ basis, -0.5, 0.5), jnp.float32)
+    params = _params([6, 2, 6], seed=5)
+    lr = jnp.full((1, 1), 0.5, jnp.float32)
+
+    def recon_err(ps):
+        recon, _ = model.ae_fwd(ps, x)
+        return float(jnp.mean((jnp.clip(x, -0.5, 0.5) - recon) ** 2))
+
+    before = recon_err(params)
+    ps = list(params)
+    for epoch in range(20):
+        for i in range(x.shape[0]):
+            out = model.ae_train_step(ps, x[i:i + 1], lr)
+            ps = list(out[:-1])
+    after = recon_err(ps)
+    assert after < before * 0.8, (before, after)
+
+
+def test_params_respect_conductance_bounds_after_training():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.uniform(-0.5, 0.5, (8, 5)), jnp.float32)
+    t = jnp.asarray(rng.uniform(-0.4, 0.4, (8, 2)), jnp.float32)
+    ps = list(_params([5, 4, 2]))
+    lr = jnp.full((1, 1), 2.0, jnp.float32)
+    for i in range(8):
+        out = model.mlp_train_step(ps, x[i:i + 1], t[i:i + 1], lr)
+        ps = list(out[:-1])
+    for g in ps:
+        assert float(jnp.min(g)) >= hw.G_MIN - 1e-6
+        assert float(jnp.max(g)) <= hw.G_MAX + 1e-6
+
+
+def test_kmeans_step_semantics():
+    x = jnp.asarray(
+        [[0.0, 0.0], [0.1, 0.0], [1.0, 1.0], [0.9, 1.0]], jnp.float32
+    )
+    centres = jnp.asarray([[0.0, 0.05], [1.0, 0.95]], jnp.float32)
+    assign, acc, counts = model.kmeans_step(x, centres)
+    np.testing.assert_array_equal(np.asarray(assign), [0, 0, 1, 1])
+    np.testing.assert_allclose(np.asarray(counts), [2.0, 2.0])
+    np.testing.assert_allclose(np.asarray(acc[0]), [0.1, 0.0], atol=1e-6)
+    np.testing.assert_allclose(np.asarray(acc[1]), [1.9, 2.0], atol=1e-6)
+
+
+def test_kmeans_empty_cluster_has_zero_count():
+    x = jnp.zeros((4, 2), jnp.float32)
+    centres = jnp.asarray([[0.0, 0.0], [5.0, 5.0]], jnp.float32)
+    _, acc, counts = model.kmeans_step(x, centres)
+    assert float(counts[1]) == 0.0
+    np.testing.assert_allclose(np.asarray(acc[1]), [0.0, 0.0])
+
+
+def test_registry_covers_every_table1_network():
+    from compile.aot import registry
+    names = {name for name, _, _ in registry()}
+    for app in apps.NETWORKS:
+        assert any(n.startswith(app) for n in names), app
+    for app in apps.KMEANS:
+        assert any(n.startswith(app) for n in names), app

@@ -1,0 +1,96 @@
+"""Property tests for the ADC/DAC quantiser models (hypothesis)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import hwspec as hw
+from compile.kernels import ref
+
+floats = st.floats(-4.0, 4.0, allow_nan=False, width=32)
+
+
+@given(st.lists(floats, min_size=1, max_size=64))
+@settings(max_examples=60, deadline=None)
+def test_quantize_unit_bounded(xs):
+    x = jnp.asarray(xs, jnp.float32)
+    q = np.asarray(ref.quantize_unit(x, hw.OUT_BITS))
+    assert np.all(q >= -hw.V_RAIL - 1e-6)
+    assert np.all(q <= hw.V_RAIL + 1e-6)
+
+
+@given(st.lists(floats, min_size=2, max_size=64))
+@settings(max_examples=60, deadline=None)
+def test_quantize_unit_monotone(xs):
+    xs = sorted(xs)
+    q = np.asarray(ref.quantize_unit(jnp.asarray(xs, jnp.float32), hw.OUT_BITS))
+    assert np.all(np.diff(q) >= -1e-6)
+
+
+@given(st.lists(st.floats(-0.5, 0.5, allow_nan=False, width=32),
+                min_size=1, max_size=64))
+@settings(max_examples=60, deadline=None)
+def test_quantize_unit_error_bound(xs):
+    """In-range values are quantised within half an LSB."""
+    x = jnp.asarray(xs, jnp.float32)
+    q = np.asarray(ref.quantize_unit(x, hw.OUT_BITS))
+    lsb = 1.0 / (2**hw.OUT_BITS - 1)
+    assert np.all(np.abs(q - np.asarray(x)) <= lsb / 2 + 1e-6)
+
+
+@given(st.lists(floats, min_size=1, max_size=64))
+@settings(max_examples=60, deadline=None)
+def test_quantize_unit_idempotent(xs):
+    x = jnp.asarray(xs, jnp.float32)
+    q1 = ref.quantize_unit(x, hw.OUT_BITS)
+    q2 = ref.quantize_unit(q1, hw.OUT_BITS)
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), atol=1e-6)
+
+
+@given(st.lists(floats, min_size=1, max_size=64))
+@settings(max_examples=60, deadline=None)
+def test_quantize_err_sign_and_bound(xs):
+    x = np.asarray(xs, np.float32)
+    q = np.asarray(ref.quantize_err(jnp.asarray(x)))
+    assert np.all(np.abs(q) <= hw.ERR_MAX + 1e-6)
+    nz = np.abs(q) > 1e-9
+    assert np.all(np.sign(q[nz]) == np.sign(x[nz]))
+
+
+@given(st.lists(floats, min_size=1, max_size=64))
+@settings(max_examples=60, deadline=None)
+def test_quantize_err_odd_symmetry(xs):
+    """Sign-magnitude ADC is an odd function: q(-x) == -q(x)."""
+    x = jnp.asarray(xs, jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(ref.quantize_err(-x)),
+        -np.asarray(ref.quantize_err(x)),
+        atol=1e-6,
+    )
+
+
+@given(st.lists(st.floats(-hw.ERR_MAX, hw.ERR_MAX, allow_nan=False,
+                          width=32), min_size=1, max_size=64))
+@settings(max_examples=60, deadline=None)
+def test_quantize_err_error_bound(xs):
+    x = np.asarray(xs, np.float32)
+    q = np.asarray(ref.quantize_err(jnp.asarray(x)))
+    lsb = hw.ERR_MAX / (2 ** (hw.ERR_BITS - 1) - 1)
+    assert np.all(np.abs(q - x) <= lsb / 2 + 1e-6)
+
+
+def test_activation_matches_sigmoid_shape():
+    """h(x) approximates f(x) = sigmoid(x) - 0.5 (paper Fig 6)."""
+    x = jnp.linspace(-6, 6, 241)
+    h = np.asarray(ref.activation(x))
+    f = 1.0 / (1.0 + np.exp(-np.asarray(x))) - 0.5
+    assert np.max(np.abs(h - f)) < 0.12   # Fig 6: close approximation
+    assert abs(h[120]) < 1e-6              # h(0) = 0
+
+
+def test_activation_deriv_lut_tracks_true_derivative():
+    x = jnp.linspace(-hw.H_CLIP_IN, hw.H_CLIP_IN, 201)
+    lut = np.asarray(ref.activation_deriv_lut(x))
+    s = 1.0 / (1.0 + np.exp(-np.asarray(x)))
+    true = s * (1 - s)
+    assert np.max(np.abs(lut - true)) < 0.01  # 64-entry LUT resolution

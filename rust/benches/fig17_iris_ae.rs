@@ -1,0 +1,46 @@
+//! Paper Fig 17: distribution of the Iris classes in the 2-D feature
+//! space learnt by the 4→2→4 autoencoder — printed as a character
+//! scatter plot plus per-class centroids.
+
+use restream::config::apps;
+use restream::coordinator::Engine;
+use restream::datasets;
+
+fn main() -> anyhow::Result<()> {
+    restream::benchutil::section("Fig 17 — Iris AE 4->2->4 feature space");
+    let net = apps::network("iris_ae").unwrap();
+    let engine = Engine::open_default()?;
+    let ds = datasets::iris(0);
+    let xs = ds.rows();
+    let xs_t = xs.clone();
+    let (params, _) =
+        engine.train(net, &xs, move |i| xs_t[i].clone(), 40, 0.8, 1)?;
+    let codes = engine.encode(net, &params, &xs)?;
+
+    // character scatter: 24x50 grid over the code range
+    const W: usize = 50;
+    const H: usize = 20;
+    let mut grid = vec![b' '; W * H];
+    let glyph = [b's', b'v', b'g']; // setosa, versicolor, virginica
+    for (i, c) in codes.iter().enumerate() {
+        let gx = (((c[0] + 0.5) as f64).clamp(0.0, 0.999) * W as f64) as usize;
+        let gy = (((c[1] + 0.5) as f64).clamp(0.0, 0.999) * H as f64) as usize;
+        grid[gy * W + gx] = glyph[ds.y[i]];
+    }
+    for row in grid.chunks(W) {
+        println!("|{}|", String::from_utf8_lossy(row));
+    }
+    for (c, name) in datasets::IRIS_CLASSES.iter().enumerate() {
+        let pts: Vec<&Vec<f32>> = codes
+            .iter()
+            .zip(&ds.y)
+            .filter(|(_, &y)| y == c)
+            .map(|(p, _)| p)
+            .collect();
+        let mx = pts.iter().map(|p| p[0] as f64).sum::<f64>() / pts.len() as f64;
+        let my = pts.iter().map(|p| p[1] as f64).sum::<f64>() / pts.len() as f64;
+        println!("{name:>11} centroid: ({mx:>6.3}, {my:>6.3})");
+    }
+    println!("(paper: same-class data appears closely in the feature space)");
+    Ok(())
+}

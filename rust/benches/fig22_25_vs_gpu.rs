@@ -1,0 +1,38 @@
+//! Paper Figs 22–25: speedup and energy efficiency of the chip vs the
+//! Tesla K20 for training (22/23) and recognition (24/25).
+
+use restream::config::SystemConfig;
+use restream::report;
+
+fn main() {
+    let sys = SystemConfig::default();
+    restream::benchutil::section(
+        "Figs 22/23 — training speedup & energy efficiency vs K20",
+    );
+    print!("{}", report::vs_gpu_table(&sys, true));
+    println!("(paper: up to 30x speedup; 1e4..1e6x energy efficiency)");
+
+    restream::benchutil::section(
+        "Figs 24/25 — recognition speedup & energy efficiency vs K20",
+    );
+    print!("{}", report::vs_gpu_table(&sys, false));
+    println!("(paper: up to 50x speedup; 1e5..1e6x energy efficiency)");
+
+    // headline assertions
+    let train = report::vs_gpu(&sys, true);
+    let recog = report::vs_gpu(&sys, false);
+    let max_speedup_t = train.iter().map(|v| v.speedup).fold(0.0, f64::max);
+    let max_speedup_r = recog.iter().map(|v| v.speedup).fold(0.0, f64::max);
+    let max_eff = train
+        .iter()
+        .chain(&recog)
+        .map(|v| v.energy_eff)
+        .fold(0.0, f64::max);
+    println!(
+        "\nmax training speedup {max_speedup_t:.0}x, max recognition \
+         speedup {max_speedup_r:.0}x, max energy efficiency {max_eff:.1e}x"
+    );
+    assert!(train.iter().all(|v| v.speedup > 1.0));
+    assert!(recog.iter().all(|v| v.speedup > 1.0));
+    assert!(max_eff > 1e4);
+}

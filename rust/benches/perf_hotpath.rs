@@ -1,0 +1,129 @@
+//! §Perf harness: wall-clock microbenchmarks of the L3 hot paths —
+//! per-sample training step, batched recognition, the NoC scheduler, the
+//! cost simulator, and the pure-Rust crossbar math. The before/after
+//! numbers recorded in EXPERIMENTS.md §Perf come from this binary.
+
+use restream::benchutil::{report, section, time};
+use restream::config::{apps, SystemConfig};
+use restream::coordinator::{init_conductances, Engine};
+use restream::crossbar::ideal;
+use restream::mapper::{map_network, place};
+use restream::noc::Schedule;
+use restream::runtime::ArrayF32;
+use restream::testing::Rng;
+use restream::{datasets, sim};
+
+fn main() -> anyhow::Result<()> {
+    let sys = SystemConfig::default();
+    let engine = Engine::open_default()?;
+
+    section("hot path: per-sample train step (PJRT execute + host I/O)");
+    for app in ["iris_class", "kdd_ae", "mnist_class"] {
+        let net = apps::network(app).unwrap();
+        let exe = engine.rt.load(&net.train_artifact())?;
+        let params = init_conductances(net.layers, 0);
+        let dims = net.layers[0];
+        let outs = net.layers[net.layers.len() - 1];
+        let mut rng = Rng::seeded(0);
+        let x = ArrayF32::row(rng.vec_uniform(dims, -0.5, 0.5));
+        let t = ArrayF32::row(rng.vec_uniform(outs, -0.4, 0.4));
+        let lr = ArrayF32::scalar(0.5);
+        let mut current = params.clone();
+        let timing = time(3, 30, || {
+            let mut ins = current.clone();
+            ins.push(x.clone());
+            ins.push(t.clone());
+            ins.push(lr.clone());
+            let mut o = exe.run(&ins).unwrap();
+            o.pop();
+            current = o;
+        });
+        report(&format!("train_step/{app}"), &timing);
+    }
+
+    section("hot path: chunked train (scan c=32, per-sample amortised)");
+    for app in ["iris_class", "kdd_ae", "mnist_class"] {
+        let net = apps::network(app).unwrap();
+        let name = format!("{}_trainchunk_c{}", net.name, apps::TRAIN_CHUNK);
+        let exe = engine.rt.load(&name)?;
+        let params = init_conductances(net.layers, 0);
+        let dims = net.layers[0];
+        let outs = net.layers[net.layers.len() - 1];
+        let k = apps::TRAIN_CHUNK;
+        let mut rng = Rng::seeded(0);
+        let xs = ArrayF32::matrix(k, dims, rng.vec_uniform(k * dims, -0.5, 0.5))
+            .unwrap();
+        let ts = ArrayF32::matrix(k, outs, rng.vec_uniform(k * outs, -0.4, 0.4))
+            .unwrap();
+        let lr = ArrayF32::scalar(0.5);
+        let mut current = params.clone();
+        let timing = time(2, 15, || {
+            let mut ins = current.clone();
+            ins.push(xs.clone());
+            ins.push(ts.clone());
+            ins.push(lr.clone());
+            let mut o = exe.run(&ins).unwrap();
+            o.pop();
+            current = o;
+        });
+        report(&format!("train_chunk/{app}"), &timing);
+        println!(
+            "    -> {:.1} us/sample amortised ({}x chunk)",
+            timing.per_iter_us() / k as f64,
+            k
+        );
+    }
+
+    section("hot path: batched recognition (b=64)");
+    for app in ["kdd_ae", "mnist_class", "isolet_class"] {
+        let net = apps::network(app).unwrap();
+        let params = init_conductances(net.layers, 0);
+        let ds = datasets::class_blobs("b", net.layers[0], 2, 64, 0.3, 0);
+        let xs = ds.rows();
+        let timing = time(2, 10, || {
+            engine.infer(net, &params, &xs).unwrap();
+        });
+        report(&format!("infer_b64/{app}"), &timing);
+        println!(
+            "    -> {:.0} samples/s",
+            64.0 / timing.mean_s
+        );
+    }
+
+    section("architecture model: mapper + placement + schedule");
+    for app in ["mnist_class", "isolet_class"] {
+        let net = apps::network(app).unwrap();
+        let timing = time(3, 50, || {
+            let map = map_network(net, &sys).unwrap();
+            for stage in &map.stages {
+                let p = place(stage, &sys);
+                let s = Schedule::build(&p.fwd_transfers, sys.link_bits);
+                std::hint::black_box(s.makespan_slots());
+            }
+        });
+        report(&format!("map_place_schedule/{app}"), &timing);
+    }
+    let timing = time(3, 50, || {
+        std::hint::black_box(sim::table3(&sys));
+        std::hint::black_box(sim::table4(&sys));
+    });
+    report("sim/tables_3_and_4", &timing);
+
+    section("pure-Rust crossbar math (oracle path)");
+    let mut rng = Rng::seeded(1);
+    let (b, n_in, n_out) = (1usize, 785usize, 300usize);
+    let x = rng.vec_uniform(b * n_in, -0.5, 0.5);
+    let gp = rng.vec_uniform(n_in * n_out, 0.001, 1.0);
+    let gn = rng.vec_uniform(n_in * n_out, 0.001, 1.0);
+    let timing = time(3, 50, || {
+        std::hint::black_box(ideal::fwd(&x, &gp, &gn, b, n_in, n_out, 3));
+    });
+    report("ideal_fwd/785x300", &timing);
+    let delta = rng.vec_uniform(b * n_out, -1.0, 1.0);
+    let timing = time(3, 50, || {
+        std::hint::black_box(ideal::bwd(&delta, &gp, &gn, b, n_in, n_out));
+    });
+    report("ideal_bwd/785x300", &timing);
+
+    Ok(())
+}

@@ -1,0 +1,30 @@
+//! Paper section VI.F: total system area budget, plus the per-app core
+//! demand that justifies the 144-core provisioning.
+
+use restream::config::{apps, SystemConfig};
+use restream::mapper::map_network;
+use restream::report;
+
+fn main() {
+    restream::benchutil::section("section VI.F — system area budget");
+    let sys = SystemConfig::default();
+    print!("{}", report::chip_summary(&sys));
+
+    restream::benchutil::section("per-application core demand");
+    println!("{:>14} {:>8} {:>8}", "app", "#cores", "stages");
+    for net in apps::NETWORKS {
+        let map = map_network(net, &sys).unwrap();
+        println!(
+            "{:>14} {:>8} {:>8}",
+            net.name,
+            map.cores_used(),
+            map.stages.len()
+        );
+        assert!(map.cores_used() <= sys.neural_cores);
+    }
+    println!(
+        "\nlargest app fits the {}-core chip (paper: 132 of 144 used by \
+         ISOLET)",
+        sys.neural_cores
+    );
+}

@@ -1,0 +1,40 @@
+//! Paper Table III: per-input training cost (cores, time, compute/IO/
+//! total energy) for every application, next to the paper's values.
+
+use restream::config::SystemConfig;
+use restream::{report, sim};
+
+/// The paper's Table III rows: (app, cores, time us, compute J, io J,
+/// total J). Apps are matched by our registry names.
+const PAPER: &[(&str, usize, f64, f64, f64, f64)] = &[
+    ("mnist_class", 57, 7.29, 4.18e-7, 8.48e-9, 4.26e-7),
+    ("mnist_dr", 57, 17.99, 8.37e-7, 8.57e-9, 8.45e-7),
+    ("isolet_dr", 132, 24.41, 1.97e-6, 2.68e-8, 1.99e-6),
+    ("isolet_class", 132, 8.86, 9.67e-7, 2.67e-8, 9.94e-7),
+    ("kdd_ae", 1, 4.15, 7.33e-9, 4.51e-9, 1.18e-8),
+    ("mnist_kmeans", 1, 0.42, 9.67e-10, 4.47e-12, 9.71e-10),
+    ("isolet_kmeans", 1, 0.42, 9.67e-10, 4.47e-12, 9.71e-10),
+];
+
+fn main() {
+    restream::benchutil::section("Table III — training cost per input");
+    let sys = SystemConfig::default();
+    print!("{}", report::table3(&sys));
+    println!("\npaper values for reference:");
+    println!(
+        "{:>14} {:>7} {:>10} {:>12} {:>10} {:>12}",
+        "app", "#cores", "time(us)", "compute(J)", "IO(J)", "total(J)"
+    );
+    for (app, cores, t, c, io, tot) in PAPER {
+        println!(
+            "{app:>14} {cores:>7} {t:>10.2} {c:>12.2e} {io:>10.2e} {tot:>12.2e}"
+        );
+    }
+    // shape assertions mirrored from the test suite
+    let rows = sim::table3(&sys);
+    let by = |n: &str| rows.iter().find(|r| r.app == n).unwrap();
+    assert!(by("mnist_kmeans").time_s < by("kdd_ae").time_s);
+    assert!(by("kdd_ae").time_s < by("mnist_class").time_s);
+    assert!(by("isolet_class").total_j > by("mnist_class").total_j);
+    println!("\nshape checks (ordering of rows, compute >> kmeans): OK");
+}

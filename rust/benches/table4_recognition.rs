@@ -1,0 +1,38 @@
+//! Paper Table IV: per-input recognition cost for every application,
+//! next to the paper's values.
+
+use restream::config::SystemConfig;
+use restream::{report, sim};
+
+/// Paper Table IV rows: (app, time us, compute J, io J, total J).
+const PAPER: &[(&str, f64, f64, f64, f64)] = &[
+    ("mnist_class", 0.77, 1.42e-8, 8.43e-9, 2.26e-8),
+    ("mnist_dr", 0.77, 1.42e-8, 8.43e-9, 2.26e-8),
+    ("isolet_dr", 0.77, 3.28e-8, 2.67e-8, 5.94e-8),
+    ("isolet_class", 0.77, 3.28e-8, 2.67e-8, 5.94e-8),
+    ("kdd_ae", 0.77, 2.48e-10, 4.48e-9, 4.73e-9),
+    ("mnist_kmeans", 0.32, 8.89e-10, 3.69e-12, 8.93e-10),
+    ("isolet_kmeans", 0.32, 8.89e-10, 3.69e-12, 8.93e-10),
+];
+
+fn main() {
+    restream::benchutil::section("Table IV — recognition cost per input");
+    let sys = SystemConfig::default();
+    print!("{}", report::table4(&sys));
+    println!("\npaper values for reference:");
+    println!(
+        "{:>14} {:>10} {:>12} {:>10} {:>12}",
+        "app", "time(us)", "compute(J)", "IO(J)", "total(J)"
+    );
+    for (app, t, c, io, tot) in PAPER {
+        println!("{app:>14} {t:>10.2} {c:>12.2e} {io:>10.2e} {tot:>12.2e}");
+    }
+    let rows = sim::table4(&sys);
+    let by = |n: &str| rows.iter().find(|r| r.app == n).unwrap();
+    // recognition is sub-10us everywhere; kmeans rows are the cheapest
+    for r in &rows {
+        assert!(r.time_s < 20e-6, "{} {}", r.app, r.time_s);
+    }
+    assert!(by("mnist_kmeans").total_j < by("kdd_ae").total_j);
+    println!("\nshape checks: OK");
+}

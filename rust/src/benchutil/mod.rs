@@ -1,0 +1,69 @@
+//! Tiny timing harness for the `cargo bench` targets (criterion is not
+//! in the offline registry, so benches are `harness = false` binaries
+//! built on this module).
+
+use std::time::Instant;
+
+/// Timing summary of a measured closure.
+#[derive(Clone, Copy, Debug)]
+pub struct Timing {
+    pub iters: usize,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl Timing {
+    pub fn per_iter_us(&self) -> f64 {
+        self.mean_s * 1e6
+    }
+}
+
+/// Measure `f` `iters` times after `warmup` unmeasured runs.
+pub fn time<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut min_s = f64::INFINITY;
+    let mut max_s: f64 = 0.0;
+    let mut total = 0.0;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed().as_secs_f64();
+        total += dt;
+        min_s = min_s.min(dt);
+        max_s = max_s.max(dt);
+    }
+    Timing { iters, mean_s: total / iters as f64, min_s, max_s }
+}
+
+/// Print a bench line in a stable, grep-able format.
+pub fn report(name: &str, t: &Timing) {
+    println!(
+        "bench {name:<40} {:>10.2} us/iter  (min {:.2}, max {:.2}, n={})",
+        t.per_iter_us(),
+        t.min_s * 1e6,
+        t.max_s * 1e6,
+        t.iters
+    );
+}
+
+/// Section header for bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_counts_iters_and_orders_stats() {
+        let mut n = 0;
+        let t = time(2, 10, || n += 1);
+        assert_eq!(n, 12);
+        assert_eq!(t.iters, 10);
+        assert!(t.min_s <= t.mean_s && t.mean_s <= t.max_s);
+    }
+}

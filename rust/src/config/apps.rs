@@ -1,0 +1,155 @@
+//! Application registry — paper Table I, Rust mirror of
+//! `python/compile/apps.py`. Artifact names constructed here must match
+//! the names `aot.py` writes.
+
+/// Stochastic-BP training batch (per-sample, as on chip).
+pub const TRAIN_BATCH: usize = 1;
+/// Recognition batch streamed by the coordinator.
+pub const FWD_BATCH: usize = 64;
+/// Batched-training variant exported for the end-to-end example.
+pub const BIG_TRAIN_BATCH: usize = 16;
+/// Samples scanned inside one chunked train artifact (`*_trainchunk_cK`).
+pub const TRAIN_CHUNK: usize = 32;
+
+/// What kind of workload an application is (drives mapping + reporting).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AppKind {
+    /// Supervised classifier trained with full BP.
+    Classifier,
+    /// Plain autoencoder (trained directly as a 2-layer net).
+    Autoencoder,
+    /// Deep dimensionality-reduction stack trained layer-by-layer.
+    DimReduction,
+    /// k-means on the clustering core (input dims already reduced).
+    Kmeans,
+}
+
+/// A neural-network application (one row of Table I).
+#[derive(Clone, Debug)]
+pub struct Network {
+    pub name: &'static str,
+    pub layers: &'static [usize],
+    pub kind: AppKind,
+    /// Number of classes for classifiers (argmax decode), 0 otherwise.
+    pub classes: usize,
+}
+
+/// A clustering application: (feature dims, cluster count).
+#[derive(Clone, Debug)]
+pub struct App {
+    pub name: &'static str,
+    pub dims: usize,
+    pub clusters: usize,
+}
+
+/// Table I networks.
+pub const NETWORKS: &[Network] = &[
+    Network { name: "iris_class", layers: &[4, 10, 1], kind: AppKind::Classifier, classes: 2 },
+    Network { name: "iris_ae", layers: &[4, 2, 4], kind: AppKind::Autoencoder, classes: 0 },
+    Network { name: "kdd_ae", layers: &[41, 15, 41], kind: AppKind::Autoencoder, classes: 0 },
+    Network { name: "mnist_class", layers: &[784, 300, 200, 100, 10], kind: AppKind::Classifier, classes: 10 },
+    Network { name: "mnist_dr", layers: &[784, 300, 200, 100, 20], kind: AppKind::DimReduction, classes: 0 },
+    Network { name: "isolet_class", layers: &[617, 2000, 1000, 500, 250, 26], kind: AppKind::Classifier, classes: 26 },
+    Network { name: "isolet_dr", layers: &[617, 2000, 1000, 500, 250, 20], kind: AppKind::DimReduction, classes: 0 },
+];
+
+/// Clustering-core problems (dims after dimensionality reduction).
+pub const KMEANS_APPS: &[App] = &[
+    App { name: "mnist_kmeans", dims: 20, clusters: 10 },
+    App { name: "isolet_kmeans", dims: 20, clusters: 26 },
+];
+
+/// Look up a network by name.
+pub fn network(name: &str) -> Option<&'static Network> {
+    NETWORKS.iter().find(|n| n.name == name)
+}
+
+/// Look up a clustering app by name.
+pub fn kmeans_app(name: &str) -> Option<&'static App> {
+    KMEANS_APPS.iter().find(|a| a.name == name)
+}
+
+impl Network {
+    /// Per-layer (n_in, n_out) pairs; n_in excludes the bias row.
+    pub fn layer_shapes(&self) -> Vec<(usize, usize)> {
+        self.layers.windows(2).map(|w| (w[0], w[1])).collect()
+    }
+
+    /// Total differential synapse pairs, bias rows included.
+    pub fn synapses(&self) -> usize {
+        self.layer_shapes().iter().map(|(i, o)| (i + 1) * o).sum()
+    }
+
+    /// Total neurons over all layers.
+    pub fn neurons(&self) -> usize {
+        self.layers[1..].iter().sum()
+    }
+
+    /// Layerwise-pretraining stages for DR apps: (n_in, n_hidden) pairs.
+    pub fn dr_stages(&self) -> Vec<(usize, usize)> {
+        self.layer_shapes()
+    }
+
+    /// Artifact name of the per-sample training graph.
+    pub fn train_artifact(&self) -> String {
+        format!("{}_train_b{}", self.name, TRAIN_BATCH)
+    }
+
+    /// Artifact name of the recognition graph.
+    pub fn fwd_artifact(&self) -> String {
+        format!("{}_fwd_b{}", self.name, FWD_BATCH)
+    }
+
+    /// Artifact name of a DR pretraining stage.
+    pub fn stage_artifact(&self, stage: usize) -> String {
+        format!("{}_stage{}_train_b{}", self.name, stage, TRAIN_BATCH)
+    }
+}
+
+impl App {
+    /// Artifact name of the clustering step graph.
+    pub fn step_artifact(&self) -> String {
+        format!("{}_step_b{}", self.name, FWD_BATCH)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_complete() {
+        assert_eq!(NETWORKS.len(), 7);
+        assert_eq!(KMEANS_APPS.len(), 2);
+        assert!(network("mnist_class").is_some());
+        assert!(network("nope").is_none());
+    }
+
+    #[test]
+    fn layer_shapes_and_synapses() {
+        let n = network("mnist_class").unwrap();
+        assert_eq!(n.layer_shapes(), vec![(784, 300), (300, 200), (200, 100), (100, 10)]);
+        assert_eq!(n.synapses(), 785 * 300 + 301 * 200 + 201 * 100 + 101 * 10);
+        assert_eq!(n.neurons(), 610);
+    }
+
+    #[test]
+    fn artifact_names_match_python_side() {
+        let n = network("kdd_ae").unwrap();
+        assert_eq!(n.train_artifact(), "kdd_ae_train_b1");
+        assert_eq!(n.fwd_artifact(), "kdd_ae_fwd_b64");
+        let d = network("mnist_dr").unwrap();
+        assert_eq!(d.stage_artifact(2), "mnist_dr_stage2_train_b1");
+        let k = kmeans_app("isolet_kmeans").unwrap();
+        assert_eq!(k.step_artifact(), "isolet_kmeans_step_b64");
+    }
+
+    #[test]
+    fn kmeans_apps_fit_clustering_core() {
+        use crate::config::hwspec;
+        for a in KMEANS_APPS {
+            assert!(a.dims <= hwspec::KMEANS_MAX_DIM);
+            assert!(a.clusters <= hwspec::KMEANS_MAX_CENTRES);
+        }
+    }
+}

@@ -1,0 +1,62 @@
+//! Hardware constraint constants — Rust mirror of `python/compile/hwspec.py`.
+//!
+//! Every number traces to the paper; see the Python twin for the full
+//! citations. `python/tests/test_hwspec_mirror.py` asserts the two files
+//! agree, so change both together.
+
+/// Op-amp output rails (volts); also the numeric range of activations.
+pub const V_RAIL: f32 = 0.5;
+
+/// h(x) linear-region slope: h(x) = x/4 for |x| < 2 (paper Eq. 3).
+pub const H_SLOPE: f32 = 0.25;
+/// h(x) input clip point.
+pub const H_CLIP_IN: f32 = 2.0;
+
+/// Neuron-output ADC precision (paper section IV.A).
+pub const OUT_BITS: u32 = 3;
+/// Error ADC precision: 1 sign + 7 magnitude bits (paper section III.F).
+pub const ERR_BITS: u32 = 8;
+/// Error ADC full-scale range.
+pub const ERR_MAX: f32 = 1.0;
+/// f'(DP) lookup-table entries (training unit, section III.F step 3).
+pub const LUT_SIZE: usize = 64;
+
+/// Crossbar rows: 400 inputs per neural core, bias row included.
+pub const CORE_INPUTS: usize = 400;
+/// Differential neurons per core (400x200 crossbar = 100 neuron pairs).
+pub const CORE_NEURONS: usize = 100;
+
+/// Normalised conductance bounds (R_off/R_on ~ 1000, section III.A).
+pub const G_MIN: f32 = 0.001;
+pub const G_MAX: f32 = 1.0;
+
+/// Maximum representable weight |g+ - g-|.
+pub const W_MAX: f32 = G_MAX - G_MIN;
+
+/// Clustering core limits (paper section IV.B).
+pub const KMEANS_MAX_CENTRES: usize = 32;
+pub const KMEANS_MAX_DIM: usize = 32;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weight_range_consistent() {
+        assert!(G_MIN > 0.0 && G_MIN < G_MAX);
+        assert!((W_MAX - (G_MAX - G_MIN)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn activation_clip_maps_to_rail() {
+        // h(H_CLIP_IN) must land exactly on the rail: 2 * 0.25 = 0.5.
+        assert!((H_CLIP_IN * H_SLOPE - V_RAIL).abs() < 1e-9);
+    }
+
+    #[test]
+    fn crossbar_is_400x200() {
+        // 100 differential neurons = 200 physical columns.
+        assert_eq!(CORE_INPUTS, 400);
+        assert_eq!(CORE_NEURONS * 2, 200);
+    }
+}

@@ -1,0 +1,13 @@
+//! System, hardware and application configuration.
+//!
+//! [`hwspec`] mirrors `python/compile/hwspec.py` (the two files are the
+//! twin sources of truth for the chip's numeric constraints — keep them in
+//! lock-step); [`apps`] mirrors `python/compile/apps.py` (paper Table I);
+//! [`system`] describes the chip floorplan (paper section VI.F).
+
+pub mod apps;
+pub mod hwspec;
+pub mod system;
+
+pub use apps::{App, AppKind, Network};
+pub use system::SystemConfig;

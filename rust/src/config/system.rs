@@ -1,0 +1,104 @@
+//! Chip floorplan configuration (paper section VI.F).
+//!
+//! The evaluated system: 144 memristor neural cores + one digital
+//! clustering core + one RISC configuration core + DMA, connected by a
+//! statically routed 2-D mesh at 200 MHz, fed from 3-D stacked DRAM.
+
+/// Full-system configuration. `Default` reproduces the paper's chip.
+#[derive(Clone, Debug)]
+pub struct SystemConfig {
+    /// Number of memristor neural cores.
+    pub neural_cores: usize,
+    /// Mesh width (cores are laid out row-major on a mesh_w x mesh_h grid;
+    /// the clustering core, RISC core and the memory port occupy extra
+    /// mesh stops).
+    pub mesh_w: usize,
+    pub mesh_h: usize,
+    /// Digital clock for routing + clustering core (Hz).
+    pub clock_hz: f64,
+    /// NoC link width in bits (section V.C: 8 bits per link).
+    pub link_bits: usize,
+    /// Input buffer bytes (section VI.F: 4 kB).
+    pub input_buffer_bytes: usize,
+    /// Output buffer bytes (section VI.F: 1 kB).
+    pub output_buffer_bytes: usize,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        SystemConfig {
+            neural_cores: 144,
+            mesh_w: 12,
+            mesh_h: 12,
+            clock_hz: 200e6,
+            link_bits: 8,
+            input_buffer_bytes: 4 * 1024,
+            output_buffer_bytes: 1024,
+        }
+    }
+}
+
+impl SystemConfig {
+    /// Digital clock period in seconds.
+    pub fn cycle_s(&self) -> f64 {
+        1.0 / self.clock_hz
+    }
+
+    /// Mesh coordinates of neural core `id` (row-major).
+    pub fn core_xy(&self, id: usize) -> (usize, usize) {
+        (id % self.mesh_w, id / self.mesh_w)
+    }
+
+    /// Mesh stop used as the memory/DMA port (edge of the mesh, (0,0)).
+    pub fn memory_port(&self) -> (usize, usize) {
+        (0, 0)
+    }
+
+    /// Mesh stop of the clustering core (opposite corner, so NC traffic
+    /// and clustering traffic do not share the same hot links).
+    pub fn cluster_xy(&self) -> (usize, usize) {
+        (self.mesh_w - 1, self.mesh_h - 1)
+    }
+
+    /// Sanity: the mesh must hold every neural core.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.neural_cores > self.mesh_w * self.mesh_h {
+            return Err(format!(
+                "{} cores do not fit a {}x{} mesh",
+                self.neural_cores, self.mesh_w, self.mesh_h
+            ));
+        }
+        if self.link_bits == 0 || self.clock_hz <= 0.0 {
+            return Err("degenerate link/clock config".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_paper_chip() {
+        let c = SystemConfig::default();
+        assert_eq!(c.neural_cores, 144);
+        assert_eq!((c.mesh_w, c.mesh_h), (12, 12));
+        assert!(c.validate().is_ok());
+        assert!((c.cycle_s() - 5e-9).abs() < 1e-15);
+    }
+
+    #[test]
+    fn core_xy_roundtrip() {
+        let c = SystemConfig::default();
+        assert_eq!(c.core_xy(0), (0, 0));
+        assert_eq!(c.core_xy(13), (1, 1));
+        assert_eq!(c.core_xy(143), (11, 11));
+    }
+
+    #[test]
+    fn oversubscribed_mesh_rejected() {
+        let c = SystemConfig { neural_cores: 145, ..Default::default() };
+        assert!(c.validate().is_err());
+    }
+}

@@ -1,0 +1,397 @@
+//! Streaming training/inference coordinator — the chip's steady-state
+//! control loop, in Rust, with Python nowhere on the path.
+//!
+//! The [`Engine`] owns the PJRT [`Runtime`] and drives the per-sample
+//! stochastic-BP loop (training), the batched recognition loop, the
+//! layerwise DR pipeline, the clustering epochs and the anomaly scorer.
+//! Samples arrive through the bounded double-buffered stream of
+//! [`crate::coordinator::stream`] — the software twin of the DMA + 4 kB
+//! input buffer front (backpressure included).
+//!
+//! Hot-loop design: the PJRT wrapper cannot untuple device buffers, so
+//! weights round-trip through host literals per execution; the chunked
+//! `..._trainchunk_cK` artifacts scan K samples of stochastic BP inside
+//! one XLA program, amortising that crossing K-fold — the software
+//! analogue of the paper's "processing happens at the physical location
+//! of the data" (see EXPERIMENTS.md section Perf).
+
+pub mod params;
+pub mod stream;
+
+pub use params::init_conductances;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{apps, AppKind, Network};
+use crate::runtime::{ArrayF32, Executable, Runtime};
+use crate::testing::Rng;
+
+/// Result of a training run.
+#[derive(Clone, Debug, Default)]
+pub struct TrainReport {
+    /// Mean per-sample loss per epoch.
+    pub loss_curve: Vec<f32>,
+    pub epochs: usize,
+    pub samples_seen: usize,
+    /// Host wall-clock of the run (for the perf harness, not the chip
+    /// timing model — that is `crate::sim`).
+    pub wall_s: f64,
+}
+
+/// The streaming coordinator.
+pub struct Engine {
+    pub rt: Runtime,
+}
+
+impl Engine {
+    pub fn new(rt: Runtime) -> Self {
+        Engine { rt }
+    }
+
+    pub fn open_default() -> Result<Self> {
+        Ok(Engine::new(Runtime::open_default()?))
+    }
+
+    /// Train a classifier or plain AE with per-sample stochastic BP.
+    /// `targets(i)` supplies the target row for sample `i`.
+    pub fn train(
+        &self,
+        net: &Network,
+        xs: &[Vec<f32>],
+        targets: impl Fn(usize) -> Vec<f32>,
+        epochs: usize,
+        lr: f32,
+        seed: u64,
+    ) -> Result<(Vec<ArrayF32>, TrainReport)> {
+        let exe = self.rt.load(&net.train_artifact())?;
+        let chunk = self.load_chunk(&format!(
+            "{}_trainchunk_c{}", net.name, apps::TRAIN_CHUNK));
+        let params = init_conductances(net.layers, seed);
+        let (params, report) = self.train_loop(
+            &exe, chunk.as_deref(), params, xs, &targets, epochs, lr, seed)?;
+        Ok((params, report))
+    }
+
+    /// Load a chunked train artifact if it exists (older artifact trees
+    /// may predate chunking; the per-sample path always works).
+    fn load_chunk(&self, name: &str) -> Option<std::sync::Arc<Executable>> {
+        self.rt.load(name).ok()
+    }
+
+    /// The generic training loop.
+    ///
+    /// Per-sample artifact signature: `params..., x, t, lr -> params...,
+    /// loss`. The xla crate's PJRT wrapper returns the result *tuple* as
+    /// a single buffer (no untupling), so parameters round-trip through
+    /// host literals each step; when a scan-chunked artifact
+    /// (`..._trainchunk_cK`, same per-sample semantics, K samples per
+    /// execution) is available, full chunks go through it and only the
+    /// epoch tail falls back to per-sample steps — the boundary crossing
+    /// is amortised K-fold (EXPERIMENTS.md §Perf).
+    fn train_loop(
+        &self,
+        exe: &Executable,
+        chunk: Option<&Executable>,
+        mut params: Vec<ArrayF32>,
+        xs: &[Vec<f32>],
+        targets: &impl Fn(usize) -> Vec<f32>,
+        epochs: usize,
+        lr: f32,
+        seed: u64,
+    ) -> Result<(Vec<ArrayF32>, TrainReport)> {
+        let n_params = params.len();
+        let start = std::time::Instant::now();
+        let lr_arr = ArrayF32::scalar(lr);
+        let chunk_k = chunk.map(|c| c.meta.inputs[n_params][0]).unwrap_or(0);
+        let dims = xs.first().map_or(0, Vec::len);
+        let mut report = TrainReport::default();
+        let mut order: Vec<usize> = (0..xs.len()).collect();
+        let mut rng = Rng::seeded(seed ^ 0x0BDE);
+        let step_one = |params: &mut Vec<ArrayF32>, i: usize, x: &[f32],
+                            epoch_loss: &mut f32| -> Result<()> {
+            let mut ins = Vec::with_capacity(n_params + 3);
+            ins.extend(params.iter().cloned());
+            ins.push(ArrayF32::row(x.to_vec()));
+            ins.push(ArrayF32::row(targets(i)));
+            ins.push(lr_arr.clone());
+            let mut outs = exe.run(&ins)?;
+            let loss = outs.pop()
+                .ok_or_else(|| anyhow!("train step returned nothing"))?;
+            if outs.len() != n_params {
+                return Err(anyhow!(
+                    "train step returned {} params, expected {n_params}",
+                    outs.len()
+                ));
+            }
+            *params = outs;
+            *epoch_loss += loss.data[0];
+            Ok(())
+        };
+        for _epoch in 0..epochs {
+            rng.shuffle(&mut order);
+            let mut epoch_loss = 0.0f32;
+            let mut pulled = 0usize;
+            // chunk accumulation buffers (flushed at chunk_k samples)
+            let mut buf_i: Vec<usize> = Vec::with_capacity(chunk_k);
+            let mut buf_x: Vec<f32> = Vec::with_capacity(chunk_k * dims);
+            stream::run(xs, &order, |i, x| {
+                pulled += 1;
+                if let Some(cexe) = chunk {
+                    buf_i.push(i);
+                    buf_x.extend_from_slice(x);
+                    if buf_i.len() == chunk_k {
+                        let t_dim = cexe.meta.inputs[n_params + 1][1];
+                        let mut ts = Vec::with_capacity(chunk_k * t_dim);
+                        for &j in &buf_i {
+                            ts.extend(targets(j));
+                        }
+                        let mut ins = Vec::with_capacity(n_params + 3);
+                        ins.extend(params.iter().cloned());
+                        ins.push(
+                            ArrayF32::matrix(chunk_k, dims,
+                                             std::mem::take(&mut buf_x))
+                                .map_err(anyhow::Error::msg)?,
+                        );
+                        ins.push(ArrayF32::matrix(chunk_k, t_dim, ts)
+                            .map_err(anyhow::Error::msg)?);
+                        ins.push(lr_arr.clone());
+                        let mut outs = cexe.run(&ins)?;
+                        let losses = outs.pop()
+                            .ok_or_else(|| anyhow!("chunk returned nothing"))?;
+                        params = outs;
+                        epoch_loss += losses.data.iter().sum::<f32>();
+                        buf_i.clear();
+                    }
+                    Ok(())
+                } else {
+                    step_one(&mut params, i, x, &mut epoch_loss)
+                }
+            })?;
+            // epoch tail: fewer than chunk_k samples left over
+            for &i in &buf_i {
+                let x = xs[i].clone();
+                step_one(&mut params, i, &x, &mut epoch_loss)?;
+            }
+            report.samples_seen += pulled;
+            report.loss_curve.push(epoch_loss / pulled.max(1) as f32);
+            report.epochs += 1;
+        }
+        report.wall_s = start.elapsed().as_secs_f64();
+        Ok((params, report))
+    }
+
+    /// Layerwise DR pipeline (paper section II): train each AE stage on
+    /// the current representation, then re-encode the dataset with the
+    /// trained encoder and move on. Returns the encoder-stack params
+    /// (matching the `{app}_fwd_b64` artifact layout) plus stage reports.
+    pub fn train_dr(
+        &self,
+        net: &Network,
+        xs: &[Vec<f32>],
+        epochs_per_stage: usize,
+        lr: f32,
+        seed: u64,
+    ) -> Result<(Vec<ArrayF32>, Vec<TrainReport>)> {
+        if net.kind != AppKind::DimReduction {
+            return Err(anyhow!("{} is not a DR app", net.name));
+        }
+        let mut encoder_params: Vec<ArrayF32> = Vec::new();
+        let mut reports = Vec::new();
+        let mut current: Vec<Vec<f32>> = xs.to_vec();
+        for (s, (n_in, n_hid)) in net.dr_stages().iter().enumerate() {
+            let exe = self.rt.load(&net.stage_artifact(s))?;
+            let chunk = self.load_chunk(&format!(
+                "{}_stage{}_trainchunk_c{}", net.name, s, apps::TRAIN_CHUNK));
+            let stage_params =
+                init_conductances(&[*n_in, *n_hid, *n_in], seed + s as u64);
+            let targets = {
+                let cur = current.clone();
+                move |i: usize| cur[i].clone()
+            };
+            let (trained, report) = self.train_loop(
+                &exe, chunk.as_deref(), stage_params, &current, &targets,
+                epochs_per_stage, lr, seed + s as u64,
+            )?;
+            // keep the encoder half; re-encode through it (bit-compatible
+            // ideal-crossbar math) for the next stage
+            let (gp, gn) = (&trained[0], &trained[1]);
+            current = current
+                .iter()
+                .map(|x| params::encode_layer(x, gp, gn))
+                .collect();
+            encoder_params.extend_from_slice(&trained[..2]);
+            reports.push(report);
+        }
+        Ok((encoder_params, reports))
+    }
+
+    /// Batched recognition through a `*_fwd_b64` artifact. Returns one
+    /// output row per input sample (padding stripped).
+    pub fn infer(&self, net: &Network, params: &[ArrayF32],
+                 xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let exe = self.rt.load(&net.fwd_artifact())?;
+        self.batched_forward(&exe, params, xs, 0)
+    }
+
+    /// Batched AE forward returning reconstruction rows (output 0).
+    pub fn reconstruct(&self, net: &Network, params: &[ArrayF32],
+                       xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        self.infer(net, params, xs)
+    }
+
+    /// Batched encode to the bottleneck representation. Plain AEs return
+    /// (reconstruction, code) — the code is output 1; DR apps' forward
+    /// artifact *is* the encoder stack, so the code is output 0.
+    pub fn encode(&self, net: &Network, params: &[ArrayF32],
+                  xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let exe = self.rt.load(&net.fwd_artifact())?;
+        let idx = usize::from(net.kind == AppKind::Autoencoder);
+        self.batched_forward(&exe, params, xs, idx)
+    }
+
+    fn batched_forward(
+        &self,
+        exe: &Executable,
+        params: &[ArrayF32],
+        xs: &[Vec<f32>],
+        output_idx: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        let batch = apps::FWD_BATCH;
+        let dims = xs.first().map_or(0, Vec::len);
+        let mut out = Vec::with_capacity(xs.len());
+        for chunk in xs.chunks(batch) {
+            let mut data = Vec::with_capacity(batch * dims);
+            for x in chunk {
+                data.extend_from_slice(x);
+            }
+            data.resize(batch * dims, 0.0); // pad the tail batch
+            let mut inputs = params.to_vec();
+            inputs.push(ArrayF32::matrix(batch, dims, data)
+                .map_err(|e| anyhow!(e))?);
+            let outs = exe.run(&inputs)?;
+            let y = outs
+                .get(output_idx)
+                .ok_or_else(|| anyhow!("missing output {output_idx}"))?;
+            for i in 0..chunk.len() {
+                out.push(y.row_slice(i).to_vec());
+            }
+        }
+        Ok(out)
+    }
+
+    /// Classifier predictions by argmax (sign for single-output nets).
+    pub fn classify(&self, net: &Network, params: &[ArrayF32],
+                    xs: &[Vec<f32>]) -> Result<Vec<usize>> {
+        let outs = self.infer(net, params, xs)?;
+        Ok(outs
+            .iter()
+            .map(|o| {
+                if o.len() == 1 {
+                    usize::from(o[0] > 0.0)
+                } else {
+                    o.iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .map(|(i, _)| i)
+                        .unwrap()
+                }
+            })
+            .collect())
+    }
+
+    /// k-means through the clustering-core artifact: batched assignment,
+    /// centre accumulation on device, division at epoch end in the
+    /// coordinator (as the core's registers do). Returns (centres,
+    /// assignments).
+    pub fn kmeans(
+        &self,
+        app: &apps::App,
+        xs: &[Vec<f32>],
+        epochs: usize,
+        seed: u64,
+    ) -> Result<(Vec<Vec<f32>>, Vec<usize>)> {
+        let exe = self.rt.load(&app.step_artifact())?;
+        let (d, k) = (app.dims, app.clusters);
+        let mut rng = Rng::seeded(seed ^ 0x63A5);
+        // seed centres from k distinct samples
+        let mut idx: Vec<usize> = (0..xs.len()).collect();
+        rng.shuffle(&mut idx);
+        let mut centres: Vec<f32> = idx
+            .iter()
+            .take(k)
+            .flat_map(|&i| xs[i].clone())
+            .collect();
+        let batch = apps::FWD_BATCH;
+        let mut assign = vec![0usize; xs.len()];
+        for _ in 0..epochs {
+            let mut acc = vec![0.0f32; k * d];
+            let mut counts = vec![0.0f32; k];
+            let centres_arr =
+                ArrayF32::matrix(k, d, centres.clone()).map_err(|e| anyhow!(e))?;
+            for (ci, chunk) in xs.chunks(batch).enumerate() {
+                let mut data = Vec::with_capacity(batch * d);
+                for x in chunk {
+                    data.extend_from_slice(x);
+                }
+                // pad with copies of the first row so padding joins that
+                // row's cluster; its contribution is subtracted below.
+                let pad_rows = batch - chunk.len();
+                for _ in 0..pad_rows {
+                    data.extend_from_slice(&chunk[0.min(chunk.len() - 1)].clone());
+                }
+                let x_arr = ArrayF32::matrix(batch, d, data)
+                    .map_err(|e| anyhow!(e))?;
+                let outs = exe.run(&[x_arr, centres_arr.clone()])?;
+                let (a, ac, cn) = (&outs[0], &outs[1], &outs[2]);
+                for i in 0..chunk.len() {
+                    assign[ci * batch + i] = a.data[i] as usize;
+                }
+                for v in 0..k * d {
+                    acc[v] += ac.data[v];
+                }
+                for c in 0..k {
+                    counts[c] += cn.data[c];
+                }
+                if pad_rows > 0 {
+                    // remove the padded duplicates' contribution
+                    let c0 = a.data[batch - 1] as usize;
+                    counts[c0] -= pad_rows as f32;
+                    for dd in 0..d {
+                        acc[c0 * d + dd] -=
+                            pad_rows as f32 * chunk[chunk.len() - 1][dd];
+                    }
+                }
+            }
+            for c in 0..k {
+                if counts[c] > 0.5 {
+                    for dd in 0..d {
+                        centres[c * d + dd] = acc[c * d + dd] / counts[c];
+                    }
+                }
+            }
+        }
+        let centres_rows =
+            centres.chunks(d).map(|c| c.to_vec()).collect();
+        Ok((centres_rows, assign))
+    }
+
+    /// Anomaly scores: Manhattan distance between each input and its AE
+    /// reconstruction (paper Figs 18–19).
+    pub fn anomaly_scores(&self, net: &Network, params: &[ArrayF32],
+                          xs: &[Vec<f32>]) -> Result<Vec<f64>> {
+        let recon = self.reconstruct(net, params, xs)?;
+        Ok(xs
+            .iter()
+            .zip(&recon)
+            .map(|(x, r)| {
+                x.iter()
+                    .zip(r)
+                    .map(|(a, b)| {
+                        let ac = a.clamp(-0.5, 0.5);
+                        (ac - b).abs() as f64
+                    })
+                    .sum()
+            })
+            .collect())
+    }
+}

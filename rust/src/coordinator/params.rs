@@ -1,0 +1,87 @@
+//! Parameter (conductance-pair) initialisation and host-side encode —
+//! the Rust twin of `python/compile/model.init_params`.
+
+use crate::config::hwspec as hw;
+use crate::crossbar::ideal;
+use crate::runtime::ArrayF32;
+use crate::testing::Rng;
+
+/// Initialise differential conductance pairs for a layer list: both
+/// conductances near the low end (the paper's "high random resistances")
+/// with a small random weight in the pair difference. Layout matches the
+/// train artifacts: `[gp0, gn0, gp1, gn1, ...]`, each `(n_in+1) x n_out`.
+pub fn init_conductances(layers: &[usize], seed: u64) -> Vec<ArrayF32> {
+    let mut rng = Rng::seeded(seed ^ 0x1217);
+    let base = hw::G_MIN + 0.12;
+    let mut out = Vec::new();
+    for w in layers.windows(2) {
+        let (n_in, n_out) = (w[0], w[1]);
+        let rows = n_in + 1;
+        let scale = 1.0 / (n_in as f32).sqrt();
+        let mut gp = vec![0.0f32; rows * n_out];
+        let mut gn = vec![0.0f32; rows * n_out];
+        for i in 0..rows * n_out {
+            let wv = rng.uniform_f32(-scale, scale);
+            gp[i] = (base + 0.5 * wv).clamp(hw::G_MIN, hw::G_MAX);
+            gn[i] = (base - 0.5 * wv).clamp(hw::G_MIN, hw::G_MAX);
+        }
+        out.push(ArrayF32 { shape: vec![rows, n_out], data: gp });
+        out.push(ArrayF32 { shape: vec![rows, n_out], data: gn });
+    }
+    out
+}
+
+/// Encode one sample through a single trained crossbar layer using the
+/// ideal-crossbar math (bit-compatible with the L1 kernels) — used by
+/// the DR pipeline between stages.
+pub fn encode_layer(x: &[f32], gp: &ArrayF32, gn: &ArrayF32) -> Vec<f32> {
+    let rows = gp.shape[0];
+    let n_out = gp.shape[1];
+    debug_assert_eq!(rows, x.len() + 1);
+    let mut a: Vec<f32> = x
+        .iter()
+        .map(|v| v.clamp(-hw::V_RAIL, hw::V_RAIL))
+        .collect();
+    a.push(hw::V_RAIL);
+    let (y, _) = ideal::fwd(&a, &gp.data, &gn.data, 1, rows, n_out,
+                            hw::OUT_BITS);
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_matches_artifacts() {
+        let ps = init_conductances(&[41, 15, 41], 0);
+        assert_eq!(ps.len(), 4);
+        assert_eq!(ps[0].shape, vec![42, 15]);
+        assert_eq!(ps[1].shape, vec![42, 15]);
+        assert_eq!(ps[2].shape, vec![16, 41]);
+    }
+
+    #[test]
+    fn conductances_in_device_range_and_seeded() {
+        let a = init_conductances(&[10, 5], 7);
+        let b = init_conductances(&[10, 5], 7);
+        let c = init_conductances(&[10, 5], 8);
+        assert_eq!(a[0].data, b[0].data);
+        assert_ne!(a[0].data, c[0].data);
+        for g in &a[0].data {
+            assert!((hw::G_MIN..=hw::G_MAX).contains(g));
+        }
+    }
+
+    #[test]
+    fn encode_layer_output_is_quantised_and_sized() {
+        let ps = init_conductances(&[4, 2], 1);
+        let y = encode_layer(&[0.1, -0.2, 0.3, 0.0], &ps[0], &ps[1]);
+        assert_eq!(y.len(), 2);
+        let levels = (1 << hw::OUT_BITS) - 1;
+        for v in y {
+            let code = (v + hw::V_RAIL) * levels as f32;
+            assert!((code - code.round()).abs() < 1e-4);
+        }
+    }
+}

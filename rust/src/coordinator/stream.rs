@@ -1,0 +1,107 @@
+//! Bounded streaming front: a producer thread plays the DMA engine,
+//! pushing samples into a bounded channel sized like the chip's 4 kB
+//! input buffer; the consumer (the training loop) drains it. When the
+//! consumer falls behind, the producer blocks — the same backpressure
+//! the real DMA sees when the input buffer fills.
+
+use std::sync::mpsc::{sync_channel, SyncSender};
+use std::thread;
+
+use anyhow::Result;
+
+use crate::config::SystemConfig;
+
+/// Channel capacity for a given sample width, matching the input buffer.
+pub fn buffer_capacity(sample_dims: usize) -> usize {
+    let sys = SystemConfig::default();
+    (sys.input_buffer_bytes / sample_dims.max(1)).max(1)
+}
+
+/// Stream `xs` in `order` through a bounded queue into `consume(i, x)`.
+/// The producer runs on its own thread; any consumer error stops the
+/// stream and is returned.
+pub fn run(
+    xs: &[Vec<f32>],
+    order: &[usize],
+    mut consume: impl FnMut(usize, &[f32]) -> Result<()>,
+) -> Result<()> {
+    let cap = buffer_capacity(xs.first().map_or(1, Vec::len));
+    let (tx, rx): (SyncSender<(usize, Vec<f32>)>, _) = sync_channel(cap);
+    // The producer owns copies (the DMA reads DRAM, not our heap).
+    let items: Vec<(usize, Vec<f32>)> =
+        order.iter().map(|&i| (i, xs[i].clone())).collect();
+    let producer = thread::spawn(move || {
+        for it in items {
+            if tx.send(it).is_err() {
+                break; // consumer hung up (error path)
+            }
+        }
+    });
+    let mut result = Ok(());
+    for (i, x) in rx.iter() {
+        if let Err(e) = consume(i, &x) {
+            result = Err(e);
+            break;
+        }
+    }
+    drop(rx);
+    let _ = producer.join();
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delivers_everything_in_order() {
+        let xs: Vec<Vec<f32>> = (0..100).map(|i| vec![i as f32]).collect();
+        let order: Vec<usize> = (0..100).rev().collect();
+        let mut seen = Vec::new();
+        run(&xs, &order, |i, x| {
+            assert_eq!(x[0] as usize, i);
+            seen.push(i);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(seen, order);
+    }
+
+    #[test]
+    fn consumer_error_stops_stream() {
+        let xs: Vec<Vec<f32>> = (0..1000).map(|i| vec![i as f32]).collect();
+        let order: Vec<usize> = (0..1000).collect();
+        let mut n = 0;
+        let res = run(&xs, &order, |i, _| {
+            n += 1;
+            if i == 5 {
+                anyhow::bail!("boom");
+            }
+            Ok(())
+        });
+        assert!(res.is_err());
+        assert_eq!(n, 6);
+    }
+
+    #[test]
+    fn capacity_tracks_input_buffer() {
+        // 4 kB buffer, 784-float samples -> 5 slots; 4-float -> 1024.
+        assert_eq!(buffer_capacity(784), 5);
+        assert_eq!(buffer_capacity(4), 1024);
+        assert_eq!(buffer_capacity(0), 4096);
+    }
+
+    #[test]
+    fn slow_consumer_still_gets_all_samples() {
+        let xs: Vec<Vec<f32>> = (0..50).map(|i| vec![i as f32; 2048]).collect();
+        let order: Vec<usize> = (0..50).collect();
+        let mut n = 0;
+        run(&xs, &order, |_, _| {
+            std::thread::sleep(std::time::Duration::from_micros(200));
+            n += 1;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(n, 50);
+    }
+}

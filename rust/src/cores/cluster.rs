@@ -1,0 +1,122 @@
+//! Digital k-means clustering core (paper section IV.B, Fig 13).
+//!
+//! Datapath: per input element, Manhattan distances to all current
+//! centres are updated in parallel subtract/accumulate lanes (one cycle
+//! per element); after `d` elements the min-distance centre is found in
+//! `k` compare cycles, with the centre-accumulator update overlapped with
+//! the next sample's distance phase. At epoch end, new centres are
+//! produced by dividing accumulators by counters.
+//!
+//! This type owns the cycle/power model and the core's configuration
+//! limits; the functional math runs either through the `kmeans_step`
+//! artifact (PJRT) or `crate::kmeans` (pure Rust reference).
+
+use crate::config::hwspec as hw;
+use crate::power::cluster_core as p;
+
+/// Clustering-core configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterCore {
+    /// Feature dimension (<= 32).
+    pub dims: usize,
+    /// Cluster count (<= 32).
+    pub clusters: usize,
+    /// Digital clock (Hz).
+    pub clock_hz: f64,
+    /// Divider latency per centre element at epoch end (shift-subtract
+    /// serial divider, one bit per cycle on 16-bit accumulators).
+    pub div_cycles: u64,
+}
+
+impl ClusterCore {
+    pub fn configure(dims: usize, clusters: usize, clock_hz: f64)
+        -> Result<Self, String> {
+        if dims == 0 || dims > hw::KMEANS_MAX_DIM {
+            return Err(format!(
+                "dims {dims} outside the core's 1..={} range",
+                hw::KMEANS_MAX_DIM
+            ));
+        }
+        if clusters == 0 || clusters > hw::KMEANS_MAX_CENTRES {
+            return Err(format!(
+                "clusters {clusters} outside the core's 1..={} range",
+                hw::KMEANS_MAX_CENTRES
+            ));
+        }
+        Ok(ClusterCore { dims, clusters, clock_hz, div_cycles: 16 })
+    }
+
+    /// Cycles to assign one sample: d distance cycles + k min-search
+    /// cycles (accumulator update overlaps the next sample, Fig 13).
+    pub fn cycles_per_sample(&self) -> u64 {
+        self.dims as u64 + self.clusters as u64
+    }
+
+    /// Cycles of the epoch-end centre recomputation.
+    pub fn epoch_end_cycles(&self) -> u64 {
+        (self.clusters * self.dims) as u64 * self.div_cycles
+    }
+
+    /// Time to process `n` samples (one epoch's assignment phase).
+    pub fn assign_time_s(&self, n: usize) -> f64 {
+        n as f64 * self.cycles_per_sample() as f64 / self.clock_hz
+    }
+
+    /// Full-epoch time over `n` samples including centre recomputation.
+    pub fn epoch_time_s(&self, n: usize) -> f64 {
+        self.assign_time_s(n)
+            + self.epoch_end_cycles() as f64 / self.clock_hz
+    }
+
+    /// Energy over an interval at the core's (constant) power.
+    pub fn energy_j(&self, time_s: f64) -> f64 {
+        time_s * p::POWER_W
+    }
+
+    /// Per-sample recognition time/energy — the Table IV kmeans rows.
+    pub fn recognition_cost(&self) -> (f64, f64) {
+        let t = self.cycles_per_sample() as f64 / self.clock_hz;
+        (t, self.energy_j(t))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn core() -> ClusterCore {
+        ClusterCore::configure(20, 26, 200e6).unwrap()
+    }
+
+    #[test]
+    fn limits_enforced() {
+        assert!(ClusterCore::configure(33, 10, 200e6).is_err());
+        assert!(ClusterCore::configure(10, 33, 200e6).is_err());
+        assert!(ClusterCore::configure(0, 10, 200e6).is_err());
+        assert!(ClusterCore::configure(32, 32, 200e6).is_ok());
+    }
+
+    #[test]
+    fn per_sample_time_matches_paper_table4_shape() {
+        // Paper Table IV: kmeans recognition 0.32 us per input at d=20.
+        let (t, _) = core().recognition_cost();
+        assert!(t > 0.1e-6 && t < 0.5e-6, "t={t}");
+    }
+
+    #[test]
+    fn epoch_cost_scales_with_samples() {
+        let c = core();
+        let t1 = c.epoch_time_s(1000);
+        let t2 = c.epoch_time_s(2000);
+        assert!(t2 > t1);
+        // assignment dominates for large n
+        assert!((t2 - t1) > 0.9 * c.assign_time_s(1000));
+    }
+
+    #[test]
+    fn energy_uses_core_power() {
+        let c = core();
+        let e = c.energy_j(1.0);
+        assert!((e - 1.36e-3).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,10 @@
+//! The heterogeneous cores (paper section IV): memristor neural cores,
+//! the digital k-means clustering core, and the RISC configuration core.
+
+pub mod cluster;
+pub mod neural;
+pub mod risc;
+
+pub use cluster::ClusterCore;
+pub use neural::{NeuralCore, Step};
+pub use risc::RiscCore;

@@ -1,0 +1,140 @@
+//! Memristor neural core (paper section IV.A, Fig 12): a 400x200
+//! crossbar (400 inputs x 100 differential neurons), input/output
+//! buffers, training unit and control FSM.
+//!
+//! The core's *functional* behaviour is computed by the AOT artifacts
+//! (or `crate::crossbar::ideal` on the pure-Rust path); this type owns
+//! the architectural behaviour: capacity limits, per-step timing and
+//! energy from the paper's Table II constants.
+
+use crate::config::hwspec as hw;
+use crate::power::neural_core as p;
+
+/// Execution steps of a neural core (paper Table II rows).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Step {
+    /// Forward pass (recognition).
+    Forward,
+    /// Error back-propagation pass.
+    Backward,
+    /// Weight-update (training pulses).
+    Update,
+}
+
+impl Step {
+    /// Step latency (s) — Table II.
+    pub fn time_s(self) -> f64 {
+        match self {
+            Step::Forward => p::FWD_TIME_S,
+            Step::Backward => p::BWD_TIME_S,
+            Step::Update => p::UPD_TIME_S,
+        }
+    }
+
+    /// Step power (W) — Table II.
+    pub fn power_w(self) -> f64 {
+        match self {
+            Step::Forward => p::FWD_POWER_W,
+            Step::Backward => p::BWD_POWER_W,
+            Step::Update => p::UPD_POWER_W,
+        }
+    }
+
+    /// Step energy (J) for one core.
+    pub fn energy_j(self) -> f64 {
+        self.time_s() * self.power_w() + self.time_s() * p::CTRL_POWER_W
+    }
+}
+
+/// One neural core's static assignment: a slice of a network layer.
+#[derive(Clone, Debug)]
+pub struct NeuralCore {
+    pub id: usize,
+    /// Crossbar rows in use (inputs incl. bias), <= CORE_INPUTS.
+    pub inputs: usize,
+    /// Differential neurons in use, <= CORE_NEURONS.
+    pub neurons: usize,
+}
+
+impl NeuralCore {
+    /// Create a core assignment; errors if it exceeds the crossbar.
+    pub fn assign(id: usize, inputs: usize, neurons: usize) -> Result<Self, String> {
+        Self::assign_with(id, inputs, neurons, hw::CORE_INPUTS, hw::CORE_NEURONS)
+    }
+
+    /// [`NeuralCore::assign`] against an explicit core geometry (used by
+    /// the crossbar-size ablation; the real chip is 400x100).
+    pub fn assign_with(
+        id: usize,
+        inputs: usize,
+        neurons: usize,
+        max_inputs: usize,
+        max_neurons: usize,
+    ) -> Result<Self, String> {
+        if inputs == 0 || neurons == 0 {
+            return Err("empty core assignment".into());
+        }
+        if inputs > max_inputs {
+            return Err(format!(
+                "{inputs} inputs exceed the {max_inputs}-row crossbar"
+            ));
+        }
+        if neurons > max_neurons {
+            return Err(format!(
+                "{neurons} neurons exceed the {max_neurons}-neuron crossbar"
+            ));
+        }
+        Ok(NeuralCore { id, inputs, neurons })
+    }
+
+    /// Synapse pairs physically used.
+    pub fn synapses(&self) -> usize {
+        self.inputs * self.neurons
+    }
+
+    /// Crossbar occupancy in [0, 1] (mapper packing quality metric).
+    pub fn utilisation(&self) -> f64 {
+        self.synapses() as f64 / (hw::CORE_INPUTS * hw::CORE_NEURONS) as f64
+    }
+
+    /// Output bits produced per evaluation (3-bit ADC per neuron).
+    pub fn output_bits(&self) -> u64 {
+        (self.neurons as u64) * hw::OUT_BITS as u64
+    }
+
+    /// Error bits consumed per backward pass (8 bits per neuron).
+    pub fn error_bits(&self) -> u64 {
+        (self.neurons as u64) * hw::ERR_BITS as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_energies() {
+        // fwd: 0.27us * 0.794mW ~= 0.214 nJ
+        let e = Step::Forward.energy_j();
+        assert!((e - 0.27e-6 * 0.794e-3).abs() / e < 0.01, "{e}");
+        // update dominates
+        assert!(Step::Update.energy_j() > Step::Forward.energy_j());
+        assert!(Step::Update.energy_j() > Step::Backward.energy_j());
+    }
+
+    #[test]
+    fn assignment_respects_crossbar_limits() {
+        assert!(NeuralCore::assign(0, 400, 100).is_ok());
+        assert!(NeuralCore::assign(0, 401, 100).is_err());
+        assert!(NeuralCore::assign(0, 400, 101).is_err());
+        assert!(NeuralCore::assign(0, 0, 10).is_err());
+    }
+
+    #[test]
+    fn utilisation_and_io_bits() {
+        let c = NeuralCore::assign(1, 200, 50).unwrap();
+        assert!((c.utilisation() - 0.25).abs() < 1e-12);
+        assert_eq!(c.output_bits(), 150);
+        assert_eq!(c.error_bits(), 400);
+    }
+}

@@ -1,0 +1,83 @@
+//! RISC configuration core (paper sections II, VI.E).
+//!
+//! A single-issue pipelined core that configures the neural cores, the
+//! routing switches and the DMA engine, then powers down: "the RISC core
+//! is turned off afterwards during the actual training or evaluation
+//! phases". Only the configuration phase therefore contributes time and
+//! energy, and steady-state power excludes it entirely.
+
+use crate::power::risc_core as p;
+
+/// Configuration-phase cost model.
+#[derive(Clone, Copy, Debug)]
+pub struct RiscCore {
+    pub clock_hz: f64,
+}
+
+impl Default for RiscCore {
+    fn default() -> Self {
+        RiscCore { clock_hz: 200e6 }
+    }
+}
+
+/// What the RISC core must configure for a mapped application.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ConfigWork {
+    /// Neural cores to initialise (crossbar programming setup).
+    pub neural_cores: usize,
+    /// Routers whose SRAM slot images must be written.
+    pub routers: usize,
+    /// Total switch SRAM bits across those routers.
+    pub switch_bits: usize,
+    /// DMA descriptors to program.
+    pub dma_descriptors: usize,
+}
+
+impl RiscCore {
+    /// Configuration time: per-unit setup plus SRAM image writes (one
+    /// 32-bit word per cycle over the config bus).
+    pub fn config_time_s(&self, work: &ConfigWork) -> f64 {
+        let unit_cycles = (work.neural_cores + work.routers + work.dma_descriptors)
+            as u64
+            * p::CONFIG_CYCLES_PER_UNIT;
+        let sram_cycles = (work.switch_bits as u64).div_ceil(32);
+        (unit_cycles + sram_cycles) as f64 / self.clock_hz
+    }
+
+    /// Configuration energy (core active for the whole phase).
+    pub fn config_energy_j(&self, work: &ConfigWork) -> f64 {
+        self.config_time_s(work) * p::POWER_W
+    }
+
+    /// Steady-state power contribution: zero — the core is gated off.
+    pub fn steady_power_w(&self) -> f64 {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_cost_scales_with_work() {
+        let r = RiscCore::default();
+        let small = ConfigWork { neural_cores: 1, routers: 1, switch_bits: 100, dma_descriptors: 1 };
+        let big = ConfigWork { neural_cores: 144, routers: 146, switch_bits: 100_000, dma_descriptors: 4 };
+        assert!(r.config_time_s(&big) > r.config_time_s(&small));
+        assert!(r.config_energy_j(&big) > r.config_energy_j(&small));
+    }
+
+    #[test]
+    fn config_phase_is_fast() {
+        // Even a full-chip configuration finishes in well under a ms.
+        let r = RiscCore::default();
+        let work = ConfigWork { neural_cores: 144, routers: 146, switch_bits: 146 * 64 * 25, dma_descriptors: 8 };
+        assert!(r.config_time_s(&work) < 1e-3);
+    }
+
+    #[test]
+    fn steady_state_is_gated_off() {
+        assert_eq!(RiscCore::default().steady_power_w(), 0.0);
+    }
+}

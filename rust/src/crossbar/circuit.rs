@@ -1,0 +1,248 @@
+//! Electrical crossbar model: resistive nodal analysis with wire
+//! resistance and driver impedance — the repository's SPICE stand-in
+//! (DESIGN.md substitutions).
+//!
+//! Geometry: `rows x cols` memristors. Each row wire is driven from the
+//! left through a driver resistance and has a wire-segment resistance
+//! between adjacent columns; each column wire has a segment resistance
+//! between adjacent rows and ends in a virtually grounded op-amp at the
+//! bottom (paper Fig 5). Solving KCL at every internal node yields the
+//! column currents including IR drop and sneak-path effects, which the
+//! ideal model ignores. The paper uses exactly this fidelity gap to
+//! justify the 400x200 core size (section IV.A).
+//!
+//! Solver: Gauss–Seidel over node voltages. The conductance matrix is an
+//! irreducibly diagonally dominant M-matrix (every node has at least one
+//! path to a source or ground), so Gauss–Seidel converges monotonically.
+
+/// Electrical parameters for the crossbar solve.
+#[derive(Clone, Copy, Debug)]
+pub struct CircuitParams {
+    /// Wire resistance per crossbar segment (Ohm). ~1-2 Ohm per cell for
+    /// 45 nm metal layers.
+    pub r_wire: f64,
+    /// Row driver output resistance (Ohm).
+    pub r_driver: f64,
+    /// Memristor on-resistance (Ohm) for conductance normalisation:
+    /// normalised g=1 corresponds to 1/r_on.
+    pub r_on: f64,
+    /// Gauss–Seidel convergence threshold on max node-voltage delta (V).
+    pub tol: f64,
+    /// Iteration cap.
+    pub max_iters: usize,
+}
+
+impl Default for CircuitParams {
+    fn default() -> Self {
+        CircuitParams {
+            r_wire: 1.5,
+            r_driver: 100.0,
+            r_on: 10e3,
+            tol: 1e-9,
+            max_iters: 20_000,
+        }
+    }
+}
+
+/// A crossbar instance holding normalised conductances `g` (row-major
+/// `rows x cols`, values in [G_MIN, G_MAX] like the kernel weights).
+pub struct CircuitCrossbar {
+    pub rows: usize,
+    pub cols: usize,
+    /// Normalised conductances (1.0 == 1/r_on).
+    pub g: Vec<f64>,
+    pub params: CircuitParams,
+}
+
+/// Result of a circuit solve.
+pub struct SolveResult {
+    /// Column output currents (A), length `cols`.
+    pub col_currents: Vec<f64>,
+    /// Gauss–Seidel iterations used.
+    pub iters: usize,
+}
+
+impl CircuitCrossbar {
+    pub fn new(rows: usize, cols: usize, g: Vec<f64>, params: CircuitParams) -> Self {
+        assert_eq!(g.len(), rows * cols);
+        CircuitCrossbar { rows, cols, g, params }
+    }
+
+    /// Ideal column currents: I_j = sum_i V_i * g_ij / r_on (no wire R).
+    pub fn ideal_currents(&self, v_in: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[j] += v_in[i] * self.g[i * self.cols + j] / self.params.r_on;
+            }
+        }
+        out
+    }
+
+    /// Full nodal solve with wire + driver resistance.
+    pub fn solve(&self, v_in: &[f64]) -> SolveResult {
+        assert_eq!(v_in.len(), self.rows);
+        let (r, c) = (self.rows, self.cols);
+        let gw = 1.0 / self.params.r_wire;
+        let gd = 1.0 / (self.params.r_driver + self.params.r_wire);
+        // Node voltages: vr[i][j] on row wires, vc[i][j] on column wires.
+        let mut vr = vec![0.0f64; r * c];
+        let mut vc = vec![0.0f64; r * c];
+        // Initialise row nodes at the drive voltage (good warm start).
+        for i in 0..r {
+            for j in 0..c {
+                vr[i * c + j] = v_in[i];
+            }
+        }
+        let mut iters = 0;
+        loop {
+            iters += 1;
+            let mut max_d: f64 = 0.0;
+            for i in 0..r {
+                for j in 0..c {
+                    let gm = self.g[i * c + j] / self.params.r_on;
+                    // --- row node (i,j) ---
+                    let mut num = gm * vc[i * c + j];
+                    let mut den = gm;
+                    if j == 0 {
+                        num += gd * v_in[i];
+                        den += gd;
+                    } else {
+                        num += gw * vr[i * c + j - 1];
+                        den += gw;
+                    }
+                    if j + 1 < c {
+                        num += gw * vr[i * c + j + 1];
+                        den += gw;
+                    }
+                    let nv = num / den;
+                    max_d = max_d.max((nv - vr[i * c + j]).abs());
+                    vr[i * c + j] = nv;
+                    // --- column node (i,j) ---
+                    let mut num = gm * vr[i * c + j];
+                    let mut den = gm;
+                    if i > 0 {
+                        num += gw * vc[(i - 1) * c + j];
+                        den += gw;
+                    }
+                    if i + 1 < r {
+                        num += gw * vc[(i + 1) * c + j];
+                        den += gw;
+                    } else {
+                        // bottom segment into the virtually grounded op-amp
+                        den += gw; // + gw * 0.0
+                    }
+                    let nv = num / den;
+                    max_d = max_d.max((nv - vc[i * c + j]).abs());
+                    vc[i * c + j] = nv;
+                }
+            }
+            if max_d < self.params.tol || iters >= self.params.max_iters {
+                break;
+            }
+        }
+        // Column current = sum of memristor currents into the column.
+        // (Summing device currents is well-conditioned even when the wire
+        // conductance is orders of magnitude above the device conductance;
+        // reading the bottom-segment voltage drop is not.)
+        let col_currents = (0..c)
+            .map(|j| {
+                (0..r)
+                    .map(|i| {
+                        let gm = self.g[i * c + j] / self.params.r_on;
+                        (vr[i * c + j] - vc[i * c + j]) * gm
+                    })
+                    .sum()
+            })
+            .collect();
+        SolveResult { col_currents, iters }
+    }
+
+    /// Worst-case relative error of the circuit vs the ideal model over
+    /// the given drive vector — the sneak-path/IR-drop fidelity metric.
+    pub fn relative_error(&self, v_in: &[f64]) -> f64 {
+        let ideal = self.ideal_currents(v_in);
+        let real = self.solve(v_in).col_currents;
+        let mut worst: f64 = 0.0;
+        for j in 0..self.cols {
+            let denom = ideal[j].abs().max(1e-12);
+            worst = worst.max((real[j] - ideal[j]).abs() / denom);
+        }
+        worst
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{forall, Rng};
+
+    fn uniform_xbar(rows: usize, cols: usize, g: f64,
+                    params: CircuitParams) -> CircuitCrossbar {
+        CircuitCrossbar::new(rows, cols, vec![g; rows * cols], params)
+    }
+
+    #[test]
+    fn single_cell_is_a_voltage_divider() {
+        // One memristor: I = V / (r_driver + 2*r_wire + R_m + r_wire_out)
+        let p = CircuitParams::default();
+        let xb = uniform_xbar(1, 1, 1.0, p);
+        let i = xb.solve(&[0.5]).col_currents[0];
+        let expect = 0.5 / (p.r_driver + p.r_wire + p.r_on + p.r_wire);
+        assert!((i - expect).abs() / expect < 1e-6, "i={i} expect={expect}");
+    }
+
+    #[test]
+    fn negligible_wire_resistance_matches_ideal() {
+        let p = CircuitParams {
+            r_wire: 0.01,
+            r_driver: 0.01,
+            ..Default::default()
+        };
+        forall("ideal_limit", 10, |rng: &mut Rng| {
+            let (r, c) = (rng.range(2, 8), rng.range(2, 8));
+            let g: Vec<f64> = (0..r * c).map(|_| rng.uniform(0.001, 1.0)).collect();
+            let xb = CircuitCrossbar::new(r, c, g, p);
+            let v: Vec<f64> = (0..r).map(|_| rng.uniform(-0.5, 0.5)).collect();
+            let err = xb.relative_error(&v);
+            if err > 1e-3 {
+                return Err(format!("err {err} at {r}x{c}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn error_grows_with_crossbar_size() {
+        let p = CircuitParams::default();
+        let v64 = vec![0.5; 64];
+        let v16 = vec![0.5; 16];
+        let small = uniform_xbar(16, 8, 1.0, p).relative_error(&v16);
+        let large = uniform_xbar(64, 32, 1.0, p).relative_error(&v64);
+        assert!(large > small, "small={small} large={large}");
+    }
+
+    #[test]
+    fn high_resistance_devices_keep_error_small() {
+        // The paper's core-sizing argument: with high-R devices the
+        // 400-row crossbar has "very little impact of sneak paths".
+        let p = CircuitParams::default();
+        // g = 0.02 => R = 500 kOhm devices (high-resistance programming)
+        let hi_r = uniform_xbar(100, 50, 0.02, p);
+        let err = hi_r.relative_error(&vec![0.5; 100]);
+        assert!(err < 0.05, "err {err}");
+        // and the same fabric with low-R devices is markedly worse —
+        // the reason the paper picks a high-R_on device ([18]).
+        let lo_r = uniform_xbar(100, 50, 1.0, p);
+        let err_lo = lo_r.relative_error(&vec![0.5; 100]);
+        assert!(err_lo > 2.0 * err, "hi {err} lo {err_lo}");
+    }
+
+    #[test]
+    fn solver_converges_well_before_cap() {
+        let p = CircuitParams::default();
+        let xb = uniform_xbar(32, 16, 0.5, p);
+        let res = xb.solve(&vec![0.25; 32]);
+        assert!(res.iters < p.max_iters / 2, "iters {}", res.iters);
+    }
+}

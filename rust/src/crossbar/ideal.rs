@@ -1,0 +1,199 @@
+//! Ideal (mathematical) differential crossbar — dense-matrix Rust mirror
+//! of the L1 Pallas kernels. Used as (a) the reference the PJRT artifacts
+//! are integration-checked against, (b) the compute engine of the
+//! pure-Rust constrained network in `crate::nn`.
+//!
+//! Matrices are row-major `Vec<f32>`; `gpos`/`gneg` have shape
+//! `(n_in, n_out)` with the bias row included by the caller.
+
+use super::quant::{
+    activation, activation_deriv_lut, quantize_err, quantize_unit,
+};
+use crate::config::hwspec as hw;
+
+/// Forward pass: returns `(y, dp)`, each `(batch, n_out)`.
+/// Mirrors `kernels.crossbar_fwd` (matmul against g+ - g-, h(), ADC).
+pub fn fwd(
+    x: &[f32],
+    gpos: &[f32],
+    gneg: &[f32],
+    batch: usize,
+    n_in: usize,
+    n_out: usize,
+    out_bits: u32,
+) -> (Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(x.len(), batch * n_in);
+    debug_assert_eq!(gpos.len(), n_in * n_out);
+    let mut dp = vec![0.0f32; batch * n_out];
+    for b in 0..batch {
+        let xr = &x[b * n_in..(b + 1) * n_in];
+        let out = &mut dp[b * n_out..(b + 1) * n_out];
+        for i in 0..n_in {
+            let xi = xr[i];
+            if xi == 0.0 {
+                continue;
+            }
+            let gp = &gpos[i * n_out..(i + 1) * n_out];
+            let gn = &gneg[i * n_out..(i + 1) * n_out];
+            for j in 0..n_out {
+                out[j] += xi * (gp[j] - gn[j]);
+            }
+        }
+    }
+    let y = dp
+        .iter()
+        .map(|&d| quantize_unit(activation(d), out_bits))
+        .collect();
+    (y, dp)
+}
+
+/// Backward pass: `(batch, n_out)` errors -> `(batch, n_in)` errors
+/// through the transposed crossbar + error ADC (mirrors
+/// `kernels.crossbar_bwd`).
+pub fn bwd(
+    delta: &[f32],
+    gpos: &[f32],
+    gneg: &[f32],
+    batch: usize,
+    n_in: usize,
+    n_out: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; batch * n_in];
+    for b in 0..batch {
+        let dr = &delta[b * n_out..(b + 1) * n_out];
+        let o = &mut out[b * n_in..(b + 1) * n_in];
+        for i in 0..n_in {
+            let gp = &gpos[i * n_out..(i + 1) * n_out];
+            let gn = &gneg[i * n_out..(i + 1) * n_out];
+            let mut acc = 0.0f32;
+            for j in 0..n_out {
+                acc += dr[j] * (gp[j] - gn[j]);
+            }
+            o[i] = quantize_err(acc);
+        }
+    }
+    out
+}
+
+/// Weight update (training pulse): mutates `gpos`/`gneg` in place.
+/// Mirrors `kernels.weight_update`: dw = lr * x^T (delta * f'(dp)) with
+/// the product re-discretised and conductances clipped to device range.
+pub fn update(
+    gpos: &mut [f32],
+    gneg: &mut [f32],
+    x: &[f32],
+    delta: &[f32],
+    dp: &[f32],
+    lr: f32,
+    batch: usize,
+    n_in: usize,
+    n_out: usize,
+) {
+    // factor = quantize_err(delta * f'(dp)), shape (batch, n_out)
+    let factor: Vec<f32> = delta
+        .iter()
+        .zip(dp.iter())
+        .map(|(&d, &p)| quantize_err(d * activation_deriv_lut(p)))
+        .collect();
+    for i in 0..n_in {
+        let gp = &mut gpos[i * n_out..(i + 1) * n_out];
+        let gn = &mut gneg[i * n_out..(i + 1) * n_out];
+        for j in 0..n_out {
+            let mut acc = 0.0f32;
+            for b in 0..batch {
+                acc += x[b * n_in + i] * factor[b * n_out + j];
+            }
+            let dw = lr * acc;
+            gp[j] = (gp[j] + 0.5 * dw).clamp(hw::G_MIN, hw::G_MAX);
+            gn[j] = (gn[j] - 0.5 * dw).clamp(hw::G_MIN, hw::G_MAX);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{forall, Rng};
+
+    fn rand_mat(rng: &mut Rng, r: usize, c: usize, lo: f32, hi: f32) -> Vec<f32> {
+        rng.vec_uniform(r * c, lo, hi)
+    }
+
+    #[test]
+    fn fwd_known_values() {
+        // 1x2 input, 2x1 crossbar, no quantisation surprises at 0.
+        let x = vec![0.5, -0.5];
+        let gp = vec![1.0, 0.2];
+        let gn = vec![0.2, 1.0];
+        // dp = 0.5*(1-0.2) + (-0.5)*(0.2-1) = 0.4 + 0.4 = 0.8
+        let (y, dp) = fwd(&x, &gp, &gn, 1, 2, 1, 16);
+        assert!((dp[0] - 0.8).abs() < 1e-6);
+        assert!((y[0] - activation(0.8)).abs() < 1e-3);
+    }
+
+    #[test]
+    fn bwd_is_transpose_of_fwd_linearly() {
+        forall("bwd_transpose", 30, |rng: &mut Rng| {
+            let (n_in, n_out) = (rng.range(1, 12), rng.range(1, 12));
+            let gp = rand_mat(rng, n_in, n_out, 0.001, 1.0);
+            let gn = rand_mat(rng, n_in, n_out, 0.001, 1.0);
+            // unit error on one output j -> bwd ~ column j of (gp-gn)^T
+            let j = rng.below(n_out);
+            let mut delta = vec![0.0f32; n_out];
+            delta[j] = 0.5;
+            let back = bwd(&delta, &gp, &gn, 1, n_in, n_out);
+            for i in 0..n_in {
+                let expect =
+                    quantize_err(0.5 * (gp[i * n_out + j] - gn[i * n_out + j]));
+                if (back[i] - expect).abs() > 1e-6 {
+                    return Err(format!("i={i} got {} want {expect}", back[i]));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn update_moves_towards_reducing_error() {
+        // single neuron, positive input, positive error => weight must grow
+        let mut gp = vec![0.3];
+        let mut gn = vec![0.3];
+        let x = vec![0.5];
+        let delta = vec![0.5];
+        let dp = vec![0.0];
+        update(&mut gp, &mut gn, &x, &delta, &dp, 1.0, 1, 1, 1);
+        assert!(gp[0] > 0.3 && gn[0] < 0.3);
+    }
+
+    #[test]
+    fn update_clips_to_device_range() {
+        forall("update_clip", 50, |rng: &mut Rng| {
+            let (n_in, n_out) = (rng.range(1, 8), rng.range(1, 8));
+            let mut gp = rand_mat(rng, n_in, n_out, 0.001, 1.0);
+            let mut gn = rand_mat(rng, n_in, n_out, 0.001, 1.0);
+            let x = rand_mat(rng, 1, n_in, -0.5, 0.5);
+            let delta = rand_mat(rng, 1, n_out, -1.0, 1.0);
+            let dp = rand_mat(rng, 1, n_out, -3.0, 3.0);
+            update(&mut gp, &mut gn, &x, &delta, &dp, 1000.0, 1, n_in, n_out);
+            for g in gp.iter().chain(gn.iter()) {
+                if !(crate::config::hwspec::G_MIN..=crate::config::hwspec::G_MAX)
+                    .contains(g)
+                {
+                    return Err(format!("conductance {g} out of range"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn zero_error_means_no_update() {
+        let mut gp = vec![0.4, 0.6];
+        let mut gn = vec![0.5, 0.1];
+        let (gp0, gn0) = (gp.clone(), gn.clone());
+        update(&mut gp, &mut gn, &[0.3], &[0.0, 0.0], &[0.1, 0.2],
+               0.5, 1, 1, 2);
+        assert_eq!(gp, gp0);
+        assert_eq!(gn, gn0);
+    }
+}

@@ -1,0 +1,20 @@
+//! Memristor crossbar models.
+//!
+//! Three levels of abstraction, matching how the paper itself works:
+//!
+//! * [`quant`] — the ADC/DAC/op-amp numerics, a bit-exact mirror of
+//!   `python/compile/kernels/ref.py` (the L1 kernels' oracle). These are
+//!   what make the Rust-side references comparable to the PJRT-executed
+//!   artifacts.
+//! * [`ideal`] — the mathematical crossbar: dense differential matrix
+//!   products (the abstraction the training algorithm sees).
+//! * [`circuit`] — the electrical crossbar: nodal analysis with wire
+//!   resistance and driver impedance (the paper's SPICE stand-in), used
+//!   to justify the 400x200 core sizing (section IV.A).
+
+pub mod circuit;
+pub mod ideal;
+pub mod quant;
+
+pub use circuit::CircuitCrossbar;
+pub use ideal::{fwd, bwd, update};

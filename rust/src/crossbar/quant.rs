@@ -1,0 +1,132 @@
+//! ADC / DAC / op-amp numerics — bit-exact Rust mirror of
+//! `python/compile/kernels/ref.py`. Computed in f32 with the same
+//! operation order so Rust-side references and PJRT-executed artifacts
+//! agree to float equality (verified by the runtime integration tests).
+
+use crate::config::hwspec as hw;
+
+/// Uniform mid-rise quantiser of [-V_RAIL, V_RAIL] to `2^bits` levels —
+/// the neuron-output ADC (paper section IV.A).
+pub fn quantize_unit(x: f32, bits: u32) -> f32 {
+    let levels = ((1u32 << bits) - 1) as f32;
+    let x = x.clamp(-hw::V_RAIL, hw::V_RAIL);
+    ((x + hw::V_RAIL) * levels).round() / levels - hw::V_RAIL
+}
+
+/// Sign-magnitude error quantiser (1 sign + bits-1 magnitude bits) — the
+/// error ADC of the back-propagation circuit (paper section III.F).
+pub fn quantize_err(x: f32) -> f32 {
+    let mag_levels = ((1u32 << (hw::ERR_BITS - 1)) - 1) as f32;
+    let mag = x.abs().clamp(0.0, hw::ERR_MAX);
+    let code = (mag / hw::ERR_MAX * mag_levels).round();
+    sign_of(x) * code / mag_levels * hw::ERR_MAX
+}
+
+/// jnp.sign semantics (sign(0) = 0), needed for bit-parity with ref.py.
+fn sign_of(x: f32) -> f32 {
+    if x > 0.0 {
+        1.0
+    } else if x < 0.0 {
+        -1.0
+    } else {
+        0.0
+    }
+}
+
+/// Op-amp activation h(x) (paper Eq. 3): slope 1/4, clipped at the rails.
+pub fn activation(dp: f32) -> f32 {
+    (dp * hw::H_SLOPE).clamp(-hw::V_RAIL, hw::V_RAIL)
+}
+
+/// f'(DP) via the training unit's 64-entry lookup table (section III.F),
+/// matching `ref.activation_deriv_lut`.
+pub fn activation_deriv_lut(dp: f32) -> f32 {
+    let n = (hw::LUT_SIZE - 1) as f32;
+    let idx = ((dp + hw::H_CLIP_IN) / (2.0 * hw::H_CLIP_IN) * n)
+        .round()
+        .clamp(0.0, n);
+    let centre = idx / n * (2.0 * hw::H_CLIP_IN) - hw::H_CLIP_IN;
+    let s = 1.0 / (1.0 + (-centre).exp());
+    s * (1.0 - s)
+}
+
+/// The target activation the op-amp approximates (paper Fig 6).
+pub fn sigmoid_shifted(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp()) - 0.5
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hwspec as hw;
+    use crate::testing::{forall, Rng};
+
+    #[test]
+    fn quantize_unit_hits_grid() {
+        let levels = (1 << hw::OUT_BITS) - 1;
+        for i in 0..=levels {
+            let v = i as f32 / levels as f32 - hw::V_RAIL;
+            assert!((quantize_unit(v, hw::OUT_BITS) - v).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn quantize_unit_clips() {
+        assert_eq!(quantize_unit(7.0, hw::OUT_BITS), hw::V_RAIL);
+        assert_eq!(quantize_unit(-7.0, hw::OUT_BITS), -hw::V_RAIL);
+    }
+
+    #[test]
+    fn quantizers_are_monotone_and_odd() {
+        forall("quant_props", 200, |rng: &mut Rng| {
+            let a = rng.uniform_f32(-3.0, 3.0);
+            let b = rng.uniform_f32(-3.0, 3.0);
+            let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+            if quantize_unit(lo, hw::OUT_BITS) > quantize_unit(hi, hw::OUT_BITS) {
+                return Err("quantize_unit not monotone".into());
+            }
+            if quantize_err(lo) > quantize_err(hi) {
+                return Err("quantize_err not monotone".into());
+            }
+            if (quantize_err(-a) + quantize_err(a)).abs() > 1e-6 {
+                return Err("quantize_err not odd".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn error_adc_half_lsb_accuracy_in_range() {
+        let lsb = hw::ERR_MAX / ((1 << (hw::ERR_BITS - 1)) - 1) as f32;
+        forall("err_adc_acc", 200, |rng: &mut Rng| {
+            let x = rng.uniform_f32(-hw::ERR_MAX, hw::ERR_MAX);
+            let e = (quantize_err(x) - x).abs();
+            if e > lsb / 2.0 + 1e-6 {
+                return Err(format!("x={x} err={e}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn activation_approximates_shifted_sigmoid() {
+        // Paper Fig 6: h(x) closely approximates sigmoid(x) - 0.5.
+        let mut max_gap: f32 = 0.0;
+        let mut x = -6.0f32;
+        while x <= 6.0 {
+            max_gap = max_gap.max((activation(x) - sigmoid_shifted(x)).abs());
+            x += 0.05;
+        }
+        assert!(max_gap < 0.12, "gap {max_gap}");
+    }
+
+    #[test]
+    fn lut_tracks_true_derivative() {
+        let mut x = -hw::H_CLIP_IN;
+        while x <= hw::H_CLIP_IN {
+            let s = 1.0 / (1.0 + (-x).exp());
+            assert!((activation_deriv_lut(x) - s * (1.0 - s)).abs() < 0.01);
+            x += 0.01;
+        }
+    }
+}

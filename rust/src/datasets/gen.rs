@@ -1,0 +1,110 @@
+//! Class-structured synthetic feature generator.
+//!
+//! Each class gets a smooth random template (low-frequency mixture of
+//! cosines over the feature index — image-like/cepstrum-like spatial
+//! correlation); samples are template + white noise, normalised into the
+//! chip input range. This preserves exactly what the paper's
+//! accuracy-shape experiments need: distinct, partially overlapping
+//! class manifolds of the right dimensionality.
+
+use super::{normalise, Dataset};
+use crate::testing::Rng;
+
+/// Generate `n` samples of `dims`-dim features over `classes` classes.
+/// `noise` is the per-feature noise std relative to template amplitude.
+pub fn class_blobs(
+    name: &str,
+    dims: usize,
+    classes: usize,
+    n: usize,
+    noise: f64,
+    seed: u64,
+) -> Dataset {
+    let mut rng = Rng::seeded(seed ^ 0xDA7A);
+    // Smooth class templates: sum of K random cosines over feature index.
+    let k = 6;
+    let mut templates = vec![0.0f64; classes * dims];
+    for c in 0..classes {
+        for _ in 0..k {
+            let freq = rng.uniform(0.5, 8.0);
+            let phase = rng.uniform(0.0, std::f64::consts::TAU);
+            let amp = rng.uniform(0.4, 1.0);
+            for d in 0..dims {
+                let t = d as f64 / dims as f64;
+                templates[c * dims + d] +=
+                    amp * (std::f64::consts::TAU * freq * t + phase).cos();
+            }
+        }
+    }
+    let mut x = vec![0.0f32; n * dims];
+    let mut y = vec![0usize; n];
+    for i in 0..n {
+        let c = i % classes; // balanced classes
+        y[i] = c;
+        for d in 0..dims {
+            x[i * dims + d] =
+                (templates[c * dims + d] + rng.normal(0.0, noise * 2.0)) as f32;
+        }
+    }
+    normalise(&mut x, dims);
+    Dataset { name: name.to_string(), x, y, dims, classes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classes_are_balanced() {
+        let d = class_blobs("t", 32, 4, 100, 0.3, 0);
+        for c in 0..4 {
+            assert_eq!(d.y.iter().filter(|&&y| y == c).count(), 25);
+        }
+    }
+
+    #[test]
+    fn classes_are_separated_in_feature_space() {
+        // Within-class distance must be well below between-class distance,
+        // otherwise accuracy experiments degenerate to chance.
+        let d = class_blobs("t", 64, 3, 90, 0.3, 1);
+        let centroid = |c: usize| -> Vec<f64> {
+            let mut m = vec![0.0; 64];
+            let mut k = 0;
+            for i in 0..d.len() {
+                if d.y[i] == c {
+                    for (j, v) in d.sample(i).iter().enumerate() {
+                        m[j] += *v as f64;
+                    }
+                    k += 1;
+                }
+            }
+            m.iter().map(|v| v / k as f64).collect()
+        };
+        let c0 = centroid(0);
+        let c1 = centroid(1);
+        let between: f64 = c0
+            .iter()
+            .zip(&c1)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt();
+        // mean distance of class-0 samples to own centroid
+        let mut within = 0.0;
+        let mut k = 0;
+        for i in 0..d.len() {
+            if d.y[i] == 0 {
+                within += d
+                    .sample(i)
+                    .iter()
+                    .zip(&c0)
+                    .map(|(a, b)| (*a as f64 - b) * (*a as f64 - b))
+                    .sum::<f64>()
+                    .sqrt();
+                k += 1;
+            }
+        }
+        within /= k as f64;
+        assert!(between > 0.5 * within,
+                "between {between} within {within}");
+    }
+}

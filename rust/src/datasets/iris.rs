@@ -1,0 +1,68 @@
+//! Iris dataset, synthesised from the published per-class statistics of
+//! the real Fisher data (mean and standard deviation of each of the four
+//! features per class). 50 samples per class, Gaussian around the class
+//! means — this preserves the property the paper's Figs 16/17 rely on:
+//! setosa linearly separable, versicolor/virginica adjacent.
+
+use super::{normalise, Dataset};
+use crate::testing::Rng;
+
+/// Published class statistics of the real Iris data:
+/// (mean[4], std[4]) for setosa, versicolor, virginica — features are
+/// sepal length, sepal width, petal length, petal width (cm).
+const STATS: [([f64; 4], [f64; 4]); 3] = [
+    ([5.006, 3.428, 1.462, 0.246], [0.352, 0.379, 0.174, 0.105]),
+    ([5.936, 2.770, 4.260, 1.326], [0.516, 0.314, 0.470, 0.198]),
+    ([6.588, 2.974, 5.552, 2.026], [0.636, 0.322, 0.552, 0.275]),
+];
+
+/// Class names in label order (0, 1, 2).
+pub const IRIS_CLASSES: [&str; 3] = ["setosa", "versicolor", "virginica"];
+
+/// The 150-sample Iris dataset (50 per class), deterministic.
+pub fn iris(seed: u64) -> Dataset {
+    let mut rng = Rng::seeded(seed ^ 0x1815);
+    let mut x = Vec::with_capacity(150 * 4);
+    let mut y = Vec::with_capacity(150);
+    for (c, (mean, std)) in STATS.iter().enumerate() {
+        for _ in 0..50 {
+            for d in 0..4 {
+                x.push(rng.normal(mean[d], std[d]) as f32);
+            }
+            y.push(c);
+        }
+    }
+    normalise(&mut x, 4);
+    Dataset { name: "iris".into(), x, y, dims: 4, classes: 3 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn has_150_samples_50_per_class() {
+        let d = iris(0);
+        assert_eq!(d.len(), 150);
+        for c in 0..3 {
+            assert_eq!(d.y.iter().filter(|&&y| y == c).count(), 50);
+        }
+    }
+
+    #[test]
+    fn setosa_is_linearly_separable_on_petal_length() {
+        // The hallmark of the real data: setosa petal length (feature 2)
+        // never overlaps the other classes.
+        let d = iris(0);
+        let max_setosa = (0..150)
+            .filter(|&i| d.y[i] == 0)
+            .map(|i| d.sample(i)[2])
+            .fold(f32::NEG_INFINITY, f32::max);
+        let min_other = (0..150)
+            .filter(|&i| d.y[i] != 0)
+            .map(|i| d.sample(i)[2])
+            .fold(f32::INFINITY, f32::min);
+        assert!(max_setosa < min_other,
+                "setosa max {max_setosa} vs others min {min_other}");
+    }
+}

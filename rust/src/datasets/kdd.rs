@@ -1,0 +1,163 @@
+//! Synthetic KDD-99-like network-traffic data for the anomaly-detection
+//! experiment (paper section VI.C).
+//!
+//! 41 features. "Normal" packets form one coherent mass (a mixture of a
+//! few nearby modes — different normal services); "attack" packets come
+//! from several modes shifted off the normal manifold with heavier
+//! per-feature distortion. The paper trains the 41→15→41 autoencoder on
+//! 5292 normal packets only, then thresholds reconstruction distance.
+
+use super::{normalise, Dataset};
+use crate::testing::Rng;
+
+const DIMS: usize = 41;
+
+/// Train/test split for the anomaly experiment.
+#[derive(Clone, Debug)]
+pub struct KddSplit {
+    /// Normal-only training set (paper: 5292 normal packets).
+    pub train: Dataset,
+    /// Mixed test set.
+    pub test: Dataset,
+    /// Test labels: false = normal, true = attack.
+    pub test_attack: Vec<bool>,
+}
+
+fn mode(rng: &mut Rng, centre: &[f64; DIMS], spread: f64) -> Vec<f32> {
+    centre
+        .iter()
+        .map(|&c| (c + rng.normal(0.0, spread)) as f32)
+        .collect()
+}
+
+/// Generate the anomaly corpus. `n_train` normal training packets,
+/// `n_test_normal` + `n_test_attack` test packets.
+pub fn kdd(n_train: usize, n_test_normal: usize, n_test_attack: usize,
+           seed: u64) -> KddSplit {
+    let mut rng = Rng::seeded(seed ^ 0x6DD5);
+    // Normal manifold: 4 nearby service modes around a base point.
+    let base: [f64; DIMS] = std::array::from_fn(|_| rng.uniform(-0.6, 0.6));
+    let normal_modes: Vec<[f64; DIMS]> = (0..4)
+        .map(|_| std::array::from_fn(|d| base[d] + rng.normal(0.0, 0.25)))
+        .collect();
+    // Attack modes: shifted well off the normal manifold in a random
+    // subset of features (scans, floods, U2R each distort differently).
+    let attack_modes: Vec<[f64; DIMS]> = (0..5)
+        .map(|_| {
+            std::array::from_fn(|d| {
+                let shift = if rng.unit() < 0.15 {
+                    rng.uniform(0.35, 0.9) * if rng.unit() < 0.5 { -1.0 } else { 1.0 }
+                } else {
+                    0.0
+                };
+                base[d] + shift + rng.normal(0.0, 0.3)
+            })
+        })
+        .collect();
+
+    let draw_normal = |rng: &mut Rng| {
+        let m = &normal_modes[rng.below(normal_modes.len())];
+        mode(rng, m, 0.25)
+    };
+    let draw_attack = |rng: &mut Rng| {
+        let m = &attack_modes[rng.below(attack_modes.len())];
+        mode(rng, m, 0.45)
+    };
+
+    // Build one big matrix first so normalisation is computed over the
+    // union (as a preprocessing pipeline over captured traffic would).
+    let total = n_train + n_test_normal + n_test_attack;
+    let mut x = Vec::with_capacity(total * DIMS);
+    for _ in 0..n_train + n_test_normal {
+        x.extend(draw_normal(&mut rng));
+    }
+    for _ in 0..n_test_attack {
+        x.extend(draw_attack(&mut rng));
+    }
+    normalise(&mut x, DIMS);
+
+    let slice = |lo: usize, hi: usize, name: &str| Dataset {
+        name: name.to_string(),
+        x: x[lo * DIMS..hi * DIMS].to_vec(),
+        y: Vec::new(),
+        dims: DIMS,
+        classes: 0,
+    };
+    let train = slice(0, n_train, "kdd_train");
+    // interleave normal + attack test samples deterministically
+    let test_n = slice(n_train, n_train + n_test_normal, "kdd_test_norm");
+    let test_a = slice(n_train + n_test_normal, total, "kdd_test_att");
+    let mut test_x = Vec::new();
+    let mut test_attack = Vec::new();
+    let max_len = n_test_normal.max(n_test_attack);
+    for i in 0..max_len {
+        if i < n_test_normal {
+            test_x.extend_from_slice(test_n.sample(i));
+            test_attack.push(false);
+        }
+        if i < n_test_attack {
+            test_x.extend_from_slice(test_a.sample(i));
+            test_attack.push(true);
+        }
+    }
+    let test = Dataset {
+        name: "kdd_test".into(),
+        x: test_x,
+        y: Vec::new(),
+        dims: DIMS,
+        classes: 0,
+    };
+    KddSplit { train, test, test_attack }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_sized_corpus() {
+        let k = kdd(5292, 500, 500, 0);
+        assert_eq!(k.train.len(), 5292);
+        assert_eq!(k.test.len(), 1000);
+        assert_eq!(k.test_attack.iter().filter(|&&a| a).count(), 500);
+        assert_eq!(k.train.dims, 41);
+    }
+
+    #[test]
+    fn attacks_sit_off_the_normal_manifold() {
+        let k = kdd(500, 200, 200, 1);
+        // centroid of normal training data
+        let mut c = vec![0.0f64; 41];
+        for i in 0..k.train.len() {
+            for (d, v) in k.train.sample(i).iter().enumerate() {
+                c[d] += *v as f64;
+            }
+        }
+        for v in &mut c {
+            *v /= k.train.len() as f64;
+        }
+        let dist = |s: &[f32]| -> f64 {
+            s.iter()
+                .zip(&c)
+                .map(|(a, b)| (*a as f64 - b).abs())
+                .sum::<f64>()
+        };
+        let (mut dn, mut da, mut nn, mut na) = (0.0, 0.0, 0, 0);
+        for i in 0..k.test.len() {
+            if k.test_attack[i] {
+                da += dist(k.test.sample(i));
+                na += 1;
+            } else {
+                dn += dist(k.test.sample(i));
+                nn += 1;
+            }
+        }
+        let (dn, da) = (dn / nn as f64, da / na as f64);
+        assert!(da > 1.5 * dn, "attack {da} vs normal {dn}");
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(kdd(100, 10, 10, 5).train.x, kdd(100, 10, 10, 5).train.x);
+    }
+}

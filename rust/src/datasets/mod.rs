@@ -1,0 +1,162 @@
+//! Datasets (paper section V.A): Iris, MNIST, ISOLET, KDD.
+//!
+//! No network access exists in the build environment, so MNIST / ISOLET /
+//! KDD are deterministic synthetic generators with the *same tensor
+//! shapes, class counts and class structure* as the originals (see
+//! DESIGN.md substitutions — every architecture result depends only on
+//! shapes; accuracy-shape results need class structure, not real pixels).
+//! Iris is synthesised from the published per-class feature statistics of
+//! the real Fisher data, which preserves its near-linear separability.
+//!
+//! All features are normalised into the chip's input range
+//! `[-V_RAIL, V_RAIL]`; classifier targets are `±0.4`-scaled one-hot
+//! vectors (inside the rail with headroom, so they are reachable).
+
+mod gen;
+mod iris;
+mod kdd;
+
+pub use gen::class_blobs;
+pub use iris::{iris, IRIS_CLASSES};
+pub use kdd::{kdd, KddSplit};
+
+use crate::config::hwspec as hw;
+use crate::testing::Rng;
+
+/// A labelled dataset with features in the chip input range.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    /// Row-major features: `n x dims`.
+    pub x: Vec<f32>,
+    /// Class labels (empty for unlabelled data).
+    pub y: Vec<usize>,
+    pub dims: usize,
+    pub classes: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        if self.dims == 0 { 0 } else { self.x.len() / self.dims }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn sample(&self, i: usize) -> &[f32] {
+        &self.x[i * self.dims..(i + 1) * self.dims]
+    }
+
+    /// Targets for classifier training: one-hot at ±0.4 (multi-class) or
+    /// a single ±0.4 output (binary with one output neuron).
+    pub fn target(&self, i: usize, outputs: usize) -> Vec<f32> {
+        let mut t = vec![-0.4f32; outputs];
+        if outputs == 1 {
+            t[0] = if self.y[i] > 0 { 0.4 } else { -0.4 };
+        } else {
+            t[self.y[i]] = 0.4;
+        }
+        t
+    }
+
+    /// Deterministic train/test split (shuffle then cut).
+    pub fn split(&self, train_frac: f64, seed: u64) -> (Dataset, Dataset) {
+        let n = self.len();
+        let mut idx: Vec<usize> = (0..n).collect();
+        let mut rng = Rng::seeded(seed);
+        rng.shuffle(&mut idx);
+        let cut = ((n as f64) * train_frac) as usize;
+        let build = |ids: &[usize], tag: &str| Dataset {
+            name: format!("{}_{tag}", self.name),
+            x: ids.iter().flat_map(|&i| self.sample(i).to_vec()).collect(),
+            y: if self.y.is_empty() {
+                Vec::new()
+            } else {
+                ids.iter().map(|&i| self.y[i]).collect()
+            },
+            dims: self.dims,
+            classes: self.classes,
+        };
+        (build(&idx[..cut], "train"), build(&idx[cut..], "test"))
+    }
+
+    /// Samples as a vector of row vectors (for `memory::SampleStream`).
+    pub fn rows(&self) -> Vec<Vec<f32>> {
+        (0..self.len()).map(|i| self.sample(i).to_vec()).collect()
+    }
+}
+
+/// Clamp-normalise a raw feature matrix into the rail range per feature.
+pub(crate) fn normalise(x: &mut [f32], dims: usize) {
+    let n = x.len() / dims;
+    for d in 0..dims {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for i in 0..n {
+            let v = x[i * dims + d];
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        let span = (hi - lo).max(1e-9);
+        for i in 0..n {
+            let v = &mut x[i * dims + d];
+            *v = ((*v - lo) / span - 0.5) * (2.0 * hw::V_RAIL) * 0.98;
+        }
+    }
+}
+
+/// Synthetic MNIST: 784-dim, 10 classes, smooth class-template blobs.
+pub fn mnist(n: usize, seed: u64) -> Dataset {
+    class_blobs("mnist", 784, 10, n, 0.35, seed)
+}
+
+/// Synthetic ISOLET: 617-dim, 26 classes (spoken-letter cepstra shapes).
+pub fn isolet(n: usize, seed: u64) -> Dataset {
+    class_blobs("isolet", 617, 26, n, 0.30, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_have_table1_shapes() {
+        let m = mnist(200, 1);
+        assert_eq!((m.dims, m.classes), (784, 10));
+        assert_eq!(m.len(), 200);
+        let i = isolet(130, 1);
+        assert_eq!((i.dims, i.classes), (617, 26));
+    }
+
+    #[test]
+    fn features_respect_rail_range() {
+        let m = mnist(100, 2);
+        assert!(m.x.iter().all(|v| v.abs() <= hw::V_RAIL + 1e-6));
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        assert_eq!(mnist(50, 7).x, mnist(50, 7).x);
+        assert_ne!(mnist(50, 7).x, mnist(50, 8).x);
+    }
+
+    #[test]
+    fn split_partitions_without_loss() {
+        let m = mnist(100, 3);
+        let (tr, te) = m.split(0.8, 0);
+        assert_eq!(tr.len(), 80);
+        assert_eq!(te.len(), 20);
+        assert_eq!(tr.dims, 784);
+        assert_eq!(tr.y.len(), 80);
+    }
+
+    #[test]
+    fn targets_are_reachable_one_hots() {
+        let m = mnist(10, 4);
+        let t = m.target(0, 10);
+        assert_eq!(t.len(), 10);
+        assert_eq!(t.iter().filter(|&&v| v > 0.0).count(), 1);
+        assert!((t[m.y[0]] - 0.4).abs() < 1e-6);
+    }
+}

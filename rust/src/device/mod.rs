@@ -1,0 +1,220 @@
+//! Memristor device physics — the Yakopcic generalized model (paper
+//! ref [27]) with the Yu/Wong HfOx/AlOx device parameters of Fig 15.
+//!
+//! This is the SPICE stand-in: the same device model the paper simulates,
+//! integrated with explicit Euler. It drives the Fig 15 reproduction and
+//! grounds the weight-update nonlinearity assumptions of the L1
+//! `weight_update` kernel (bounded conductance, threshold writes).
+
+mod pair;
+pub use pair::ConductancePair;
+
+/// Yakopcic model parameters.
+///
+/// Defaults reproduce the device of paper ref [18] as parameterised in
+/// Fig 15: Vp = Vn = 1.3 V, Ap = An = 5800, xp = xn = 0.9995,
+/// alpha_p = alpha_n = 3, R_on ~ 10 kOhm, R_off/R_on ~ 1000, full-range
+/// switch in ~20 us at 2.5 V.
+#[derive(Clone, Copy, Debug)]
+pub struct MemristorParams {
+    /// Positive / negative write thresholds (V).
+    pub vp: f64,
+    pub vn: f64,
+    /// State-change rate magnitudes (1/s after the exponential factor).
+    pub ap: f64,
+    pub an: f64,
+    /// Window boundary points.
+    pub xp: f64,
+    pub xn: f64,
+    /// Window decay exponents.
+    pub alpha_p: f64,
+    pub alpha_n: f64,
+    /// I-V amplitude factors (A) for V >= 0 / V < 0.
+    pub a1: f64,
+    pub a2: f64,
+    /// I-V sinh slope (1/V).
+    pub b: f64,
+    /// Minimum state (sets R_off = R_on / x_min).
+    pub x_min: f64,
+}
+
+impl Default for MemristorParams {
+    fn default() -> Self {
+        // a1 chosen so R(x=1) at a 0.5 V read is ~10 kOhm:
+        // I = a1 * sinh(b * 0.5), R = 0.5 / I.
+        let b = 3.0;
+        let a1 = 0.5 / (10.0e3 * (b * 0.5f64).sinh());
+        MemristorParams {
+            vp: 1.3,
+            vn: 1.3,
+            ap: 5800.0,
+            an: 5800.0,
+            xp: 0.9995,
+            xn: 0.9995,
+            alpha_p: 3.0,
+            alpha_n: 3.0,
+            a1,
+            a2: a1,
+            b,
+            x_min: 1e-3,
+        }
+    }
+}
+
+/// One memristor with internal state `x` in `[x_min, 1]`.
+#[derive(Clone, Copy, Debug)]
+pub struct Memristor {
+    pub params: MemristorParams,
+    pub x: f64,
+}
+
+impl Memristor {
+    /// A fresh device formed at high resistance (paper training step 1:
+    /// "initialize the memristors with high random resistances").
+    pub fn fresh(params: MemristorParams) -> Self {
+        Memristor { params, x: params.x_min }
+    }
+
+    pub fn with_state(params: MemristorParams, x: f64) -> Self {
+        Memristor { params, x: x.clamp(params.x_min, 1.0) }
+    }
+
+    /// Device current at voltage `v` (A).
+    pub fn current(&self, v: f64) -> f64 {
+        let p = &self.params;
+        let amp = if v >= 0.0 { p.a1 } else { p.a2 };
+        amp * self.x * (p.b * v).sinh()
+    }
+
+    /// Small-signal conductance at read voltage `v_read` (S).
+    pub fn conductance(&self, v_read: f64) -> f64 {
+        self.current(v_read) / v_read
+    }
+
+    /// Resistance at the standard 0.5 V read (Ohm).
+    pub fn resistance(&self) -> f64 {
+        1.0 / self.conductance(0.5)
+    }
+
+    /// Voltage-dependent state-change rate g(V): zero below threshold —
+    /// this is what lets half-selected crossbar devices keep their state.
+    fn g(&self, v: f64) -> f64 {
+        let p = &self.params;
+        if v > p.vp {
+            p.ap * (v.exp() - p.vp.exp())
+        } else if v < -p.vn {
+            -p.an * ((-v).exp() - p.vn.exp())
+        } else {
+            0.0
+        }
+    }
+
+    /// Motion window f(x): slows ion motion near the state boundaries.
+    fn f(&self, x: f64, increasing: bool) -> f64 {
+        let p = &self.params;
+        if increasing {
+            if x >= p.xp {
+                let wp = (p.xp - x) / (1.0 - p.xp) + 1.0;
+                (-p.alpha_p * (x - p.xp)).exp() * wp.max(0.0)
+            } else {
+                1.0
+            }
+        } else if x <= 1.0 - p.xn {
+            let wn = x / (1.0 - p.xn);
+            (p.alpha_n * (x + p.xn - 1.0)).exp() * wn.max(0.0)
+        } else {
+            1.0
+        }
+    }
+
+    /// Advance the state by `dt` seconds under applied voltage `v`
+    /// (explicit Euler; callers pick dt << switching time).
+    pub fn step(&mut self, v: f64, dt: f64) {
+        let g = self.g(v);
+        if g == 0.0 {
+            return;
+        }
+        let dx = g * self.f(self.x, g > 0.0) * dt;
+        self.x = (self.x + dx).clamp(self.params.x_min, 1.0);
+    }
+
+    /// Apply a rectangular write pulse.
+    pub fn pulse(&mut self, v: f64, duration_s: f64, dt: f64) {
+        let mut t = 0.0;
+        while t < duration_s {
+            let step = dt.min(duration_s - t);
+            self.step(v, step);
+            t += step;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dev() -> Memristor {
+        Memristor::fresh(MemristorParams::default())
+    }
+
+    #[test]
+    fn resistance_range_matches_device() {
+        let p = MemristorParams::default();
+        let off = Memristor::with_state(p, p.x_min);
+        let on = Memristor::with_state(p, 1.0);
+        let r_on = on.resistance();
+        let r_off = off.resistance();
+        assert!((r_on - 10e3).abs() / 10e3 < 0.05, "R_on {r_on}");
+        assert!((r_off / r_on - 1000.0).abs() / 1000.0 < 0.05,
+                "ratio {}", r_off / r_on);
+    }
+
+    #[test]
+    fn read_voltage_does_not_disturb() {
+        let mut m = dev();
+        let x0 = m.x;
+        // 1 ms at the 0.5 V read rail — far below the 1.3 V threshold.
+        m.pulse(0.5, 1e-3, 1e-7);
+        m.pulse(-0.5, 1e-3, 1e-7);
+        assert_eq!(m.x, x0);
+    }
+
+    #[test]
+    fn full_switch_in_about_20us_at_2p5v() {
+        let mut m = dev();
+        m.pulse(2.5, 20e-6, 1e-9);
+        assert!(m.x > 0.95, "x after 20us: {}", m.x);
+        // and back down
+        m.pulse(-2.5, 20e-6, 1e-9);
+        assert!(m.x < 0.05, "x after erase: {}", m.x);
+    }
+
+    #[test]
+    fn state_stays_bounded_under_overdrive() {
+        let mut m = dev();
+        m.pulse(3.5, 1e-3, 1e-8);
+        assert!(m.x <= 1.0);
+        m.pulse(-3.5, 1e-3, 1e-8);
+        assert!(m.x >= m.params.x_min);
+    }
+
+    #[test]
+    fn iv_curve_is_odd_and_monotone_in_x() {
+        let p = MemristorParams::default();
+        let lo = Memristor::with_state(p, 0.2);
+        let hi = Memristor::with_state(p, 0.8);
+        assert!(hi.current(0.5) > lo.current(0.5));
+        assert!((lo.current(0.5) + lo.current(-0.5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn partial_pulse_gives_partial_switch() {
+        // Pulse-duration modulation — the training circuit's knob (Fig 11).
+        let mut short = dev();
+        let mut long = dev();
+        short.pulse(2.0, 1e-6, 1e-9);
+        long.pulse(2.0, 4e-6, 1e-9);
+        assert!(short.x > short.params.x_min);
+        assert!(long.x > short.x);
+    }
+}

@@ -1,0 +1,117 @@
+//! Differential conductance pair: two memristors encode one signed weight
+//! (paper section III.B, two memristors per synapse).
+
+use super::{Memristor, MemristorParams};
+
+/// A (sigma+, sigma-) pair on two crossbar columns. Weight is the
+/// normalised conductance difference, matching the L1 kernels'
+/// `w = g+ - g-` convention with `g` normalised so `g(x=1) = 1`.
+#[derive(Clone, Copy, Debug)]
+pub struct ConductancePair {
+    pub pos: Memristor,
+    pub neg: Memristor,
+}
+
+impl ConductancePair {
+    pub fn fresh(params: MemristorParams) -> Self {
+        ConductancePair {
+            pos: Memristor::fresh(params),
+            neg: Memristor::fresh(params),
+        }
+    }
+
+    /// Normalised conductances (x is proportional to conductance in the
+    /// Yakopcic model, so the normalised g *is* the state).
+    pub fn g_pos(&self) -> f64 {
+        self.pos.x
+    }
+
+    pub fn g_neg(&self) -> f64 {
+        self.neg.x
+    }
+
+    /// Effective synaptic weight.
+    pub fn weight(&self) -> f64 {
+        self.pos.x - self.neg.x
+    }
+
+    /// Apply a training update of `dw`: +dw/2 on sigma+, -dw/2 on sigma-
+    /// (paper section III.F step 3), via threshold-crossing pulses whose
+    /// duration encodes the magnitude. `dt` is the integration step.
+    pub fn apply_dw(&mut self, dw: f64, dt: f64) {
+        // Pulse amplitude fixed just above threshold; duration modulated.
+        // At 2.0 V, dx/dt = ap*(e^2 - e^1.3) ~= 2.16e4 /s  => the duration
+        // for a state change |dw|/2 is |dw| / (2 * rate).
+        let rate = self.pos.params.ap
+            * ((2.0f64).exp() - self.pos.params.vp.exp());
+        let dur = (dw.abs() / 2.0) / rate;
+        if dw >= 0.0 {
+            self.pos.pulse(2.0, dur, dt);
+            self.neg.pulse(-2.0, dur, dt);
+        } else {
+            self.pos.pulse(-2.0, dur, dt);
+            self.neg.pulse(2.0, dur, dt);
+        }
+    }
+
+    /// Program the pair to a target weight by iterated write-verify
+    /// (how the configuration phase loads pre-trained weights).
+    pub fn program_weight(&mut self, target: f64, tol: f64, dt: f64) -> usize {
+        let mut iters = 0;
+        while (self.weight() - target).abs() > tol && iters < 200 {
+            self.apply_dw(target - self.weight(), dt);
+            iters += 1;
+        }
+        iters
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{forall, Rng};
+
+    fn pair() -> ConductancePair {
+        ConductancePair::fresh(MemristorParams::default())
+    }
+
+    #[test]
+    fn fresh_pair_is_zero_weight() {
+        assert!(pair().weight().abs() < 1e-9);
+    }
+
+    #[test]
+    fn apply_dw_moves_weight_in_the_right_direction() {
+        let mut p = pair();
+        p.apply_dw(0.2, 1e-9);
+        assert!(p.weight() > 0.05, "w={}", p.weight());
+        let w = p.weight();
+        p.apply_dw(-0.1, 1e-9);
+        assert!(p.weight() < w);
+    }
+
+    #[test]
+    fn program_weight_converges_across_targets() {
+        forall("program_weight", 20, |rng: &mut Rng| {
+            let target = rng.uniform(-0.8, 0.8);
+            let mut p = pair();
+            p.program_weight(target, 0.01, 1e-9);
+            let err = (p.weight() - target).abs();
+            if err > 0.02 {
+                return Err(format!("target {target} err {err}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn conductances_stay_physical() {
+        let mut p = pair();
+        for _ in 0..50 {
+            p.apply_dw(0.5, 1e-8);
+        }
+        assert!(p.g_pos() <= 1.0 && p.g_neg() >= p.pos.params.x_min);
+        // Weight saturates at the device limit.
+        assert!(p.weight() <= 1.0);
+    }
+}

@@ -1,0 +1,138 @@
+//! NVIDIA Tesla K20 baseline cost model (paper section VI.F).
+//!
+//! The paper compares against aggregate K20 throughput/power; we model it
+//! as a roofline: per-kernel time = max(compute, memory) + launch
+//! overhead, energy = time x board power. Stochastic (batch-1) BP — the
+//! algorithm both the paper and the chip run — is memory- and
+//! launch-bound on a GPU, which is precisely where the crossbar
+//! architecture's advantage comes from (weights never move).
+
+use crate::config::Network;
+
+/// K20 datasheet + era constants.
+pub mod k20 {
+    /// Peak single-precision throughput (FLOP/s).
+    pub const PEAK_FLOPS: f64 = 3.52e12;
+    /// Peak memory bandwidth (B/s).
+    pub const MEM_BW_BPS: f64 = 208e9;
+    /// Board power (W) — the paper uses the 225 W TDP.
+    pub const POWER_W: f64 = 225.0;
+    /// Die area (mm^2), 28 nm — paper section VI.F.
+    pub const AREA_MM2: f64 = 561.0;
+    /// Kernel launch + driver overhead per kernel (s), K20/CUDA-5 era.
+    pub const LAUNCH_S: f64 = 10e-6;
+    /// Achievable fraction of peak FLOPs for GEMV-shaped kernels.
+    pub const GEMV_EFF: f64 = 0.12;
+    /// Achievable fraction of peak memory bandwidth.
+    pub const BW_EFF: f64 = 0.75;
+}
+
+/// Cost of one GPU operation batch.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GpuCost {
+    pub time_s: f64,
+    pub energy_j: f64,
+}
+
+/// Roofline time for one kernel: flops + bytes + one launch.
+fn kernel_time(flops: f64, bytes: f64) -> f64 {
+    let compute = flops / (k20::PEAK_FLOPS * k20::GEMV_EFF);
+    let memory = bytes / (k20::MEM_BW_BPS * k20::BW_EFF);
+    compute.max(memory) + k20::LAUNCH_S
+}
+
+fn cost(time_s: f64) -> GpuCost {
+    GpuCost { time_s, energy_j: time_s * k20::POWER_W }
+}
+
+fn layer_train_time(n_in: usize, n_out: usize) -> f64 {
+    let params = ((n_in + 1) * n_out) as f64;
+    let w_bytes = params * 4.0;
+    kernel_time(2.0 * params, w_bytes)        // forward
+        + kernel_time(2.0 * params, w_bytes)  // backward
+        + kernel_time(2.0 * params, 2.0 * w_bytes) // update (r+w)
+}
+
+/// Per-sample stochastic-BP training cost for a network.
+///
+/// Per layer: forward GEMV, backward GEMV, rank-1 update — three kernels,
+/// each traversing the layer's weight matrix once (read) and the update
+/// additionally writing it back. DR apps train layer-by-layer exactly as
+/// the chip does (each stage a 2-layer n->h->n autoencoder), so one
+/// training item passes every stage per iteration on both platforms.
+pub fn train_cost(net: &Network) -> GpuCost {
+    use crate::config::AppKind;
+    let mut t = 0.0;
+    if net.kind == AppKind::DimReduction {
+        for (n_in, n_hid) in net.dr_stages() {
+            t += layer_train_time(n_in, n_hid); // encoder
+            t += layer_train_time(n_hid, n_in); // temporary decoder
+        }
+    } else {
+        for (n_in, n_out) in net.layer_shapes() {
+            t += layer_train_time(n_in, n_out);
+        }
+    }
+    cost(t)
+}
+
+/// Per-sample recognition cost (forward only).
+pub fn recognition_cost(net: &Network) -> GpuCost {
+    let mut t = 0.0;
+    for (n_in, n_out) in net.layer_shapes() {
+        let params = ((n_in + 1) * n_out) as f64;
+        t += kernel_time(2.0 * params, params * 4.0);
+    }
+    cost(t)
+}
+
+/// Per-sample k-means cost (distance + argmin kernels over k centres of
+/// d dims). Tiny compute, launch-dominated — as it is in practice.
+pub fn kmeans_cost(dims: usize, clusters: usize) -> GpuCost {
+    let flops = 3.0 * (dims * clusters) as f64;
+    let bytes = ((dims * clusters) as f64 + dims as f64) * 4.0;
+    cost(kernel_time(flops, bytes) + kernel_time(clusters as f64, clusters as f64 * 4.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::apps;
+
+    #[test]
+    fn training_costs_scale_with_network_size() {
+        let small = train_cost(apps::network("kdd_ae").unwrap());
+        let big = train_cost(apps::network("isolet_class").unwrap());
+        assert!(big.time_s > 5.0 * small.time_s);
+        assert!(big.energy_j > small.energy_j);
+    }
+
+    #[test]
+    fn small_nets_are_launch_bound() {
+        // kdd_ae: 2 layers x 3 kernels x 10us = 60us floor.
+        let c = train_cost(apps::network("kdd_ae").unwrap());
+        assert!(c.time_s >= 6.0 * k20::LAUNCH_S);
+        assert!(c.time_s < 8.0 * k20::LAUNCH_S, "t={}", c.time_s);
+    }
+
+    #[test]
+    fn big_nets_are_memory_bound() {
+        // isolet weights ~2.9M params: memory term dominates launches.
+        let net = apps::network("isolet_class").unwrap();
+        let c = train_cost(net);
+        let launch_floor = 15.0 * k20::LAUNCH_S;
+        assert!(c.time_s > 1.5 * launch_floor, "t={}", c.time_s);
+    }
+
+    #[test]
+    fn energy_is_time_times_board_power() {
+        let c = recognition_cost(apps::network("mnist_class").unwrap());
+        assert!((c.energy_j - c.time_s * 225.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kmeans_is_launch_dominated() {
+        let c = kmeans_cost(20, 26);
+        assert!(c.time_s > k20::LAUNCH_S && c.time_s < 5.0 * k20::LAUNCH_S);
+    }
+}

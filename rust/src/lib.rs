@@ -1,0 +1,40 @@
+//! # ReStream — memristor multicore architecture for streaming deep-network training
+//!
+//! Reproduction of Hasan, Taha & Alom, *"A Reconfigurable Low Power High
+//! Throughput Streaming Architecture for Big Data Processing"* (2016) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 1/2 (build time)** — the chip's numerics (differential
+//!   memristor crossbar forward / backward / weight-update, k-means
+//!   datapath) are authored as Pallas kernels composed into JAX training
+//!   graphs and AOT-lowered to HLO text under `artifacts/`.
+//! * **Layer 3 (this crate)** — the chip itself: neural cores, the digital
+//!   clustering core, the RISC configuration core, the statically routed
+//!   2-D mesh NoC, the 3-D stacked DRAM front, the network→core mapper,
+//!   the streaming training coordinator, and the power/area/energy
+//!   accounting that regenerates every table and figure of the paper.
+//!   Functional math executes through the [`runtime`] PJRT wrapper;
+//!   Python never runs on the request path.
+//!
+//! See `DESIGN.md` for the system inventory and experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod benchutil;
+pub mod config;
+pub mod coordinator;
+pub mod cores;
+pub mod crossbar;
+pub mod datasets;
+pub mod device;
+pub mod gpu;
+pub mod kmeans;
+pub mod mapper;
+pub mod memory;
+pub mod metrics;
+pub mod nn;
+pub mod noc;
+pub mod power;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod testing;

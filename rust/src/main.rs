@@ -1,0 +1,238 @@
+//! `restream` — CLI launcher for the ReStream chip simulator.
+//!
+//! Subcommands (hand-rolled parser; no clap in the offline registry):
+//!
+//! ```text
+//! restream chip                          chip inventory + area budget
+//! restream report --table 2|3|4         regenerate a paper table
+//! restream report --vs-gpu train|recog  Figs 22-25 series
+//! restream train   --app NAME [--epochs N] [--lr F] [--seed N]
+//! restream infer   --app NAME [--seed N]
+//! restream cluster --app NAME [--epochs N]
+//! restream anomaly [--epochs N]
+//! ```
+
+use std::collections::HashMap;
+use std::process::ExitCode;
+
+use restream::config::{apps, SystemConfig};
+use restream::coordinator::Engine;
+use restream::{datasets, metrics, report};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("restream: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// Parse `--key value` pairs after the subcommand.
+fn flags(args: &[String]) -> Result<HashMap<String, String>, String> {
+    let mut m = HashMap::new();
+    let mut it = args.iter();
+    while let Some(k) = it.next() {
+        let key = k
+            .strip_prefix("--")
+            .ok_or_else(|| format!("expected --flag, got {k}"))?;
+        let v = it
+            .next()
+            .ok_or_else(|| format!("--{key} needs a value"))?;
+        m.insert(key.to_string(), v.clone());
+    }
+    Ok(m)
+}
+
+fn get<T: std::str::FromStr>(f: &HashMap<String, String>, key: &str,
+                             default: T) -> Result<T, String> {
+    match f.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .parse()
+            .map_err(|_| format!("bad value for --{key}: {v}")),
+    }
+}
+
+fn run(args: &[String]) -> anyhow::Result<()> {
+    let sys = SystemConfig::default();
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let f = flags(&args[1..]).map_err(anyhow::Error::msg)?;
+    match cmd.as_str() {
+        "chip" => print!("{}", report::chip_summary(&sys)),
+        "report" => {
+            if let Some(t) = f.get("table") {
+                match t.as_str() {
+                    "2" => print!("{}", report::table2()),
+                    "3" => print!("{}", report::table3(&sys)),
+                    "4" => print!("{}", report::table4(&sys)),
+                    other => anyhow::bail!("unknown table {other}"),
+                }
+            } else if let Some(which) = f.get("vs-gpu") {
+                print!("{}", report::vs_gpu_table(&sys, which == "train"));
+            } else {
+                anyhow::bail!("report needs --table N or --vs-gpu train|recog");
+            }
+        }
+        "train" => cmd_train(&f)?,
+        "infer" => cmd_infer(&f)?,
+        "cluster" => cmd_cluster(&f)?,
+        "anomaly" => cmd_anomaly(&f)?,
+        other => {
+            print_usage();
+            anyhow::bail!("unknown command {other}");
+        }
+    }
+    Ok(())
+}
+
+fn dataset_for(app: &str, n: usize, seed: u64) -> anyhow::Result<datasets::Dataset> {
+    Ok(match app {
+        a if a.starts_with("iris") => datasets::iris(seed),
+        a if a.starts_with("mnist") => datasets::mnist(n, seed),
+        a if a.starts_with("isolet") => datasets::isolet(n, seed),
+        other => anyhow::bail!("no dataset generator for {other}"),
+    })
+}
+
+fn cmd_train(f: &HashMap<String, String>) -> anyhow::Result<()> {
+    let app: String = get(f, "app", "iris_class".to_string())
+        .map_err(anyhow::Error::msg)?;
+    let epochs: usize = get(f, "epochs", 5).map_err(anyhow::Error::msg)?;
+    let lr: f32 = get(f, "lr", 1.0).map_err(anyhow::Error::msg)?;
+    let seed: u64 = get(f, "seed", 0).map_err(anyhow::Error::msg)?;
+    let n: usize = get(f, "samples", 512).map_err(anyhow::Error::msg)?;
+    let net = apps::network(&app)
+        .ok_or_else(|| anyhow::anyhow!("unknown app {app}"))?;
+    let engine = Engine::open_default()?;
+    let ds = dataset_for(&app, n, seed)?;
+    let (train_ds, test_ds) = ds.split(0.8, seed);
+    let xs = train_ds.rows();
+
+    use restream::config::AppKind;
+    match net.kind {
+        AppKind::DimReduction => {
+            let (_, reports) = engine.train_dr(net, &xs, epochs, lr, seed)?;
+            for (s, r) in reports.iter().enumerate() {
+                println!(
+                    "stage {s}: {} epochs, final loss {:.5}, {:.2}s",
+                    r.epochs,
+                    r.loss_curve.last().unwrap_or(&f32::NAN),
+                    r.wall_s
+                );
+            }
+        }
+        AppKind::Autoencoder => {
+            let xs2 = xs.clone();
+            let (_, r) = engine.train(
+                net, &xs, move |i| xs2[i].clone(), epochs, lr, seed)?;
+            print_curve(&r);
+        }
+        _ => {
+            let outs = net.layers[net.layers.len() - 1];
+            let (params, r) = engine.train(
+                net, &xs, |i| train_ds.target(i, outs), epochs, lr, seed)?;
+            print_curve(&r);
+            let preds = engine.classify(net, &params, &test_ds.rows())?;
+            // single-output nets are binary (class 0 vs rest)
+            let truth: Vec<usize> = if outs == 1 {
+                test_ds.y.iter().map(|&y| y.min(1)).collect()
+            } else {
+                test_ds.y.clone()
+            };
+            println!(
+                "test accuracy: {:.3}",
+                metrics::accuracy(&preds, &truth)
+            );
+        }
+    }
+    Ok(())
+}
+
+fn print_curve(r: &restream::coordinator::TrainReport) {
+    for (e, l) in r.loss_curve.iter().enumerate() {
+        println!("epoch {e:>3}  loss {l:.5}");
+    }
+    println!(
+        "{} samples in {:.2}s ({:.0} samples/s)",
+        r.samples_seen,
+        r.wall_s,
+        r.samples_seen as f64 / r.wall_s.max(1e-9)
+    );
+}
+
+fn cmd_infer(f: &HashMap<String, String>) -> anyhow::Result<()> {
+    let app: String = get(f, "app", "iris_class".to_string())
+        .map_err(anyhow::Error::msg)?;
+    let seed: u64 = get(f, "seed", 0).map_err(anyhow::Error::msg)?;
+    let net = apps::network(&app)
+        .ok_or_else(|| anyhow::anyhow!("unknown app {app}"))?;
+    let engine = Engine::open_default()?;
+    let ds = dataset_for(&app, 256, seed)?;
+    let params = restream::coordinator::init_conductances(net.layers, seed);
+    let start = std::time::Instant::now();
+    let outs = engine.infer(net, &params, &ds.rows())?;
+    let dt = start.elapsed().as_secs_f64();
+    println!(
+        "{} samples through {} in {:.3}s ({:.0}/s, untrained weights)",
+        outs.len(),
+        net.fwd_artifact(),
+        dt,
+        outs.len() as f64 / dt
+    );
+    Ok(())
+}
+
+fn cmd_cluster(f: &HashMap<String, String>) -> anyhow::Result<()> {
+    let app: String = get(f, "app", "mnist_kmeans".to_string())
+        .map_err(anyhow::Error::msg)?;
+    let epochs: usize = get(f, "epochs", 10).map_err(anyhow::Error::msg)?;
+    let seed: u64 = get(f, "seed", 0).map_err(anyhow::Error::msg)?;
+    let ka = apps::kmeans_app(&app)
+        .ok_or_else(|| anyhow::anyhow!("unknown clustering app {app}"))?;
+    let engine = Engine::open_default()?;
+    // cluster synthetic features of the right dimensionality
+    let ds = datasets::class_blobs(&app, ka.dims, ka.clusters, 512, 0.3, seed);
+    let (_, assign) = engine.kmeans(ka, &ds.rows(), epochs, seed)?;
+    println!(
+        "purity over {} samples, k={}: {:.3}",
+        ds.len(),
+        ka.clusters,
+        metrics::purity(&assign, &ds.y, ka.clusters, ds.classes)
+    );
+    Ok(())
+}
+
+fn cmd_anomaly(f: &HashMap<String, String>) -> anyhow::Result<()> {
+    let epochs: usize = get(f, "epochs", 3).map_err(anyhow::Error::msg)?;
+    let seed: u64 = get(f, "seed", 0).map_err(anyhow::Error::msg)?;
+    let net = apps::network("kdd_ae").unwrap();
+    let engine = Engine::open_default()?;
+    let k = datasets::kdd(2000, 400, 400, seed);
+    let xs = k.train.rows();
+    let xs2 = xs.clone();
+    let (params, r) = engine.train(
+        net, &xs, move |i| xs2[i].clone(), epochs, 0.8, seed)?;
+    print_curve(&r);
+    let scores = engine.anomaly_scores(net, &params, &k.test.rows())?;
+    let pts = metrics::roc_sweep(&scores, &k.test_attack, 200);
+    println!(
+        "AUC {:.3}; detection at 4% FPR: {:.1}% (paper: 96.6%)",
+        metrics::auc(&pts),
+        100.0 * metrics::tpr_at_fpr(&pts, 0.04)
+    );
+    Ok(())
+}
+
+fn print_usage() {
+    println!(
+        "restream — memristor multicore chip simulator\n\
+         usage: restream <chip|report|train|infer|cluster|anomaly> [--flags]\n\
+         see rust/src/main.rs docs for details"
+    );
+}

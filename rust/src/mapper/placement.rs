@@ -1,0 +1,276 @@
+//! Physical placement: mesh coordinates for every mapped core and the
+//! NoC transfer lists the static scheduler consumes.
+//!
+//! Cores of a stage are placed row-major starting next to the memory
+//! port, which keeps the input-broadcast routes short (the DMA feeds
+//! layer 0 every sample). Transfers are generated at neuron-range
+//! granularity: a consumer core receives exactly the slice of previous-
+//! layer outputs its row segment covers, from whichever producer cores
+//! hold those neurons.
+
+use super::StageMap;
+use crate::config::hwspec as hw;
+use crate::config::SystemConfig;
+use crate::noc::{Transfer, Xy};
+
+/// Placement of one stage: mesh stop per (layer, slice) pair.
+#[derive(Clone, Debug)]
+pub struct Placement {
+    /// `coords[layer][slice]` = mesh stop of that core.
+    pub coords: Vec<Vec<Xy>>,
+    /// Forward-pass transfers, in deterministic scheduling order.
+    pub fwd_transfers: Vec<Transfer>,
+    /// Backward-pass transfers (errors flow producer<-consumer, 8-bit).
+    pub bwd_transfers: Vec<Transfer>,
+}
+
+/// Row segment (input indices, bias excluded) a row-split sees.
+fn row_segment(n_in: usize, row_splits: usize, rs: usize) -> (usize, usize) {
+    // Mirrors mapper::segment on n_in+1 rows; the bias row is pinned to
+    // the last split, so data rows divide as evenly as possible.
+    let total = n_in + 1;
+    let base = total / row_splits;
+    let extra = total % row_splits;
+    let size = |i: usize| base + usize::from(i < extra);
+    let lo: usize = (0..rs).map(size).sum();
+    let hi = (lo + size(rs)).min(n_in); // clamp the bias row away
+    (lo.min(n_in), hi)
+}
+
+/// Place a stage on the mesh and derive its NoC traffic.
+///
+/// Multi-phase stages (see `StageMap::phases`) are placed per phase —
+/// the chip is reconfigured between phases, so mesh stops are reused and
+/// cross-phase activations spill through the memory port.
+pub fn place(stage: &StageMap, sys: &SystemConfig) -> Placement {
+    // phase index of each layer
+    let mut phase_of = vec![0usize; stage.layers.len()];
+    for (pi, phase) in stage.phases.iter().enumerate() {
+        for &l in phase {
+            phase_of[l] = pi;
+        }
+    }
+    let mut coords: Vec<Vec<Xy>> = vec![Vec::new(); stage.layers.len()];
+    for phase in &stage.phases {
+        let mut next = 0usize;
+        for &l in phase {
+            for _ in &stage.layers[l].slices {
+                coords[l].push(sys.core_xy(next));
+                next += 1;
+            }
+        }
+    }
+
+    let mut fwd = Vec::new();
+    let mut bwd = Vec::new();
+    for (li, layer) in stage.layers.iter().enumerate() {
+        let consumers: Vec<usize> = (0..layer.slices.len())
+            .filter(|&s| !layer.slices[s].is_combiner)
+            .collect();
+        if li == 0 {
+            // DMA input broadcast from the memory port (8-bit DAC codes).
+            for &s in &consumers {
+                let sl = &layer.slices[s];
+                fwd.push(Transfer {
+                    src: sys.memory_port(),
+                    dst: coords[li][s],
+                    bits: (sl.core.inputs as u64) * 8,
+                });
+            }
+        } else if phase_of[li] != phase_of[li - 1] {
+            // Phase boundary: the previous layer's activations were
+            // spilled to DRAM (one byte per neuron); re-fill each
+            // consumer's row segment from the memory port.
+            for &s in &consumers {
+                let sl = &layer.slices[s];
+                let t = Transfer {
+                    src: sys.memory_port(),
+                    dst: coords[li][s],
+                    bits: (sl.core.inputs as u64) * 8,
+                };
+                bwd.push(Transfer {
+                    src: t.dst,
+                    dst: t.src,
+                    bits: (sl.core.inputs as u64) * hw::ERR_BITS as u64,
+                });
+                fwd.push(t);
+            }
+        } else {
+            // Previous layer's outputs: producer neuron ranges
+            // intersected with this consumer's row segment.
+            let prev = &stage.layers[li - 1];
+            for &s in &consumers {
+                let sl = &layer.slices[s];
+                let (seg_lo, seg_hi) =
+                    row_segment(layer.n_in, layer.row_splits, sl.row_split);
+                for (ps, p) in prev.slices.iter().enumerate() {
+                    // Only the final outputs of the previous layer feed
+                    // forward: combiner outputs when it was split, main
+                    // outputs otherwise.
+                    let is_final = if prev.row_splits > 1 {
+                        p.is_combiner
+                    } else {
+                        !p.is_combiner
+                    };
+                    if !is_final {
+                        continue;
+                    }
+                    let lo = p.neurons.0.max(seg_lo);
+                    let hi = p.neurons.1.min(seg_hi);
+                    if lo >= hi {
+                        continue;
+                    }
+                    let t = Transfer {
+                        src: coords[li - 1][ps],
+                        dst: coords[li][s],
+                        bits: (hi - lo) as u64 * hw::OUT_BITS as u64,
+                    };
+                    bwd.push(Transfer {
+                        src: t.dst,
+                        dst: t.src,
+                        bits: (hi - lo) as u64 * hw::ERR_BITS as u64,
+                    });
+                    fwd.push(t);
+                }
+            }
+        }
+        // Intra-layer combiner traffic (Fig 14): sub-neuron cores feed
+        // the combiner cores holding the same neuron range.
+        if layer.row_splits > 1 {
+            for (cs, comb) in layer.slices.iter().enumerate() {
+                if !comb.is_combiner {
+                    continue;
+                }
+                for (ps, p) in layer.slices.iter().enumerate() {
+                    if p.is_combiner {
+                        continue;
+                    }
+                    let lo = p.neurons.0.max(comb.neurons.0);
+                    let hi = p.neurons.1.min(comb.neurons.1);
+                    if lo >= hi {
+                        continue;
+                    }
+                    let t = Transfer {
+                        src: coords[li][ps],
+                        dst: coords[li][cs],
+                        bits: (hi - lo) as u64 * hw::OUT_BITS as u64,
+                    };
+                    bwd.push(Transfer {
+                        src: t.dst,
+                        dst: t.src,
+                        bits: (hi - lo) as u64 * hw::ERR_BITS as u64,
+                    });
+                    fwd.push(t);
+                }
+            }
+        }
+        // Spill to DRAM when the *next* layer runs in a later phase.
+        if li + 1 < stage.layers.len() && phase_of[li + 1] != phase_of[li] {
+            for (ps, p) in layer.slices.iter().enumerate() {
+                let is_final = if layer.row_splits > 1 {
+                    p.is_combiner
+                } else {
+                    !p.is_combiner
+                };
+                if !is_final {
+                    continue;
+                }
+                let n = (p.neurons.1 - p.neurons.0) as u64;
+                let t = Transfer {
+                    src: coords[li][ps],
+                    dst: sys.memory_port(),
+                    bits: n * 8,
+                };
+                bwd.push(Transfer {
+                    src: t.dst,
+                    dst: t.src,
+                    bits: n * hw::ERR_BITS as u64,
+                });
+                fwd.push(t);
+            }
+        }
+    }
+    Placement { coords, fwd_transfers: fwd, bwd_transfers: bwd }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::apps;
+    use crate::mapper::map_network;
+
+    fn placed(app: &str) -> (Placement, StageMap) {
+        let sys = SystemConfig::default();
+        let net = apps::network(app).unwrap();
+        let map = map_network(net, &sys).unwrap();
+        let stage = map.stages[0].clone();
+        (place(&stage, &sys), stage)
+    }
+
+    #[test]
+    fn every_core_gets_a_unique_mesh_stop() {
+        let (p, stage) = placed("mnist_class");
+        let mut seen = std::collections::HashSet::new();
+        let mut n = 0;
+        for row in &p.coords {
+            for xy in row {
+                assert!(seen.insert(*xy), "stop {xy:?} reused");
+                n += 1;
+            }
+        }
+        assert_eq!(n, stage.cores_used());
+    }
+
+    #[test]
+    fn kdd_traffic_is_input_plus_interlayer() {
+        let (p, _) = placed("kdd_ae");
+        // 2 single-core layers: 1 input transfer + 1 inter-layer.
+        assert_eq!(p.fwd_transfers.len(), 2);
+        // input: 42 rows * 8 bits
+        assert_eq!(p.fwd_transfers[0].bits, 42 * 8);
+        // inter-layer: 15 neurons * 3 bits
+        assert_eq!(p.fwd_transfers[1].bits, 15 * 3);
+        // errors go the other way at 8 bits
+        assert_eq!(p.bwd_transfers[0].bits, 15 * 8);
+    }
+
+    #[test]
+    fn consumer_receives_exactly_its_row_segment() {
+        let (p, stage) = placed("mnist_class");
+        // layer 1 consumers (300->200) see 301 rows, no split: each of
+        // the 2 consumer cores receives the full 300 outputs of layer 0.
+        let l1 = &stage.layers[1];
+        assert_eq!(l1.row_splits, 1);
+        let into_l1: u64 = p
+            .fwd_transfers
+            .iter()
+            .filter(|t| p.coords[1].contains(&t.dst))
+            .map(|t| t.bits)
+            .sum();
+        // 2 consumer cores x 300 neurons x 3 bits
+        assert_eq!(into_l1, 2 * 300 * 3);
+    }
+
+    #[test]
+    fn split_layer_combiner_collects_all_partials() {
+        let (p, stage) = placed("mnist_class");
+        // layer 0 is split 2x3 with 3 combiner cores; combiner traffic =
+        // 2 row-splits x 300 neurons x 3 bits.
+        let l0 = &stage.layers[0];
+        assert_eq!(l0.row_splits, 2);
+        let comb_stops: Vec<Xy> = l0
+            .slices
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.is_combiner)
+            .map(|(i, _)| p.coords[0][i])
+            .collect();
+        let comb_bits: u64 = p
+            .fwd_transfers
+            .iter()
+            .filter(|t| comb_stops.contains(&t.dst))
+            .map(|t| t.bits)
+            .sum();
+        assert_eq!(comb_bits, 2 * 300 * 3);
+    }
+}

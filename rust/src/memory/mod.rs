@@ -1,0 +1,153 @@
+//! 3-D stacked DRAM + DMA front end (paper section II).
+//!
+//! Training data lives in 3-D stacked DRAM; a DMA engine (configured once
+//! by the RISC core) streams samples through TSVs into the chip's 4 kB
+//! input buffer. This module models the transfer cost and provides the
+//! bounded double-buffered stream the coordinator consumes — the
+//! "streaming" in the paper's title.
+
+use crate::power::io;
+
+/// Cost model for one off-chip transfer.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TransferCost {
+    pub time_s: f64,
+    pub energy_j: f64,
+}
+
+/// DMA engine over the stacked-DRAM channel.
+#[derive(Clone, Debug)]
+pub struct DmaEngine {
+    pub bandwidth_bps: f64,
+    pub dram_energy_per_bit_j: f64,
+    pub tsv_energy_per_bit_j: f64,
+}
+
+impl Default for DmaEngine {
+    fn default() -> Self {
+        DmaEngine {
+            bandwidth_bps: io::DRAM_BANDWIDTH_BPS,
+            dram_energy_per_bit_j: io::DRAM_ENERGY_PER_BIT_J,
+            tsv_energy_per_bit_j: io::TSV_ENERGY_PER_BIT_J,
+        }
+    }
+}
+
+impl DmaEngine {
+    /// Cost of moving `bits` across the TSV interface (read + crossing).
+    pub fn transfer(&self, bits: u64) -> TransferCost {
+        TransferCost {
+            time_s: bits as f64 / self.bandwidth_bps,
+            energy_j: bits as f64
+                * (self.dram_energy_per_bit_j + self.tsv_energy_per_bit_j),
+        }
+    }
+
+    /// TSV-only energy (the paper's "IO energy" column counts the chip
+    /// boundary crossing; DRAM-internal energy is the memory system's).
+    pub fn tsv_energy_j(&self, bits: u64) -> f64 {
+        bits as f64 * self.tsv_energy_per_bit_j
+    }
+}
+
+/// A bounded, double-buffered sample stream: the producer (DMA) fills
+/// while the consumer (cores) drains, with backpressure when the input
+/// buffer is full. Samples are `Vec<f32>` feature vectors.
+pub struct SampleStream {
+    samples: Vec<Vec<f32>>,
+    cursor: usize,
+    /// Bytes a sample occupies in the on-chip input buffer (8-bit DAC
+    /// codes, one byte per feature).
+    pub bytes_per_sample: usize,
+    /// Input buffer capacity in samples (backpressure bound).
+    pub buffer_samples: usize,
+    /// Running transfer cost.
+    pub cost: TransferCost,
+    dma: DmaEngine,
+}
+
+impl SampleStream {
+    pub fn new(samples: Vec<Vec<f32>>, input_buffer_bytes: usize) -> Self {
+        let bytes = samples.first().map_or(0, |s| s.len());
+        SampleStream {
+            bytes_per_sample: bytes,
+            buffer_samples: if bytes == 0 {
+                0
+            } else {
+                (input_buffer_bytes / bytes).max(1)
+            },
+            samples,
+            cursor: 0,
+            cost: TransferCost::default(),
+            dma: DmaEngine::default(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Pull the next sample, accounting its DMA cost. Returns None at
+    /// end-of-stream. (Epoch loops call `rewind`.)
+    pub fn next_sample(&mut self) -> Option<&[f32]> {
+        if self.cursor >= self.samples.len() {
+            return None;
+        }
+        let bits = (self.bytes_per_sample * 8) as u64;
+        let c = self.dma.transfer(bits);
+        self.cost.time_s += c.time_s;
+        self.cost.energy_j += c.energy_j;
+        let s = &self.samples[self.cursor];
+        self.cursor += 1;
+        Some(s)
+    }
+
+    pub fn rewind(&mut self) {
+        self.cursor = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_cost_scales_linearly() {
+        let dma = DmaEngine::default();
+        let a = dma.transfer(1000);
+        let b = dma.transfer(2000);
+        assert!((b.time_s - 2.0 * a.time_s).abs() < 1e-18);
+        assert!((b.energy_j - 2.0 * a.energy_j).abs() < 1e-24);
+    }
+
+    #[test]
+    fn tsv_energy_matches_paper_constant() {
+        let dma = DmaEngine::default();
+        // 0.05 pJ/bit (section V.C)
+        assert!((dma.tsv_energy_j(1) - 0.05e-12).abs() < 1e-20);
+    }
+
+    #[test]
+    fn stream_drains_and_rewinds() {
+        let data = vec![vec![0.1f32; 41]; 5];
+        let mut s = SampleStream::new(data, 4096);
+        assert_eq!(s.buffer_samples, 4096 / 41);
+        let mut n = 0;
+        while s.next_sample().is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 5);
+        assert!(s.next_sample().is_none());
+        s.rewind();
+        assert!(s.next_sample().is_some());
+        // 6 samples pulled in total
+        let bits = (41 * 8 * 6) as f64;
+        assert!((s.cost.energy_j
+            - bits * (io::DRAM_ENERGY_PER_BIT_J + io::TSV_ENERGY_PER_BIT_J))
+            .abs() < 1e-18);
+    }
+}

@@ -1,0 +1,166 @@
+//! Evaluation metrics: classification accuracy, ROC sweeps for the
+//! anomaly experiment (Figs 18–20), clustering purity (k-means quality),
+//! and small statistics helpers used by the benches.
+
+/// Classification accuracy from predictions and labels.
+pub fn accuracy(pred: &[usize], truth: &[usize]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    pred.iter().zip(truth).filter(|(p, t)| p == t).count() as f64
+        / pred.len() as f64
+}
+
+/// One point of a detection sweep.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RocPoint {
+    pub threshold: f64,
+    /// True-positive rate (detection rate over attacks).
+    pub tpr: f64,
+    /// False-positive rate (false detection over normals).
+    pub fpr: f64,
+}
+
+/// Sweep a decision threshold over anomaly scores. `is_attack[i]`
+/// labels each score; a sample is flagged when `score > threshold`.
+/// This regenerates the paper's Fig 20 ("detection rate for different
+/// decision parameters").
+pub fn roc_sweep(scores: &[f64], is_attack: &[bool], n_points: usize)
+    -> Vec<RocPoint> {
+    assert_eq!(scores.len(), is_attack.len());
+    let lo = scores.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = scores.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let n_att = is_attack.iter().filter(|&&a| a).count().max(1);
+    let n_norm = (is_attack.len() - n_att).max(1);
+    (0..n_points)
+        .map(|i| {
+            let thr = lo + (hi - lo) * i as f64 / (n_points - 1).max(1) as f64;
+            let mut tp = 0;
+            let mut fp = 0;
+            for (s, &a) in scores.iter().zip(is_attack) {
+                if *s > thr {
+                    if a {
+                        tp += 1;
+                    } else {
+                        fp += 1;
+                    }
+                }
+            }
+            RocPoint {
+                threshold: thr,
+                tpr: tp as f64 / n_att as f64,
+                fpr: fp as f64 / n_norm as f64,
+            }
+        })
+        .collect()
+}
+
+/// Area under the ROC curve by trapezoid over the sweep (sorted by FPR).
+pub fn auc(points: &[RocPoint]) -> f64 {
+    let mut pts: Vec<(f64, f64)> = points.iter().map(|p| (p.fpr, p.tpr)).collect();
+    pts.push((0.0, 0.0));
+    pts.push((1.0, 1.0));
+    pts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    pts.windows(2)
+        .map(|w| (w[1].0 - w[0].0) * (w[0].1 + w[1].1) / 2.0)
+        .sum()
+}
+
+/// Detection rate at (or just under) a target false-positive rate — the
+/// paper's headline "96.6 % detection at 4 % false detection".
+pub fn tpr_at_fpr(points: &[RocPoint], fpr_target: f64) -> f64 {
+    points
+        .iter()
+        .filter(|p| p.fpr <= fpr_target + 1e-12)
+        .map(|p| p.tpr)
+        .fold(0.0, f64::max)
+}
+
+/// Cluster purity: fraction of samples in the majority class of their
+/// assigned cluster.
+pub fn purity(assign: &[usize], truth: &[usize], k: usize, classes: usize)
+    -> f64 {
+    assert_eq!(assign.len(), truth.len());
+    if assign.is_empty() {
+        return 0.0;
+    }
+    let mut table = vec![0usize; k * classes];
+    for (&a, &t) in assign.iter().zip(truth) {
+        table[a * classes + t] += 1;
+    }
+    let correct: usize = (0..k)
+        .map(|c| *table[c * classes..(c + 1) * classes].iter().max().unwrap())
+        .sum();
+    correct as f64 / assign.len() as f64
+}
+
+/// Histogram of values into `bins` equal-width bins over [lo, hi] —
+/// used to print Figs 18/19 (distance distributions).
+pub fn histogram(values: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<usize> {
+    let mut h = vec![0usize; bins];
+    let w = (hi - lo) / bins as f64;
+    for &v in values {
+        if v < lo || !v.is_finite() {
+            continue;
+        }
+        let b = (((v - lo) / w) as usize).min(bins - 1);
+        h[b] += 1;
+    }
+    h
+}
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() { 0.0 } else { xs.iter().sum::<f64>() / xs.len() as f64 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_counts_matches() {
+        assert_eq!(accuracy(&[1, 2, 3], &[1, 0, 3]), 2.0 / 3.0);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn roc_perfect_separation() {
+        let scores = vec![0.1, 0.2, 0.8, 0.9];
+        let labels = vec![false, false, true, true];
+        let pts = roc_sweep(&scores, &labels, 50);
+        let a = auc(&pts);
+        assert!(a > 0.95, "auc {a}");
+        assert!(tpr_at_fpr(&pts, 0.04) > 0.99);
+    }
+
+    #[test]
+    fn roc_random_scores_give_half_auc() {
+        // interleaved scores -> ~chance
+        let scores: Vec<f64> = (0..100).map(|i| (i % 10) as f64).collect();
+        let labels: Vec<bool> = (0..100).map(|i| i % 2 == 0).collect();
+        let a = auc(&roc_sweep(&scores, &labels, 100));
+        assert!((a - 0.5).abs() < 0.1, "auc {a}");
+    }
+
+    #[test]
+    fn tpr_monotone_in_fpr_budget() {
+        let scores = vec![0.1, 0.4, 0.5, 0.6, 0.9, 0.95];
+        let labels = vec![false, false, true, false, true, true];
+        let pts = roc_sweep(&scores, &labels, 64);
+        assert!(tpr_at_fpr(&pts, 0.5) >= tpr_at_fpr(&pts, 0.1));
+    }
+
+    #[test]
+    fn purity_perfect_and_mixed() {
+        assert_eq!(purity(&[0, 0, 1, 1], &[2, 2, 5, 5], 2, 6), 1.0);
+        assert_eq!(purity(&[0, 0, 0, 0], &[0, 0, 1, 1], 1, 2), 0.5);
+    }
+
+    #[test]
+    fn histogram_bins_and_edges() {
+        let h = histogram(&[0.0, 0.49, 0.5, 0.99, 1.0], 0.0, 1.0, 2);
+        assert_eq!(h, vec![2, 3]);
+    }
+}

@@ -1,0 +1,345 @@
+//! Pure-Rust reference neural networks.
+//!
+//! Two variants of the same MLP:
+//!
+//! * [`Mlp`] with `Constraint::None` — float32 software baseline
+//!   (sigmoid−0.5 activation, exact derivative, unbounded weights):
+//!   the "without constraints" bars of paper Fig 21.
+//! * `Constraint::Chip` — the memristor chip's numerics, computed with
+//!   `crate::crossbar::ideal` (bit-compatible with the L1 kernels): 3-bit
+//!   output ADC, 8-bit error ADC, f'(DP) LUT, conductance-bounded
+//!   weights. Used for Fig 21's "with constraints" bars, for baselines,
+//!   and as the oracle the PJRT runtime path is integration-tested
+//!   against.
+//!
+//! Both train with the paper's stochastic BP (section III.E).
+
+use crate::config::hwspec as hw;
+use crate::crossbar::{ideal, quant};
+use crate::testing::Rng;
+
+/// Numeric regime of a network.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Constraint {
+    /// Unconstrained float32 software network.
+    None,
+    /// Chip constraints (quantisers + conductance bounds).
+    Chip,
+}
+
+/// A multi-layer perceptron in differential-conductance representation.
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    pub layers: Vec<usize>,
+    /// Per layer: (gpos, gneg), each `(n_in+1) x n_out` row-major.
+    pub params: Vec<(Vec<f32>, Vec<f32>)>,
+    pub constraint: Constraint,
+    /// Output ADC precision for the chip path (default `hw::OUT_BITS`);
+    /// swept by the precision ablation bench.
+    pub chip_out_bits: u32,
+}
+
+impl Mlp {
+    /// Initialise like `model.init_params` (python twin): conductances
+    /// near the low end with a small random differential weight.
+    pub fn init(layers: &[usize], constraint: Constraint, rng: &mut Rng) -> Self {
+        let base = hw::G_MIN + 0.12;
+        let mut params = Vec::new();
+        for w in layers.windows(2) {
+            let (n_in, n_out) = (w[0], w[1]);
+            let rows = n_in + 1;
+            let scale = 1.0 / (n_in as f32).sqrt();
+            let mut gp = vec![0.0f32; rows * n_out];
+            let mut gn = vec![0.0f32; rows * n_out];
+            for i in 0..rows * n_out {
+                let wv = rng.uniform_f32(-scale, scale);
+                gp[i] = (base + 0.5 * wv).clamp(hw::G_MIN, hw::G_MAX);
+                gn[i] = (base - 0.5 * wv).clamp(hw::G_MIN, hw::G_MAX);
+            }
+            params.push((gp, gn));
+        }
+        Mlp {
+            layers: layers.to_vec(),
+            params,
+            constraint,
+            chip_out_bits: hw::OUT_BITS,
+        }
+    }
+
+    /// Build a network from runtime parameter arrays (the
+    /// `[gp0, gn0, ...]` layout of `coordinator::init_conductances`) —
+    /// used to cross-check the PJRT path against this bit-compatible
+    /// Rust path in the integration tests.
+    pub fn from_params(layers: &[usize],
+                       params: &[crate::runtime::ArrayF32]) -> Self {
+        assert_eq!(params.len(), 2 * (layers.len() - 1));
+        let pairs = params
+            .chunks(2)
+            .map(|c| (c[0].data.clone(), c[1].data.clone()))
+            .collect();
+        Mlp {
+            layers: layers.to_vec(),
+            params: pairs,
+            constraint: Constraint::Chip,
+            chip_out_bits: hw::OUT_BITS,
+        }
+    }
+
+    fn out_bits(&self) -> u32 {
+        match self.constraint {
+            Constraint::None => 24, // effectively unquantised
+            Constraint::Chip => self.chip_out_bits,
+        }
+    }
+
+    fn quantize_err(&self, e: f32) -> f32 {
+        match self.constraint {
+            Constraint::None => e,
+            Constraint::Chip => quant::quantize_err(e),
+        }
+    }
+
+    fn deriv(&self, dp: f32) -> f32 {
+        match self.constraint {
+            Constraint::None => {
+                let s = 1.0 / (1.0 + (-dp).exp());
+                s * (1.0 - s)
+            }
+            Constraint::Chip => quant::activation_deriv_lut(dp),
+        }
+    }
+
+    /// Forward pass for one sample. Returns (activations-with-bias per
+    /// layer input, dp per layer, output).
+    fn forward_traced(&self, x: &[f32])
+        -> (Vec<Vec<f32>>, Vec<Vec<f32>>, Vec<f32>) {
+        let mut acts = Vec::new();
+        let mut dps = Vec::new();
+        let mut h: Vec<f32> = x
+            .iter()
+            .map(|v| v.clamp(-hw::V_RAIL, hw::V_RAIL))
+            .collect();
+        for (l, (gp, gn)) in self.params.iter().enumerate() {
+            let n_in = self.layers[l] + 1;
+            let n_out = self.layers[l + 1];
+            let mut a = h.clone();
+            a.push(hw::V_RAIL); // bias input at the positive rail
+            let (y, dp) = ideal::fwd(&a, gp, gn, 1, n_in, n_out, self.out_bits());
+            acts.push(a);
+            dps.push(dp);
+            h = y;
+        }
+        (acts, dps, h)
+    }
+
+    /// Inference output for one sample.
+    pub fn forward(&self, x: &[f32]) -> Vec<f32> {
+        self.forward_traced(x).2
+    }
+
+    /// One stochastic-BP step (paper section III.E); returns the sample
+    /// squared-error loss *before* the update.
+    pub fn train_step(&mut self, x: &[f32], t: &[f32], lr: f32) -> f32 {
+        let (acts, dps, y) = self.forward_traced(x);
+        let n_layers = self.params.len();
+        let mut delta: Vec<f32> = t
+            .iter()
+            .zip(&y)
+            .map(|(&ti, &yi)| self.quantize_err(ti - yi))
+            .collect();
+        let loss = t
+            .iter()
+            .zip(&y)
+            .map(|(&ti, &yi)| (ti - yi) * (ti - yi))
+            .sum::<f32>()
+            / t.len() as f32;
+        for l in (0..n_layers).rev() {
+            let n_in = self.layers[l] + 1;
+            let n_out = self.layers[l + 1];
+            let prev_delta = if l > 0 {
+                // discretised delta * f'(dp) product drives the backward
+                // column DACs, then the transposed crossbar (Fig 9)
+                let eff: Vec<f32> = delta
+                    .iter()
+                    .zip(&dps[l])
+                    .map(|(&d, &p)| self.quantize_err(d * self.deriv(p)))
+                    .collect();
+                let (gp, gn) = &self.params[l];
+                let mut back = ideal::bwd(&eff, gp, gn, 1, n_in, n_out);
+                back.pop(); // drop the bias-row error
+                if self.constraint == Constraint::None {
+                    // undo the chip-path quantisation for the float net
+                    back = {
+                        let (gp, gn) = &self.params[l];
+                        let mut raw = vec![0.0f32; n_in];
+                        for i in 0..n_in {
+                            let mut acc = 0.0;
+                            for j in 0..n_out {
+                                acc += eff[j] * (gp[i * n_out + j] - gn[i * n_out + j]);
+                            }
+                            raw[i] = acc;
+                        }
+                        raw.pop();
+                        raw
+                    };
+                }
+                Some(back)
+            } else {
+                None
+            };
+            let (gp, gn) = &mut self.params[l];
+            match self.constraint {
+                Constraint::Chip => ideal::update(
+                    gp, gn, &acts[l], &delta, &dps[l], lr, 1, n_in, n_out,
+                ),
+                Constraint::None => {
+                    // plain gradient step on the differential pair
+                    for i in 0..n_in {
+                        for j in 0..n_out {
+                            let f = delta[j]
+                                * {
+                                    let s = 1.0 / (1.0 + (-dps[l][j]).exp());
+                                    s * (1.0 - s)
+                                };
+                            let dw = lr * acts[l][i] * f;
+                            gp[i * n_out + j] += 0.5 * dw;
+                            gn[i * n_out + j] -= 0.5 * dw;
+                        }
+                    }
+                }
+            }
+            if let Some(d) = prev_delta {
+                delta = d;
+            }
+        }
+        loss
+    }
+
+    /// Train one epoch over a dataset (sample order given by `order`).
+    pub fn train_epoch(
+        &mut self,
+        xs: &[Vec<f32>],
+        ts: &[Vec<f32>],
+        lr: f32,
+        order: &[usize],
+    ) -> f32 {
+        let mut loss = 0.0;
+        for &i in order {
+            loss += self.train_step(&xs[i], &ts[i], lr);
+        }
+        loss / order.len().max(1) as f32
+    }
+
+    /// Perturb every conductance with multiplicative Gaussian noise of
+    /// relative sigma — models memristor programming stochasticity /
+    /// read disturb / drift (the robustness concern the paper's related
+    /// work raises against the two-crossbar-copy scheme of [15]).
+    pub fn perturb_conductances(&mut self, sigma: f64, rng: &mut Rng) {
+        for (gp, gn) in &mut self.params {
+            for g in gp.iter_mut().chain(gn.iter_mut()) {
+                let f = (1.0 + sigma * rng.gaussian()) as f32;
+                *g = (*g * f).clamp(hw::G_MIN, hw::G_MAX);
+            }
+        }
+    }
+
+    /// Classifier accuracy by argmax (or sign for single-output nets).
+    pub fn accuracy(&self, xs: &[Vec<f32>], ys: &[usize]) -> f64 {
+        let mut correct = 0;
+        for (x, &y) in xs.iter().zip(ys) {
+            let out = self.forward(x);
+            let pred = if out.len() == 1 {
+                usize::from(out[0] > 0.0)
+            } else {
+                out.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap()
+            };
+            correct += usize::from(pred == y);
+        }
+        correct as f64 / xs.len().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets;
+
+    fn iris_xt() -> (Vec<Vec<f32>>, Vec<Vec<f32>>, Vec<usize>) {
+        let d = datasets::iris(0);
+        let xs = d.rows();
+        // binary target: setosa vs rest (paper Fig 16 uses 1 output)
+        let ys: Vec<usize> = d.y.iter().map(|&y| usize::from(y != 0)).collect();
+        let ts: Vec<Vec<f32>> = ys
+            .iter()
+            .map(|&y| vec![if y == 1 { 0.4 } else { -0.4 }])
+            .collect();
+        (xs, ts, ys)
+    }
+
+    #[test]
+    fn chip_net_learns_iris_binary() {
+        let (xs, ts, ys) = iris_xt();
+        let mut rng = Rng::seeded(3);
+        let mut net = Mlp::init(&[4, 10, 1], Constraint::Chip, &mut rng);
+        let order: Vec<usize> = (0..xs.len()).collect();
+        let first = net.train_epoch(&xs, &ts, 1.0, &order);
+        let mut last = first;
+        for _ in 0..15 {
+            last = net.train_epoch(&xs, &ts, 1.0, &order);
+        }
+        assert!(last < first * 0.7, "first {first} last {last}");
+        assert!(net.accuracy(&xs, &ys) > 0.9);
+    }
+
+    #[test]
+    fn float_net_learns_iris_3class() {
+        let (xs, _, _) = iris_xt();
+        let d = datasets::iris(0);
+        let ts: Vec<Vec<f32>> = (0..d.len()).map(|i| d.target(i, 3)).collect();
+        let mut rng = Rng::seeded(5);
+        let mut net = Mlp::init(&[4, 10, 3], Constraint::None, &mut rng);
+        let order: Vec<usize> = (0..xs.len()).collect();
+        for _ in 0..30 {
+            net.train_epoch(&xs, &ts, 0.8, &order);
+        }
+        assert!(net.accuracy(&xs, &d.y) > 0.9,
+                "acc {}", net.accuracy(&xs, &d.y));
+    }
+
+    #[test]
+    fn unconstrained_at_least_matches_constrained() {
+        // Fig 21's premise: constraints cost little but never help much.
+        let (xs, ts, ys) = iris_xt();
+        let order: Vec<usize> = (0..xs.len()).collect();
+        let mut rng = Rng::seeded(7);
+        let mut chip = Mlp::init(&[4, 10, 1], Constraint::Chip, &mut rng);
+        let mut rng = Rng::seeded(7);
+        let mut float = Mlp::init(&[4, 10, 1], Constraint::None, &mut rng);
+        for _ in 0..12 {
+            chip.train_epoch(&xs, &ts, 1.0, &order);
+            float.train_epoch(&xs, &ts, 1.0, &order);
+        }
+        let (ac, af) = (chip.accuracy(&xs, &ys), float.accuracy(&xs, &ys));
+        assert!(af >= ac - 0.05, "float {af} chip {ac}");
+    }
+
+    #[test]
+    fn chip_weights_stay_in_device_range() {
+        let (xs, ts, _) = iris_xt();
+        let mut rng = Rng::seeded(1);
+        let mut net = Mlp::init(&[4, 6, 1], Constraint::Chip, &mut rng);
+        let order: Vec<usize> = (0..xs.len()).collect();
+        for _ in 0..5 {
+            net.train_epoch(&xs, &ts, 5.0, &order);
+        }
+        for (gp, gn) in &net.params {
+            for g in gp.iter().chain(gn) {
+                assert!((hw::G_MIN..=hw::G_MAX).contains(g));
+            }
+        }
+    }
+}

@@ -1,0 +1,94 @@
+//! Statically routed 2-D mesh network-on-chip (paper section II, Fig 2).
+//!
+//! Feed-forward neural traffic is deterministic, so the paper uses
+//! SRAM-configured static switches, time-multiplexed between cores. This
+//! module provides: XY routing ([`route`]), the static TDM schedule
+//! builder ([`Schedule`]) with per-link occupancy tracking, the switch
+//! configuration image ([`switch`]), and link energy/latency accounting.
+
+pub mod schedule;
+pub mod switch;
+
+pub use schedule::{Schedule, Transfer};
+
+/// A mesh stop coordinate.
+pub type Xy = (usize, usize);
+
+/// A directed link between adjacent mesh stops.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Link {
+    pub from: Xy,
+    pub to: Xy,
+}
+
+/// Dimension-ordered (X then Y) route between two mesh stops. Returns the
+/// sequence of links; empty when `src == dst` (core loopback through its
+/// own switch — how multi-layer single-core networks feed themselves,
+/// paper Fig 2).
+pub fn route(src: Xy, dst: Xy) -> Vec<Link> {
+    let mut links = Vec::new();
+    let (mut x, mut y) = src;
+    while x != dst.0 {
+        let nx = if dst.0 > x { x + 1 } else { x - 1 };
+        links.push(Link { from: (x, y), to: (nx, y) });
+        x = nx;
+    }
+    while y != dst.1 {
+        let ny = if dst.1 > y { y + 1 } else { y - 1 };
+        links.push(Link { from: (x, y), to: (x, ny) });
+        y = ny;
+    }
+    links
+}
+
+/// Manhattan hop count of the XY route.
+pub fn hops(src: Xy, dst: Xy) -> usize {
+    src.0.abs_diff(dst.0) + src.1.abs_diff(dst.1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{forall, Rng};
+
+    #[test]
+    fn route_is_x_then_y() {
+        let r = route((0, 0), (2, 1));
+        assert_eq!(r.len(), 3);
+        assert_eq!(r[0], Link { from: (0, 0), to: (1, 0) });
+        assert_eq!(r[1], Link { from: (1, 0), to: (2, 0) });
+        assert_eq!(r[2], Link { from: (2, 0), to: (2, 1) });
+    }
+
+    #[test]
+    fn loopback_route_is_empty() {
+        assert!(route((3, 3), (3, 3)).is_empty());
+    }
+
+    #[test]
+    fn route_length_equals_manhattan_distance() {
+        forall("route_len", 100, |rng: &mut Rng| {
+            let src = (rng.below(12), rng.below(12));
+            let dst = (rng.below(12), rng.below(12));
+            let r = route(src, dst);
+            if r.len() != hops(src, dst) {
+                return Err(format!("{src:?}->{dst:?}: {} links", r.len()));
+            }
+            // links must be contiguous and unit-length
+            let mut at = src;
+            for l in &r {
+                if l.from != at {
+                    return Err("discontiguous route".into());
+                }
+                if hops(l.from, l.to) != 1 {
+                    return Err("non-adjacent link".into());
+                }
+                at = l.to;
+            }
+            if at != dst {
+                return Err("route does not reach dst".into());
+            }
+            Ok(())
+        });
+    }
+}

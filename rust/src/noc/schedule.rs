@@ -1,0 +1,194 @@
+//! Static time-multiplexed schedule for the mesh (paper section II: "The
+//! network is statically time multiplexed between cores").
+//!
+//! The mapper emits a set of [`Transfer`]s per pipeline step; the
+//! scheduler assigns each a start slot such that no link carries two
+//! transfers in the same slot (wormhole-style pipelining: a transfer of
+//! `f` flits occupies link `k` of its route during slots
+//! `[t0+k, t0+k+f)`). Greedy earliest-fit is optimal enough for the
+//! deterministic traffic here and — critically — deterministic itself,
+//! so the SRAM switch images can be programmed once at configuration
+//! time.
+
+use std::collections::HashMap;
+
+use super::{route, Link, Xy};
+
+/// One logical message between mesh stops.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Transfer {
+    pub src: Xy,
+    pub dst: Xy,
+    pub bits: u64,
+}
+
+/// A scheduled transfer: route plus assigned start slot.
+#[derive(Clone, Debug)]
+pub struct Scheduled {
+    pub transfer: Transfer,
+    pub links: Vec<Link>,
+    pub start_slot: u64,
+    pub flits: u64,
+}
+
+impl Scheduled {
+    /// Slot after which the tail flit has left the last link.
+    pub fn finish_slot(&self) -> u64 {
+        self.start_slot + self.links.len() as u64 + self.flits
+    }
+}
+
+/// The static TDM schedule over one pipeline step.
+#[derive(Clone, Debug, Default)]
+pub struct Schedule {
+    pub entries: Vec<Scheduled>,
+    /// Busy intervals per link, kept sorted by start slot.
+    busy: HashMap<Link, Vec<(u64, u64)>>,
+}
+
+impl Schedule {
+    /// Build a schedule for `transfers` on `link_bits`-wide links,
+    /// earliest-fit in input order (input order is the mapper's
+    /// deterministic traversal, so the whole image is reproducible).
+    pub fn build(transfers: &[Transfer], link_bits: usize) -> Schedule {
+        let mut s = Schedule::default();
+        for t in transfers {
+            s.insert(t.clone(), link_bits);
+        }
+        s
+    }
+
+    fn insert(&mut self, t: Transfer, link_bits: usize) {
+        let links = route(t.src, t.dst);
+        let flits = t.bits.div_ceil(link_bits as u64).max(1);
+        if links.is_empty() {
+            // Core loopback through its own switch: no mesh link used.
+            self.entries.push(Scheduled { transfer: t, links, start_slot: 0, flits });
+            return;
+        }
+        let mut t0 = 0u64;
+        'search: loop {
+            for (k, l) in links.iter().enumerate() {
+                let (s0, s1) = (t0 + k as u64, t0 + k as u64 + flits);
+                if let Some(iv) = self.busy.get(l) {
+                    for &(b0, b1) in iv {
+                        if s0 < b1 && b0 < s1 {
+                            // conflict: jump past this busy interval
+                            t0 = b1 - k as u64;
+                            continue 'search;
+                        }
+                    }
+                }
+            }
+            break;
+        }
+        for (k, l) in links.iter().enumerate() {
+            let iv = self.busy.entry(*l).or_default();
+            iv.push((t0 + k as u64, t0 + k as u64 + flits));
+            iv.sort_unstable();
+        }
+        self.entries.push(Scheduled { transfer: t, links, start_slot: t0, flits });
+    }
+
+    /// Total slots until the last transfer completes.
+    pub fn makespan_slots(&self) -> u64 {
+        self.entries.iter().map(|e| e.finish_slot()).max().unwrap_or(0)
+    }
+
+    /// Total bit-hops (the NoC energy integral).
+    pub fn bit_hops(&self) -> u64 {
+        self.entries
+            .iter()
+            .map(|e| e.transfer.bits * e.links.len() as u64)
+            .sum()
+    }
+
+    /// Verify the fundamental TDM invariant: no link is occupied by two
+    /// transfers in the same slot. Returns the offending link if any.
+    pub fn validate(&self) -> Result<(), Link> {
+        for (link, iv) in &self.busy {
+            for w in iv.windows(2) {
+                if w[0].1 > w[1].0 {
+                    return Err(*link);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// NoC energy of the whole step (J).
+    pub fn energy_j(&self, energy_per_bit_hop: f64) -> f64 {
+        self.bit_hops() as f64 * energy_per_bit_hop
+    }
+
+    /// Wall-clock for the step at `cycle_s` per slot.
+    pub fn time_s(&self, cycle_s: f64) -> f64 {
+        self.makespan_slots() as f64 * cycle_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{forall, Rng};
+
+    #[test]
+    fn disjoint_transfers_start_immediately() {
+        let ts = vec![
+            Transfer { src: (0, 0), dst: (1, 0), bits: 8 },
+            Transfer { src: (5, 5), dst: (6, 5), bits: 8 },
+        ];
+        let s = Schedule::build(&ts, 8);
+        assert!(s.entries.iter().all(|e| e.start_slot == 0));
+        assert!(s.validate().is_ok());
+    }
+
+    #[test]
+    fn conflicting_transfers_serialise() {
+        let ts = vec![
+            Transfer { src: (0, 0), dst: (2, 0), bits: 16 },
+            Transfer { src: (0, 0), dst: (2, 0), bits: 16 },
+        ];
+        let s = Schedule::build(&ts, 8);
+        assert!(s.validate().is_ok());
+        assert!(s.entries[1].start_slot >= 2,
+                "second start {}", s.entries[1].start_slot);
+    }
+
+    #[test]
+    fn loopback_consumes_no_links() {
+        let s = Schedule::build(
+            &[Transfer { src: (1, 1), dst: (1, 1), bits: 300 }], 8);
+        assert_eq!(s.bit_hops(), 0);
+        assert!(s.validate().is_ok());
+    }
+
+    #[test]
+    fn schedule_never_double_books_a_link() {
+        forall("tdm_invariant", 40, |rng: &mut Rng| {
+            let n = rng.range(2, 40);
+            let ts: Vec<Transfer> = (0..n)
+                .map(|_| Transfer {
+                    src: (rng.below(6), rng.below(6)),
+                    dst: (rng.below(6), rng.below(6)),
+                    bits: rng.range(1, 512) as u64,
+                })
+                .collect();
+            let s = Schedule::build(&ts, 8);
+            s.validate().map_err(|l| format!("double-booked {l:?}"))?;
+            if s.entries.len() != ts.len() {
+                return Err("transfer dropped".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bit_hops_match_manual_count() {
+        let ts = vec![Transfer { src: (0, 0), dst: (3, 2), bits: 24 }];
+        let s = Schedule::build(&ts, 8);
+        assert_eq!(s.bit_hops(), 24 * 5);
+        // 3 flits across 5 links, start 0 -> finish at 5 + 3 = 8
+        assert_eq!(s.makespan_slots(), 8);
+    }
+}

@@ -1,0 +1,107 @@
+//! SRAM-based static routing switch (paper Fig 2).
+//!
+//! Each mesh stop has a 5-port switch (N/E/S/W/Core); an SRAM bit matrix
+//! per TDM slot connects input ports to output ports. The scheduler's
+//! output is compiled into these images at configuration time by the RISC
+//! core; this module models the image itself so the configuration cost
+//! (bits written) and the reconfigurability claim are concrete.
+
+/// Switch ports in paper Fig 2's crossbar ordering.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Port {
+    North,
+    East,
+    South,
+    West,
+    Core,
+}
+
+pub const PORTS: usize = 5;
+
+/// One slot's 5x5 connection matrix: `conn[inp][out]`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SlotImage {
+    conn: [[bool; PORTS]; PORTS],
+}
+
+impl SlotImage {
+    /// Connect input port -> output port. Returns Err if the output port
+    /// is already driven in this slot (electrically illegal).
+    pub fn connect(&mut self, inp: Port, out: Port) -> Result<(), String> {
+        let o = out as usize;
+        for i in 0..PORTS {
+            if self.conn[i][o] && i != inp as usize {
+                return Err(format!("output {out:?} already driven"));
+            }
+        }
+        self.conn[inp as usize][o] = true;
+        Ok(())
+    }
+
+    pub fn is_connected(&self, inp: Port, out: Port) -> bool {
+        self.conn[inp as usize][out as usize]
+    }
+
+    /// SRAM bits in this image (8x8 bit matrix per bus bit in the paper;
+    /// logically 5x5 at port granularity).
+    pub fn bits(&self) -> usize {
+        PORTS * PORTS
+    }
+}
+
+/// The per-router schedule: one image per TDM slot.
+#[derive(Clone, Debug, Default)]
+pub struct SwitchConfig {
+    pub slots: Vec<SlotImage>,
+}
+
+impl SwitchConfig {
+    pub fn with_slots(n: usize) -> Self {
+        SwitchConfig { slots: vec![SlotImage::default(); n] }
+    }
+
+    /// Total SRAM bits the RISC core writes to configure this router.
+    pub fn config_bits(&self) -> usize {
+        self.slots.iter().map(|s| s.bits()).sum()
+    }
+
+    /// A loopback configuration: the core's own output feeds its input in
+    /// every slot (multi-layer single-core networks, paper section II).
+    pub fn loopback(n_slots: usize) -> Self {
+        let mut c = SwitchConfig::with_slots(n_slots);
+        for s in &mut c.slots {
+            s.connect(Port::Core, Port::Core).expect("empty image");
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn connect_and_query() {
+        let mut s = SlotImage::default();
+        s.connect(Port::West, Port::Core).unwrap();
+        assert!(s.is_connected(Port::West, Port::Core));
+        assert!(!s.is_connected(Port::North, Port::Core));
+    }
+
+    #[test]
+    fn double_driving_an_output_is_rejected() {
+        let mut s = SlotImage::default();
+        s.connect(Port::West, Port::East).unwrap();
+        assert!(s.connect(Port::North, Port::East).is_err());
+        // same input again is fine (idempotent)
+        assert!(s.connect(Port::West, Port::East).is_ok());
+    }
+
+    #[test]
+    fn loopback_feeds_core_to_itself() {
+        let c = SwitchConfig::loopback(4);
+        assert_eq!(c.slots.len(), 4);
+        assert!(c.slots.iter().all(|s| s.is_connected(Port::Core, Port::Core)));
+        assert_eq!(c.config_bits(), 4 * 25);
+    }
+}

@@ -1,0 +1,125 @@
+//! Energy bookkeeping used by the chip simulator and the benchmarks.
+
+/// Where energy went, in the paper's Table III/IV categories.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    /// Analog + digital compute inside cores (J).
+    pub compute_j: f64,
+    /// On-chip routing (J).
+    pub noc_j: f64,
+    /// Off-chip I/O: DRAM + TSV (J).
+    pub io_j: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total_j(&self) -> f64 {
+        self.compute_j + self.noc_j + self.io_j
+    }
+}
+
+/// Accumulator for a simulated run.
+#[derive(Clone, Debug, Default)]
+pub struct EnergyAccount {
+    pub breakdown: EnergyBreakdown,
+    /// Simulated wall-clock time (s).
+    pub time_s: f64,
+}
+
+impl EnergyAccount {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A compute step on `cores` cores running concurrently for `time_s`
+    /// at `power_w` each: time advances once, energy scales with cores.
+    pub fn compute_step(&mut self, cores: usize, time_s: f64, power_w: f64) {
+        self.time_s += time_s;
+        self.breakdown.compute_j += cores as f64 * time_s * power_w;
+    }
+
+    /// Compute energy that overlaps already-accounted time (no time
+    /// advance) — e.g. control FSMs running alongside the crossbar.
+    pub fn compute_overlap(&mut self, cores: usize, time_s: f64, power_w: f64) {
+        self.breakdown.compute_j += cores as f64 * time_s * power_w;
+    }
+
+    /// NoC transfer: `bits` over `hops`, serialised at `bits_per_cycle`.
+    pub fn noc_transfer(
+        &mut self,
+        bits: u64,
+        hops: u64,
+        bits_per_cycle: u64,
+        cycle_s: f64,
+        energy_per_bit_hop: f64,
+    ) {
+        let cycles = bits.div_ceil(bits_per_cycle) + hops; // store-and-forward head latency
+        self.time_s += cycles as f64 * cycle_s;
+        self.breakdown.noc_j += bits as f64 * hops as f64 * energy_per_bit_hop;
+    }
+
+    /// Off-chip transfer of `bits` (DRAM access + TSV crossing).
+    pub fn io_transfer(&mut self, bits: u64, bandwidth_bps: f64,
+                       energy_per_bit: f64) {
+        self.time_s += bits as f64 / bandwidth_bps;
+        self.breakdown.io_j += bits as f64 * energy_per_bit;
+    }
+
+    /// IO energy without a time advance (DMA overlapped with compute).
+    pub fn io_overlap(&mut self, bits: u64, energy_per_bit: f64) {
+        self.breakdown.io_j += bits as f64 * energy_per_bit;
+    }
+
+    pub fn merge(&mut self, other: &EnergyAccount) {
+        self.time_s += other.time_s;
+        self.breakdown.compute_j += other.breakdown.compute_j;
+        self.breakdown.noc_j += other.breakdown.noc_j;
+        self.breakdown.io_j += other.breakdown.io_j;
+    }
+
+    /// Scale an account (e.g. per-sample -> per-epoch).
+    pub fn scaled(&self, k: f64) -> EnergyAccount {
+        EnergyAccount {
+            time_s: self.time_s * k,
+            breakdown: EnergyBreakdown {
+                compute_j: self.breakdown.compute_j * k,
+                noc_j: self.breakdown.noc_j * k,
+                io_j: self.breakdown.io_j * k,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compute_step_scales_energy_not_time() {
+        let mut a = EnergyAccount::new();
+        a.compute_step(10, 1e-6, 1e-3);
+        assert!((a.time_s - 1e-6).abs() < 1e-15);
+        assert!((a.breakdown.compute_j - 10.0 * 1e-9).abs() < 1e-18);
+    }
+
+    #[test]
+    fn noc_transfer_serialisation() {
+        let mut a = EnergyAccount::new();
+        // 64 bits over 3 hops on an 8-bit link at 5 ns.
+        a.noc_transfer(64, 3, 8, 5e-9, 1e-12);
+        assert!((a.time_s - 11.0 * 5e-9).abs() < 1e-15);
+        assert!((a.breakdown.noc_j - 64.0 * 3.0 * 1e-12).abs() < 1e-24);
+    }
+
+    #[test]
+    fn merge_and_scale() {
+        let mut a = EnergyAccount::new();
+        a.compute_step(1, 2e-6, 1e-3);
+        let mut b = EnergyAccount::new();
+        b.io_transfer(1000, 1e9, 1e-12);
+        a.merge(&b);
+        let s = a.scaled(2.0);
+        assert!((s.time_s - 2.0 * (2e-6 + 1e-6)).abs() < 1e-12);
+        assert!((s.breakdown.total_j()
+            - 2.0 * (2e-9 + 1e-9)).abs() < 1e-15);
+    }
+}

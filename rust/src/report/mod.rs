@@ -1,0 +1,211 @@
+//! Paper-shaped report rendering: the tables and figure series of the
+//! evaluation section, printed as aligned text (the benches and the CLI
+//! `report` subcommand both go through here).
+
+use crate::config::{apps, SystemConfig};
+use crate::cores::Step;
+use crate::gpu;
+use crate::power;
+use crate::sim::{self, CostRow};
+
+/// Render a simple aligned table.
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        cells
+            .iter()
+            .zip(widths)
+            .map(|(c, w)| format!("{c:>w$}"))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    let head: Vec<String> = headers.iter().map(|s| s.to_string()).collect();
+    out.push_str(&fmt_row(&head, &widths));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+fn sci(v: f64) -> String {
+    format!("{v:.2e}")
+}
+
+fn us(v: f64) -> String {
+    format!("{:.2}", v * 1e6)
+}
+
+/// Paper Table II: per-step time/power of a neural core.
+pub fn table2() -> String {
+    let rows = vec![
+        vec!["Forward pass (recognition)".into(),
+             us(Step::Forward.time_s()),
+             format!("{:.3}", Step::Forward.power_w() * 1e3)],
+        vec!["Backward pass".into(),
+             us(Step::Backward.time_s()),
+             format!("{:.3}", Step::Backward.power_w() * 1e3)],
+        vec!["Weight update".into(),
+             us(Step::Update.time_s()),
+             format!("{:.3}", Step::Update.power_w() * 1e3)],
+        vec!["Control unit".into(), "-".into(),
+             format!("{:.4}", power::neural_core::CTRL_POWER_W * 1e3)],
+    ];
+    render_table(&["step", "time (us)", "power (mW)"], &rows)
+}
+
+fn cost_rows_to_table(rows: &[CostRow]) -> String {
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.app.clone(),
+                r.cores.to_string(),
+                us(r.time_s),
+                sci(r.compute_j),
+                sci(r.io_j),
+                sci(r.total_j),
+            ]
+        })
+        .collect();
+    render_table(
+        &["app", "#cores", "time (us)", "compute E (J)", "IO E (J)", "total E (J)"],
+        &table,
+    )
+}
+
+/// Paper Table III: per-sample training cost rows.
+pub fn table3(sys: &SystemConfig) -> String {
+    cost_rows_to_table(&sim::table3(sys))
+}
+
+/// Paper Table IV: per-sample recognition cost rows.
+pub fn table4(sys: &SystemConfig) -> String {
+    cost_rows_to_table(&sim::table4(sys))
+}
+
+/// One Figs 22–25 series entry.
+#[derive(Clone, Debug)]
+pub struct VsGpu {
+    pub app: String,
+    pub speedup: f64,
+    pub energy_eff: f64,
+}
+
+/// Figs 22/23 (training) or 24/25 (recognition): speedup and energy
+/// efficiency of the chip vs the K20 for every application.
+pub fn vs_gpu(sys: &SystemConfig, train: bool) -> Vec<VsGpu> {
+    let rows = if train { sim::table3(sys) } else { sim::table4(sys) };
+    rows.iter()
+        .map(|r| {
+            let g = if let Some(a) = apps::kmeans_app(&r.app) {
+                gpu::kmeans_cost(a.dims, a.clusters)
+            } else {
+                let net = apps::network(&r.app).unwrap();
+                if train {
+                    gpu::train_cost(net)
+                } else {
+                    gpu::recognition_cost(net)
+                }
+            };
+            VsGpu {
+                app: r.app.clone(),
+                speedup: g.time_s / r.time_s,
+                energy_eff: g.energy_j / r.total_j,
+            }
+        })
+        .collect()
+}
+
+/// Render the Figs 22–25 series as a table.
+pub fn vs_gpu_table(sys: &SystemConfig, train: bool) -> String {
+    let series = vs_gpu(sys, train);
+    let rows: Vec<Vec<String>> = series
+        .iter()
+        .map(|s| {
+            vec![s.app.clone(), format!("{:.1}", s.speedup), sci(s.energy_eff)]
+        })
+        .collect();
+    let what = if train { "training" } else { "recognition" };
+    format!(
+        "{} vs Tesla K20\n{}",
+        what,
+        render_table(&["app", "speedup (x)", "energy eff (x)"], &rows)
+    )
+}
+
+/// Section VI.F: chip inventory and area budget.
+pub fn chip_summary(sys: &SystemConfig) -> String {
+    let mesh_stops = sys.mesh_w * sys.mesh_h + 2;
+    format!(
+        "ReStream chip: {} neural cores ({}x{} mesh) + clustering core + \
+         RISC core + DMA\n\
+         neural core:  {:>8.4} mm^2 x {}\n\
+         cluster core: {:>8.4} mm^2\n\
+         RISC core:    {:>8.4} mm^2\n\
+         routers:      {:>8.4} mm^2 ({} stops)\n\
+         buffers+DMA:  {:>8.4} mm^2\n\
+         total:        {:>8.3} mm^2 (paper: 2.94 mm^2)\n",
+        sys.neural_cores,
+        sys.mesh_w,
+        sys.mesh_h,
+        power::neural_core::AREA_MM2,
+        sys.neural_cores,
+        power::cluster_core::AREA_MM2,
+        power::risc_core::AREA_MM2,
+        mesh_stops as f64 * power::noc::ROUTER_AREA_MM2,
+        mesh_stops,
+        power::buffers::AREA_MM2 + power::io::DMA_AREA_MM2,
+        power::system_area_mm2(sys.neural_cores, mesh_stops),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_render_without_panicking() {
+        let sys = SystemConfig::default();
+        assert!(table2().contains("Weight update"));
+        let t3 = table3(&sys);
+        assert!(t3.contains("mnist_class") && t3.contains("isolet_kmeans"));
+        assert!(table4(&sys).contains("kdd_ae"));
+        assert!(chip_summary(&sys).contains("total"));
+    }
+
+    #[test]
+    fn figs22_25_shapes() {
+        let sys = SystemConfig::default();
+        let train = vs_gpu(&sys, true);
+        let recog = vs_gpu(&sys, false);
+        for v in train.iter().chain(&recog) {
+            assert!(v.speedup > 1.0, "{} speedup {}", v.app, v.speedup);
+            assert!(v.energy_eff > 1e3, "{} eff {}", v.app, v.energy_eff);
+        }
+        // paper headline: 4-6 orders of magnitude energy efficiency
+        let max_eff = train
+            .iter()
+            .chain(&recog)
+            .map(|v| v.energy_eff)
+            .fold(0.0, f64::max);
+        assert!(max_eff > 1e4, "max eff {max_eff}");
+    }
+
+    #[test]
+    fn render_table_alignment() {
+        let t = render_table(&["a", "bb"], &[vec!["1".into(), "2".into()]]);
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].contains("bb"));
+    }
+}

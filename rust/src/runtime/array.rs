@@ -1,0 +1,83 @@
+//! Minimal host-side f32 tensor used at the runtime boundary.
+
+use anyhow::Result;
+
+/// A dense row-major f32 array.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArrayF32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl ArrayF32 {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self, String> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(format!(
+                "shape {shape:?} wants {n} elements, got {}",
+                data.len()
+            ));
+        }
+        Ok(ArrayF32 { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        ArrayF32 { shape, data: vec![0.0; n] }
+    }
+
+    /// 1x1 scalar (how `lr` travels to the train-step artifact).
+    pub fn scalar(v: f32) -> Self {
+        ArrayF32 { shape: vec![1, 1], data: vec![v] }
+    }
+
+    /// A `1 x n` row (single-sample batch).
+    pub fn row(data: Vec<f32>) -> Self {
+        ArrayF32 { shape: vec![1, data.len()], data }
+    }
+
+    /// A `b x n` matrix from row-major data.
+    pub fn matrix(b: usize, n: usize, data: Vec<f32>) -> Result<Self, String> {
+        Self::new(vec![b, n], data)
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Row `i` of a rank-2 array.
+    pub fn row_slice(&self, i: usize) -> &[f32] {
+        let n = self.shape[1];
+        &self.data[i * n..(i + 1) * n]
+    }
+
+    pub(crate) fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(ArrayF32::new(vec![2, 3], vec![0.0; 5]).is_err());
+        assert!(ArrayF32::new(vec![2, 3], vec![0.0; 6]).is_ok());
+    }
+
+    #[test]
+    fn helpers() {
+        let s = ArrayF32::scalar(0.5);
+        assert_eq!(s.shape, vec![1, 1]);
+        let r = ArrayF32::row(vec![1.0, 2.0]);
+        assert_eq!(r.shape, vec![1, 2]);
+        let m = ArrayF32::matrix(2, 2, vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(m.row_slice(1), &[3.0, 4.0]);
+    }
+}

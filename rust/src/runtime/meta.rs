@@ -1,0 +1,112 @@
+//! `.meta` sidecar parser: the exact parameter/result shapes `aot.py`
+//! recorded for each artifact. Format, one line per tensor:
+//!
+//! ```text
+//! input 0 f32[1x41]
+//! output 0 f32[42x15]
+//! ```
+
+use std::path::Path;
+
+use super::ArrayF32;
+
+/// Parsed artifact signature.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Meta {
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: Vec<Vec<usize>>,
+}
+
+impl Meta {
+    pub fn parse(text: &str) -> Result<Meta, String> {
+        let mut m = Meta::default();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let kind = parts.next().ok_or(format!("line {ln}: empty"))?;
+            let idx: usize = parts
+                .next()
+                .and_then(|s| s.parse().ok())
+                .ok_or(format!("line {ln}: bad index"))?;
+            let ty = parts.next().ok_or(format!("line {ln}: no type"))?;
+            let shape = parse_shape(ty).ok_or(format!("line {ln}: bad type {ty}"))?;
+            let list = match kind {
+                "input" => &mut m.inputs,
+                "output" => &mut m.outputs,
+                other => return Err(format!("line {ln}: unknown kind {other}")),
+            };
+            if idx != list.len() {
+                return Err(format!("line {ln}: out-of-order index {idx}"));
+            }
+            list.push(shape);
+        }
+        Ok(m)
+    }
+
+    pub fn parse_file(path: &Path) -> Result<Meta, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Check a host input set against the recorded signature.
+    pub fn validate_inputs(&self, inputs: &[ArrayF32]) -> Result<(), String> {
+        if inputs.len() != self.inputs.len() {
+            return Err(format!(
+                "{} inputs given, artifact wants {}",
+                inputs.len(),
+                self.inputs.len()
+            ));
+        }
+        for (i, (a, want)) in inputs.iter().zip(&self.inputs).enumerate() {
+            if &a.shape != want {
+                return Err(format!(
+                    "input {i}: shape {:?}, artifact wants {:?}",
+                    a.shape, want
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+fn parse_shape(ty: &str) -> Option<Vec<usize>> {
+    let body = ty.strip_prefix("f32[")?.strip_suffix(']')?;
+    if body == "scalar" {
+        return Some(vec![]);
+    }
+    body.split('x').map(|d| d.parse().ok()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        let m = Meta::parse(
+            "input 0 f32[1x41]\ninput 1 f32[1x1]\noutput 0 f32[42x15]\n",
+        )
+        .unwrap();
+        assert_eq!(m.inputs, vec![vec![1, 41], vec![1, 1]]);
+        assert_eq!(m.outputs, vec![vec![42, 15]]);
+    }
+
+    #[test]
+    fn rejects_out_of_order_and_garbage() {
+        assert!(Meta::parse("input 1 f32[2]").is_err());
+        assert!(Meta::parse("frob 0 f32[2]").is_err());
+        assert!(Meta::parse("input 0 i8[2]").is_err());
+    }
+
+    #[test]
+    fn validate_inputs_catches_drift() {
+        let m = Meta::parse("input 0 f32[1x4]").unwrap();
+        assert!(m.validate_inputs(&[ArrayF32::row(vec![0.0; 4])]).is_ok());
+        assert!(m.validate_inputs(&[ArrayF32::row(vec![0.0; 5])]).is_err());
+        assert!(m.validate_inputs(&[]).is_err());
+    }
+}

@@ -1,0 +1,135 @@
+//! Integration: artifacts → PJRT runtime → numerics.
+//!
+//! Requires `make artifacts` (the Makefile's `cargotest` target orders
+//! this). These tests prove the cross-language contract: the HLO the
+//! python side lowered computes exactly what the Rust reference
+//! (`crossbar::ideal` / `nn::Mlp`) computes.
+
+use restream::config::{apps, hwspec as hw};
+use restream::coordinator::init_conductances;
+use restream::nn::Mlp;
+use restream::runtime::{ArrayF32, Runtime};
+
+fn rt() -> Runtime {
+    Runtime::open_default().expect("run `make artifacts` first")
+}
+
+#[test]
+fn every_registered_artifact_loads_and_validates() {
+    let rt = rt();
+    for net in apps::NETWORKS {
+        let mut names = vec![net.fwd_artifact()];
+        if net.kind != restream::config::AppKind::DimReduction {
+            names.push(net.train_artifact());
+        } else {
+            for s in 0..net.dr_stages().len() {
+                names.push(net.stage_artifact(s));
+            }
+        }
+        for name in names {
+            let exe = rt.load(&name).unwrap_or_else(|e| {
+                panic!("loading {name}: {e:#}");
+            });
+            assert!(!exe.meta.inputs.is_empty(), "{name} has no inputs");
+            assert!(!exe.meta.outputs.is_empty(), "{name} has no outputs");
+        }
+    }
+    for a in apps::KMEANS_APPS {
+        rt.load(&a.step_artifact()).expect("kmeans artifact");
+    }
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let rt = rt();
+    let a = rt.load("kdd_ae_fwd_b64").unwrap();
+    let b = rt.load("kdd_ae_fwd_b64").unwrap();
+    assert!(std::sync::Arc::ptr_eq(&a, &b));
+    assert_eq!(rt.cached(), 1);
+}
+
+#[test]
+fn fwd_artifact_matches_rust_reference_bitwise() {
+    // The PJRT-executed kernel chain and the Rust ideal-crossbar path
+    // implement the same math with the same quantisers; after the 3-bit
+    // output ADC they must agree exactly on almost every code, and
+    // within one ADC step everywhere (float association differences can
+    // flip a borderline rounding).
+    let rt = rt();
+    let net = apps::network("kdd_ae").unwrap();
+    let exe = rt.load(&net.fwd_artifact()).unwrap();
+    let params = init_conductances(net.layers, 42);
+    let mlp = Mlp::from_params(net.layers, &params);
+
+    let mut rng = restream::testing::Rng::seeded(7);
+    let batch = apps::FWD_BATCH;
+    let dims = net.layers[0];
+    let data = rng.vec_uniform(batch * dims, -0.5, 0.5);
+    let mut inputs = params.clone();
+    inputs.push(ArrayF32::matrix(batch, dims, data.clone()).unwrap());
+    let outs = exe.run(&inputs).unwrap();
+    let recon = &outs[0];
+
+    let lsb = 1.0 / ((1 << hw::OUT_BITS) - 1) as f32;
+    let mut exact = 0usize;
+    let mut total = 0usize;
+    for b in 0..batch {
+        let x = &data[b * dims..(b + 1) * dims];
+        let want = mlp.forward(x);
+        let got = recon.row_slice(b);
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            total += 1;
+            if (g - w).abs() < 1e-6 {
+                exact += 1;
+            } else {
+                assert!(
+                    (g - w).abs() <= lsb + 1e-6,
+                    "divergence beyond one ADC step: {g} vs {w}"
+                );
+            }
+        }
+    }
+    assert!(
+        exact as f64 / total as f64 > 0.99,
+        "only {exact}/{total} codes identical"
+    );
+}
+
+#[test]
+fn meta_validation_rejects_wrong_shapes() {
+    let rt = rt();
+    let exe = rt.load("kdd_ae_fwd_b64").unwrap();
+    // right count, wrong batch
+    let net = apps::network("kdd_ae").unwrap();
+    let mut inputs = init_conductances(net.layers, 0);
+    inputs.push(ArrayF32::matrix(1, 41, vec![0.0; 41]).unwrap());
+    let err = exe.run(&inputs).unwrap_err();
+    assert!(err.to_string().contains("shape"), "{err}");
+}
+
+#[test]
+fn kmeans_step_artifact_matches_rust_reference() {
+    let rt = rt();
+    let app = apps::kmeans_app("mnist_kmeans").unwrap();
+    let exe = rt.load(&app.step_artifact()).unwrap();
+    let (d, k) = (app.dims, app.clusters);
+    let mut rng = restream::testing::Rng::seeded(3);
+    let x = rng.vec_uniform(apps::FWD_BATCH * d, -0.5, 0.5);
+    let centres = rng.vec_uniform(k * d, -0.5, 0.5);
+    let outs = exe
+        .run(&[
+            ArrayF32::matrix(apps::FWD_BATCH, d, x.clone()).unwrap(),
+            ArrayF32::matrix(k, d, centres.clone()).unwrap(),
+        ])
+        .unwrap();
+    let assign = &outs[0];
+    let km = restream::kmeans::KMeans { k, dims: d, centres };
+    for i in 0..apps::FWD_BATCH {
+        let want = km.assign_one(&x[i * d..(i + 1) * d]);
+        assert_eq!(assign.data[i] as usize, want, "sample {i}");
+    }
+    // counts sum to the batch
+    let count_sum: f32 = outs[2].data.iter().sum();
+    assert_eq!(count_sum as usize, apps::FWD_BATCH);
+}

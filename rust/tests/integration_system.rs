@@ -1,0 +1,102 @@
+//! Integration: mapper → placement → NoC schedule → cost model, across
+//! every Table I application — the architecture-side contract.
+
+use restream::config::{apps, SystemConfig};
+use restream::mapper::{map_network, place};
+use restream::noc::Schedule;
+use restream::{report, sim};
+
+#[test]
+fn every_network_maps_places_and_schedules() {
+    let sys = SystemConfig::default();
+    for net in apps::NETWORKS {
+        let map = map_network(net, &sys)
+            .unwrap_or_else(|e| panic!("{}: {e}", net.name));
+        assert!(map.cores_used() <= sys.neural_cores, "{}", net.name);
+        for stage in &map.stages {
+            let placement = place(stage, &sys);
+            // every placed core on the mesh
+            for row in &placement.coords {
+                for &(x, y) in row {
+                    assert!(x < sys.mesh_w && y < sys.mesh_h);
+                }
+            }
+            // both traffic directions schedule conflict-free
+            for transfers in [&placement.fwd_transfers, &placement.bwd_transfers] {
+                let sched = Schedule::build(transfers, sys.link_bits);
+                sched.validate().unwrap_or_else(|l| {
+                    panic!("{} stage {}: link {l:?}", net.name, stage.name)
+                });
+            }
+        }
+    }
+}
+
+#[test]
+fn tables_3_and_4_cover_all_apps_with_positive_costs() {
+    let sys = SystemConfig::default();
+    for rows in [sim::table3(&sys), sim::table4(&sys)] {
+        assert_eq!(rows.len(), 7);
+        for r in rows {
+            assert!(r.time_s > 0.0, "{}", r.app);
+            assert!(r.total_j > 0.0, "{}", r.app);
+            assert!(r.total_j >= r.compute_j + r.io_j - 1e-18);
+            assert!(r.cores >= 1);
+        }
+    }
+}
+
+#[test]
+fn headline_claims_hold_in_shape() {
+    // Paper abstract: "up to 30x (training) / 50x (recognition) speedup,
+    // four to six orders of magnitude more energy efficiency".
+    let sys = SystemConfig::default();
+    let train = report::vs_gpu(&sys, true);
+    let recog = report::vs_gpu(&sys, false);
+    let net_apps = |v: &[report::VsGpu]| -> Vec<report::VsGpu> {
+        v.iter()
+            .filter(|s| apps::network(&s.app).is_some())
+            .cloned()
+            .collect()
+    };
+    // every app wins on both axes
+    for s in train.iter().chain(&recog) {
+        assert!(s.speedup > 1.0, "{} speedup {}", s.app, s.speedup);
+        assert!(s.energy_eff > 1.0, "{}", s.app);
+    }
+    // energy efficiency of the neural apps sits in the 10^4..10^7 band
+    for s in net_apps(&train).iter().chain(&net_apps(&recog)) {
+        assert!(
+            s.energy_eff > 1e4 && s.energy_eff < 1e8,
+            "{}: {:.2e}",
+            s.app,
+            s.energy_eff
+        );
+    }
+    // recognition speedups exceed training speedups on average (paper:
+    // 50x vs 30x) — weights never move, so inference profits most
+    let mean = |v: &[report::VsGpu]| {
+        v.iter().map(|s| s.speedup).sum::<f64>() / v.len() as f64
+    };
+    assert!(mean(&net_apps(&recog)) > 0.5 * mean(&net_apps(&train)));
+}
+
+#[test]
+fn chip_reconfigures_within_a_millisecond() {
+    // Section II: RISC core configures cores, switches, DMA, then gates
+    // off. The config phase must be negligible next to an epoch.
+    use restream::cores::risc::ConfigWork;
+    use restream::cores::RiscCore;
+    let sys = SystemConfig::default();
+    let net = apps::network("isolet_class").unwrap();
+    let map = map_network(net, &sys).unwrap();
+    let work = ConfigWork {
+        neural_cores: map.cores_used(),
+        routers: sys.mesh_w * sys.mesh_h + 2,
+        switch_bits: (sys.mesh_w * sys.mesh_h + 2) * 64 * 25,
+        dma_descriptors: 8,
+    };
+    let risc = RiscCore::default();
+    assert!(risc.config_time_s(&work) < 1e-3);
+    assert_eq!(risc.steady_power_w(), 0.0);
+}
