@@ -1,0 +1,33 @@
+# ReStream build shortcuts. The Rust crate is self-sufficient (native
+# backend); only `artifacts` and the pjrt targets need Python/JAX/XLA.
+
+ARTIFACTS ?= artifacts
+
+.PHONY: build test bench doc fmt artifacts pytest cargotest-pjrt
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+bench:
+	cargo bench
+
+doc:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+fmt:
+	cargo fmt --all --check
+
+# AOT-lower the JAX model graphs to HLO text (needs jax installed).
+artifacts:
+	cd python && python -m compile.aot --out $(abspath $(ARTIFACTS))
+
+pytest:
+	cd python && python -m pytest -q tests
+
+# Artifact-path tests: needs the real xla crate wired in place of
+# rust/vendor/xla plus an XLA extension install (see DESIGN.md).
+cargotest-pjrt: artifacts
+	cargo test -q --features pjrt -- --include-ignored

@@ -1,0 +1,185 @@
+"""Generate golden values for ``rust/tests/backend_parity.rs``.
+
+Ports the crate's xoshiro256++ PRNG (``rust/src/testing/rng.rs``) to
+Python bit-for-bit, draws the same input tensors the Rust test draws,
+runs them through the jnp oracles in ``compile.kernels.ref`` and prints
+Rust array literals for the expected outputs.
+
+The script also cross-checks that a sequential float32 accumulation
+(the order ``crossbar::ideal`` uses) agrees with the jax result to well
+under the comparison tolerance, and that no quantised output sits close
+enough to a rounding boundary for the two accumulation orders to land
+on different codes.
+
+Run from ``python/``:
+
+    python -m tests.gen_parity_goldens
+"""
+
+import numpy as np
+
+import jax
+
+jax.config.update("jax_enable_x64", False)
+
+from compile import hwspec as hw
+from compile.kernels import ref
+
+MASK = (1 << 64) - 1
+
+
+def _rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & MASK
+
+
+class Rng:
+    """Bit-exact twin of ``rust/src/testing/rng.rs`` (xoshiro256++)."""
+
+    def __init__(self, seed):
+        s = []
+        sm = seed & MASK
+        for _ in range(4):
+            sm = (sm + 0x9E3779B97F4A7C15) & MASK
+            z = sm
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+            s.append(z ^ (z >> 31))
+        self.s = s
+
+    def next_u64(self):
+        s = self.s
+        result = (_rotl((s[0] + s[3]) & MASK, 23) + s[0]) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def unit(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def uniform_f32(self, lo, hi):
+        # Rust widens the f32 bounds to f64, samples, then narrows.
+        lo64, hi64 = float(np.float32(lo)), float(np.float32(hi))
+        return np.float32(lo64 + (hi64 - lo64) * self.unit())
+
+    def vec_uniform(self, n, lo, hi):
+        return np.array(
+            [self.uniform_f32(lo, hi) for _ in range(n)], dtype=np.float32
+        )
+
+
+# Shapes kept deliberately small: the goldens are embedded as literals.
+SEED = 2024
+B, N_IN, N_OUT = 4, 6, 5  # N_IN includes the bias row
+K, D, KB = 4, 3, 8        # kmeans: K centres, D dims, KB samples
+LR = np.float32(0.7)
+
+
+def draw_inputs():
+    """Draw in the exact order the Rust test draws."""
+    rng = Rng(SEED)
+    x = rng.vec_uniform(B * N_IN, -0.5, 0.5).reshape(B, N_IN)
+    gp = rng.vec_uniform(N_IN * N_OUT, 0.001, 1.0).reshape(N_IN, N_OUT)
+    gn = rng.vec_uniform(N_IN * N_OUT, 0.001, 1.0).reshape(N_IN, N_OUT)
+    delta = rng.vec_uniform(B * N_OUT, -1.0, 1.0).reshape(B, N_OUT)
+    kx = rng.vec_uniform(KB * D, -0.5, 0.5).reshape(KB, D)
+    kc = rng.vec_uniform(K * D, -0.5, 0.5).reshape(K, D)
+    return x, gp, gn, delta, kx, kc
+
+
+def seq_fwd_dp(x, gp, gn):
+    """crossbar::ideal::fwd accumulation order, in strict float32."""
+    w = (gp - gn).astype(np.float32)
+    dp = np.zeros((B, N_OUT), dtype=np.float32)
+    for b in range(B):
+        for i in range(N_IN):
+            for j in range(N_OUT):
+                dp[b, j] = np.float32(
+                    dp[b, j] + np.float32(x[b, i] * w[i, j])
+                )
+    return dp
+
+
+def boundary_margin_unit(dp, bits):
+    levels = (1 << bits) - 1
+    act = np.clip(dp * hw.H_SLOPE, -hw.V_RAIL, hw.V_RAIL)
+    code = (act + hw.V_RAIL) * levels
+    return np.min(np.abs(code - np.round(code) - 0.5))
+
+
+def boundary_margin_err(v):
+    mag_levels = float(2 ** (hw.ERR_BITS - 1) - 1)
+    code = np.clip(np.abs(v), 0, hw.ERR_MAX) / hw.ERR_MAX * mag_levels
+    return np.min(np.abs(code - np.round(code) - 0.5))
+
+
+def lit(name, arr):
+    # repr(float(v)) is the f64 repr of the f32 value; parsing that
+    # decimal back as f32 recovers the exact original bits.
+    flat = np.asarray(arr, dtype=np.float32).ravel()
+    body = ", ".join(repr(float(v)) for v in flat)
+    return f"const {name}: [f32; {len(flat)}] = [{body}];"
+
+
+def main():
+    x, gp, gn, delta, kx, kc = draw_inputs()
+
+    y, dp = ref.crossbar_fwd(x, gp, gn)
+    back = ref.crossbar_bwd(delta, gp, gn)
+    gp2, gn2 = ref.weight_update(gp, gn, x, delta, dp, LR)
+    dists = ref.kmeans_distances(kx, kc)
+    assign = np.argmin(np.asarray(dists), axis=1)
+    acc = np.zeros((K, D), dtype=np.float32)
+    counts = np.zeros(K, dtype=np.float32)
+    for i, a in enumerate(assign):
+        acc[a] += kx[i]
+        counts[a] += 1
+
+    # --- cross-checks -----------------------------------------------------
+    dp_seq = seq_fwd_dp(x, gp, gn)
+    gap = np.max(np.abs(dp_seq - np.asarray(dp)))
+    print(f"// max |dp_jax - dp_sequential| = {gap:.3e}")
+    assert gap < 1e-5, "accumulation orders diverged beyond tolerance"
+    m_out = boundary_margin_unit(np.asarray(dp), hw.OUT_BITS)
+    m_err = min(
+        boundary_margin_err(np.asarray(delta) @ np.asarray(gp - gn).T),
+        boundary_margin_err(
+            np.asarray(delta) * np.asarray(ref.activation_deriv_lut(dp))
+        ),
+    )
+    # the f'(DP) LUT index must not straddle a bin edge either
+    lut_code = (np.asarray(dp) + hw.H_CLIP_IN) / (2 * hw.H_CLIP_IN) * (
+        hw.LUT_SIZE - 1
+    )
+    m_lut = np.min(np.abs(lut_code - np.round(lut_code) - 0.5))
+    print(
+        f"// quantiser boundary margins: out {m_out:.4f}, err {m_err:.4f}, "
+        f"lut {m_lut:.4f}"
+    )
+    assert min(m_out, m_err, m_lut) > 1e-3, "golden sits on a rounding edge"
+    ties = np.min(
+        np.abs(
+            np.sort(np.asarray(dists), axis=1)[:, 1]
+            - np.sort(np.asarray(dists), axis=1)[:, 0]
+        )
+    )
+    print(f"// kmeans nearest-vs-second margin: {ties:.4f}")
+    assert ties > 1e-4, "kmeans assignment is a near-tie"
+
+    # --- emit Rust literals ----------------------------------------------
+    print(lit("GOLD_Y", y))
+    print(lit("GOLD_DP", dp))
+    print(lit("GOLD_BWD", back))
+    print(lit("GOLD_GP2", gp2))
+    print(lit("GOLD_GN2", gn2))
+    print(lit("GOLD_ASSIGN", assign.astype(np.float32)))
+    print(lit("GOLD_ACC", acc))
+    print(lit("GOLD_COUNTS", counts))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,7 +1,13 @@
 //! §Perf harness: wall-clock microbenchmarks of the L3 hot paths —
-//! per-sample training step, batched recognition, the NoC scheduler, the
-//! cost simulator, and the pure-Rust crossbar math. The before/after
-//! numbers recorded in EXPERIMENTS.md §Perf come from this binary.
+//! per-sample training step, chunked training, batched recognition, the
+//! NoC scheduler, the cost simulator, and the raw crossbar math. The
+//! before/after numbers recorded in EXPERIMENTS.md §Perf come from this
+//! binary.
+//!
+//! Runs on whichever backend `RESTREAM_BACKEND` selects (default:
+//! native, so no artifacts are needed); with `--features pjrt` plus
+//! `make artifacts` the same harness times the PJRT artifact path for a
+//! direct comparison.
 
 use restream::benchutil::{report, section, time};
 use restream::config::{apps, SystemConfig};
@@ -16,55 +22,54 @@ use restream::{datasets, sim};
 fn main() -> anyhow::Result<()> {
     let sys = SystemConfig::default();
     let engine = Engine::open_default()?;
+    let backend = engine.backend();
+    println!("backend: {}", backend.name());
 
-    section("hot path: per-sample train step (PJRT execute + host I/O)");
+    section("hot path: per-sample train step (backend dispatch + math)");
     for app in ["iris_class", "kdd_ae", "mnist_class"] {
         let net = apps::network(app).unwrap();
-        let exe = engine.rt.load(&net.train_artifact())?;
-        let params = init_conductances(net.layers, 0);
+        let graph = net.train_artifact();
         let dims = net.layers[0];
         let outs = net.layers[net.layers.len() - 1];
         let mut rng = Rng::seeded(0);
         let x = ArrayF32::row(rng.vec_uniform(dims, -0.5, 0.5));
         let t = ArrayF32::row(rng.vec_uniform(outs, -0.4, 0.4));
-        let lr = ArrayF32::scalar(0.5);
-        let mut current = params.clone();
+        let mut current = init_conductances(net.layers, 0);
         let timing = time(3, 30, || {
-            let mut ins = current.clone();
-            ins.push(x.clone());
-            ins.push(t.clone());
-            ins.push(lr.clone());
-            let mut o = exe.run(&ins).unwrap();
-            o.pop();
-            current = o;
+            let params = std::mem::take(&mut current);
+            let (next, _) =
+                backend.train_step(&graph, params, &x, &t, 0.5).unwrap();
+            current = next;
         });
         report(&format!("train_step/{app}"), &timing);
     }
 
-    section("hot path: chunked train (scan c=32, per-sample amortised)");
+    section("hot path: chunked train (per-sample scan, amortised)");
     for app in ["iris_class", "kdd_ae", "mnist_class"] {
         let net = apps::network(app).unwrap();
-        let name = format!("{}_trainchunk_c{}", net.name, apps::TRAIN_CHUNK);
-        let exe = engine.rt.load(&name)?;
-        let params = init_conductances(net.layers, 0);
+        let chunk_graph =
+            format!("{}_trainchunk_c{}", net.name, apps::TRAIN_CHUNK);
+        let k = backend.chunk_size(&chunk_graph);
+        if k == 0 {
+            println!("  (backend offers no chunked variant of {app})");
+            continue;
+        }
         let dims = net.layers[0];
         let outs = net.layers[net.layers.len() - 1];
-        let k = apps::TRAIN_CHUNK;
         let mut rng = Rng::seeded(0);
-        let xs = ArrayF32::matrix(k, dims, rng.vec_uniform(k * dims, -0.5, 0.5))
-            .unwrap();
-        let ts = ArrayF32::matrix(k, outs, rng.vec_uniform(k * outs, -0.4, 0.4))
-            .unwrap();
-        let lr = ArrayF32::scalar(0.5);
-        let mut current = params.clone();
+        let xs =
+            ArrayF32::matrix(k, dims, rng.vec_uniform(k * dims, -0.5, 0.5))
+                .unwrap();
+        let ts =
+            ArrayF32::matrix(k, outs, rng.vec_uniform(k * outs, -0.4, 0.4))
+                .unwrap();
+        let mut current = init_conductances(net.layers, 0);
         let timing = time(2, 15, || {
-            let mut ins = current.clone();
-            ins.push(xs.clone());
-            ins.push(ts.clone());
-            ins.push(lr.clone());
-            let mut o = exe.run(&ins).unwrap();
-            o.pop();
-            current = o;
+            let params = std::mem::take(&mut current);
+            let (next, _) = backend
+                .train_chunk(&chunk_graph, params, &xs, &ts, 0.5)
+                .unwrap();
+            current = next;
         });
         report(&format!("train_chunk/{app}"), &timing);
         println!(
@@ -84,10 +89,7 @@ fn main() -> anyhow::Result<()> {
             engine.infer(net, &params, &xs).unwrap();
         });
         report(&format!("infer_b64/{app}"), &timing);
-        println!(
-            "    -> {:.0} samples/s",
-            64.0 / timing.mean_s
-        );
+        println!("    -> {:.0} samples/s", 64.0 / timing.mean_s);
     }
 
     section("architecture model: mapper + placement + schedule");
@@ -109,19 +111,27 @@ fn main() -> anyhow::Result<()> {
     });
     report("sim/tables_3_and_4", &timing);
 
-    section("pure-Rust crossbar math (oracle path)");
+    section("raw crossbar math (kernel level)");
     let mut rng = Rng::seeded(1);
-    let (b, n_in, n_out) = (1usize, 785usize, 300usize);
-    let x = rng.vec_uniform(b * n_in, -0.5, 0.5);
+    let (n_in, n_out) = (785usize, 300usize);
     let gp = rng.vec_uniform(n_in * n_out, 0.001, 1.0);
     let gn = rng.vec_uniform(n_in * n_out, 0.001, 1.0);
+    for b in [1usize, 64] {
+        let x = rng.vec_uniform(b * n_in, -0.5, 0.5);
+        let timing = time(3, 50, || {
+            std::hint::black_box(ideal::fwd(&x, &gp, &gn, b, n_in, n_out, 3));
+        });
+        report(&format!("ideal_fwd/785x300/b{b}"), &timing);
+        if b > 1 {
+            println!(
+                "    -> {:.2} us/sample batched",
+                timing.per_iter_us() / b as f64
+            );
+        }
+    }
+    let delta = rng.vec_uniform(n_out, -1.0, 1.0);
     let timing = time(3, 50, || {
-        std::hint::black_box(ideal::fwd(&x, &gp, &gn, b, n_in, n_out, 3));
-    });
-    report("ideal_fwd/785x300", &timing);
-    let delta = rng.vec_uniform(b * n_out, -1.0, 1.0);
-    let timing = time(3, 50, || {
-        std::hint::black_box(ideal::bwd(&delta, &gp, &gn, b, n_in, n_out));
+        std::hint::black_box(ideal::bwd(&delta, &gp, &gn, 1, n_in, n_out));
     });
     report("ideal_bwd/785x300", &timing);
 

@@ -4,7 +4,7 @@
 //! histograms and the detection/false-positive sweep.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example anomaly_kdd
+//! cargo run --release --example anomaly_kdd
 //! ```
 
 use restream::config::apps;

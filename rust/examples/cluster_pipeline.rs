@@ -6,7 +6,7 @@
 //! 20-dim codes → k-means (k = 10) on the clustering core → purity.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example cluster_pipeline
+//! cargo run --release --example cluster_pipeline
 //! ```
 
 use restream::config::apps;
@@ -34,7 +34,7 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // Encode through the full encoder stack (the *_fwd artifact).
+    // Encode through the full encoder stack (the DR forward graph).
     let codes = engine.encode(dr, &encoder, &xs)?;
     println!("encoded {} samples to {} dims", codes.len(), codes[0].len());
 

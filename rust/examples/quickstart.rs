@@ -3,8 +3,12 @@
 //! and where the chip's time/energy goes.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
+//!
+//! Runs on the native backend by default (no artifacts needed); set
+//! `RESTREAM_BACKEND=pjrt` with `--features pjrt` + `make artifacts`
+//! for the XLA artifact path.
 
 use restream::config::{apps, SystemConfig};
 use restream::coordinator::Engine;
@@ -20,7 +24,7 @@ fn main() -> anyhow::Result<()> {
     let xs = train.rows();
 
     // 2. train on-chip: stochastic BP through the memristor constraints,
-    //    functionally executed by the AOT-compiled XLA artifact
+    //    functionally executed by the selected compute backend
     let net = apps::network("iris_class").unwrap();
     let engine = Engine::open_default()?;
     let (params, rep) =

@@ -1,28 +1,32 @@
 //! End-to-end driver: train the paper's MNIST classifier
-//! (784→300→200→100→10, Table I) on the full three-layer stack for a few
-//! hundred steps and log the loss curve — the repository's whole-system
-//! proof that L1 Pallas kernels → L2 JAX graph → HLO artifacts → Rust
-//! PJRT runtime → streaming coordinator compose.
+//! (784→300→200→100→10, Table I) on the full three-layer stack for a
+//! few hundred steps and log the loss curve — the repository's
+//! whole-system proof that reference kernels → training graph →
+//! backend → streaming coordinator compose.
 //!
-//! Uses the batched (b16) training artifact: each step is one XLA
-//! execution over 16 samples of stochastic-gradient accumulation.
-//! Results are recorded in EXPERIMENTS.md.
+//! Uses mini-batched training (b=16): each step is one backend
+//! `train_step` call over 16 samples of gradient accumulation — on the
+//! native backend a batched in-process loop, on the PJRT backend
+//! (`--features pjrt` + `make artifacts`, `RESTREAM_BACKEND=pjrt`) one
+//! XLA execution of the `mnist_class_train_b16` artifact. Results are
+//! recorded in EXPERIMENTS.md.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example train_mnist [steps]
+//! cargo run --release --example train_mnist [steps]
 //! ```
 
 use anyhow::anyhow;
 use restream::config::{apps, SystemConfig};
-use restream::coordinator::init_conductances;
-use restream::runtime::{ArrayF32, Runtime};
+use restream::coordinator::{init_conductances, Engine};
+use restream::runtime::ArrayF32;
 use restream::{datasets, gpu, metrics, sim};
 
 fn main() -> anyhow::Result<()> {
     let steps: usize = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())
-        .unwrap_or(300);
+        .unwrap_or(300)
+        .max(1);
     let batch = apps::BIG_TRAIN_BATCH;
     let net = apps::network("mnist_class").unwrap();
     let sys = SystemConfig::default();
@@ -30,16 +34,19 @@ fn main() -> anyhow::Result<()> {
     // synthetic MNIST (784-dim, 10 classes; see DESIGN.md substitutions)
     let ds = datasets::mnist(2048, 0);
     let (train, test) = ds.split(0.85, 0);
+
+    let engine = Engine::open_default()?;
+    let backend = engine.backend();
     println!(
-        "training {} on {} samples, batch {batch}, {steps} steps",
+        "training {} on {} samples, batch {batch}, {steps} steps \
+         ({} backend)",
         net.name,
-        train.len()
+        train.len(),
+        backend.name()
     );
 
-    let rt = Runtime::open_default()?;
-    let exe = rt.load(&format!("mnist_class_train_b{batch}"))?;
+    let graph = format!("mnist_class_train_b{batch}");
     let mut params = init_conductances(net.layers, 0);
-    let lr = ArrayF32::scalar(0.25);
 
     let start = std::time::Instant::now();
     let mut curve = Vec::new();
@@ -52,13 +59,11 @@ fn main() -> anyhow::Result<()> {
             xb.extend_from_slice(train.sample(i));
             tb.extend_from_slice(&train.target(i, 10));
         }
-        let mut ins = params.clone();
-        ins.push(ArrayF32::matrix(batch, 784, xb).map_err(|e| anyhow!(e))?);
-        ins.push(ArrayF32::matrix(batch, 10, tb).map_err(|e| anyhow!(e))?);
-        ins.push(lr.clone());
-        let mut outs = exe.run(&ins)?;
-        let loss = outs.pop().unwrap().data[0];
-        params = outs;
+        let xs = ArrayF32::matrix(batch, 784, xb).map_err(|e| anyhow!(e))?;
+        let ts = ArrayF32::matrix(batch, 10, tb).map_err(|e| anyhow!(e))?;
+        let (next, loss) =
+            backend.train_step(&graph, params, &xs, &ts, 0.25)?;
+        params = next;
         curve.push(loss);
         if step % 25 == 0 || step + 1 == steps {
             println!("step {step:>4}  loss {loss:.5}");
@@ -71,12 +76,15 @@ fn main() -> anyhow::Result<()> {
         steps * batch,
         (steps * batch) as f64 / wall
     );
-    let first5 = metrics::mean(&curve[..5].iter().map(|&x| x as f64).collect::<Vec<_>>());
-    let last5 = metrics::mean(&curve[curve.len() - 5..].iter().map(|&x| x as f64).collect::<Vec<_>>());
-    println!("loss: first-5 mean {first5:.4} -> last-5 mean {last5:.4}");
+    let w = curve.len().min(5).max(1);
+    let window_mean = |s: &[f32]| {
+        metrics::mean(&s.iter().map(|&x| x as f64).collect::<Vec<_>>())
+    };
+    let first5 = window_mean(&curve[..w]);
+    let last5 = window_mean(&curve[curve.len() - w..]);
+    println!("loss: first-{w} mean {first5:.4} -> last-{w} mean {last5:.4}");
 
-    // accuracy through the recognition artifact
-    let engine = restream::coordinator::Engine::new(rt);
+    // accuracy through the batched recognition graph
     let preds = engine.classify(net, &params, &test.rows())?;
     let acc = metrics::accuracy(&preds, &test.y);
     println!("test accuracy: {acc:.3} (10 classes, chance = 0.100)");

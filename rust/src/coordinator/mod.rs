@@ -1,19 +1,28 @@
 //! Streaming training/inference coordinator — the chip's steady-state
 //! control loop, in Rust, with Python nowhere on the path.
 //!
-//! The [`Engine`] owns the PJRT [`Runtime`] and drives the per-sample
-//! stochastic-BP loop (training), the batched recognition loop, the
-//! layerwise DR pipeline, the clustering epochs and the anomaly scorer.
-//! Samples arrive through the bounded double-buffered stream of
-//! [`crate::coordinator::stream`] — the software twin of the DMA + 4 kB
-//! input buffer front (backpressure included).
+//! The [`Engine`] owns a pluggable [`Backend`] and drives the
+//! per-sample stochastic-BP loop (training), the batched recognition
+//! loop, the layerwise DR pipeline, the clustering epochs and the
+//! anomaly scorer. Samples arrive through the bounded double-buffered
+//! stream of [`crate::coordinator::stream`] — the software twin of the
+//! DMA + 4 kB input buffer front (backpressure included).
 //!
-//! Hot-loop design: the PJRT wrapper cannot untuple device buffers, so
-//! weights round-trip through host literals per execution; the chunked
-//! `..._trainchunk_cK` artifacts scan K samples of stochastic BP inside
-//! one XLA program, amortising that crossing K-fold — the software
-//! analogue of the paper's "processing happens at the physical location
-//! of the data" (see EXPERIMENTS.md section Perf).
+//! The backend is chosen at construction: [`Engine::native`] composes
+//! the reference kernels in-process (the default — no artifacts
+//! needed), while the `pjrt` cargo feature adds the artifact-executing
+//! PJRT backend ([`Engine::named`]`("pjrt")`). Both implement the same
+//! per-sample semantics, so loss curves and trained conductances are
+//! interchangeable.
+//!
+//! Hot-loop design: a PJRT execution round-trips every conductance
+//! matrix through host literals, so the coordinator prefers the
+//! chunked train operation (`Backend::train_chunk`, the
+//! `..._trainchunk_cK` artifacts) which scans K samples of stochastic
+//! BP per call, amortising that crossing K-fold; the native backend
+//! keeps the same chunked loop to batch its per-step dispatch — the
+//! software analogue of the paper's "processing happens at the physical
+//! location of the data" (see EXPERIMENTS.md section Perf).
 
 pub mod params;
 pub mod stream;
@@ -23,7 +32,7 @@ pub use params::init_conductances;
 use anyhow::{anyhow, Result};
 
 use crate::config::{apps, AppKind, Network};
-use crate::runtime::{ArrayF32, Executable, Runtime};
+use crate::runtime::{ArrayF32, Backend, FwdMode, NativeBackend};
 use crate::testing::Rng;
 
 /// Result of a training run.
@@ -40,16 +49,48 @@ pub struct TrainReport {
 
 /// The streaming coordinator.
 pub struct Engine {
-    pub rt: Runtime,
+    backend: Box<dyn Backend>,
 }
 
 impl Engine {
-    pub fn new(rt: Runtime) -> Self {
-        Engine { rt }
+    /// Build over any compute backend.
+    pub fn new(backend: Box<dyn Backend>) -> Self {
+        Engine { backend }
     }
 
+    /// The default engine: the in-process native backend.
+    pub fn native() -> Self {
+        Engine::new(Box::new(NativeBackend))
+    }
+
+    /// Build over a backend by name: `"native"`, or `"pjrt"` when the
+    /// crate is compiled with the `pjrt` feature.
+    pub fn named(name: &str) -> Result<Self> {
+        match name {
+            "native" => Ok(Engine::native()),
+            #[cfg(feature = "pjrt")]
+            "pjrt" => Ok(Engine::new(Box::new(
+                crate::runtime::PjrtBackend::open_default()?,
+            ))),
+            #[cfg(not(feature = "pjrt"))]
+            "pjrt" => Err(anyhow!(
+                "backend 'pjrt' needs the `pjrt` cargo feature \
+                 (cargo build --features pjrt)"
+            )),
+            other => Err(anyhow!("unknown backend '{other}' (native|pjrt)")),
+        }
+    }
+
+    /// Backend from `$RESTREAM_BACKEND` (default: `native`).
     pub fn open_default() -> Result<Self> {
-        Ok(Engine::new(Runtime::open_default()?))
+        let name = std::env::var("RESTREAM_BACKEND")
+            .unwrap_or_else(|_| "native".to_string());
+        Self::named(&name)
+    }
+
+    /// The compute backend in use.
+    pub fn backend(&self) -> &dyn Backend {
+        self.backend.as_ref()
     }
 
     /// Train a classifier or plain AE with per-sample stochastic BP.
@@ -63,35 +104,29 @@ impl Engine {
         lr: f32,
         seed: u64,
     ) -> Result<(Vec<ArrayF32>, TrainReport)> {
-        let exe = self.rt.load(&net.train_artifact())?;
-        let chunk = self.load_chunk(&format!(
-            "{}_trainchunk_c{}", net.name, apps::TRAIN_CHUNK));
+        let graph = net.train_artifact();
+        let chunk_graph =
+            format!("{}_trainchunk_c{}", net.name, apps::TRAIN_CHUNK);
         let params = init_conductances(net.layers, seed);
-        let (params, report) = self.train_loop(
-            &exe, chunk.as_deref(), params, xs, &targets, epochs, lr, seed)?;
-        Ok((params, report))
-    }
-
-    /// Load a chunked train artifact if it exists (older artifact trees
-    /// may predate chunking; the per-sample path always works).
-    fn load_chunk(&self, name: &str) -> Option<std::sync::Arc<Executable>> {
-        self.rt.load(name).ok()
+        self.train_loop(
+            &graph, &chunk_graph, params, xs, &targets, epochs, lr, seed,
+        )
     }
 
     /// The generic training loop.
     ///
-    /// Per-sample artifact signature: `params..., x, t, lr -> params...,
-    /// loss`. The xla crate's PJRT wrapper returns the result *tuple* as
-    /// a single buffer (no untupling), so parameters round-trip through
-    /// host literals each step; when a scan-chunked artifact
-    /// (`..._trainchunk_cK`, same per-sample semantics, K samples per
-    /// execution) is available, full chunks go through it and only the
-    /// epoch tail falls back to per-sample steps — the boundary crossing
-    /// is amortised K-fold (EXPERIMENTS.md §Perf).
+    /// Per-sample semantics are `Backend::train_step` (`params…, x, t,
+    /// lr -> params…, loss`); when the backend offers a chunked variant
+    /// (`Backend::chunk_size > 1`), full chunks of K samples go through
+    /// `Backend::train_chunk` (same per-sample math, one call) and only
+    /// the epoch tail falls back to single steps — for the PJRT backend
+    /// this amortises the host/device boundary K-fold (EXPERIMENTS.md
+    /// §Perf), for the native backend it batches dispatch.
+    #[allow(clippy::too_many_arguments)]
     fn train_loop(
         &self,
-        exe: &Executable,
-        chunk: Option<&Executable>,
+        graph: &str,
+        chunk_graph: &str,
         mut params: Vec<ArrayF32>,
         xs: &[Vec<f32>],
         targets: &impl Fn(usize) -> Vec<f32>,
@@ -99,34 +134,13 @@ impl Engine {
         lr: f32,
         seed: u64,
     ) -> Result<(Vec<ArrayF32>, TrainReport)> {
-        let n_params = params.len();
         let start = std::time::Instant::now();
-        let lr_arr = ArrayF32::scalar(lr);
-        let chunk_k = chunk.map(|c| c.meta.inputs[n_params][0]).unwrap_or(0);
+        let chunk_k = self.backend.chunk_size(chunk_graph);
         let dims = xs.first().map_or(0, Vec::len);
+        let t_dim = if xs.is_empty() { 0 } else { targets(0).len() };
         let mut report = TrainReport::default();
         let mut order: Vec<usize> = (0..xs.len()).collect();
         let mut rng = Rng::seeded(seed ^ 0x0BDE);
-        let step_one = |params: &mut Vec<ArrayF32>, i: usize, x: &[f32],
-                            epoch_loss: &mut f32| -> Result<()> {
-            let mut ins = Vec::with_capacity(n_params + 3);
-            ins.extend(params.iter().cloned());
-            ins.push(ArrayF32::row(x.to_vec()));
-            ins.push(ArrayF32::row(targets(i)));
-            ins.push(lr_arr.clone());
-            let mut outs = exe.run(&ins)?;
-            let loss = outs.pop()
-                .ok_or_else(|| anyhow!("train step returned nothing"))?;
-            if outs.len() != n_params {
-                return Err(anyhow!(
-                    "train step returned {} params, expected {n_params}",
-                    outs.len()
-                ));
-            }
-            *params = outs;
-            *epoch_loss += loss.data[0];
-            Ok(())
-        };
         for _epoch in 0..epochs {
             rng.shuffle(&mut order);
             let mut epoch_loss = 0.0f32;
@@ -136,41 +150,58 @@ impl Engine {
             let mut buf_x: Vec<f32> = Vec::with_capacity(chunk_k * dims);
             stream::run(xs, &order, |i, x| {
                 pulled += 1;
-                if let Some(cexe) = chunk {
+                if chunk_k > 1 {
                     buf_i.push(i);
                     buf_x.extend_from_slice(x);
                     if buf_i.len() == chunk_k {
-                        let t_dim = cexe.meta.inputs[n_params + 1][1];
                         let mut ts = Vec::with_capacity(chunk_k * t_dim);
                         for &j in &buf_i {
                             ts.extend(targets(j));
                         }
-                        let mut ins = Vec::with_capacity(n_params + 3);
-                        ins.extend(params.iter().cloned());
-                        ins.push(
-                            ArrayF32::matrix(chunk_k, dims,
-                                             std::mem::take(&mut buf_x))
-                                .map_err(anyhow::Error::msg)?,
-                        );
-                        ins.push(ArrayF32::matrix(chunk_k, t_dim, ts)
-                            .map_err(anyhow::Error::msg)?);
-                        ins.push(lr_arr.clone());
-                        let mut outs = cexe.run(&ins)?;
-                        let losses = outs.pop()
-                            .ok_or_else(|| anyhow!("chunk returned nothing"))?;
-                        params = outs;
-                        epoch_loss += losses.data.iter().sum::<f32>();
+                        let xs_arr = ArrayF32::matrix(
+                            chunk_k,
+                            dims,
+                            std::mem::take(&mut buf_x),
+                        )
+                        .map_err(anyhow::Error::msg)?;
+                        let ts_arr = ArrayF32::matrix(chunk_k, t_dim, ts)
+                            .map_err(anyhow::Error::msg)?;
+                        let (next, losses) = self.backend.train_chunk(
+                            chunk_graph,
+                            std::mem::take(&mut params),
+                            &xs_arr,
+                            &ts_arr,
+                            lr,
+                        )?;
+                        params = next;
+                        epoch_loss += losses.iter().sum::<f32>();
                         buf_i.clear();
                     }
                     Ok(())
                 } else {
-                    step_one(&mut params, i, x, &mut epoch_loss)
+                    let (next, loss) = self.backend.train_step(
+                        graph,
+                        std::mem::take(&mut params),
+                        &ArrayF32::row(x.to_vec()),
+                        &ArrayF32::row(targets(i)),
+                        lr,
+                    )?;
+                    params = next;
+                    epoch_loss += loss;
+                    Ok(())
                 }
             })?;
             // epoch tail: fewer than chunk_k samples left over
             for &i in &buf_i {
-                let x = xs[i].clone();
-                step_one(&mut params, i, &x, &mut epoch_loss)?;
+                let (next, loss) = self.backend.train_step(
+                    graph,
+                    std::mem::take(&mut params),
+                    &ArrayF32::row(xs[i].clone()),
+                    &ArrayF32::row(targets(i)),
+                    lr,
+                )?;
+                params = next;
+                epoch_loss += loss;
             }
             report.samples_seen += pulled;
             report.loss_curve.push(epoch_loss / pulled.max(1) as f32);
@@ -199,9 +230,13 @@ impl Engine {
         let mut reports = Vec::new();
         let mut current: Vec<Vec<f32>> = xs.to_vec();
         for (s, (n_in, n_hid)) in net.dr_stages().iter().enumerate() {
-            let exe = self.rt.load(&net.stage_artifact(s))?;
-            let chunk = self.load_chunk(&format!(
-                "{}_stage{}_trainchunk_c{}", net.name, s, apps::TRAIN_CHUNK));
+            let graph = net.stage_artifact(s);
+            let chunk_graph = format!(
+                "{}_stage{}_trainchunk_c{}",
+                net.name,
+                s,
+                apps::TRAIN_CHUNK
+            );
             let stage_params =
                 init_conductances(&[*n_in, *n_hid, *n_in], seed + s as u64);
             let targets = {
@@ -209,8 +244,14 @@ impl Engine {
                 move |i: usize| cur[i].clone()
             };
             let (trained, report) = self.train_loop(
-                &exe, chunk.as_deref(), stage_params, &current, &targets,
-                epochs_per_stage, lr, seed + s as u64,
+                &graph,
+                &chunk_graph,
+                stage_params,
+                &current,
+                &targets,
+                epochs_per_stage,
+                lr,
+                seed + s as u64,
             )?;
             // keep the encoder half; re-encode through it (bit-compatible
             // ideal-crossbar math) for the next stage
@@ -225,12 +266,12 @@ impl Engine {
         Ok((encoder_params, reports))
     }
 
-    /// Batched recognition through a `*_fwd_b64` artifact. Returns one
+    /// Batched recognition through the net's forward graph. Returns one
     /// output row per input sample (padding stripped).
     pub fn infer(&self, net: &Network, params: &[ArrayF32],
                  xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
-        let exe = self.rt.load(&net.fwd_artifact())?;
-        self.batched_forward(&exe, params, xs, 0)
+        let mode = FwdMode::for_kind(net.kind);
+        self.batched_forward(&net.fwd_artifact(), mode, params, xs, 0)
     }
 
     /// Batched AE forward returning reconstruction rows (output 0).
@@ -241,17 +282,20 @@ impl Engine {
 
     /// Batched encode to the bottleneck representation. Plain AEs return
     /// (reconstruction, code) — the code is output 1; DR apps' forward
-    /// artifact *is* the encoder stack, so the code is output 0.
+    /// graph *is* the encoder stack, so the code is output 0.
     pub fn encode(&self, net: &Network, params: &[ArrayF32],
                   xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
-        let exe = self.rt.load(&net.fwd_artifact())?;
-        let idx = usize::from(net.kind == AppKind::Autoencoder);
-        self.batched_forward(&exe, params, xs, idx)
+        let mode = FwdMode::for_kind(net.kind);
+        // for AEs the code is output 1; a DR forward graph *is* the
+        // encoder stack, so its code is output 0
+        let idx = usize::from(mode == FwdMode::ReconAndCode);
+        self.batched_forward(&net.fwd_artifact(), mode, params, xs, idx)
     }
 
     fn batched_forward(
         &self,
-        exe: &Executable,
+        graph: &str,
+        mode: FwdMode,
         params: &[ArrayF32],
         xs: &[Vec<f32>],
         output_idx: usize,
@@ -265,10 +309,10 @@ impl Engine {
                 data.extend_from_slice(x);
             }
             data.resize(batch * dims, 0.0); // pad the tail batch
-            let mut inputs = params.to_vec();
-            inputs.push(ArrayF32::matrix(batch, dims, data)
-                .map_err(|e| anyhow!(e))?);
-            let outs = exe.run(&inputs)?;
+            let x_arr = ArrayF32::matrix(batch, dims, data)
+                .map_err(|e| anyhow!(e))?;
+            let outs =
+                self.backend.forward_batch(graph, mode, params, &x_arr)?;
             let y = outs
                 .get(output_idx)
                 .ok_or_else(|| anyhow!("missing output {output_idx}"))?;
@@ -299,8 +343,8 @@ impl Engine {
             .collect())
     }
 
-    /// k-means through the clustering-core artifact: batched assignment,
-    /// centre accumulation on device, division at epoch end in the
+    /// k-means through the clustering-core graph: batched assignment,
+    /// centre accumulation in the backend, division at epoch end in the
     /// coordinator (as the core's registers do). Returns (centres,
     /// assignments).
     pub fn kmeans(
@@ -310,7 +354,7 @@ impl Engine {
         epochs: usize,
         seed: u64,
     ) -> Result<(Vec<Vec<f32>>, Vec<usize>)> {
-        let exe = self.rt.load(&app.step_artifact())?;
+        let graph = app.step_artifact();
         let (d, k) = (app.dims, app.clusters);
         let mut rng = Rng::seeded(seed ^ 0x63A5);
         // seed centres from k distinct samples
@@ -326,39 +370,40 @@ impl Engine {
         for _ in 0..epochs {
             let mut acc = vec![0.0f32; k * d];
             let mut counts = vec![0.0f32; k];
-            let centres_arr =
-                ArrayF32::matrix(k, d, centres.clone()).map_err(|e| anyhow!(e))?;
+            let centres_arr = ArrayF32::matrix(k, d, centres.clone())
+                .map_err(|e| anyhow!(e))?;
             for (ci, chunk) in xs.chunks(batch).enumerate() {
                 let mut data = Vec::with_capacity(batch * d);
                 for x in chunk {
                     data.extend_from_slice(x);
                 }
-                // pad with copies of the first row so padding joins that
-                // row's cluster; its contribution is subtracted below.
+                // pad with copies of the last real row so padding joins
+                // that row's cluster; its contribution is subtracted
+                // again below.
                 let pad_rows = batch - chunk.len();
+                let last = &chunk[chunk.len() - 1];
                 for _ in 0..pad_rows {
-                    data.extend_from_slice(&chunk[0.min(chunk.len() - 1)].clone());
+                    data.extend_from_slice(last);
                 }
                 let x_arr = ArrayF32::matrix(batch, d, data)
                     .map_err(|e| anyhow!(e))?;
-                let outs = exe.run(&[x_arr, centres_arr.clone()])?;
-                let (a, ac, cn) = (&outs[0], &outs[1], &outs[2]);
+                let step =
+                    self.backend.kmeans_batch(&graph, &x_arr, &centres_arr)?;
                 for i in 0..chunk.len() {
-                    assign[ci * batch + i] = a.data[i] as usize;
+                    assign[ci * batch + i] = step.assign[i];
                 }
                 for v in 0..k * d {
-                    acc[v] += ac.data[v];
+                    acc[v] += step.acc[v];
                 }
                 for c in 0..k {
-                    counts[c] += cn.data[c];
+                    counts[c] += step.counts[c];
                 }
                 if pad_rows > 0 {
                     // remove the padded duplicates' contribution
-                    let c0 = a.data[batch - 1] as usize;
+                    let c0 = step.assign[batch - 1];
                     counts[c0] -= pad_rows as f32;
                     for dd in 0..d {
-                        acc[c0 * d + dd] -=
-                            pad_rows as f32 * chunk[chunk.len() - 1][dd];
+                        acc[c0 * d + dd] -= pad_rows as f32 * last[dd];
                     }
                 }
             }
@@ -393,5 +438,32 @@ impl Engine {
                     .sum()
             })
             .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn named_backends_resolve() {
+        assert_eq!(Engine::native().backend().name(), "native");
+        assert_eq!(Engine::named("native").unwrap().backend().name(),
+                   "native");
+        assert!(Engine::named("frobnicate").is_err());
+        #[cfg(not(feature = "pjrt"))]
+        {
+            let err = Engine::named("pjrt").unwrap_err();
+            assert!(err.to_string().contains("pjrt"), "{err}");
+        }
+    }
+
+    #[test]
+    fn default_backend_is_native() {
+        // (the test runner does not set RESTREAM_BACKEND)
+        if std::env::var("RESTREAM_BACKEND").is_err() {
+            assert_eq!(Engine::open_default().unwrap().backend().name(),
+                       "native");
+        }
     }
 }

@@ -71,6 +71,57 @@ impl KMeans {
         (assign, moved)
     }
 
+    /// One full epoch through a runtime [`Backend`]'s clustering-core
+    /// entry point, streaming the dataset in `batch`-sample passes and
+    /// folding the returned accumulator registers — how the coordinator
+    /// drives the core. Assignments are identical to [`KMeans::epoch`];
+    /// centres agree up to float summation order across batches.
+    ///
+    /// [`Backend`]: crate::runtime::Backend
+    pub fn epoch_on(
+        &mut self,
+        backend: &dyn crate::runtime::Backend,
+        x: &[f32],
+        n: usize,
+        batch: usize,
+    ) -> anyhow::Result<(Vec<usize>, f32)> {
+        use crate::runtime::ArrayF32;
+        assert!(batch > 0, "batch must be positive");
+        let d = self.dims;
+        let centres_arr = ArrayF32::new(vec![self.k, d], self.centres.clone())
+            .map_err(anyhow::Error::msg)?;
+        let mut assign = Vec::with_capacity(n);
+        let mut acc = vec![0.0f32; self.k * d];
+        let mut count = vec![0.0f32; self.k];
+        let mut i = 0;
+        while i < n {
+            let b = batch.min(n - i);
+            let xa = ArrayF32::new(vec![b, d], x[i * d..(i + b) * d].to_vec())
+                .map_err(anyhow::Error::msg)?;
+            let step = backend.kmeans_step(&xa, &centres_arr)?;
+            assign.extend_from_slice(&step.assign);
+            for v in 0..self.k * d {
+                acc[v] += step.acc[v];
+            }
+            for c in 0..self.k {
+                count[c] += step.counts[c];
+            }
+            i += b;
+        }
+        let mut moved = 0.0f32;
+        for c in 0..self.k {
+            if count[c] < 0.5 {
+                continue; // empty cluster keeps its centre (as the core does)
+            }
+            for dd in 0..d {
+                let new = acc[c * d + dd] / count[c];
+                moved += (new - self.centres[c * d + dd]).abs();
+                self.centres[c * d + dd] = new;
+            }
+        }
+        Ok((assign, moved))
+    }
+
     /// Run to convergence (or `max_epochs`); returns final assignments
     /// and the epoch count.
     pub fn fit(&mut self, x: &[f32], n: usize, max_epochs: usize, tol: f32)
@@ -195,6 +246,29 @@ mod tests {
         let mut km = KMeans::init(&x, n, 2, 2, &mut rng);
         let (_, epochs) = km.fit(&x, n, 100, 1e-6);
         assert!(epochs < 100, "no convergence in {epochs}");
+    }
+
+    #[test]
+    fn epoch_on_native_backend_matches_epoch() {
+        let backend = crate::runtime::NativeBackend;
+        let mut rng = Rng::seeded(17);
+        let (x, n) = two_blobs(&mut rng, 40);
+        let km0 = KMeans::init(&x, n, 2, 2, &mut rng);
+        // one pass covering all samples: bitwise-identical folding
+        let mut a = km0.clone();
+        let mut b = km0.clone();
+        let (assign_ref, moved_ref) = a.epoch(&x, n);
+        let (assign_be, moved_be) = b.epoch_on(&backend, &x, n, n).unwrap();
+        assert_eq!(assign_ref, assign_be);
+        assert_eq!(moved_ref, moved_be);
+        assert_eq!(a.centres, b.centres);
+        // small batches: assignments exact, centres to summation order
+        let mut c = km0.clone();
+        let (assign_sm, _) = c.epoch_on(&backend, &x, n, 7).unwrap();
+        assert_eq!(assign_ref, assign_sm);
+        for (u, v) in a.centres.iter().zip(&c.centres) {
+            assert!((u - v).abs() < 1e-5, "{u} vs {v}");
+        }
     }
 
     #[test]

@@ -1,23 +1,27 @@
 //! # ReStream — memristor multicore architecture for streaming deep-network training
 //!
-//! Reproduction of Hasan, Taha & Alom, *"A Reconfigurable Low Power High
-//! Throughput Streaming Architecture for Big Data Processing"* (2016) as a
-//! three-layer Rust + JAX + Pallas system:
+//! Reproduction of Hasan & Taha, *"A Reconfigurable Low Power High
+//! Throughput Architecture for Deep Network Training"*
+//! (arXiv:1603.07400, 2016) as a three-layer Rust + JAX + Pallas system:
 //!
-//! * **Layer 1/2 (build time)** — the chip's numerics (differential
-//!   memristor crossbar forward / backward / weight-update, k-means
-//!   datapath) are authored as Pallas kernels composed into JAX training
-//!   graphs and AOT-lowered to HLO text under `artifacts/`.
+//! * **Layer 1/2 (build time, optional)** — the chip's numerics
+//!   (differential memristor crossbar forward / backward / weight-update,
+//!   k-means datapath) are authored as Pallas kernels composed into JAX
+//!   training graphs and AOT-lowered to HLO text under `artifacts/`.
 //! * **Layer 3 (this crate)** — the chip itself: neural cores, the digital
 //!   clustering core, the RISC configuration core, the statically routed
 //!   2-D mesh NoC, the 3-D stacked DRAM front, the network→core mapper,
 //!   the streaming training coordinator, and the power/area/energy
 //!   accounting that regenerates every table and figure of the paper.
-//!   Functional math executes through the [`runtime`] PJRT wrapper;
-//!   Python never runs on the request path.
+//!   Functional math executes through the pluggable [`runtime::Backend`]:
+//!   the default **native** backend runs the reference kernels in-process
+//!   (no artifacts, no Python, no XLA anywhere), while the `pjrt` cargo
+//!   feature adds the artifact-executing PJRT backend. Python never runs
+//!   on the request path.
 //!
-//! See `DESIGN.md` for the system inventory and experiment index, and
-//! `EXPERIMENTS.md` for paper-vs-measured results.
+//! See `DESIGN.md` for the system inventory, the backend-selection story
+//! and the experiment index, and `EXPERIMENTS.md` for paper-vs-measured
+//! results.
 
 pub mod benchutil;
 pub mod config;

@@ -11,6 +11,11 @@
 //! restream cluster --app NAME [--epochs N]
 //! restream anomaly [--epochs N]
 //! ```
+//!
+//! Every functional-math subcommand accepts `--backend native|pjrt`
+//! (default: `$RESTREAM_BACKEND` or `native`). The native backend needs
+//! no artifacts; `pjrt` needs the crate built with `--features pjrt`
+//! plus `make artifacts`.
 
 use std::collections::HashMap;
 use std::process::ExitCode;
@@ -91,6 +96,14 @@ fn run(args: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Engine over the backend picked by `--backend` (or the environment).
+fn engine_for(f: &HashMap<String, String>) -> anyhow::Result<Engine> {
+    match f.get("backend") {
+        Some(name) => Engine::named(name),
+        None => Engine::open_default(),
+    }
+}
+
 fn dataset_for(app: &str, n: usize, seed: u64) -> anyhow::Result<datasets::Dataset> {
     Ok(match app {
         a if a.starts_with("iris") => datasets::iris(seed),
@@ -109,7 +122,7 @@ fn cmd_train(f: &HashMap<String, String>) -> anyhow::Result<()> {
     let n: usize = get(f, "samples", 512).map_err(anyhow::Error::msg)?;
     let net = apps::network(&app)
         .ok_or_else(|| anyhow::anyhow!("unknown app {app}"))?;
-    let engine = Engine::open_default()?;
+    let engine = engine_for(f)?;
     let ds = dataset_for(&app, n, seed)?;
     let (train_ds, test_ds) = ds.split(0.8, seed);
     let xs = train_ds.rows();
@@ -172,7 +185,7 @@ fn cmd_infer(f: &HashMap<String, String>) -> anyhow::Result<()> {
     let seed: u64 = get(f, "seed", 0).map_err(anyhow::Error::msg)?;
     let net = apps::network(&app)
         .ok_or_else(|| anyhow::anyhow!("unknown app {app}"))?;
-    let engine = Engine::open_default()?;
+    let engine = engine_for(f)?;
     let ds = dataset_for(&app, 256, seed)?;
     let params = restream::coordinator::init_conductances(net.layers, seed);
     let start = std::time::Instant::now();
@@ -195,7 +208,7 @@ fn cmd_cluster(f: &HashMap<String, String>) -> anyhow::Result<()> {
     let seed: u64 = get(f, "seed", 0).map_err(anyhow::Error::msg)?;
     let ka = apps::kmeans_app(&app)
         .ok_or_else(|| anyhow::anyhow!("unknown clustering app {app}"))?;
-    let engine = Engine::open_default()?;
+    let engine = engine_for(f)?;
     // cluster synthetic features of the right dimensionality
     let ds = datasets::class_blobs(&app, ka.dims, ka.clusters, 512, 0.3, seed);
     let (_, assign) = engine.kmeans(ka, &ds.rows(), epochs, seed)?;
@@ -212,7 +225,7 @@ fn cmd_anomaly(f: &HashMap<String, String>) -> anyhow::Result<()> {
     let epochs: usize = get(f, "epochs", 3).map_err(anyhow::Error::msg)?;
     let seed: u64 = get(f, "seed", 0).map_err(anyhow::Error::msg)?;
     let net = apps::network("kdd_ae").unwrap();
-    let engine = Engine::open_default()?;
+    let engine = engine_for(f)?;
     let k = datasets::kdd(2000, 400, 400, seed);
     let xs = k.train.rows();
     let xs2 = xs.clone();
@@ -233,6 +246,7 @@ fn print_usage() {
     println!(
         "restream — memristor multicore chip simulator\n\
          usage: restream <chip|report|train|infer|cluster|anomaly> [--flags]\n\
-         see rust/src/main.rs docs for details"
+         math subcommands take --backend native|pjrt (default native)\n\
+         see rust/src/main.rs docs and README.md for details"
     );
 }

@@ -137,6 +137,43 @@ impl Mlp {
         self.forward_traced(x).2
     }
 
+    /// Inference for one sample through a runtime [`Backend`]'s
+    /// kernel-level `forward` entry point instead of the built-in
+    /// ideal-crossbar calls — proves any backend's crossbar kernel is
+    /// sufficient to rebuild this network. For the native backend the
+    /// result is bitwise identical to [`Mlp::forward`].
+    ///
+    /// [`Backend`]: crate::runtime::Backend
+    pub fn forward_on(
+        &self,
+        backend: &dyn crate::runtime::Backend,
+        x: &[f32],
+    ) -> anyhow::Result<Vec<f32>> {
+        use crate::runtime::ArrayF32;
+        let mut h: Vec<f32> = x
+            .iter()
+            .map(|v| v.clamp(-hw::V_RAIL, hw::V_RAIL))
+            .collect();
+        for (l, (gp, gn)) in self.params.iter().enumerate() {
+            let n_in = self.layers[l] + 1;
+            let n_out = self.layers[l + 1];
+            let mut a = h;
+            a.push(hw::V_RAIL); // bias input at the positive rail
+            let gp_a = ArrayF32::new(vec![n_in, n_out], gp.clone())
+                .map_err(anyhow::Error::msg)?;
+            let gn_a = ArrayF32::new(vec![n_in, n_out], gn.clone())
+                .map_err(anyhow::Error::msg)?;
+            let (y, _) = backend.forward(
+                &ArrayF32::row(a),
+                &gp_a,
+                &gn_a,
+                self.out_bits(),
+            )?;
+            h = y.data;
+        }
+        Ok(h)
+    }
+
     /// One stochastic-BP step (paper section III.E); returns the sample
     /// squared-error loss *before* the update.
     pub fn train_step(&mut self, x: &[f32], t: &[f32], lr: f32) -> f32 {
@@ -325,6 +362,17 @@ mod tests {
         }
         let (ac, af) = (chip.accuracy(&xs, &ys), float.accuracy(&xs, &ys));
         assert!(af >= ac - 0.05, "float {af} chip {ac}");
+    }
+
+    #[test]
+    fn forward_on_native_backend_matches_builtin_math() {
+        let (xs, _, _) = iris_xt();
+        let mut rng = Rng::seeded(13);
+        let net = Mlp::init(&[4, 10, 3], Constraint::Chip, &mut rng);
+        let backend = crate::runtime::NativeBackend;
+        for x in xs.iter().take(20) {
+            assert_eq!(net.forward_on(&backend, x).unwrap(), net.forward(x));
+        }
     }
 
     #[test]

@@ -1,5 +1,6 @@
-//! Minimal host-side f32 tensor used at the runtime boundary.
+//! Minimal host-side f32 tensor used at the backend boundary.
 
+#[cfg(feature = "pjrt")]
 use anyhow::Result;
 
 /// A dense row-major f32 array.
@@ -55,6 +56,7 @@ impl ArrayF32 {
         &self.data[i * n..(i + 1) * n]
     }
 
+    #[cfg(feature = "pjrt")]
     pub(crate) fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
         Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)

@@ -1,0 +1,311 @@
+//! The pluggable compute backend: every functional-math operation the
+//! coordinator, the CLI, the integration tests and the benches perform
+//! goes through this trait.
+//!
+//! Two levels of entry point:
+//!
+//! * **Kernel-level** — [`Backend::forward`], [`Backend::backward`],
+//!   [`Backend::weight_update`], [`Backend::kmeans_step`]: the four L1
+//!   kernels (differential crossbar fwd/bwd, training-pulse update, the
+//!   clustering-core pass). Default implementations run the bit-exact
+//!   host reference (`crossbar::ideal` + the k-means datapath), the same
+//!   math `python/compile/kernels/ref.py` specifies.
+//! * **Graph-level** — [`Backend::train_step`], [`Backend::train_chunk`],
+//!   [`Backend::forward_batch`], [`Backend::kmeans_batch`]: the composed
+//!   training/recognition graphs the streaming coordinator drives. The
+//!   `graph` argument is the artifact name (`iris_class_train_b1`, …);
+//!   the [native backend](super::NativeBackend) ignores it and composes
+//!   the kernels in-process, while the PJRT backend (cargo feature
+//!   `pjrt`) uses it to select the matching AOT-lowered HLO artifact.
+//!
+//! Both backends implement the same per-sample stochastic-BP semantics
+//! (paper section III.E), so reports, loss curves and trained weights
+//! are interchangeable — `tests/backend_parity.rs` pins the kernel
+//! semantics to goldens generated from `ref.py`.
+
+use anyhow::Result;
+
+use super::native;
+use super::ArrayF32;
+use crate::config::apps;
+
+/// Output convention of [`Backend::forward_batch`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FwdMode {
+    /// Final-layer outputs only: `[y]` — classifiers and DR encoder
+    /// stacks (`*_fwd_b64` artifacts of those apps).
+    Final,
+    /// Autoencoder convention: `[reconstruction, bottleneck code]`.
+    ReconAndCode,
+}
+
+impl FwdMode {
+    /// The forward-graph output convention of an application kind —
+    /// the single source of the AppKind→outputs mapping (mirrors which
+    /// graph `aot.py` exports per app).
+    pub fn for_kind(kind: crate::config::AppKind) -> FwdMode {
+        if kind == crate::config::AppKind::Autoencoder {
+            FwdMode::ReconAndCode
+        } else {
+            FwdMode::Final
+        }
+    }
+}
+
+/// Result of one clustering-core pass over a batch (Fig 13 datapath):
+/// per-sample assignments plus the centre-accumulator registers, so the
+/// coordinator can fold batches into an epoch and divide at the end.
+#[derive(Clone, Debug)]
+pub struct KmeansStep {
+    /// Winning centre per sample.
+    pub assign: Vec<usize>,
+    /// Per-centre coordinate accumulators, `k x dims` row-major.
+    pub acc: Vec<f32>,
+    /// Per-centre member counts (f32 to mirror the artifact signature).
+    pub counts: Vec<f32>,
+    /// Number of centres.
+    pub k: usize,
+    /// Feature dimensionality.
+    pub dims: usize,
+}
+
+/// A compute backend for the chip's functional math.
+pub trait Backend: Send + Sync {
+    /// Short identifier ("native", "pjrt") for logs and reports.
+    fn name(&self) -> &'static str;
+
+    // ----- kernel-level entry points (the four L1 kernels) -----
+
+    /// Differential-crossbar forward: `x` is `(batch, n_in)` including
+    /// the bias row voltage, `gp`/`gn` are `(n_in, n_out)`. Returns the
+    /// quantised neuron outputs `y` and the raw dot products `dp`, both
+    /// `(batch, n_out)` — mirroring `ref.crossbar_fwd`.
+    fn forward(
+        &self,
+        x: &ArrayF32,
+        gp: &ArrayF32,
+        gn: &ArrayF32,
+        out_bits: u32,
+    ) -> Result<(ArrayF32, ArrayF32)> {
+        native::crossbar_forward(x, gp, gn, out_bits)
+    }
+
+    /// Error back-propagation through the transposed crossbar plus the
+    /// 8-bit error ADC: `delta` is `(batch, n_out)`, the result is
+    /// `(batch, n_in)` *including* the bias row — `ref.crossbar_bwd`.
+    fn backward(
+        &self,
+        delta: &ArrayF32,
+        gp: &ArrayF32,
+        gn: &ArrayF32,
+    ) -> Result<ArrayF32> {
+        native::crossbar_backward(delta, gp, gn)
+    }
+
+    /// Training-pulse conductance update (`ref.weight_update`): returns
+    /// the clipped `(gp', gn')`. Gradients are accumulated over the
+    /// batch dimension, so `batch > 1` performs mini-batch SGD.
+    fn weight_update(
+        &self,
+        gp: &ArrayF32,
+        gn: &ArrayF32,
+        x: &ArrayF32,
+        delta: &ArrayF32,
+        dp: &ArrayF32,
+        lr: f32,
+    ) -> Result<(ArrayF32, ArrayF32)> {
+        native::crossbar_update(gp, gn, x, delta, dp, lr)
+    }
+
+    /// One clustering-core pass (`ref.kmeans_distances` + argmin +
+    /// accumulate): `x` is `(batch, dims)`, `centres` is `(k, dims)`.
+    fn kmeans_step(
+        &self,
+        x: &ArrayF32,
+        centres: &ArrayF32,
+    ) -> Result<KmeansStep> {
+        native::kmeans_pass(x, centres)
+    }
+
+    // ----- graph-level composed operations -----
+
+    /// One stochastic-BP step over a batch (`model.mlp_train_step`):
+    /// consumes the parameter list `[gp0, gn0, gp1, gn1, …]`, returns
+    /// the updated parameters and the mean squared-error loss of the
+    /// batch *before* the update.
+    fn train_step(
+        &self,
+        graph: &str,
+        params: Vec<ArrayF32>,
+        x: &ArrayF32,
+        t: &ArrayF32,
+        lr: f32,
+    ) -> Result<(Vec<ArrayF32>, f32)> {
+        let _ = graph;
+        let mut params = params;
+        let loss = native::train_step(&mut params, x, t, lr)?;
+        Ok((params, loss))
+    }
+
+    /// Samples per [`Backend::train_chunk`] call for a chunk graph name,
+    /// or 0 if the backend has no chunked variant of it and the
+    /// coordinator must stay on the per-sample path.
+    fn chunk_size(&self, chunk_graph: &str) -> usize {
+        let _ = chunk_graph;
+        0
+    }
+
+    /// Scan `chunk_size` samples of per-sample stochastic BP in one call
+    /// (`model.mlp_train_chunk`): semantically identical to calling
+    /// [`Backend::train_step`] on each row of `xs`/`ts` in order.
+    /// Returns updated parameters plus the per-sample losses.
+    fn train_chunk(
+        &self,
+        graph: &str,
+        params: Vec<ArrayF32>,
+        xs: &ArrayF32,
+        ts: &ArrayF32,
+        lr: f32,
+    ) -> Result<(Vec<ArrayF32>, Vec<f32>)> {
+        let _ = graph;
+        let mut params = params;
+        let losses = native::train_chunk(&mut params, xs, ts, lr)?;
+        Ok((params, losses))
+    }
+
+    /// Batched recognition through the full crossbar stack
+    /// (`model.mlp_infer` / `model.ae_fwd`): `xs` is `(batch, n_in)`;
+    /// the output list follows `mode`.
+    fn forward_batch(
+        &self,
+        graph: &str,
+        mode: FwdMode,
+        params: &[ArrayF32],
+        xs: &ArrayF32,
+    ) -> Result<Vec<ArrayF32>> {
+        let _ = graph;
+        native::forward_batch(mode, params, xs)
+    }
+
+    /// One clustering-core pass addressed by graph name — the batched
+    /// twin of [`Backend::kmeans_step`] (`model.kmeans_step` artifact).
+    fn kmeans_batch(
+        &self,
+        graph: &str,
+        xs: &ArrayF32,
+        centres: &ArrayF32,
+    ) -> Result<KmeansStep> {
+        let _ = graph;
+        self.kmeans_step(xs, centres)
+    }
+}
+
+/// The default backend: the reference kernels executed in-process, no
+/// artifacts, no Python, no XLA — runs everywhere the crate compiles.
+/// Multi-sample calls ([`Backend::train_chunk`], mini-batch
+/// [`Backend::train_step`], [`Backend::forward_batch`]) execute batched
+/// inner loops, which is what `benches/perf_hotpath.rs` measures.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NativeBackend;
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    /// The native path always offers the chunked hot loop: grouping
+    /// samples saves per-step dispatch and keeps the coordinator on the
+    /// same streaming path both backends share.
+    fn chunk_size(&self, _chunk_graph: &str) -> usize {
+        apps::TRAIN_CHUNK
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::Rng;
+
+    fn rand_params(layers: &[usize], seed: u64) -> Vec<ArrayF32> {
+        crate::coordinator::init_conductances(layers, seed)
+    }
+
+    #[test]
+    fn train_chunk_equals_sequential_train_steps() {
+        let b: &dyn Backend = &NativeBackend;
+        let layers = [4, 6, 2];
+        let mut rng = Rng::seeded(11);
+        let k = 5;
+        let xs = ArrayF32::matrix(k, 4, rng.vec_uniform(k * 4, -0.5, 0.5))
+            .unwrap();
+        let ts = ArrayF32::matrix(k, 2, rng.vec_uniform(k * 2, -0.4, 0.4))
+            .unwrap();
+        let (chunked, losses) = b
+            .train_chunk("g", rand_params(&layers, 3), &xs, &ts, 0.9)
+            .unwrap();
+        assert_eq!(losses.len(), k);
+        let mut params = rand_params(&layers, 3);
+        for i in 0..k {
+            let x = ArrayF32::row(xs.row_slice(i).to_vec());
+            let t = ArrayF32::row(ts.row_slice(i).to_vec());
+            let (next, loss) = b.train_step("g", params, &x, &t, 0.9).unwrap();
+            params = next;
+            assert_eq!(loss, losses[i], "sample {i}");
+        }
+        for (a, c) in params.iter().zip(&chunked) {
+            assert_eq!(a.data, c.data);
+        }
+    }
+
+    #[test]
+    fn forward_batch_shapes_follow_mode() {
+        let b: &dyn Backend = &NativeBackend;
+        let params = rand_params(&[4, 2, 4], 1);
+        let mut rng = Rng::seeded(2);
+        let xs = ArrayF32::matrix(3, 4, rng.vec_uniform(12, -0.5, 0.5))
+            .unwrap();
+        let outs = b
+            .forward_batch("g", FwdMode::ReconAndCode, &params, &xs)
+            .unwrap();
+        assert_eq!(outs.len(), 2);
+        assert_eq!(outs[0].shape, vec![3, 4]); // reconstruction
+        assert_eq!(outs[1].shape, vec![3, 2]); // bottleneck code
+        let outs = b.forward_batch("g", FwdMode::Final, &params, &xs).unwrap();
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0].shape, vec![3, 4]);
+    }
+
+    #[test]
+    fn mini_batch_train_step_accumulates_gradient() {
+        // batch 2 with two copies of one sample == single step with
+        // doubled learning rate only when updates don't clip; use a tiny
+        // lr so the equivalence holds exactly.
+        let b: &dyn Backend = &NativeBackend;
+        let mut rng = Rng::seeded(5);
+        let x1 = rng.vec_uniform(4, -0.5, 0.5);
+        let t1 = rng.vec_uniform(2, -0.4, 0.4);
+        let mut x2 = x1.clone();
+        x2.extend_from_slice(&x1);
+        let mut t2 = t1.clone();
+        t2.extend_from_slice(&t1);
+        let xs = ArrayF32::matrix(2, 4, x2).unwrap();
+        let ts = ArrayF32::matrix(2, 2, t2).unwrap();
+        let (pa, _) = b
+            .train_step(
+                "g",
+                rand_params(&[4, 2], 9),
+                &ArrayF32::row(x1),
+                &ArrayF32::row(t1),
+                2e-3,
+            )
+            .unwrap();
+        let (pb, _) = b
+            .train_step("g", rand_params(&[4, 2], 9), &xs, &ts, 1e-3)
+            .unwrap();
+        for (a, bb) in pa.iter().zip(&pb) {
+            for (va, vb) in a.data.iter().zip(&bb.data) {
+                assert!((va - vb).abs() < 1e-6, "{va} vs {vb}");
+            }
+        }
+    }
+}

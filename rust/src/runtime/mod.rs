@@ -1,173 +1,31 @@
-//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) and
-//! executes them on the CPU PJRT client from the Rust request path.
+//! Functional-math runtime: the pluggable [`Backend`] trait plus its
+//! implementations and the host-side tensor/metadata types.
 //!
-//! Interchange is HLO *text* — jax >= 0.5 emits HloModuleProto with
-//! 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids (see `python/compile/aot.py` and DESIGN.md).
-//! Each artifact ships a `.meta` sidecar with its exact parameter/result
-//! shapes; [`Executable::run`] validates inputs against it, so a
-//! python/rust drift fails loudly at the call site instead of inside XLA.
+//! * [`Backend`] — the compute abstraction: four kernel-level entry
+//!   points (crossbar `forward` / `backward` / `weight_update`,
+//!   `kmeans_step`) plus the composed graph-level training/recognition
+//!   operations the streaming coordinator drives.
+//! * [`NativeBackend`] — the default: the reference kernels executed
+//!   in-process, batched, with no artifacts, Python or XLA anywhere.
+//! * `PjrtBackend` (cargo feature `pjrt`) — executes the AOT-lowered
+//!   HLO artifacts `python/compile/aot.py` writes, through the CPU PJRT
+//!   client; `pjrt.rs` documents the HLO text interchange contract.
+//! * [`ArrayF32`] / [`Meta`] — the dense host tensor crossing the
+//!   backend boundary and the artifact signature sidecar.
 //!
-//! Compiled executables are cached per runtime, and parameters can stay
-//! device-resident across calls via [`Executable::run_buffers`] — the
-//! training hot loop only uploads the sample, not the weights.
+//! Backend selection is by construction (`coordinator::Engine::native`,
+//! `Engine::named`, or the `RESTREAM_BACKEND` environment variable via
+//! `Engine::open_default`); see DESIGN.md "Backend selection".
 
 mod array;
+mod backend;
 mod meta;
+mod native;
+#[cfg(feature = "pjrt")]
+mod pjrt;
 
 pub use array::ArrayF32;
+pub use backend::{Backend, FwdMode, KmeansStep, NativeBackend};
 pub use meta::Meta;
-
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
-
-use anyhow::{anyhow, bail, Context, Result};
-
-/// A loaded, compiled artifact.
-pub struct Executable {
-    pub name: String,
-    pub meta: Meta,
-    exe: xla::PjRtLoadedExecutable,
-}
-
-impl Executable {
-    /// Execute with host arrays; returns host arrays per the meta shapes.
-    pub fn run(&self, inputs: &[ArrayF32]) -> Result<Vec<ArrayF32>> {
-        self.meta.validate_inputs(inputs).map_err(|e| anyhow!(e))?;
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(ArrayF32::to_literal)
-            .collect::<Result<_>>()?;
-        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
-            .to_literal_sync()?;
-        self.unpack(result)
-    }
-
-    /// Execute with device-resident buffers (no host round-trip for the
-    /// inputs). Returns the raw output buffers of the result tuple.
-    pub fn run_buffers(&self, inputs: &[&xla::PjRtBuffer])
-        -> Result<Vec<xla::PjRtBuffer>> {
-        let out = self.exe.execute_b(inputs)?;
-        let row = out
-            .into_iter()
-            .next()
-            .ok_or_else(|| anyhow!("no replica output"))?;
-        Ok(row)
-    }
-
-    /// Upload a host array to the device.
-    pub fn to_device(&self, a: &ArrayF32) -> Result<xla::PjRtBuffer> {
-        let client = self.exe.client();
-        let dims: Vec<usize> = a.shape.clone();
-        Ok(client.buffer_from_host_buffer::<f32>(&a.data, &dims, None)?)
-    }
-
-    /// Download a device buffer into a host array with `shape`.
-    pub fn to_host(&self, b: &xla::PjRtBuffer, shape: &[usize])
-        -> Result<ArrayF32> {
-        let lit = b.to_literal_sync()?;
-        let data = lit.to_vec::<f32>()?;
-        ArrayF32::new(shape.to_vec(), data).map_err(|e| anyhow!(e))
-    }
-
-    fn unpack(&self, result: xla::Literal) -> Result<Vec<ArrayF32>> {
-        // aot.py lowers with return_tuple=True: always a tuple.
-        let parts = result.to_tuple()?;
-        if parts.len() != self.meta.outputs.len() {
-            bail!(
-                "{}: {} outputs, meta says {}",
-                self.name,
-                parts.len(),
-                self.meta.outputs.len()
-            );
-        }
-        parts
-            .into_iter()
-            .zip(&self.meta.outputs)
-            .map(|(lit, shape)| {
-                let data = lit.to_vec::<f32>()?;
-                ArrayF32::new(shape.clone(), data).map_err(|e| anyhow!(e))
-            })
-            .collect()
-    }
-}
-
-/// Artifact loader + executable cache over one PJRT client.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    cache: Mutex<HashMap<String, Arc<Executable>>>,
-}
-
-impl Runtime {
-    /// Open a runtime over an artifacts directory.
-    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
-        let dir = dir.as_ref().to_path_buf();
-        if !dir.is_dir() {
-            bail!(
-                "artifacts directory {} missing — run `make artifacts`",
-                dir.display()
-            );
-        }
-        Ok(Runtime {
-            client: xla::PjRtClient::cpu()?,
-            dir,
-            cache: Mutex::new(HashMap::new()),
-        })
-    }
-
-    /// Open at the conventional location: `$RESTREAM_ARTIFACTS` or
-    /// `./artifacts`.
-    pub fn open_default() -> Result<Self> {
-        let dir = std::env::var("RESTREAM_ARTIFACTS")
-            .unwrap_or_else(|_| "artifacts".to_string());
-        Self::open(dir)
-    }
-
-    /// Load (or fetch from cache) an artifact by name.
-    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
-        if let Some(e) = self.cache.lock().unwrap().get(name) {
-            return Ok(e.clone());
-        }
-        let hlo = self.dir.join(format!("{name}.hlo.txt"));
-        let meta_path = self.dir.join(format!("{name}.meta"));
-        let meta = Meta::parse_file(&meta_path)
-            .map_err(|e| anyhow!("meta for {name}: {e}"))?;
-        let proto = xla::HloModuleProto::from_text_file(
-            hlo.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .with_context(|| format!("HLO text for {name}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        let executable = Arc::new(Executable {
-            name: name.to_string(),
-            meta,
-            exe,
-        });
-        self.cache
-            .lock()
-            .unwrap()
-            .insert(name.to_string(), executable.clone());
-        Ok(executable)
-    }
-
-    /// Number of compiled executables currently cached.
-    pub fn cached(&self) -> usize {
-        self.cache.lock().unwrap().len()
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn open_missing_dir_fails_with_hint() {
-        let err = match Runtime::open("/nonexistent/artifacts") {
-            Err(e) => e,
-            Ok(_) => panic!("open should fail on a missing directory"),
-        };
-        assert!(err.to_string().contains("make artifacts"));
-    }
-}
+#[cfg(feature = "pjrt")]
+pub use pjrt::{Executable, PjrtBackend, Runtime};

@@ -1,0 +1,414 @@
+//! In-process implementations of the [`Backend`](super::Backend) entry
+//! points: the reference kernel semantics of
+//! `python/compile/kernels/ref.py`, composed into the graph-level ops of
+//! `python/compile/model.py`, executed batched on the host.
+//!
+//! This is the crate's default compute path — no artifacts, no Python,
+//! no XLA. The kernel math delegates to [`crate::crossbar::ideal`] (the
+//! same routines `nn::Mlp` uses), so the native backend, the pure-Rust
+//! reference network and the PJRT artifacts are all bit-compatible;
+//! `tests/backend_parity.rs` pins the semantics against goldens
+//! generated from `ref.py` itself.
+
+use anyhow::{bail, ensure, Result};
+
+use super::backend::{FwdMode, KmeansStep};
+use super::ArrayF32;
+use crate::config::hwspec as hw;
+use crate::crossbar::{ideal, quant};
+
+/// Shape check: rank-2 array, returning `(rows, cols)`.
+fn rank2(a: &ArrayF32, what: &str) -> Result<(usize, usize)> {
+    if a.shape.len() != 2 {
+        bail!("{what}: expected a rank-2 array, got shape {:?}", a.shape);
+    }
+    Ok((a.shape[0], a.shape[1]))
+}
+
+/// Clip a batch of samples to the op-amp rails (`jnp.clip` twin).
+fn clip_input(x: &ArrayF32) -> ArrayF32 {
+    ArrayF32 {
+        shape: x.shape.clone(),
+        data: x
+            .data
+            .iter()
+            .map(|v| v.clamp(-hw::V_RAIL, hw::V_RAIL))
+            .collect(),
+    }
+}
+
+/// Append the bias column: one input pinned at the positive rail
+/// (`model._with_bias` twin). `h` is `(batch, w)`; returns `(batch, w+1)`.
+fn with_bias(h: &ArrayF32) -> ArrayF32 {
+    let (batch, w) = (h.shape[0], h.shape[1]);
+    let mut data = Vec::with_capacity(batch * (w + 1));
+    for b in 0..batch {
+        data.extend_from_slice(&h.data[b * w..(b + 1) * w]);
+        data.push(hw::V_RAIL);
+    }
+    ArrayF32 { shape: vec![batch, w + 1], data }
+}
+
+/// Kernel-level crossbar forward (`ref.crossbar_fwd`).
+pub(crate) fn crossbar_forward(
+    x: &ArrayF32,
+    gp: &ArrayF32,
+    gn: &ArrayF32,
+    out_bits: u32,
+) -> Result<(ArrayF32, ArrayF32)> {
+    let (batch, n_in) = rank2(x, "x")?;
+    let (rows, n_out) = rank2(gp, "gp")?;
+    ensure!(rows == n_in, "x has {n_in} columns but gp has {rows} rows");
+    ensure!(gn.shape == gp.shape, "gp/gn shape mismatch");
+    let (y, dp) =
+        ideal::fwd(&x.data, &gp.data, &gn.data, batch, n_in, n_out, out_bits);
+    Ok((
+        ArrayF32 { shape: vec![batch, n_out], data: y },
+        ArrayF32 { shape: vec![batch, n_out], data: dp },
+    ))
+}
+
+/// Kernel-level crossbar backward (`ref.crossbar_bwd`): the result
+/// keeps the bias row, exactly like the reference.
+pub(crate) fn crossbar_backward(
+    delta: &ArrayF32,
+    gp: &ArrayF32,
+    gn: &ArrayF32,
+) -> Result<ArrayF32> {
+    let (batch, n_out) = rank2(delta, "delta")?;
+    let (n_in, cols) = rank2(gp, "gp")?;
+    ensure!(cols == n_out, "delta has {n_out} columns but gp has {cols}");
+    ensure!(gn.shape == gp.shape, "gp/gn shape mismatch");
+    let back = ideal::bwd(&delta.data, &gp.data, &gn.data, batch, n_in, n_out);
+    Ok(ArrayF32 { shape: vec![batch, n_in], data: back })
+}
+
+/// Kernel-level weight update (`ref.weight_update`).
+pub(crate) fn crossbar_update(
+    gp: &ArrayF32,
+    gn: &ArrayF32,
+    x: &ArrayF32,
+    delta: &ArrayF32,
+    dp: &ArrayF32,
+    lr: f32,
+) -> Result<(ArrayF32, ArrayF32)> {
+    let (batch, n_in) = rank2(x, "x")?;
+    let (rows, n_out) = rank2(gp, "gp")?;
+    ensure!(rows == n_in, "x has {n_in} columns but gp has {rows} rows");
+    ensure!(gn.shape == gp.shape, "gp/gn shape mismatch");
+    ensure!(
+        delta.shape == vec![batch, n_out] && dp.shape == delta.shape,
+        "delta/dp must be (batch, n_out)"
+    );
+    let mut gp2 = gp.clone();
+    let mut gn2 = gn.clone();
+    ideal::update(
+        &mut gp2.data,
+        &mut gn2.data,
+        &x.data,
+        &delta.data,
+        &dp.data,
+        lr,
+        batch,
+        n_in,
+        n_out,
+    );
+    Ok((gp2, gn2))
+}
+
+/// One clustering-core pass (`model.kmeans_step`): Manhattan argmin
+/// assignment plus centre accumulators and counts.
+pub(crate) fn kmeans_pass(
+    x: &ArrayF32,
+    centres: &ArrayF32,
+) -> Result<KmeansStep> {
+    let (batch, dims) = rank2(x, "x")?;
+    let (k, d2) = rank2(centres, "centres")?;
+    ensure!(d2 == dims, "samples have {dims} dims but centres have {d2}");
+    ensure!(k > 0, "need at least one centre");
+    let mut assign = Vec::with_capacity(batch);
+    let mut acc = vec![0.0f32; k * dims];
+    let mut counts = vec![0.0f32; k];
+    for i in 0..batch {
+        let s = &x.data[i * dims..(i + 1) * dims];
+        let mut best = 0usize;
+        let mut best_d = f32::INFINITY;
+        for c in 0..k {
+            let cc = &centres.data[c * dims..(c + 1) * dims];
+            let dist: f32 = s.iter().zip(cc).map(|(a, b)| (a - b).abs()).sum();
+            if dist < best_d {
+                best_d = dist;
+                best = c;
+            }
+        }
+        assign.push(best);
+        counts[best] += 1.0;
+        for d in 0..dims {
+            acc[best * dims + d] += s[d];
+        }
+    }
+    Ok(KmeansStep { assign, acc, counts, k, dims })
+}
+
+/// Check a parameter list `[gp0, gn0, gp1, gn1, …]` and return the
+/// number of layers.
+fn check_params(params: &[ArrayF32]) -> Result<usize> {
+    ensure!(
+        !params.is_empty() && params.len() % 2 == 0,
+        "parameter list must hold (gp, gn) pairs, got {} arrays",
+        params.len()
+    );
+    for (l, pair) in params.chunks(2).enumerate() {
+        rank2(&pair[0], "gp")?;
+        ensure!(
+            pair[0].shape == pair[1].shape,
+            "layer {l}: gp shape {:?} != gn shape {:?}",
+            pair[0].shape,
+            pair[1].shape
+        );
+    }
+    Ok(params.len() / 2)
+}
+
+/// Forward the whole stack, collecting the bias-augmented layer inputs
+/// and raw dot products (`model.mlp_forward`). Returns
+/// `(acts, dps, output)`.
+fn forward_traced(
+    params: &[ArrayF32],
+    x: &ArrayF32,
+) -> Result<(Vec<ArrayF32>, Vec<ArrayF32>, ArrayF32)> {
+    let n_layers = check_params(params)?;
+    let batch = rank2(x, "x")?.0;
+    let mut acts = Vec::with_capacity(n_layers);
+    let mut dps = Vec::with_capacity(n_layers);
+    let mut h = clip_input(x);
+    for l in 0..n_layers {
+        let (gp, gn) = (&params[2 * l], &params[2 * l + 1]);
+        let (rows, n_out) = (gp.shape[0], gp.shape[1]);
+        ensure!(
+            rows == h.shape[1] + 1,
+            "layer {l}: crossbar has {rows} rows but gets {} inputs + bias",
+            h.shape[1]
+        );
+        let a = with_bias(&h);
+        let (y, dp) = ideal::fwd(
+            &a.data, &gp.data, &gn.data, batch, rows, n_out, hw::OUT_BITS,
+        );
+        acts.push(a);
+        dps.push(ArrayF32 { shape: vec![batch, n_out], data: dp });
+        h = ArrayF32 { shape: vec![batch, n_out], data: y };
+    }
+    Ok((acts, dps, h))
+}
+
+/// One stochastic-BP step over a batch (`model.mlp_train_step`),
+/// mutating `params` in place. Gradients accumulate over the batch
+/// dimension; `batch = 1` is the paper's per-sample training. Returns
+/// the pre-update mean squared error.
+pub(crate) fn train_step(
+    params: &mut [ArrayF32],
+    x: &ArrayF32,
+    t: &ArrayF32,
+    lr: f32,
+) -> Result<f32> {
+    let (acts, dps, y) = forward_traced(params, x)?;
+    let n_layers = params.len() / 2;
+    ensure!(
+        t.shape == y.shape,
+        "targets have shape {:?} but the net outputs {:?}",
+        t.shape,
+        y.shape
+    );
+    let batch = y.shape[0];
+    // Eq. 4 + the 8-bit error ADC
+    let mut delta: Vec<f32> = t
+        .data
+        .iter()
+        .zip(&y.data)
+        .map(|(&ti, &yi)| quant::quantize_err(ti - yi))
+        .collect();
+    let loss = t
+        .data
+        .iter()
+        .zip(&y.data)
+        .map(|(&ti, &yi)| (ti - yi) * (ti - yi))
+        .sum::<f32>()
+        / t.data.len() as f32;
+    for l in (0..n_layers).rev() {
+        let rows = acts[l].shape[1];
+        let n_out = dps[l].shape[1];
+        // back-propagate first, through the *pre-update* conductances
+        // (the chip reads the crossbar before pulsing it)
+        let prev_delta = if l > 0 {
+            let eff: Vec<f32> = delta
+                .iter()
+                .zip(&dps[l].data)
+                .map(|(&d, &p)| {
+                    quant::quantize_err(d * quant::activation_deriv_lut(p))
+                })
+                .collect();
+            let (gp, gn) = (&params[2 * l], &params[2 * l + 1]);
+            let back =
+                ideal::bwd(&eff, &gp.data, &gn.data, batch, rows, n_out);
+            // drop each row's bias-column error (`[:, :-1]`)
+            let w = rows - 1;
+            let mut pd = Vec::with_capacity(batch * w);
+            for b in 0..batch {
+                pd.extend_from_slice(&back[b * rows..b * rows + w]);
+            }
+            Some(pd)
+        } else {
+            None
+        };
+        let (head, tail) = params.split_at_mut(2 * l + 1);
+        let (gp, gn) = (&mut head[2 * l], &mut tail[0]);
+        ideal::update(
+            &mut gp.data,
+            &mut gn.data,
+            &acts[l].data,
+            &delta,
+            &dps[l].data,
+            lr,
+            batch,
+            rows,
+            n_out,
+        );
+        if let Some(pd) = prev_delta {
+            delta = pd;
+        }
+    }
+    Ok(loss)
+}
+
+/// Scan per-sample stochastic BP over the rows of `xs`/`ts`
+/// (`model.mlp_train_chunk`): bitwise identical to calling
+/// [`train_step`] on each row in order. Returns the per-sample losses.
+pub(crate) fn train_chunk(
+    params: &mut [ArrayF32],
+    xs: &ArrayF32,
+    ts: &ArrayF32,
+    lr: f32,
+) -> Result<Vec<f32>> {
+    let (k, _) = rank2(xs, "xs")?;
+    let (kt, _) = rank2(ts, "ts")?;
+    ensure!(k == kt, "{k} samples but {kt} target rows");
+    let mut losses = Vec::with_capacity(k);
+    for i in 0..k {
+        let x = ArrayF32::row(xs.row_slice(i).to_vec());
+        let t = ArrayF32::row(ts.row_slice(i).to_vec());
+        losses.push(train_step(params, &x, &t, lr)?);
+    }
+    Ok(losses)
+}
+
+/// Batched recognition (`model.mlp_infer` / `model.ae_fwd`): the output
+/// list follows the [`FwdMode`] convention of the matching artifact.
+pub(crate) fn forward_batch(
+    mode: FwdMode,
+    params: &[ArrayF32],
+    xs: &ArrayF32,
+) -> Result<Vec<ArrayF32>> {
+    let n_layers = check_params(params)?;
+    let batch = rank2(xs, "xs")?.0;
+    let mut h = clip_input(xs);
+    let mut code: Option<ArrayF32> = None;
+    // ae_fwd takes the bottleneck from the encoder's last crossbar
+    let code_idx =
+        if n_layers > 1 { n_layers / 2 - 1 } else { n_layers - 1 };
+    for l in 0..n_layers {
+        let (gp, gn) = (&params[2 * l], &params[2 * l + 1]);
+        let (rows, n_out) = (gp.shape[0], gp.shape[1]);
+        ensure!(
+            rows == h.shape[1] + 1,
+            "layer {l}: crossbar has {rows} rows but gets {} inputs + bias",
+            h.shape[1]
+        );
+        let a = with_bias(&h);
+        let (y, _) = ideal::fwd(
+            &a.data, &gp.data, &gn.data, batch, rows, n_out, hw::OUT_BITS,
+        );
+        h = ArrayF32 { shape: vec![batch, n_out], data: y };
+        if mode == FwdMode::ReconAndCode && l == code_idx {
+            code = Some(h.clone());
+        }
+    }
+    Ok(match mode {
+        FwdMode::Final => vec![h],
+        FwdMode::ReconAndCode => {
+            let code = code.expect("code layer visited");
+            vec![h, code]
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{Constraint, Mlp};
+    use crate::testing::Rng;
+
+    #[test]
+    fn train_step_matches_reference_network() {
+        // The native graph-level step and nn::Mlp (chip constraint) are
+        // two ports of the same paper equations; one sample must update
+        // conductances identically.
+        let layers = [4usize, 6, 2];
+        let mut rng = Rng::seeded(21);
+        let mut mlp = Mlp::init(&layers, Constraint::Chip, &mut rng);
+        let mut params: Vec<ArrayF32> = Vec::new();
+        for (l, w) in layers.windows(2).enumerate() {
+            let (gp, gn) = &mlp.params[l];
+            let shape = vec![w[0] + 1, w[1]];
+            params.push(ArrayF32::new(shape.clone(), gp.clone()).unwrap());
+            params.push(ArrayF32::new(shape, gn.clone()).unwrap());
+        }
+        let x = rng.vec_uniform(4, -0.5, 0.5);
+        let t = rng.vec_uniform(2, -0.4, 0.4);
+        let mlp_loss = mlp.train_step(&x, &t, 0.8);
+        let native_loss = train_step(
+            &mut params,
+            &ArrayF32::row(x),
+            &ArrayF32::row(t),
+            0.8,
+        )
+        .unwrap();
+        assert_eq!(mlp_loss, native_loss);
+        for (l, (gp, gn)) in mlp.params.iter().enumerate() {
+            assert_eq!(&params[2 * l].data, gp, "layer {l} gp");
+            assert_eq!(&params[2 * l + 1].data, gn, "layer {l} gn");
+        }
+    }
+
+    #[test]
+    fn shape_errors_are_descriptive() {
+        let mut rng = Rng::seeded(1);
+        let mut params =
+            crate::coordinator::init_conductances(&[4, 3], 0);
+        let bad_x = ArrayF32::row(rng.vec_uniform(7, -0.5, 0.5));
+        let t = ArrayF32::row(vec![0.0; 3]);
+        let err = train_step(&mut params, &bad_x, &t, 0.5).unwrap_err();
+        assert!(err.to_string().contains("crossbar"), "{err}");
+    }
+
+    #[test]
+    fn kmeans_pass_matches_reference_kmeans() {
+        let mut rng = Rng::seeded(9);
+        let (k, d, n) = (3, 4, 40);
+        let xs = rng.vec_uniform(n * d, -0.5, 0.5);
+        let cs = rng.vec_uniform(k * d, -0.5, 0.5);
+        let km = crate::kmeans::KMeans { k, dims: d, centres: cs.clone() };
+        let step = kmeans_pass(
+            &ArrayF32::matrix(n, d, xs.clone()).unwrap(),
+            &ArrayF32::matrix(k, d, cs).unwrap(),
+        )
+        .unwrap();
+        for i in 0..n {
+            assert_eq!(
+                step.assign[i],
+                km.assign_one(&xs[i * d..(i + 1) * d]),
+                "sample {i}"
+            );
+        }
+        assert_eq!(step.counts.iter().sum::<f32>() as usize, n);
+    }
+}

@@ -1,0 +1,306 @@
+//! PJRT backend (cargo feature `pjrt`): loads the AOT artifacts
+//! (`artifacts/*.hlo.txt`) and executes them on the CPU PJRT client
+//! from the Rust request path.
+//!
+//! Interchange is HLO *text* — jax >= 0.5 emits HloModuleProto with
+//! 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see `python/compile/aot.py` and DESIGN.md).
+//! Each artifact ships a `.meta` sidecar with its exact parameter/result
+//! shapes; [`Executable::run`] validates inputs against it, so a
+//! python/rust drift fails loudly at the call site instead of inside XLA.
+//!
+//! Compiled executables are cached per runtime, and parameters can stay
+//! device-resident across calls via [`Executable::run_buffers`] — the
+//! training hot loop only uploads the sample, not the weights.
+//!
+//! The default build links `rust/vendor/xla`, an API stub whose device
+//! operations report unavailability at runtime; swap that path
+//! dependency for the published `xla` crate (plus an installed
+//! `xla_extension`) to execute artifacts for real. Graph-level
+//! [`Backend`] calls go through artifacts; the kernel-level entry
+//! points inherit the bit-compatible host reference, which is exactly
+//! what the artifacts are integration-tested against.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use super::backend::{Backend, FwdMode, KmeansStep};
+use super::{ArrayF32, Meta};
+
+/// A loaded, compiled artifact.
+pub struct Executable {
+    pub name: String,
+    pub meta: Meta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with host arrays; returns host arrays per the meta shapes.
+    pub fn run(&self, inputs: &[ArrayF32]) -> Result<Vec<ArrayF32>> {
+        self.meta.validate_inputs(inputs).map_err(|e| anyhow!(e))?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(ArrayF32::to_literal)
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        self.unpack(result)
+    }
+
+    /// Execute with device-resident buffers (no host round-trip for the
+    /// inputs). Returns the raw output buffers of the result tuple.
+    pub fn run_buffers(&self, inputs: &[&xla::PjRtBuffer])
+        -> Result<Vec<xla::PjRtBuffer>> {
+        let out = self.exe.execute_b(inputs)?;
+        let row = out
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("no replica output"))?;
+        Ok(row)
+    }
+
+    /// Upload a host array to the device.
+    pub fn to_device(&self, a: &ArrayF32) -> Result<xla::PjRtBuffer> {
+        let client = self.exe.client();
+        let dims: Vec<usize> = a.shape.clone();
+        Ok(client.buffer_from_host_buffer::<f32>(&a.data, &dims, None)?)
+    }
+
+    /// Download a device buffer into a host array with `shape`.
+    pub fn to_host(&self, b: &xla::PjRtBuffer, shape: &[usize])
+        -> Result<ArrayF32> {
+        let lit = b.to_literal_sync()?;
+        let data = lit.to_vec::<f32>()?;
+        ArrayF32::new(shape.to_vec(), data).map_err(|e| anyhow!(e))
+    }
+
+    fn unpack(&self, result: xla::Literal) -> Result<Vec<ArrayF32>> {
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = result.to_tuple()?;
+        if parts.len() != self.meta.outputs.len() {
+            bail!(
+                "{}: {} outputs, meta says {}",
+                self.name,
+                parts.len(),
+                self.meta.outputs.len()
+            );
+        }
+        parts
+            .into_iter()
+            .zip(&self.meta.outputs)
+            .map(|(lit, shape)| {
+                let data = lit.to_vec::<f32>()?;
+                ArrayF32::new(shape.clone(), data).map_err(|e| anyhow!(e))
+            })
+            .collect()
+    }
+}
+
+/// Artifact loader + executable cache over one PJRT client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Open a runtime over an artifacts directory.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        if !dir.is_dir() {
+            bail!(
+                "artifacts directory {} missing — run `make artifacts`",
+                dir.display()
+            );
+        }
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu()?,
+            dir,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Open at the conventional location: `$RESTREAM_ARTIFACTS` or
+    /// `./artifacts`.
+    pub fn open_default() -> Result<Self> {
+        let dir = std::env::var("RESTREAM_ARTIFACTS")
+            .unwrap_or_else(|_| "artifacts".to_string());
+        Self::open(dir)
+    }
+
+    /// Load (or fetch from cache) an artifact by name.
+    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let hlo = self.dir.join(format!("{name}.hlo.txt"));
+        let meta_path = self.dir.join(format!("{name}.meta"));
+        let meta = Meta::parse_file(&meta_path)
+            .map_err(|e| anyhow!("meta for {name}: {e}"))?;
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("HLO text for {name}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let executable = Arc::new(Executable {
+            name: name.to_string(),
+            meta,
+            exe,
+        });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), executable.clone());
+        Ok(executable)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+/// The artifact-executing backend. Graph-level operations map one-to-one
+/// onto the AOT artifacts `python/compile/aot.py` exports; the `graph`
+/// argument of each [`Backend`] call is the artifact name.
+pub struct PjrtBackend {
+    rt: Runtime,
+}
+
+impl PjrtBackend {
+    pub fn new(rt: Runtime) -> Self {
+        PjrtBackend { rt }
+    }
+
+    /// Open over `$RESTREAM_ARTIFACTS` or `./artifacts`.
+    pub fn open_default() -> Result<Self> {
+        Ok(PjrtBackend::new(Runtime::open_default()?))
+    }
+
+    /// The underlying artifact runtime (for artifact-level tooling).
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn train_step(
+        &self,
+        graph: &str,
+        params: Vec<ArrayF32>,
+        x: &ArrayF32,
+        t: &ArrayF32,
+        lr: f32,
+    ) -> Result<(Vec<ArrayF32>, f32)> {
+        let exe = self.rt.load(graph)?;
+        let n_params = params.len();
+        let mut ins = params;
+        ins.push(x.clone());
+        ins.push(t.clone());
+        ins.push(ArrayF32::scalar(lr));
+        let mut outs = exe.run(&ins)?;
+        let loss = outs
+            .pop()
+            .ok_or_else(|| anyhow!("{graph} returned nothing"))?;
+        ensure!(
+            outs.len() == n_params,
+            "{graph} returned {} params, expected {n_params}",
+            outs.len()
+        );
+        Ok((outs, loss.data[0]))
+    }
+
+    /// K is recorded in the chunk artifact's meta (`xs` is the third
+    /// input from the end: `params…, xs, ts, lr`). Artifact trees that
+    /// predate chunking simply fall back to the per-sample path.
+    fn chunk_size(&self, chunk_graph: &str) -> usize {
+        match self.rt.load(chunk_graph) {
+            Ok(exe) if exe.meta.inputs.len() >= 3 => {
+                exe.meta.inputs[exe.meta.inputs.len() - 3][0]
+            }
+            _ => 0,
+        }
+    }
+
+    fn train_chunk(
+        &self,
+        graph: &str,
+        params: Vec<ArrayF32>,
+        xs: &ArrayF32,
+        ts: &ArrayF32,
+        lr: f32,
+    ) -> Result<(Vec<ArrayF32>, Vec<f32>)> {
+        let exe = self.rt.load(graph)?;
+        let n_params = params.len();
+        let mut ins = params;
+        ins.push(xs.clone());
+        ins.push(ts.clone());
+        ins.push(ArrayF32::scalar(lr));
+        let mut outs = exe.run(&ins)?;
+        let losses = outs
+            .pop()
+            .ok_or_else(|| anyhow!("{graph} returned nothing"))?;
+        ensure!(
+            outs.len() == n_params,
+            "{graph} returned {} params, expected {n_params}",
+            outs.len()
+        );
+        Ok((outs, losses.data))
+    }
+
+    fn forward_batch(
+        &self,
+        graph: &str,
+        _mode: FwdMode,
+        params: &[ArrayF32],
+        xs: &ArrayF32,
+    ) -> Result<Vec<ArrayF32>> {
+        let exe = self.rt.load(graph)?;
+        let mut ins = params.to_vec();
+        ins.push(xs.clone());
+        exe.run(&ins)
+    }
+
+    fn kmeans_batch(
+        &self,
+        graph: &str,
+        xs: &ArrayF32,
+        centres: &ArrayF32,
+    ) -> Result<KmeansStep> {
+        let exe = self.rt.load(graph)?;
+        let outs = exe.run(&[xs.clone(), centres.clone()])?;
+        ensure!(outs.len() == 3, "{graph}: expected (assign, acc, counts)");
+        let (k, dims) = (centres.shape[0], centres.shape[1]);
+        // assignments travel as f32 (see model.kmeans_step); exact ints
+        let assign = outs[0].data.iter().map(|&v| v as usize).collect();
+        Ok(KmeansStep {
+            assign,
+            acc: outs[1].data.clone(),
+            counts: outs[2].data.clone(),
+            k,
+            dims,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_missing_dir_fails_with_hint() {
+        let err = match Runtime::open("/nonexistent/artifacts") {
+            Err(e) => e,
+            Ok(_) => panic!("open should fail on a missing directory"),
+        };
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,142 @@
+//! Parity: the backend kernel entry points against golden values
+//! generated from the Python oracle `python/compile/kernels/ref.py`.
+//!
+//! The goldens were produced by `python/tests/gen_parity_goldens.py`,
+//! which ports the crate's deterministic xoshiro256++ PRNG
+//! (`testing/rng.rs`) to Python bit-for-bit, draws the exact input
+//! tensors the functions below draw, runs them through the jnp
+//! reference kernels and emits the expected outputs as Rust literals.
+//! The generator also asserts that no quantised output sits near a
+//! rounding boundary, so the sequential f32 accumulation used here and
+//! jax's matmul ordering cannot land on different ADC codes — which is
+//! why the quantised outputs are compared to 1e-6 while raw dot
+//! products get a 1e-5 association tolerance.
+//!
+//! Regenerate after changing the kernel semantics or `hwspec`:
+//!
+//! ```text
+//! cd python && python -m tests.gen_parity_goldens
+//! ```
+
+use restream::config::hwspec as hw;
+use restream::runtime::{ArrayF32, Backend, NativeBackend};
+use restream::testing::Rng;
+
+const SEED: u64 = 2024;
+const B: usize = 4;
+const N_IN: usize = 6; // includes the bias row
+const N_OUT: usize = 5;
+const K: usize = 4;
+const D: usize = 3;
+const KB: usize = 8;
+const LR: f32 = 0.7;
+
+// ---- goldens emitted by gen_parity_goldens.py (jax 0.4, f32) ----
+const GOLD_Y: [f32; 20] = [-0.0714285671710968, 0.07142859697341919, 0.07142859697341919, 0.07142859697341919, -0.0714285671710968, -0.0714285671710968, -0.0714285671710968, 0.07142859697341919, 0.07142859697341919, -0.0714285671710968, -0.0714285671710968, -0.0714285671710968, -0.0714285671710968, 0.07142859697341919, 0.07142859697341919, 0.07142859697341919, -0.0714285671710968, -0.0714285671710968, -0.0714285671710968, 0.07142859697341919];
+const GOLD_DP: [f32; 20] = [-0.2624503970146179, 0.09650944918394089, 0.02272646129131317, 0.2513033151626587, -0.12284677475690842, -0.051000453531742096, -0.3136220872402191, 0.3418852686882019, 0.2486523687839508, -0.2627072334289551, -0.12349622696638107, -0.2979294955730438, -0.11712302267551422, 0.15658655762672424, 0.1770646572113037, 0.14846870303153992, -0.2322009950876236, -0.069297656416893, -0.1405046582221985, 0.186963751912117];
+const GOLD_BWD: [f32; 24] = [-0.5118110179901123, 0.5354330539703369, 0.29133859276771545, -0.9055117964744568, -0.25984251499176025, 0.20472441613674164, -0.25984251499176025, -0.8503937125205994, 0.4724409580230713, 1.0, 1.0, 0.3779527544975281, -0.8897637724876404, 1.0, -0.4094488322734833, -0.4488188922405243, 0.13385826349258423, 0.8976377844810486, -0.17322835326194763, 0.4803149700164795, -0.19685038924217224, -0.8818897604942322, -0.5511810779571533, 0.23622047901153564];
+const GOLD_GP2: [f32; 30] = [0.4408217966556549, 0.39442527294158936, 0.0010000000474974513, 0.5242193937301636, 0.4411214292049408, 0.7434695959091187, 0.6294616460800171, 0.6388708353042603, 0.6788120865821838, 0.4589642286300659, 0.9606812000274658, 0.6218668818473816, 0.12138433754444122, 0.2525075674057007, 0.4889800548553467, 0.031550344079732895, 0.2825995683670044, 0.17920807003974915, 0.7827224731445312, 0.8794811964035034, 0.123059943318367, 0.9935970306396484, 0.2813379168510437, 0.6259129643440247, 0.3136519193649292, 0.502348005771637, 0.5701189637184143, 0.13115668296813965, 0.9527504444122314, 0.14675471186637878];
+const GOLD_GN2: [f32; 30] = [0.6373817920684814, 0.8289368152618408, 0.02280595153570175, 0.6964234709739685, 0.17401795089244843, 0.03617499768733978, 0.8015880584716797, 0.3579244613647461, 0.4261658787727356, 0.9965477585792542, 0.748892068862915, 0.11931626498699188, 0.7275428175926208, 0.9811822772026062, 0.2148296982049942, 0.34568360447883606, 0.3650948703289032, 0.944614052772522, 0.24760441482067108, 0.6828365325927734, 0.3023926317691803, 0.6916321516036987, 0.769309401512146, 0.1580580323934555, 0.16426819562911987, 0.6387221217155457, 0.016005726531147957, 0.22659794986248016, 0.7306063771247864, 0.6016399264335632];
+const GOLD_ASSIGN: [f32; 8] = [3.0, 2.0, 2.0, 1.0, 3.0, 3.0, 1.0, 1.0];
+const GOLD_ACC: [f32; 12] = [0.0, 0.0, 0.0, 1.1063549518585205, 0.5857268571853638, -1.1040096282958984, -0.48822250962257385, 0.38487011194229126, 0.45670315623283386, -0.16636203229427338, -0.04245464503765106, -0.43330565094947815];
+const GOLD_COUNTS: [f32; 4] = [0.0, 3.0, 2.0, 3.0];
+
+/// The shared input tensors, drawn in the exact order (and with the
+/// exact sampling calls) `gen_parity_goldens.py` draws them.
+struct Inputs {
+    x: ArrayF32,
+    gp: ArrayF32,
+    gn: ArrayF32,
+    delta: ArrayF32,
+    kx: ArrayF32,
+    kc: ArrayF32,
+}
+
+fn inputs() -> Inputs {
+    let mut rng = Rng::seeded(SEED);
+    let x = ArrayF32::matrix(B, N_IN, rng.vec_uniform(B * N_IN, -0.5, 0.5))
+        .unwrap();
+    let gp = ArrayF32::matrix(
+        N_IN,
+        N_OUT,
+        rng.vec_uniform(N_IN * N_OUT, 0.001, 1.0),
+    )
+    .unwrap();
+    let gn = ArrayF32::matrix(
+        N_IN,
+        N_OUT,
+        rng.vec_uniform(N_IN * N_OUT, 0.001, 1.0),
+    )
+    .unwrap();
+    let delta =
+        ArrayF32::matrix(B, N_OUT, rng.vec_uniform(B * N_OUT, -1.0, 1.0))
+            .unwrap();
+    let kx = ArrayF32::matrix(KB, D, rng.vec_uniform(KB * D, -0.5, 0.5))
+        .unwrap();
+    let kc = ArrayF32::matrix(K, D, rng.vec_uniform(K * D, -0.5, 0.5))
+        .unwrap();
+    Inputs { x, gp, gn, delta, kx, kc }
+}
+
+fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (g - w).abs() <= tol,
+            "{what}[{i}]: got {g}, golden {w} (tol {tol})"
+        );
+    }
+}
+
+#[test]
+fn forward_matches_ref_py_goldens() {
+    let inp = inputs();
+    let b = NativeBackend;
+    let (y, dp) =
+        b.forward(&inp.x, &inp.gp, &inp.gn, hw::OUT_BITS).unwrap();
+    assert_eq!(y.shape, vec![B, N_OUT]);
+    // quantised outputs land on the exact ADC codes of the oracle
+    assert_close(&y.data, &GOLD_Y, 1e-6, "y");
+    // raw dot products: f32 association tolerance vs jax matmul
+    assert_close(&dp.data, &GOLD_DP, 1e-5, "dp");
+}
+
+#[test]
+fn backward_matches_ref_py_goldens() {
+    let inp = inputs();
+    let b = NativeBackend;
+    let back = b.backward(&inp.delta, &inp.gp, &inp.gn).unwrap();
+    assert_eq!(back.shape, vec![B, N_IN]);
+    assert_close(&back.data, &GOLD_BWD, 1e-6, "bwd");
+}
+
+#[test]
+fn weight_update_matches_ref_py_goldens() {
+    let inp = inputs();
+    let b = NativeBackend;
+    let (_, dp) =
+        b.forward(&inp.x, &inp.gp, &inp.gn, hw::OUT_BITS).unwrap();
+    let (gp2, gn2) = b
+        .weight_update(&inp.gp, &inp.gn, &inp.x, &inp.delta, &dp, LR)
+        .unwrap();
+    assert_close(&gp2.data, &GOLD_GP2, 1e-5, "gp'");
+    assert_close(&gn2.data, &GOLD_GN2, 1e-5, "gn'");
+    // conductances stay inside the device range
+    for g in gp2.data.iter().chain(&gn2.data) {
+        assert!((hw::G_MIN..=hw::G_MAX).contains(g));
+    }
+}
+
+#[test]
+fn kmeans_step_matches_ref_py_goldens() {
+    let inp = inputs();
+    let b = NativeBackend;
+    let step = b.kmeans_step(&inp.kx, &inp.kc).unwrap();
+    assert_eq!(step.k, K);
+    assert_eq!(step.dims, D);
+    for (i, want) in GOLD_ASSIGN.iter().enumerate() {
+        assert_eq!(step.assign[i], *want as usize, "assign[{i}]");
+    }
+    assert_close(&step.acc, &GOLD_ACC, 1e-5, "acc");
+    assert_close(&step.counts, &GOLD_COUNTS, 0.0, "counts");
+}

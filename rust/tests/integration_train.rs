@@ -1,12 +1,15 @@
 //! Integration: full training pipelines through the coordinator —
-//! the paper's section VI experiments at test scale.
+//! the paper's section VI experiments at test scale, runnable out of
+//! the box on the default (native) backend. Setting
+//! `RESTREAM_BACKEND=pjrt` re-runs the same pipelines through the
+//! artifact path (requires `--features pjrt` + `make artifacts`).
 
 use restream::config::apps;
 use restream::coordinator::Engine;
 use restream::{datasets, metrics};
 
 fn engine() -> Engine {
-    Engine::open_default().expect("run `make artifacts` first")
+    Engine::open_default().expect("backend construction failed")
 }
 
 #[test]

@@ -1,0 +1,198 @@
+//! API stub of the `xla` crate (xla-rs), vendored so the `pjrt` cargo
+//! feature *compiles* in an offline build environment that has neither
+//! the crate nor the `xla_extension` native library.
+//!
+//! Every operation that would need a real PJRT client returns
+//! [`Error::Unavailable`] at runtime; the type and method signatures
+//! match the subset of xla-rs 0.1.x that `restream::runtime::pjrt`
+//! uses, so swapping this path dependency for the published crate (plus
+//! an `XLA_EXTENSION_DIR` install) re-enables real artifact execution
+//! without touching the runtime code. The default build of the
+//! workspace never compiles this crate — the native backend is the
+//! default compute path (see `DESIGN.md`, "Backend selection").
+
+use std::fmt;
+
+/// Stub error: always "PJRT unavailable" plus the attempted operation.
+#[derive(Debug)]
+pub enum Error {
+    /// The stub cannot perform real XLA work.
+    Unavailable(&'static str),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let Error::Unavailable(op) = self;
+        write!(
+            f,
+            "{op}: PJRT is stubbed in this build — link the real `xla` \
+             crate (and its xla_extension library) to execute artifacts"
+        )
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// `Result` specialised to the stub [`Error`].
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Host literal: shape plus row-major f32 data.
+#[derive(Clone, Debug, Default)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Vec<f32>,
+}
+
+/// Types a [`Literal`] can be read back as.
+pub trait NativeType: Copy {
+    #[doc(hidden)]
+    fn from_f32(v: f32) -> Self;
+}
+
+impl NativeType for f32 {
+    fn from_f32(v: f32) -> f32 {
+        v
+    }
+}
+
+impl Literal {
+    /// Build a rank-1 literal from host data.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { dims: vec![data.len() as i64], data: data.to_vec() }
+    }
+
+    /// The literal's dimensions.
+    pub fn shape(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Reinterpret the literal with new dimensions.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(Error::Unavailable("Literal::reshape size mismatch"));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    /// Copy the elements out as a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&v| T::from_f32(v)).collect())
+    }
+
+    /// Destructure a tuple literal. The stub never produces tuples, so
+    /// this only ever reports unavailability.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::Unavailable("Literal::to_tuple"))
+    }
+}
+
+/// Device buffer handle (never holds real device memory in the stub).
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Download the buffer into a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Open the CPU PJRT client — unavailable in the stub.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::Unavailable("PjRtClient::cpu"))
+    }
+
+    /// Compile a computation for this client.
+    pub fn compile(
+        &self,
+        _comp: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable("PjRtClient::compile"))
+    }
+
+    /// Upload a host buffer to the device.
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::Unavailable("PjRtClient::buffer_from_host_buffer"))
+    }
+}
+
+/// A compiled, loaded executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    client: PjRtClient,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with host literals; one buffer row per replica.
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable("PjRtLoadedExecutable::execute"))
+    }
+
+    /// Execute with device-resident buffers.
+    pub fn execute_b(
+        &self,
+        _args: &[&PjRtBuffer],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+
+    /// The client this executable was compiled for.
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+}
+
+/// Parsed HLO module (text interchange format).
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse HLO text from a file — needs the real XLA text parser.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::Unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a parsed module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literals_roundtrip_on_host() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        let m = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(m.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 3]).is_err());
+    }
+
+    #[test]
+    fn device_operations_report_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("stubbed"));
+    }
+}
