@@ -3,7 +3,8 @@
 
 ARTIFACTS ?= artifacts
 
-.PHONY: build test bench doc fmt artifacts pytest cargotest-pjrt
+.PHONY: build test bench bench-parallel clippy doc fmt artifacts pytest \
+	cargotest-pjrt
 
 build:
 	cargo build --release
@@ -13,6 +14,15 @@ test:
 
 bench:
 	cargo bench
+
+# Data-parallel scaling trajectory. cargo runs bench binaries with
+# cwd = rust/, so pin the report to the repo root explicitly.
+bench-parallel:
+	BENCH_PARALLEL_OUT=$(abspath BENCH_parallel.json) \
+		cargo bench --bench perf_parallel
+
+clippy:
+	cargo clippy --all-targets -- -D warnings
 
 doc:
 	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps

@@ -1,0 +1,242 @@
+//! §Perf: data-parallel scaling of the sharded execution layer.
+//!
+//! Measures throughput (samples/s) of the three sharded engine
+//! operations — batched recognition, k-means epochs, anomaly scoring —
+//! at 1/2/4/8 workers on the native backend, prints per-shard timings,
+//! and writes the machine-readable trajectory to `BENCH_parallel.json`
+//! — relative to the bench's working directory, which under
+//! `cargo bench` is the crate root `rust/`; override with
+//! `$BENCH_PARALLEL_OUT` (CI and `make bench-parallel` pin it to the
+//! repo root). CI's `bench-smoke` job runs this at reduced scale and
+//! gates on the 4-worker vs 1-worker geometric-mean speedup staying
+//! ≥ 1.0.
+//!
+//! Scale knobs: `$PERF_PARALLEL_SAMPLES` (default 1024) and
+//! `$PERF_PARALLEL_REPEATS` (default 3; wall times are best-of-N to
+//! shave scheduler noise).
+//!
+//! Determinism note: every configuration computes bit-identical
+//! results (see `coordinator::pool`); this bench only measures how
+//! fast the fixed computation goes.
+
+use restream::benchutil::section;
+use restream::config::apps;
+use restream::coordinator::{init_conductances, Engine};
+use restream::testing::Rng;
+
+const WORKER_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+struct OpResult {
+    op: String,
+    workers: usize,
+    wall_s: f64,
+    samples_per_s: f64,
+}
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.trim().parse().ok())
+        .unwrap_or(default)
+}
+
+/// Best-of-`repeats` wall clock of `f`, after one warmup run.
+fn best_wall(repeats: usize, mut f: impl FnMut()) -> f64 {
+    f();
+    let mut best = f64::INFINITY;
+    for _ in 0..repeats {
+        let t0 = std::time::Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+fn print_shards(engine: &Engine) {
+    let Some(rep) = engine.last_parallel_report() else {
+        return;
+    };
+    println!(
+        "    {} shards, busy {:.1} ms over wall {:.1} ms:",
+        rep.shards.len(),
+        rep.busy_s() * 1e3,
+        rep.wall_s * 1e3
+    );
+    for s in rep.shards.iter().take(8) {
+        println!(
+            "      shard {:>3} [{:>6}..{:>6})  {:>9.2} ms",
+            s.shard,
+            s.range.0,
+            s.range.1,
+            s.wall_s * 1e3
+        );
+    }
+    if rep.shards.len() > 8 {
+        println!("      ... {} more shards", rep.shards.len() - 8);
+    }
+}
+
+fn record(
+    results: &mut Vec<OpResult>,
+    op: &str,
+    workers: usize,
+    wall_s: f64,
+    samples: usize,
+) {
+    let samples_per_s = samples as f64 / wall_s.max(1e-12);
+    println!(
+        "bench parallel/{op}/w{workers} {:>10.2} ms  {:>10.0} samples/s",
+        wall_s * 1e3,
+        samples_per_s
+    );
+    results.push(OpResult {
+        op: op.to_string(),
+        workers,
+        wall_s,
+        samples_per_s,
+    });
+}
+
+/// Geometric mean over ops of (4-worker samples/s) / (1-worker
+/// samples/s); 1.0 when no (1, 4) pair exists.
+fn speedup_geomean_4v1(results: &[OpResult]) -> f64 {
+    let mut ops: Vec<&str> = results.iter().map(|r| r.op.as_str()).collect();
+    ops.dedup();
+    let mut log_sum = 0.0f64;
+    let mut n = 0usize;
+    for op in ops {
+        let at = |w: usize| {
+            results
+                .iter()
+                .find(|r| r.op == op && r.workers == w)
+                .map(|r| r.samples_per_s)
+        };
+        if let (Some(s1), Some(s4)) = (at(1), at(4)) {
+            if s1 > 0.0 && s4 > 0.0 {
+                log_sum += (s4 / s1).ln();
+                n += 1;
+            }
+        }
+    }
+    if n == 0 {
+        1.0
+    } else {
+        (log_sum / n as f64).exp()
+    }
+}
+
+fn json_report(
+    results: &[OpResult],
+    samples: usize,
+    repeats: usize,
+    geomean: f64,
+) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str(&format!(
+        "  \"bench\": \"perf_parallel\",\n  \"samples\": {samples},\n  \
+         \"repeats\": {repeats},\n"
+    ));
+    s.push_str("  \"results\": [\n");
+    for (i, r) in results.iter().enumerate() {
+        let sep = if i + 1 < results.len() { "," } else { "" };
+        s.push_str(&format!(
+            "    {{\"op\": \"{}\", \"workers\": {}, \"wall_s\": {:.6}, \
+             \"samples_per_s\": {:.2}}}{sep}\n",
+            r.op, r.workers, r.wall_s, r.samples_per_s
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str(&format!("  \"speedup_geomean_4v1\": {geomean:.4}\n"));
+    s.push_str("}\n");
+    s
+}
+
+fn main() -> anyhow::Result<()> {
+    let samples = env_usize("PERF_PARALLEL_SAMPLES", 1024).max(1);
+    let repeats = env_usize("PERF_PARALLEL_REPEATS", 3).max(1);
+    let mut results: Vec<OpResult> = Vec::new();
+    println!(
+        "perf_parallel: {samples} samples, best of {repeats}, workers {:?}",
+        WORKER_COUNTS
+    );
+
+    section("sharded batched recognition (mnist_class, b=64)");
+    {
+        let net = apps::network("mnist_class").unwrap();
+        let params = init_conductances(net.layers, 0);
+        let mut rng = Rng::seeded(1);
+        let xs: Vec<Vec<f32>> = (0..samples)
+            .map(|_| rng.vec_uniform(net.layers[0], -0.5, 0.5))
+            .collect();
+        for &w in &WORKER_COUNTS {
+            let engine = Engine::native().with_workers(w);
+            let wall = best_wall(repeats, || {
+                engine.infer(net, &params, &xs).unwrap();
+            });
+            record(&mut results, "infer/mnist_class", w, wall, samples);
+            if w == *WORKER_COUNTS.last().unwrap() {
+                print_shards(&engine);
+            }
+        }
+    }
+
+    section("sharded k-means epochs (mnist_kmeans, 2 epochs)");
+    {
+        let app = apps::kmeans_app("mnist_kmeans").unwrap();
+        // k-means tiles are light; use a bigger batch so shard work
+        // dominates dispatch.
+        let n = samples * 8;
+        let epochs = 2usize;
+        let mut rng = Rng::seeded(2);
+        let xs: Vec<Vec<f32>> = (0..n)
+            .map(|_| rng.vec_uniform(app.dims, -0.5, 0.5))
+            .collect();
+        for &w in &WORKER_COUNTS {
+            let engine = Engine::native().with_workers(w);
+            let wall = best_wall(repeats, || {
+                engine.kmeans(app, &xs, epochs, 3).unwrap();
+            });
+            record(
+                &mut results,
+                "kmeans/mnist_kmeans",
+                w,
+                wall,
+                n * epochs,
+            );
+            if w == *WORKER_COUNTS.last().unwrap() {
+                print_shards(&engine);
+            }
+        }
+    }
+
+    section("sharded anomaly scoring (kdd_ae)");
+    {
+        let net = apps::network("kdd_ae").unwrap();
+        let params = init_conductances(net.layers, 4);
+        let mut rng = Rng::seeded(5);
+        let n = samples * 4;
+        let xs: Vec<Vec<f32>> = (0..n)
+            .map(|_| rng.vec_uniform(net.layers[0], -0.5, 0.5))
+            .collect();
+        for &w in &WORKER_COUNTS {
+            let engine = Engine::native().with_workers(w);
+            let wall = best_wall(repeats, || {
+                engine.anomaly_scores(net, &params, &xs).unwrap();
+            });
+            record(&mut results, "anomaly_scores/kdd_ae", w, wall, n);
+            if w == *WORKER_COUNTS.last().unwrap() {
+                print_shards(&engine);
+            }
+        }
+    }
+
+    let geomean = speedup_geomean_4v1(&results);
+    section("summary");
+    println!("speedup geomean (4 workers vs 1): {geomean:.2}x");
+    let out_path = std::env::var("BENCH_PARALLEL_OUT")
+        .unwrap_or_else(|_| "BENCH_parallel.json".to_string());
+    std::fs::write(&out_path, json_report(&results, samples, repeats, geomean))?;
+    println!("wrote {out_path}");
+    Ok(())
+}

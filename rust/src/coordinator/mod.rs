@@ -23,16 +23,32 @@
 //! keeps the same chunked loop to batch its per-step dispatch — the
 //! software analogue of the paper's "processing happens at the physical
 //! location of the data" (see EXPERIMENTS.md section Perf).
+//!
+//! Batched operations (`infer`/`encode`/`reconstruct`, `kmeans`,
+//! `anomaly_scores`) execute data-parallel across the engine's
+//! [`WorkerPool`], sharded the way the `mapper` spreads the app over
+//! the chip's core mesh; results are bit-identical to the sequential
+//! path at any worker count (see [`pool`] for the determinism
+//! contract). Training stays sequential — per-sample stochastic BP is
+//! a serial dependence chain by definition.
 
 pub mod params;
+pub mod pool;
 pub mod stream;
 
 pub use params::init_conductances;
+pub use pool::{
+    default_workers, ExecReport, ShardPlan, ShardTiming, WorkerPool,
+};
+
+use std::sync::Mutex;
+use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::config::{apps, AppKind, Network};
-use crate::runtime::{ArrayF32, Backend, FwdMode, NativeBackend};
+use crate::config::{apps, AppKind, Network, SystemConfig};
+use crate::mapper;
+use crate::runtime::{ArrayF32, Backend, FwdMode, KmeansStep, NativeBackend};
 use crate::testing::Rng;
 
 /// Result of a training run.
@@ -50,12 +66,113 @@ pub struct TrainReport {
 /// The streaming coordinator.
 pub struct Engine {
     backend: Box<dyn Backend>,
+    /// Fixed worker pool the batched operations shard over.
+    pool: WorkerPool,
+    /// Per-shard stats of the most recent sharded operation.
+    last_report: Mutex<Option<ExecReport>>,
+    /// Memoised `mapper::shard_hint` per app name (the hint is a
+    /// deterministic function of the network and the default chip).
+    shard_hints: Mutex<std::collections::HashMap<String, usize>>,
 }
 
 impl Engine {
-    /// Build over any compute backend.
+    /// Build over any compute backend. Sequential by default (one
+    /// worker); scale out with [`Engine::with_workers`]. The
+    /// `$RESTREAM_WORKERS` environment variable is honoured by
+    /// [`Engine::open_default`] and the CLI, not here, so library
+    /// construction never reads the environment.
     pub fn new(backend: Box<dyn Backend>) -> Self {
-        Engine { backend }
+        Engine {
+            backend,
+            pool: WorkerPool::new(1),
+            last_report: Mutex::new(None),
+            shard_hints: Mutex::new(std::collections::HashMap::new()),
+        }
+    }
+
+    /// Replace the worker pool with one of `workers` threads (0 is
+    /// treated as 1; 1 executes shards inline — the sequential path).
+    /// No-op when the pool already has that size.
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        let workers = workers.max(1);
+        if workers != self.pool.workers() {
+            self.pool = WorkerPool::new(workers);
+        }
+        self
+    }
+
+    /// Size of the worker pool the batched operations shard over.
+    pub fn workers(&self) -> usize {
+        self.pool.workers()
+    }
+
+    /// Per-shard timing of the most recent sharded operation
+    /// ([`ExecReport`] — the data-parallel sibling of [`TrainReport`]),
+    /// or `None` before the first one.
+    pub fn last_parallel_report(&self) -> Option<ExecReport> {
+        self.last_report
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .clone()
+    }
+
+    fn record(&self, report: ExecReport) {
+        *self.last_report.lock().unwrap_or_else(|e| e.into_inner()) =
+            Some(report);
+    }
+
+    /// Default shard plan of a batched network operation: tiles of
+    /// [`apps::FWD_BATCH`] samples, split into as many contiguous
+    /// shards as the app's mapping occupies mesh cores
+    /// ([`mapper::shard_hint`]) — the pool parallelises the way the
+    /// chip does. The hint is memoised per app name, so repeated
+    /// batched calls skip the mapping work.
+    fn shard_plan(&self, net: &Network, n_items: usize) -> ShardPlan {
+        let hint = *self
+            .shard_hints
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .entry(net.name.to_string())
+            .or_insert_with(|| {
+                mapper::shard_hint(net, &SystemConfig::default())
+            });
+        ShardPlan::contiguous(n_items, apps::FWD_BATCH, hint)
+    }
+
+    /// Run one shard job per plan entry on the worker pool, timing each
+    /// shard and recording the [`ExecReport`], and return the per-shard
+    /// outputs **in shard order** (the caller's left-to-right reduction
+    /// order). Shared by every plan-based sharded operation so the
+    /// stats bookkeeping cannot drift between them.
+    fn run_sharded<T: Send>(
+        &self,
+        op: String,
+        plan: &ShardPlan,
+        f: impl Fn(usize, (usize, usize)) -> T + Sync,
+    ) -> Vec<T> {
+        let t0 = Instant::now();
+        let timed = self.pool.run(plan.shards(), |s| {
+            let t = Instant::now();
+            let out = f(s, plan.bounds[s]);
+            (out, t.elapsed().as_secs_f64())
+        });
+        let mut shards = Vec::with_capacity(plan.shards());
+        let mut outs = Vec::with_capacity(plan.shards());
+        for (s, (out, wall_s)) in timed.into_iter().enumerate() {
+            shards.push(ShardTiming {
+                shard: s,
+                range: plan.bounds[s],
+                wall_s,
+            });
+            outs.push(out);
+        }
+        self.record(ExecReport {
+            op,
+            workers: self.pool.workers(),
+            wall_s: t0.elapsed().as_secs_f64(),
+            shards,
+        });
+        outs
     }
 
     /// The default engine: the in-process native backend.
@@ -81,11 +198,12 @@ impl Engine {
         }
     }
 
-    /// Backend from `$RESTREAM_BACKEND` (default: `native`).
+    /// Backend from `$RESTREAM_BACKEND` (default: `native`) and
+    /// worker-pool size from `$RESTREAM_WORKERS` (default: 1).
     pub fn open_default() -> Result<Self> {
         let name = std::env::var("RESTREAM_BACKEND")
             .unwrap_or_else(|_| "native".to_string());
-        Self::named(&name)
+        Ok(Self::named(&name)?.with_workers(default_workers()))
     }
 
     /// The compute backend in use.
@@ -122,7 +240,6 @@ impl Engine {
     /// the epoch tail falls back to single steps — for the PJRT backend
     /// this amortises the host/device boundary K-fold (EXPERIMENTS.md
     /// §Perf), for the native backend it batches dispatch.
-    #[allow(clippy::too_many_arguments)]
     fn train_loop(
         &self,
         graph: &str,
@@ -266,12 +383,13 @@ impl Engine {
         Ok((encoder_params, reports))
     }
 
-    /// Batched recognition through the net's forward graph. Returns one
-    /// output row per input sample (padding stripped).
+    /// Batched recognition through the net's forward graph, sharded
+    /// across the worker pool. Returns one output row per input sample
+    /// (padding stripped), bit-identical at any worker count.
     pub fn infer(&self, net: &Network, params: &[ArrayF32],
                  xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
         let mode = FwdMode::for_kind(net.kind);
-        self.batched_forward(&net.fwd_artifact(), mode, params, xs, 0)
+        self.batched_forward(net, mode, params, xs, 0)
     }
 
     /// Batched AE forward returning reconstruction rows (output 0).
@@ -289,64 +407,91 @@ impl Engine {
         // for AEs the code is output 1; a DR forward graph *is* the
         // encoder stack, so its code is output 0
         let idx = usize::from(mode == FwdMode::ReconAndCode);
-        self.batched_forward(&net.fwd_artifact(), mode, params, xs, idx)
+        self.batched_forward(net, mode, params, xs, idx)
     }
 
+    /// Sharded batched forward: contiguous tile-aligned shards run on
+    /// the worker pool, each executing the same tile loop the
+    /// sequential engine ran ([`forward_range`]); shard outputs
+    /// concatenate left-to-right, so results are bit-identical to the
+    /// sequential path at any worker count.
     fn batched_forward(
         &self,
-        graph: &str,
+        net: &Network,
         mode: FwdMode,
         params: &[ArrayF32],
         xs: &[Vec<f32>],
         output_idx: usize,
     ) -> Result<Vec<Vec<f32>>> {
-        let batch = apps::FWD_BATCH;
+        let graph = net.fwd_artifact();
+        let plan = self.shard_plan(net, xs.len());
+        // One global row width for every shard (as the sequential loop
+        // had), so ragged inputs cannot make shards disagree.
         let dims = xs.first().map_or(0, Vec::len);
+        let backend = self.backend.as_ref();
+        let shard_outs = self.run_sharded(
+            format!("forward_batch/{graph}"),
+            &plan,
+            |_, (lo, hi)| {
+                forward_range(
+                    backend,
+                    &graph,
+                    mode,
+                    params,
+                    &xs[lo..hi],
+                    dims,
+                    output_idx,
+                    plan.tile,
+                )
+            },
+        );
         let mut out = Vec::with_capacity(xs.len());
-        for chunk in xs.chunks(batch) {
-            let mut data = Vec::with_capacity(batch * dims);
-            for x in chunk {
-                data.extend_from_slice(x);
-            }
-            data.resize(batch * dims, 0.0); // pad the tail batch
-            let x_arr = ArrayF32::matrix(batch, dims, data)
-                .map_err(|e| anyhow!(e))?;
-            let outs =
-                self.backend.forward_batch(graph, mode, params, &x_arr)?;
-            let y = outs
-                .get(output_idx)
-                .ok_or_else(|| anyhow!("missing output {output_idx}"))?;
-            for i in 0..chunk.len() {
-                out.push(y.row_slice(i).to_vec());
-            }
+        for rows in shard_outs {
+            out.extend(rows?);
         }
         Ok(out)
     }
 
     /// Classifier predictions by argmax (sign for single-output nets).
+    /// A non-finite network output (NaN from a poisoned conductance or
+    /// a diverged backend) is reported as an error, never a panic.
     pub fn classify(&self, net: &Network, params: &[ArrayF32],
                     xs: &[Vec<f32>]) -> Result<Vec<usize>> {
         let outs = self.infer(net, params, xs)?;
-        Ok(outs
-            .iter()
-            .map(|o| {
-                if o.len() == 1 {
-                    usize::from(o[0] > 0.0)
-                } else {
-                    o.iter()
-                        .enumerate()
-                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                        .map(|(i, _)| i)
-                        .unwrap()
-                }
-            })
-            .collect())
+        let mut preds = Vec::with_capacity(outs.len());
+        for (i, o) in outs.iter().enumerate() {
+            if o.iter().any(|v| !v.is_finite()) {
+                return Err(anyhow!(
+                    "classify: non-finite output for sample {i} of {} \
+                     (backend '{}')",
+                    net.name,
+                    self.backend.name()
+                ));
+            }
+            preds.push(if o.len() == 1 {
+                usize::from(o[0] > 0.0)
+            } else {
+                o.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(j, _)| j)
+                    .unwrap_or(0)
+            });
+        }
+        Ok(preds)
     }
 
     /// k-means through the clustering-core graph: batched assignment,
     /// centre accumulation in the backend, division at epoch end in the
     /// coordinator (as the core's registers do). Returns (centres,
     /// assignments).
+    ///
+    /// The per-epoch assignment + accumulation phase is sharded over
+    /// the worker pool at tile granularity (the clustering core's
+    /// batch-sized streaming passes); each tile returns its raw
+    /// accumulator registers and the caller folds them left-to-right
+    /// in tile order, so centres and assignments are bit-identical to
+    /// the sequential path at any worker count.
     pub fn kmeans(
         &self,
         app: &apps::App,
@@ -366,31 +511,42 @@ impl Engine {
             .flat_map(|&i| xs[i].clone())
             .collect();
         let batch = apps::FWD_BATCH;
+        // One tile per shard: the clustering core's batch-sized
+        // streaming passes are the unit of parallel work.
+        let plan = ShardPlan::contiguous(
+            xs.len(),
+            batch,
+            xs.len().div_ceil(batch),
+        );
         let mut assign = vec![0usize; xs.len()];
+        let backend = self.backend.as_ref();
         for _ in 0..epochs {
             let mut acc = vec![0.0f32; k * d];
             let mut counts = vec![0.0f32; k];
             let centres_arr = ArrayF32::matrix(k, d, centres.clone())
                 .map_err(|e| anyhow!(e))?;
-            for (ci, chunk) in xs.chunks(batch).enumerate() {
-                let mut data = Vec::with_capacity(batch * d);
-                for x in chunk {
-                    data.extend_from_slice(x);
-                }
-                // pad with copies of the last real row so padding joins
-                // that row's cluster; its contribution is subtracted
-                // again below.
-                let pad_rows = batch - chunk.len();
-                let last = &chunk[chunk.len() - 1];
-                for _ in 0..pad_rows {
-                    data.extend_from_slice(last);
-                }
-                let x_arr = ArrayF32::matrix(batch, d, data)
-                    .map_err(|e| anyhow!(e))?;
-                let step =
-                    self.backend.kmeans_batch(&graph, &x_arr, &centres_arr)?;
-                for i in 0..chunk.len() {
-                    assign[ci * batch + i] = step.assign[i];
+            let graph_ref = &graph;
+            let centres_ref = &centres_arr;
+            let tiles = self.run_sharded(
+                format!("kmeans/{}", app.name),
+                &plan,
+                |_, (lo, hi)| {
+                    kmeans_tile(
+                        backend, graph_ref, centres_ref, &xs[lo..hi],
+                        batch, d,
+                    )
+                },
+            );
+            // Left-to-right fold in tile order — line-for-line the
+            // sequence of additions and padding corrections the
+            // sequential loop performed.
+            for (ci, step) in tiles.into_iter().enumerate() {
+                let step = step?;
+                let (lo, hi) = plan.bounds[ci];
+                let chunk_len = hi - lo;
+                let pad_rows = batch - chunk_len;
+                for i in 0..chunk_len {
+                    assign[lo + i] = step.assign[i];
                 }
                 for v in 0..k * d {
                     acc[v] += step.acc[v];
@@ -400,6 +556,7 @@ impl Engine {
                 }
                 if pad_rows > 0 {
                     // remove the padded duplicates' contribution
+                    let last = &xs[lo + chunk_len - 1];
                     let c0 = step.assign[batch - 1];
                     counts[c0] -= pad_rows as f32;
                     for dd in 0..d {
@@ -421,24 +578,99 @@ impl Engine {
     }
 
     /// Anomaly scores: Manhattan distance between each input and its AE
-    /// reconstruction (paper Figs 18–19).
+    /// reconstruction (paper Figs 18–19). The reconstruction runs
+    /// sharded (see [`Engine::infer`]); the per-sample scoring is then
+    /// sharded over the same plan. Per-sample scores are independent,
+    /// so the concatenation is bit-identical at any worker count.
     pub fn anomaly_scores(&self, net: &Network, params: &[ArrayF32],
                           xs: &[Vec<f32>]) -> Result<Vec<f64>> {
         let recon = self.reconstruct(net, params, xs)?;
-        Ok(xs
-            .iter()
-            .zip(&recon)
-            .map(|(x, r)| {
-                x.iter()
-                    .zip(r)
-                    .map(|(a, b)| {
-                        let ac = a.clamp(-0.5, 0.5);
-                        (ac - b).abs() as f64
+        let plan = self.shard_plan(net, xs.len());
+        let recon_ref = &recon;
+        let parts = self.run_sharded(
+            format!("anomaly_scores/{}", net.name),
+            &plan,
+            |_, (lo, hi)| -> Vec<f64> {
+                xs[lo..hi]
+                    .iter()
+                    .zip(&recon_ref[lo..hi])
+                    .map(|(x, r)| {
+                        x.iter()
+                            .zip(r)
+                            .map(|(a, b)| {
+                                let ac = a.clamp(-0.5, 0.5);
+                                (ac - b).abs() as f64
+                            })
+                            .sum()
                     })
-                    .sum()
-            })
-            .collect())
+                    .collect()
+            },
+        );
+        let mut out = Vec::with_capacity(xs.len());
+        for scores in parts {
+            out.extend(scores);
+        }
+        Ok(out)
     }
+}
+
+/// Sequential tile loop over one shard of a batched forward — exactly
+/// the loop the single-threaded engine ran, applied to a tile-aligned
+/// slice, so per-tile padding and backend calls match the sequential
+/// path call-for-call. `dims` is the global row width (computed once
+/// from the whole batch, never per shard).
+fn forward_range(
+    backend: &dyn Backend,
+    graph: &str,
+    mode: FwdMode,
+    params: &[ArrayF32],
+    xs: &[Vec<f32>],
+    dims: usize,
+    output_idx: usize,
+    tile: usize,
+) -> Result<Vec<Vec<f32>>> {
+    let mut out = Vec::with_capacity(xs.len());
+    for chunk in xs.chunks(tile) {
+        let mut data = Vec::with_capacity(tile * dims);
+        for x in chunk {
+            data.extend_from_slice(x);
+        }
+        data.resize(tile * dims, 0.0); // pad the tail tile
+        let x_arr =
+            ArrayF32::matrix(tile, dims, data).map_err(|e| anyhow!(e))?;
+        let outs = backend.forward_batch(graph, mode, params, &x_arr)?;
+        let y = outs
+            .get(output_idx)
+            .ok_or_else(|| anyhow!("missing output {output_idx}"))?;
+        for i in 0..chunk.len() {
+            out.push(y.row_slice(i).to_vec());
+        }
+    }
+    Ok(out)
+}
+
+/// One clustering-core tile: pad the chunk to the tile size with copies
+/// of its last real row (so padding joins that row's cluster — the
+/// caller subtracts the duplicates during the ordered reduction) and
+/// run the backend's batched k-means step.
+fn kmeans_tile(
+    backend: &dyn Backend,
+    graph: &str,
+    centres: &ArrayF32,
+    chunk: &[Vec<f32>],
+    tile: usize,
+    dims: usize,
+) -> Result<KmeansStep> {
+    let mut data = Vec::with_capacity(tile * dims);
+    for x in chunk {
+        data.extend_from_slice(x);
+    }
+    let last = &chunk[chunk.len() - 1];
+    for _ in 0..tile - chunk.len() {
+        data.extend_from_slice(last);
+    }
+    let x_arr = ArrayF32::matrix(tile, dims, data).map_err(|e| anyhow!(e))?;
+    backend.kmeans_batch(graph, &x_arr, centres)
 }
 
 #[cfg(test)]
@@ -460,10 +692,98 @@ mod tests {
 
     #[test]
     fn default_backend_is_native() {
-        // (the test runner does not set RESTREAM_BACKEND)
-        if std::env::var("RESTREAM_BACKEND").is_err() {
+        // Scoped env override: the assertion runs whether or not the
+        // ambient test environment pre-set RESTREAM_BACKEND.
+        crate::testing::with_env(&[("RESTREAM_BACKEND", None)], || {
             assert_eq!(Engine::open_default().unwrap().backend().name(),
                        "native");
+        });
+        crate::testing::with_env(
+            &[("RESTREAM_BACKEND", Some("native"))],
+            || {
+                assert_eq!(
+                    Engine::open_default().unwrap().backend().name(),
+                    "native"
+                );
+            },
+        );
+        crate::testing::with_env(
+            &[("RESTREAM_BACKEND", Some("frobnicate"))],
+            || assert!(Engine::open_default().is_err()),
+        );
+    }
+
+    #[test]
+    fn worker_count_from_env_and_builder() {
+        // Engine::new/native never read the environment (so plain
+        // library construction cannot race env-mutating tests); the
+        // env knob applies through open_default and the CLI.
+        crate::testing::with_env(
+            &[
+                ("RESTREAM_WORKERS", Some("3")),
+                ("RESTREAM_BACKEND", None),
+            ],
+            || {
+                assert_eq!(Engine::native().workers(), 1);
+                assert_eq!(Engine::open_default().unwrap().workers(), 3);
+            },
+        );
+        crate::testing::with_env(
+            &[("RESTREAM_WORKERS", None), ("RESTREAM_BACKEND", None)],
+            || assert_eq!(Engine::open_default().unwrap().workers(), 1),
+        );
+        assert_eq!(Engine::native().with_workers(5).workers(), 5);
+        assert_eq!(Engine::native().with_workers(0).workers(), 1);
+    }
+
+    #[test]
+    fn classify_reports_nan_instead_of_panicking() {
+        // A poisoned conductance propagates NaN through the quantisers
+        // to the argmax; pre-fix this was a partial_cmp().unwrap()
+        // panic, now it must surface as an error.
+        let net = Network {
+            name: "nan_probe",
+            layers: &[4, 3, 3],
+            kind: AppKind::Classifier,
+            classes: 3,
+        };
+        let mut params = init_conductances(net.layers, 0);
+        for v in params[0].data.iter_mut() {
+            *v = f32::NAN;
         }
+        let e = Engine::native();
+        let xs = vec![vec![0.1f32, -0.2, 0.3, 0.0]; 3];
+        let err = e.classify(&net, &params, &xs).unwrap_err();
+        assert!(err.to_string().contains("non-finite"), "{err}");
+        // healthy params still classify fine
+        let good = init_conductances(net.layers, 0);
+        assert_eq!(e.classify(&net, &good, &xs).unwrap().len(), 3);
+    }
+
+    #[test]
+    fn sharded_ops_record_parallel_reports() {
+        let net = apps::network("iris_ae").unwrap();
+        let params = init_conductances(net.layers, 1);
+        let mut rng = Rng::seeded(5);
+        let xs: Vec<Vec<f32>> =
+            (0..130).map(|_| rng.vec_uniform(4, -0.5, 0.5)).collect();
+        let e = Engine::native().with_workers(2);
+        assert!(e.last_parallel_report().is_none());
+        e.infer(net, &params, &xs).unwrap();
+        let rep = e.last_parallel_report().unwrap();
+        assert!(rep.op.starts_with("forward_batch/"), "{}", rep.op);
+        assert_eq!(rep.workers, 2);
+        assert!(!rep.shards.is_empty());
+        // shards cover the batch contiguously in reduction order
+        let mut lo = 0;
+        for s in &rep.shards {
+            assert_eq!(s.range.0, lo);
+            lo = s.range.1;
+        }
+        assert_eq!(lo, xs.len());
+        assert!(rep.busy_s() >= 0.0 && rep.wall_s >= 0.0);
+        e.anomaly_scores(net, &params, &xs).unwrap();
+        let rep = e.last_parallel_report().unwrap();
+        assert!(rep.op.starts_with("anomaly_scores/"), "{}", rep.op);
     }
 }

@@ -1,0 +1,403 @@
+//! Sharded execution: a fixed worker pool that is the software twin of
+//! the chip's core mesh.
+//!
+//! The paper's architecture is *multicore* — a mapped network occupies
+//! many mesh cores at once and samples stream through them in parallel.
+//! This module gives the simulator the same execution shape: the
+//! [`Engine`](super::Engine)'s batched operations (`infer`, `kmeans`,
+//! `anomaly_scores`) split their input batches into contiguous,
+//! tile-aligned shards ([`ShardPlan`]) and run the shards on a fixed
+//! pool of `std::thread` workers ([`WorkerPool`]).
+//!
+//! # Determinism contract
+//!
+//! Parallel results are **bit-identical** to the sequential path at any
+//! worker count, guaranteed by construction:
+//!
+//! * shard boundaries are **fixed** by `(n_items, tile, shard count)` —
+//!   never by the worker count — and always tile-aligned, so every
+//!   shard performs exactly the backend calls the sequential loop
+//!   would (same tiles, same padding);
+//! * each shard returns its *partial* results (per-tile outputs and
+//!   accumulator registers) and the caller folds them **left-to-right
+//!   in shard order** on one thread, reproducing the sequential
+//!   floating-point reduction order exactly.
+//!
+//! Workers therefore only decide *when* a shard runs, never *what* it
+//! computes or in which order partials combine.
+//!
+//! The default shard count comes from the `mapper`'s core placement
+//! ([`crate::mapper::shard_hint`]): an app that occupies N mesh cores
+//! is sharded N ways, so the pool parallelises the way the chip does.
+//! The pool size comes from `--workers N` on the CLI or the
+//! `RESTREAM_WORKERS` environment variable ([`default_workers`]).
+//!
+//! Jobs must not submit nested jobs to the same pool (the workers a
+//! nested submission would need may all be blocked on it); the engine's
+//! operations never do.
+
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+
+/// Worker-pool size from `$RESTREAM_WORKERS` (default: 1, sequential).
+/// Unparseable or zero values fall back to 1.
+pub fn default_workers() -> usize {
+    std::env::var("RESTREAM_WORKERS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .map_or(1, |n| n.max(1))
+}
+
+/// Fixed, tile-aligned split of a batch into contiguous shards.
+///
+/// Boundaries depend only on `(n_items, tile, shards)` — see the
+/// module-level determinism contract.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    /// Tile (backend batch) size the shards are aligned to.
+    pub tile: usize,
+    /// Item-index range `[lo, hi)` of each shard, ascending and
+    /// contiguous; every `lo` is a tile multiple.
+    pub bounds: Vec<(usize, usize)>,
+}
+
+impl ShardPlan {
+    /// Split `n_items` into at most `shards` contiguous shards of whole
+    /// `tile`-sized groups (the last tile may be short). Tiles are
+    /// distributed as evenly as possible, earlier shards taking the
+    /// remainder — the same segmentation rule the mapper uses for row
+    /// splits.
+    pub fn contiguous(n_items: usize, tile: usize, shards: usize) -> ShardPlan {
+        assert!(tile > 0, "tile must be positive");
+        let tiles = n_items.div_ceil(tile);
+        if tiles == 0 {
+            return ShardPlan { tile, bounds: Vec::new() };
+        }
+        let shards = shards.clamp(1, tiles);
+        let base = tiles / shards;
+        let extra = tiles % shards;
+        let mut bounds = Vec::with_capacity(shards);
+        let mut tile_lo = 0usize;
+        for s in 0..shards {
+            let tile_hi = tile_lo + base + usize::from(s < extra);
+            let lo = tile_lo * tile;
+            let hi = (tile_hi * tile).min(n_items);
+            bounds.push((lo, hi));
+            tile_lo = tile_hi;
+        }
+        ShardPlan { tile, bounds }
+    }
+
+    /// Number of shards in the plan.
+    pub fn shards(&self) -> usize {
+        self.bounds.len()
+    }
+}
+
+/// Wall-clock of one shard of a sharded operation.
+#[derive(Clone, Debug)]
+pub struct ShardTiming {
+    /// Shard index (= reduction position).
+    pub shard: usize,
+    /// Item-index range `[lo, hi)` the shard covered.
+    pub range: (usize, usize),
+    /// Time the shard spent executing on its worker (s).
+    pub wall_s: f64,
+}
+
+/// Per-shard execution stats of the most recent sharded operation —
+/// the data-parallel sibling of [`TrainReport`](super::TrainReport),
+/// surfaced through [`Engine::last_parallel_report`](super::Engine::last_parallel_report).
+#[derive(Clone, Debug, Default)]
+pub struct ExecReport {
+    /// Operation label, e.g. `forward_batch/mnist_class_fwd_b64`.
+    pub op: String,
+    /// Worker-pool size the operation ran with.
+    pub workers: usize,
+    /// End-to-end wall-clock of the sharded phase (s).
+    pub wall_s: f64,
+    /// Per-shard timings, in shard (= reduction) order.
+    pub shards: Vec<ShardTiming>,
+}
+
+impl ExecReport {
+    /// Sum of per-shard busy time (s) — compare with `wall_s` to read
+    /// the effective parallelism.
+    pub fn busy_s(&self) -> f64 {
+        self.shards.iter().map(|s| s.wall_s).sum()
+    }
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed pool of worker threads executing indexed jobs.
+///
+/// `WorkerPool::new(1)` spawns no threads: jobs run inline on the
+/// caller, which *is* the sequential path (and what the 1-worker bench
+/// configuration measures). Larger pools keep their threads parked on
+/// a shared queue between operations.
+pub struct WorkerPool {
+    workers: usize,
+    /// Job queue into the workers; `None` for the inline (1-worker)
+    /// pool. The mutex makes the pool `Sync` without relying on
+    /// `mpsc::Sender`'s `Sync`-ness (stabilised later than our MSRV).
+    tx: Option<Mutex<mpsc::Sender<Job>>>,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Build a pool of `workers` threads (0 is treated as 1; 1 means
+    /// inline execution, no threads).
+    pub fn new(workers: usize) -> WorkerPool {
+        let workers = workers.max(1);
+        if workers == 1 {
+            return WorkerPool { workers: 1, tx: None, handles: Vec::new() };
+        }
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let rx = Arc::clone(&rx);
+            let handle = thread::Builder::new()
+                .name(format!("restream-shard-{w}"))
+                .spawn(move || loop {
+                    // Hold the receiver lock while blocked on recv:
+                    // idle workers queue on the mutex, and the channel
+                    // closing (pool drop) ends the loop.
+                    let job =
+                        rx.lock().unwrap_or_else(|e| e.into_inner()).recv();
+                    match job {
+                        Ok(job) => job(),
+                        Err(_) => break,
+                    }
+                })
+                .expect("spawning pool worker thread");
+            handles.push(handle);
+        }
+        WorkerPool { workers, tx: Some(Mutex::new(tx)), handles }
+    }
+
+    /// Pool size (1 = inline sequential execution).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run `jobs` indexed jobs, returning their results **in job
+    /// order** (job order, not completion order, so callers' fold is
+    /// deterministic). Blocks until every job has finished; if any job
+    /// panicked, panics after all of them are done.
+    pub fn run<T, F>(&self, jobs: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        if jobs == 0 {
+            return Vec::new();
+        }
+        let Some(tx) = &self.tx else {
+            return (0..jobs).map(&f).collect();
+        };
+        if jobs == 1 {
+            return vec![f(0)];
+        }
+        let slots: Vec<Mutex<Option<T>>> =
+            (0..jobs).map(|_| Mutex::new(None)).collect();
+        let panicked = AtomicBool::new(false);
+        let (done_tx, done_rx) = mpsc::channel::<()>();
+        let run_one = |i: usize| {
+            match panic::catch_unwind(AssertUnwindSafe(|| f(i))) {
+                Ok(v) => {
+                    *slots[i].lock().unwrap_or_else(|e| e.into_inner()) =
+                        Some(v);
+                }
+                Err(_) => panicked.store(true, Ordering::SeqCst),
+            }
+        };
+        {
+            let run_ref: &(dyn Fn(usize) + Sync) = &run_one;
+            // SAFETY: the only thing the lifetime erasure permits is the
+            // worker threads calling `run_one` (and through it `f` and
+            // the locals it borrows) while this stack frame is alive.
+            // The frame cannot be left before every submitted job has
+            // executed: each job sends on `done_tx` after running (its
+            // payload is wrapped in catch_unwind, so the send is
+            // unconditional), and we block on exactly `jobs` acks below
+            // before returning.
+            let run_static = unsafe {
+                std::mem::transmute::<
+                    &(dyn Fn(usize) + Sync),
+                    &'static (dyn Fn(usize) + Sync),
+                >(run_ref)
+            };
+            let tx = tx.lock().unwrap_or_else(|e| e.into_inner());
+            for i in 0..jobs {
+                let done = done_tx.clone();
+                let job: Job = Box::new(move || {
+                    run_static(i);
+                    let _ = done.send(());
+                });
+                tx.send(job).expect("worker pool hung up");
+            }
+        }
+        for _ in 0..jobs {
+            done_rx.recv().expect("a worker dropped a job");
+        }
+        if panicked.load(Ordering::SeqCst) {
+            panic!("a worker shard panicked (original panic on stderr)");
+        }
+        slots
+            .into_iter()
+            .map(|m| {
+                m.into_inner()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .expect("missing shard result")
+            })
+            .collect()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Close the queue so parked workers see a channel error and
+        // exit, then reap them.
+        self.tx.take();
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::forall;
+
+    #[test]
+    fn shard_plan_is_tile_aligned_and_covers() {
+        forall("shard_plan_cover", 120, |rng| {
+            let n = rng.range(0, 1500);
+            let tile = rng.range(1, 90);
+            let shards = rng.range(1, 12);
+            let plan = ShardPlan::contiguous(n, tile, shards);
+            if n == 0 {
+                if plan.shards() != 0 {
+                    return Err("empty input must have no shards".into());
+                }
+                return Ok(());
+            }
+            if plan.shards() > shards {
+                return Err(format!(
+                    "{} shards > requested {shards}",
+                    plan.shards()
+                ));
+            }
+            let mut expect_lo = 0usize;
+            for &(lo, hi) in &plan.bounds {
+                if lo != expect_lo {
+                    return Err(format!("gap: {lo} != {expect_lo}"));
+                }
+                if lo % tile != 0 {
+                    return Err(format!("{lo} not aligned to tile {tile}"));
+                }
+                if hi <= lo {
+                    return Err(format!("empty shard [{lo}, {hi})"));
+                }
+                expect_lo = hi;
+            }
+            if expect_lo != n {
+                return Err(format!("coverage ends at {expect_lo} != {n}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn shard_plan_matches_hand_example() {
+        // 130 items in 64-item tiles = 3 tiles; 5 requested shards clamp
+        // to 3, one tile each.
+        let plan = ShardPlan::contiguous(130, 64, 5);
+        assert_eq!(plan.bounds, vec![(0, 64), (64, 128), (128, 130)]);
+        // 2 shards over 3 tiles: the first takes the extra tile.
+        let plan = ShardPlan::contiguous(130, 64, 2);
+        assert_eq!(plan.bounds, vec![(0, 128), (128, 130)]);
+    }
+
+    #[test]
+    fn shard_plan_ignores_worker_count_by_construction() {
+        // The plan type has no worker parameter at all; pin the fact
+        // that two identically-parameterised plans agree so a future
+        // refactor cannot quietly couple boundaries to the pool.
+        let a = ShardPlan::contiguous(1000, 64, 7);
+        let b = ShardPlan::contiguous(1000, 64, 7);
+        assert_eq!(a.bounds, b.bounds);
+    }
+
+    #[test]
+    fn pool_results_are_in_job_order() {
+        for workers in [1usize, 2, 4, 7] {
+            let pool = WorkerPool::new(workers);
+            let out = pool.run(37, |i| i * i);
+            let expect: Vec<usize> = (0..37).map(|i| i * i).collect();
+            assert_eq!(out, expect, "at {workers} workers");
+            // pools are reusable across operations
+            let out = pool.run(3, |i| i + 1);
+            assert_eq!(out, vec![1, 2, 3]);
+        }
+    }
+
+    #[test]
+    fn pool_runs_jobs_concurrently() {
+        // Two jobs rendezvous on a barrier: completion is only possible
+        // if they run on two workers at once.
+        let pool = WorkerPool::new(2);
+        let barrier = std::sync::Barrier::new(2);
+        let out = pool.run(2, |i| {
+            barrier.wait();
+            i
+        });
+        assert_eq!(out, vec![0, 1]);
+    }
+
+    #[test]
+    fn zero_jobs_and_zero_workers_are_safe() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.workers(), 1);
+        let out: Vec<usize> = pool.run(0, |i| i);
+        assert!(out.is_empty());
+        let out: Vec<usize> = WorkerPool::new(3).run(0, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "worker shard panicked")]
+    fn pool_propagates_job_panics() {
+        let pool = WorkerPool::new(3);
+        pool.run(5, |i| {
+            if i == 3 {
+                panic!("boom");
+            }
+            i
+        });
+    }
+
+    #[test]
+    fn default_workers_parses_env() {
+        crate::testing::with_env(
+            &[("RESTREAM_WORKERS", Some("6"))],
+            || assert_eq!(default_workers(), 6),
+        );
+        crate::testing::with_env(
+            &[("RESTREAM_WORKERS", Some("0"))],
+            || assert_eq!(default_workers(), 1),
+        );
+        crate::testing::with_env(
+            &[("RESTREAM_WORKERS", Some("a lot"))],
+            || assert_eq!(default_workers(), 1),
+        );
+        crate::testing::with_env(&[("RESTREAM_WORKERS", None)], || {
+            assert_eq!(default_workers(), 1)
+        });
+    }
+}

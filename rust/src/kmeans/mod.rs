@@ -77,6 +77,11 @@ impl KMeans {
     /// drives the core. Assignments are identical to [`KMeans::epoch`];
     /// centres agree up to float summation order across batches.
     ///
+    /// This is the single-threaded reference driver; the production
+    /// path is `coordinator::Engine::kmeans`, which runs the same
+    /// per-tile passes sharded over the worker pool with a
+    /// deterministic left-to-right register fold.
+    ///
     /// [`Backend`]: crate::runtime::Backend
     pub fn epoch_on(
         &mut self,

@@ -17,7 +17,10 @@
 //!   the default **native** backend runs the reference kernels in-process
 //!   (no artifacts, no Python, no XLA anywhere), while the `pjrt` cargo
 //!   feature adds the artifact-executing PJRT backend. Python never runs
-//!   on the request path.
+//!   on the request path. Batched operations execute data-parallel over
+//!   the coordinator's worker pool ([`coordinator::pool`]), sharded the
+//!   way the mapper spreads each app over the chip's core mesh —
+//!   bit-identical to sequential execution at any worker count.
 //!
 //! See `DESIGN.md` for the system inventory, the backend-selection story
 //! and the experiment index, and `EXPERIMENTS.md` for paper-vs-measured

@@ -13,9 +13,11 @@
 //! ```
 //!
 //! Every functional-math subcommand accepts `--backend native|pjrt`
-//! (default: `$RESTREAM_BACKEND` or `native`). The native backend needs
-//! no artifacts; `pjrt` needs the crate built with `--features pjrt`
-//! plus `make artifacts`.
+//! (default: `$RESTREAM_BACKEND` or `native`) and `--workers N`
+//! (default: `$RESTREAM_WORKERS` or 1) — the worker-pool size the
+//! batched operations shard over; results are bit-identical at any
+//! worker count. The native backend needs no artifacts; `pjrt` needs
+//! the crate built with `--features pjrt` plus `make artifacts`.
 
 use std::collections::HashMap;
 use std::process::ExitCode;
@@ -96,12 +98,19 @@ fn run(args: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Engine over the backend picked by `--backend` (or the environment).
+/// Engine over the backend picked by `--backend` (or the environment),
+/// sharding batched operations over `--workers` pool threads (default:
+/// `$RESTREAM_WORKERS`, else 1). Results are bit-identical at any
+/// worker count — see DESIGN.md "Parallel execution".
 fn engine_for(f: &HashMap<String, String>) -> anyhow::Result<Engine> {
-    match f.get("backend") {
+    let engine = match f.get("backend") {
         Some(name) => Engine::named(name),
         None => Engine::open_default(),
-    }
+    }?;
+    let workers: usize =
+        get(f, "workers", restream::coordinator::default_workers())
+            .map_err(anyhow::Error::msg)?;
+    Ok(engine.with_workers(workers))
 }
 
 fn dataset_for(app: &str, n: usize, seed: u64) -> anyhow::Result<datasets::Dataset> {
@@ -198,7 +207,26 @@ fn cmd_infer(f: &HashMap<String, String>) -> anyhow::Result<()> {
         dt,
         outs.len() as f64 / dt
     );
+    print_parallel_report(&engine);
     Ok(())
+}
+
+/// Per-shard stats of the last sharded operation, printed by every
+/// subcommand that runs one (only informative above 1 worker).
+fn print_parallel_report(engine: &Engine) {
+    if engine.workers() <= 1 {
+        return;
+    }
+    if let Some(rep) = engine.last_parallel_report() {
+        println!(
+            "parallel: {} workers, {} shards, shard busy {:.3}s \
+             over wall {:.3}s",
+            rep.workers,
+            rep.shards.len(),
+            rep.busy_s(),
+            rep.wall_s
+        );
+    }
 }
 
 fn cmd_cluster(f: &HashMap<String, String>) -> anyhow::Result<()> {
@@ -218,6 +246,7 @@ fn cmd_cluster(f: &HashMap<String, String>) -> anyhow::Result<()> {
         ka.clusters,
         metrics::purity(&assign, &ds.y, ka.clusters, ds.classes)
     );
+    print_parallel_report(&engine);
     Ok(())
 }
 
@@ -239,6 +268,7 @@ fn cmd_anomaly(f: &HashMap<String, String>) -> anyhow::Result<()> {
         metrics::auc(&pts),
         100.0 * metrics::tpr_at_fpr(&pts, 0.04)
     );
+    print_parallel_report(&engine);
     Ok(())
 }
 
@@ -247,6 +277,7 @@ fn print_usage() {
         "restream — memristor multicore chip simulator\n\
          usage: restream <chip|report|train|infer|cluster|anomaly> [--flags]\n\
          math subcommands take --backend native|pjrt (default native)\n\
+         and --workers N (worker-pool size, default $RESTREAM_WORKERS or 1)\n\
          see rust/src/main.rs docs and README.md for details"
     );
 }

@@ -227,6 +227,19 @@ pub fn map_network(net: &Network, sys: &SystemConfig) -> Result<NetworkMap, Stri
     Ok(map)
 }
 
+/// Data-parallel shard hint for the coordinator's worker pool
+/// (`coordinator::pool`): the number of mesh cores the app's mapping
+/// occupies at peak. The software pool shards input batches the way
+/// the chip spreads the network over its core mesh, making the pool
+/// the execution twin of the placement. Apps that fail to map (a
+/// layer larger than the core budget, or clustering-core workloads,
+/// which this mapper rejects) fall back to a single shard.
+pub fn shard_hint(net: &Network, sys: &SystemConfig) -> usize {
+    map_network(net, sys)
+        .map(|m| m.cores_used().max(1))
+        .unwrap_or(1)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -319,6 +332,22 @@ mod tests {
                 "mnist {}", mnist.cores_used());
         assert!(isolet.cores_used() > mnist.cores_used());
         assert!(isolet.cores_used() <= 144, "isolet {}", isolet.cores_used());
+    }
+
+    #[test]
+    fn shard_hint_mirrors_core_demand() {
+        let sys = SystemConfig::default();
+        for net in apps::NETWORKS {
+            let hint = shard_hint(net, &sys);
+            let cores =
+                map_network(net, &sys).map(|m| m.cores_used()).unwrap_or(0);
+            assert_eq!(hint, cores.max(1), "{}", net.name);
+            assert!(hint >= 1 && hint <= sys.neural_cores, "{}", net.name);
+        }
+        // a single-core app parallelises 1-way, the paper's big nets
+        // many-way — the pool scales with the placement
+        assert_eq!(shard_hint(apps::network("kdd_ae").unwrap(), &sys), 2);
+        assert!(shard_hint(apps::network("mnist_class").unwrap(), &sys) > 10);
     }
 
     #[test]

@@ -143,6 +143,10 @@ impl Mlp {
     /// sufficient to rebuild this network. For the native backend the
     /// result is bitwise identical to [`Mlp::forward`].
     ///
+    /// This is the per-sample reference driver; the batched production
+    /// path is `coordinator::Engine::infer`, which shards samples over
+    /// the worker pool (bit-identical at any worker count).
+    ///
     /// [`Backend`]: crate::runtime::Backend
     pub fn forward_on(
         &self,

@@ -70,6 +70,17 @@ pub struct KmeansStep {
 }
 
 /// A compute backend for the chip's functional math.
+///
+/// # Thread safety
+///
+/// `Backend` requires `Send + Sync`: the coordinator's worker pool
+/// (`coordinator::pool`) calls the graph-level operations concurrently
+/// from its shard workers, sharing one backend by reference.
+/// Implementations must be internally synchronised — [`NativeBackend`]
+/// is a stateless unit struct, and the `pjrt` backend guards its
+/// executable cache behind `Arc<Mutex<…>>` (the compiler enforces the
+/// bound on every implementor; `backends_are_thread_safe` below pins
+/// it explicitly).
 pub trait Backend: Send + Sync {
     /// Short identifier ("native", "pjrt") for logs and reports.
     fn name(&self) -> &'static str;
@@ -228,6 +239,19 @@ mod tests {
 
     fn rand_params(layers: &[usize], seed: u64) -> Vec<ArrayF32> {
         crate::coordinator::init_conductances(layers, seed)
+    }
+
+    #[test]
+    fn backends_are_thread_safe() {
+        // The worker pool shares one backend across shard threads;
+        // pin Send + Sync for every implementor and for the boxed
+        // trait object the Engine holds.
+        fn assert_send_sync<T: Send + Sync + ?Sized>() {}
+        assert_send_sync::<NativeBackend>();
+        assert_send_sync::<dyn Backend>();
+        assert_send_sync::<Box<dyn Backend>>();
+        #[cfg(feature = "pjrt")]
+        assert_send_sync::<crate::runtime::PjrtBackend>();
     }
 
     #[test]

@@ -13,6 +13,14 @@
 //! device-resident across calls via [`Executable::run_buffers`] — the
 //! training hot loop only uploads the sample, not the weights.
 //!
+//! Thread safety: [`Backend`] requires `Send + Sync` (the coordinator's
+//! worker pool shares one backend across shard threads). The only
+//! mutable state here is the executable cache, which [`Runtime`] guards
+//! behind a `Mutex`; compiled [`Executable`]s are shared as `Arc`s and
+//! execution itself takes `&self`. The real `xla` crate's handle types
+//! wrap thread-safe PJRT C-API objects, matching the vendored stub's
+//! plain owned structs.
+//!
 //! The default build links `rust/vendor/xla`, an API stub whose device
 //! operations report unavailability at runtime; swap that path
 //! dependency for the published `xla` crate (plus an installed

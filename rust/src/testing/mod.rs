@@ -30,6 +30,44 @@ where
     }
 }
 
+/// Run `f` with environment variables scoped-overridden (`None`
+/// removes the variable), restoring the previous values afterwards —
+/// on panic too, via a drop guard. Overrides are serialised through a
+/// process-wide lock so concurrently running tests cannot interleave
+/// their mutations of the (process-global) environment.
+pub fn with_env<T>(
+    vars: &[(&str, Option<&str>)],
+    f: impl FnOnce() -> T,
+) -> T {
+    static ENV_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    // A panic inside an earlier `f` poisons the lock but leaves the
+    // environment restored (the guard ran); keep going.
+    let _serialise = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    struct Restore(Vec<(String, Option<String>)>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            for (key, prev) in &self.0 {
+                match prev {
+                    Some(v) => std::env::set_var(key, v),
+                    None => std::env::remove_var(key),
+                }
+            }
+        }
+    }
+    let _restore = Restore(
+        vars.iter()
+            .map(|(key, _)| ((*key).to_string(), std::env::var(key).ok()))
+            .collect(),
+    );
+    for (key, value) in vars {
+        match value {
+            Some(v) => std::env::set_var(key, v),
+            None => std::env::remove_var(key),
+        }
+    }
+    f()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -42,6 +80,41 @@ mod tests {
             Ok(())
         });
         assert_eq!(n, 25);
+    }
+
+    #[test]
+    fn with_env_sets_and_restores() {
+        // Probe key unique to this test, ambient-unset; every mutation
+        // goes through with_env itself so no write happens outside its
+        // lock (raw set_var here would race other threads' locked
+        // overrides).
+        let key = "RESTREAM_WITH_ENV_PROBE";
+        assert!(std::env::var(key).is_err());
+        let out = with_env(&[(key, Some("inside"))], || {
+            assert_eq!(std::env::var(key).unwrap(), "inside");
+            42
+        });
+        assert_eq!(out, 42);
+        assert!(std::env::var(key).is_err(), "override not rolled back");
+        // removing an absent variable is a no-op and still restores
+        with_env(&[(key, None)], || {
+            assert!(std::env::var(key).is_err());
+        });
+        assert!(std::env::var(key).is_err());
+    }
+
+    #[test]
+    fn with_env_restores_on_panic() {
+        let key = "RESTREAM_WITH_ENV_PANIC_PROBE";
+        assert!(std::env::var(key).is_err());
+        let result = std::panic::catch_unwind(|| {
+            with_env(&[(key, Some("scoped"))], || panic!("inner"));
+        });
+        assert!(result.is_err());
+        assert!(
+            std::env::var(key).is_err(),
+            "panicking scope must roll back"
+        );
     }
 
     #[test]

@@ -1,0 +1,129 @@
+//! Parallel determinism: the sharded execution layer must be a pure
+//! scheduling change. `infer`, `kmeans` and `anomaly_scores` results
+//! are **bit-identical** across worker counts {1, 2, 4, 7} on every
+//! registered application — shard boundaries are fixed by the plan
+//! (never the pool size) and partials reduce left-to-right on one
+//! thread (see `coordinator::pool` for the contract).
+
+use restream::config::apps;
+use restream::coordinator::{init_conductances, Engine};
+use restream::testing::{forall, Rng};
+
+/// Worker counts swept everywhere below; 7 is deliberately coprime
+/// with the 64-sample tile and every shard-hint value.
+const SWEEP: [usize; 3] = [2, 4, 7];
+
+fn rows(rng: &mut Rng, n: usize, dims: usize) -> Vec<Vec<f32>> {
+    (0..n).map(|_| rng.vec_uniform(dims, -0.5, 0.5)).collect()
+}
+
+#[test]
+fn infer_is_bit_identical_across_worker_counts_on_all_apps() {
+    for net in apps::NETWORKS {
+        // enough samples to cross a tile boundary; fewer for the big
+        // ISOLET stacks to keep debug-mode test time sane
+        let n = if net.layers[0] > 500 { 65 } else { 130 };
+        let mut rng = Rng::seeded(0xC0DE ^ net.layers[0] as u64);
+        let xs = rows(&mut rng, n, net.layers[0]);
+        let params = init_conductances(net.layers, 7);
+        let reference = Engine::native()
+            .with_workers(1)
+            .infer(net, &params, &xs)
+            .unwrap();
+        assert_eq!(reference.len(), n, "{}", net.name);
+        for &w in &SWEEP {
+            let out = Engine::native()
+                .with_workers(w)
+                .infer(net, &params, &xs)
+                .unwrap();
+            assert_eq!(reference, out, "{} at {w} workers", net.name);
+        }
+    }
+}
+
+#[test]
+fn kmeans_is_bit_identical_across_worker_counts_on_all_apps() {
+    for app in apps::KMEANS_APPS {
+        let mut rng = Rng::seeded(0x5EED ^ app.clusters as u64);
+        let xs = rows(&mut rng, 300, app.dims); // 5 tiles (last short)
+        let (ref_centres, ref_assign) = Engine::native()
+            .with_workers(1)
+            .kmeans(app, &xs, 4, 3)
+            .unwrap();
+        for &w in &SWEEP {
+            let (centres, assign) = Engine::native()
+                .with_workers(w)
+                .kmeans(app, &xs, 4, 3)
+                .unwrap();
+            assert_eq!(ref_centres, centres, "{} at {w} workers", app.name);
+            assert_eq!(ref_assign, assign, "{} at {w} workers", app.name);
+        }
+    }
+}
+
+#[test]
+fn anomaly_scores_are_bit_identical_across_worker_counts() {
+    for name in ["kdd_ae", "iris_ae"] {
+        let net = apps::network(name).unwrap();
+        let mut rng = Rng::seeded(0xA0A ^ net.layers[0] as u64);
+        let xs = rows(&mut rng, 200, net.layers[0]);
+        let params = init_conductances(net.layers, 11);
+        let reference = Engine::native()
+            .with_workers(1)
+            .anomaly_scores(net, &params, &xs)
+            .unwrap();
+        for &w in &SWEEP {
+            let scores = Engine::native()
+                .with_workers(w)
+                .anomaly_scores(net, &params, &xs)
+                .unwrap();
+            // f64 scores: compare to the bit
+            assert_eq!(reference, scores, "{name} at {w} workers");
+        }
+    }
+}
+
+#[test]
+fn randomized_batch_sizes_stay_deterministic() {
+    // Random batch lengths (including < 1 tile and ragged tails) and
+    // random worker pairs on the cheap apps; one reusable engine per
+    // worker count to also cover pool reuse across operations.
+    let net = apps::network("kdd_ae").unwrap();
+    let app = apps::kmeans_app("mnist_kmeans").unwrap();
+    forall("parallel_determinism", 10, |rng| {
+        let n = rng.range(1, 220);
+        let seed = rng.next_u64();
+        let xs: Vec<Vec<f32>> = (0..n)
+            .map(|_| rng.vec_uniform(net.layers[0], -0.5, 0.5))
+            .collect();
+        let params = init_conductances(net.layers, seed);
+        let wa = SWEEP[rng.below(SWEEP.len())];
+        let ea = Engine::native().with_workers(wa);
+        let e1 = Engine::native().with_workers(1);
+        let a = ea.infer(net, &params, &xs).map_err(|e| e.to_string())?;
+        let b = e1.infer(net, &params, &xs).map_err(|e| e.to_string())?;
+        if a != b {
+            return Err(format!("infer diverged at {wa} workers, n={n}"));
+        }
+        let sa = ea
+            .anomaly_scores(net, &params, &xs)
+            .map_err(|e| e.to_string())?;
+        let sb = e1
+            .anomaly_scores(net, &params, &xs)
+            .map_err(|e| e.to_string())?;
+        if sa != sb {
+            return Err(format!("anomaly diverged at {wa} workers, n={n}"));
+        }
+        // at least `clusters` samples so centre seeding succeeds
+        let km = rng.range(app.clusters, 150);
+        let kxs: Vec<Vec<f32>> = (0..km)
+            .map(|_| rng.vec_uniform(app.dims, -0.5, 0.5))
+            .collect();
+        let ka = ea.kmeans(app, &kxs, 3, seed).map_err(|e| e.to_string())?;
+        let kb = e1.kmeans(app, &kxs, 3, seed).map_err(|e| e.to_string())?;
+        if ka != kb {
+            return Err(format!("kmeans diverged at {wa} workers, n={km}"));
+        }
+        Ok(())
+    });
+}
