@@ -3,8 +3,8 @@
 
 ARTIFACTS ?= artifacts
 
-.PHONY: build test bench bench-parallel clippy doc fmt artifacts pytest \
-	cargotest-pjrt
+.PHONY: build test bench bench-parallel bench-serving clippy doc fmt \
+	artifacts pytest cargotest-pjrt
 
 build:
 	cargo build --release
@@ -20,6 +20,11 @@ bench:
 bench-parallel:
 	BENCH_PARALLEL_OUT=$(abspath BENCH_parallel.json) \
 		cargo bench --bench perf_parallel
+
+# Serving throughput/latency sweep (clients x batching window).
+bench-serving:
+	BENCH_SERVING_OUT=$(abspath BENCH_serving.json) \
+		cargo bench --bench perf_serving
 
 clippy:
 	cargo clippy --all-targets -- -D warnings

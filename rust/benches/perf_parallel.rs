@@ -19,7 +19,7 @@
 //! results (see `coordinator::pool`); this bench only measures how
 //! fast the fixed computation goes.
 
-use restream::benchutil::section;
+use restream::benchutil::{env_usize, section};
 use restream::config::apps;
 use restream::coordinator::{init_conductances, Engine};
 use restream::testing::Rng;
@@ -31,13 +31,6 @@ struct OpResult {
     workers: usize,
     wall_s: f64,
     samples_per_s: f64,
-}
-
-fn env_usize(key: &str, default: usize) -> usize {
-    std::env::var(key)
-        .ok()
-        .and_then(|v| v.trim().parse().ok())
-        .unwrap_or(default)
 }
 
 /// Best-of-`repeats` wall clock of `f`, after one warmup run.

@@ -1,0 +1,224 @@
+//! §Perf: serving throughput/latency of the micro-batching front end.
+//!
+//! A closed-loop load generator drives `restream::serve` (DESIGN.md
+//! "Serving layer"): N client threads each issue single-sample
+//! requests back-to-back, so at most N requests are ever in flight and
+//! micro-batch sizes track the client count. Measures aggregate
+//! throughput (requests/s) and server-side p50/p99 latency across
+//! client counts × batching windows, and writes the machine-readable
+//! summary to `BENCH_serving.json` — relative to the bench's working
+//! directory (under `cargo bench` that is the crate root `rust/`);
+//! override with `$BENCH_SERVING_OUT` (CI and `make bench-serving`
+//! pin it to the repo root).
+//!
+//! The headline comparison: micro-batched serving at 8 clients vs the
+//! 1-client `max_batch = 1` sequential baseline. Every dispatch pads
+//! to the chip's 64-sample tile, so a sequential single-sample server
+//! wastes 63/64 of each tile — coalescing is what the hardware model
+//! rewards. CI's `bench-smoke` job runs this at reduced scale and
+//! fails when `speedup_8v1` drops below 1.0.
+//!
+//! Scale knobs: `$PERF_SERVING_REQUESTS` (per client, default 128) and
+//! `$PERF_SERVING_APP` (default `mnist_class`).
+//!
+//! Determinism note: every configuration computes bit-identical
+//! per-request results (see `tests/serving_determinism.rs`); this
+//! bench only measures how fast the answers come back.
+
+use std::time::{Duration, Instant};
+
+use restream::benchutil::{env_usize, section};
+use restream::config::{apps, Network};
+use restream::coordinator::{init_conductances, Engine};
+use restream::runtime::ArrayF32;
+use restream::serve::{ServeConfig, Server};
+use restream::testing::Rng;
+
+const CLIENT_COUNTS: [usize; 4] = [1, 2, 4, 8];
+const WAITS_US: [u64; 3] = [0, 200, 1000];
+
+struct Row {
+    clients: usize,
+    max_batch: usize,
+    max_wait_us: u64,
+    throughput_rps: f64,
+    p50_us: f64,
+    p99_us: f64,
+    mean_batch: f64,
+}
+
+/// One closed-loop run: start a server, hammer it from `clients`
+/// threads (`requests` each), and fold the server's own report into a
+/// result row.
+fn run_config(
+    net: &Network,
+    params: &[ArrayF32],
+    pool: &[Vec<f32>],
+    clients: usize,
+    requests: usize,
+    max_batch: usize,
+    max_wait_us: u64,
+) -> Row {
+    let cfg = ServeConfig {
+        max_batch,
+        max_wait: Duration::from_micros(max_wait_us),
+        queue_capacity: None,
+    };
+    let server =
+        Server::start(Engine::native(), net.clone(), params.to_vec(), cfg);
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let client = server.client();
+            // Each client replays a distinct deterministic slice of the
+            // sample pool.
+            let rows: Vec<Vec<f32>> = (0..requests)
+                .map(|r| pool[(c * 131 + r) % pool.len()].clone())
+                .collect();
+            std::thread::spawn(move || {
+                for x in rows {
+                    client.call(x).expect("serve request failed");
+                }
+            })
+        })
+        .collect();
+    for handle in handles {
+        handle.join().expect("load-generator client panicked");
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let report = server.shutdown();
+    Row {
+        clients,
+        max_batch,
+        max_wait_us,
+        throughput_rps: report.requests as f64 / wall_s.max(1e-12),
+        p50_us: report.total.p50_us,
+        p99_us: report.total.p99_us,
+        mean_batch: report.mean_batch(),
+    }
+}
+
+fn print_row(r: &Row) {
+    println!(
+        "bench serving/c{}/b{}/w{}us {:>9.0} req/s  p50 {:>9.1} us  \
+         p99 {:>9.1} us  mean batch {:>5.1}",
+        r.clients,
+        r.max_batch,
+        r.max_wait_us,
+        r.throughput_rps,
+        r.p50_us,
+        r.p99_us,
+        r.mean_batch
+    );
+}
+
+fn json_row(r: &Row) -> String {
+    format!(
+        "{{\"clients\": {}, \"max_batch\": {}, \"max_wait_us\": {}, \
+         \"throughput_rps\": {:.2}, \"p50_us\": {:.2}, \"p99_us\": {:.2}, \
+         \"mean_batch\": {:.3}}}",
+        r.clients,
+        r.max_batch,
+        r.max_wait_us,
+        r.throughput_rps,
+        r.p50_us,
+        r.p99_us,
+        r.mean_batch
+    )
+}
+
+fn json_report(
+    app: &str,
+    requests: usize,
+    baseline: &Row,
+    results: &[Row],
+    speedup_8v1: f64,
+) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str(&format!(
+        "  \"bench\": \"perf_serving\",\n  \"app\": \"{app}\",\n  \
+         \"requests_per_client\": {requests},\n"
+    ));
+    s.push_str(&format!("  \"baseline\": {},\n", json_row(baseline)));
+    s.push_str("  \"results\": [\n");
+    for (i, r) in results.iter().enumerate() {
+        let sep = if i + 1 < results.len() { "," } else { "" };
+        s.push_str(&format!("    {}{sep}\n", json_row(r)));
+    }
+    s.push_str("  ],\n");
+    s.push_str(&format!(
+        "  \"baseline_1client_rps\": {:.2},\n",
+        baseline.throughput_rps
+    ));
+    let batched8 = best_8client_rps(results);
+    s.push_str(&format!("  \"batched_8client_rps\": {batched8:.2},\n"));
+    s.push_str(&format!("  \"speedup_8v1\": {speedup_8v1:.4}\n"));
+    s.push_str("}\n");
+    s
+}
+
+/// Best throughput over the 8-client batched configurations.
+fn best_8client_rps(results: &[Row]) -> f64 {
+    results
+        .iter()
+        .filter(|r| r.clients == 8)
+        .map(|r| r.throughput_rps)
+        .fold(0.0, f64::max)
+}
+
+fn main() -> anyhow::Result<()> {
+    let requests = env_usize("PERF_SERVING_REQUESTS", 128).max(1);
+    let app = std::env::var("PERF_SERVING_APP")
+        .unwrap_or_else(|_| "mnist_class".to_string());
+    let net = apps::network(&app)
+        .ok_or_else(|| anyhow::anyhow!("unknown app {app}"))?;
+    let params = init_conductances(net.layers, 0);
+    let mut rng = Rng::seeded(0xBEEF);
+    let pool: Vec<Vec<f32>> = (0..256)
+        .map(|_| rng.vec_uniform(net.layers[0], -0.5, 0.5))
+        .collect();
+    println!(
+        "perf_serving: {app}, {requests} requests/client, clients {:?}, \
+         waits {:?} us",
+        CLIENT_COUNTS, WAITS_US
+    );
+
+    section("baseline: 1 client, max_batch 1 (sequential dispatch)");
+    let baseline = run_config(net, &params, &pool, 1, requests, 1, 0);
+    print_row(&baseline);
+
+    section("micro-batched sweep (max_batch 64 = chip tile)");
+    let mut results = Vec::new();
+    for &clients in &CLIENT_COUNTS {
+        for &wait_us in &WAITS_US {
+            let row = run_config(
+                net,
+                &params,
+                &pool,
+                clients,
+                requests,
+                apps::FWD_BATCH,
+                wait_us,
+            );
+            print_row(&row);
+            results.push(row);
+        }
+    }
+
+    section("summary");
+    let speedup_8v1 =
+        best_8client_rps(&results) / baseline.throughput_rps.max(1e-12);
+    println!(
+        "batched 8-client vs sequential 1-client throughput: \
+         {speedup_8v1:.2}x"
+    );
+    let out_path = std::env::var("BENCH_SERVING_OUT")
+        .unwrap_or_else(|_| "BENCH_serving.json".to_string());
+    std::fs::write(
+        &out_path,
+        json_report(&app, requests, &baseline, &results, speedup_8v1),
+    )?;
+    println!("wrote {out_path}");
+    Ok(())
+}

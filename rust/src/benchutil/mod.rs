@@ -54,6 +54,16 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// Scale knob from the environment: parse `$key` as a usize, falling
+/// back to `default` when unset or unparseable. Shared by the bench
+/// binaries (`PERF_PARALLEL_SAMPLES`, `PERF_SERVING_REQUESTS`, …).
+pub fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.trim().parse().ok())
+        .unwrap_or(default)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -65,5 +75,20 @@ mod tests {
         assert_eq!(n, 12);
         assert_eq!(t.iters, 10);
         assert!(t.min_s <= t.mean_s && t.mean_s <= t.max_s);
+    }
+
+    #[test]
+    fn env_usize_parses_and_defaults() {
+        crate::testing::with_env(
+            &[("RESTREAM_BENCH_PROBE", Some("42"))],
+            || assert_eq!(env_usize("RESTREAM_BENCH_PROBE", 7), 42),
+        );
+        crate::testing::with_env(
+            &[("RESTREAM_BENCH_PROBE", Some("nope"))],
+            || assert_eq!(env_usize("RESTREAM_BENCH_PROBE", 7), 7),
+        );
+        crate::testing::with_env(&[("RESTREAM_BENCH_PROBE", None)], || {
+            assert_eq!(env_usize("RESTREAM_BENCH_PROBE", 7), 7)
+        });
     }
 }

@@ -31,6 +31,11 @@
 //! path at any worker count (see [`pool`] for the determinism
 //! contract). Training stays sequential — per-sample stochastic BP is
 //! a serial dependence chain by definition.
+//!
+//! Callers holding *independent single-sample requests* rather than
+//! pre-formed batches go through the serving front end
+//! ([`crate::serve`]), which micro-batches them into tile-aligned
+//! [`Engine::infer`] calls over the same pool.
 
 pub mod params;
 pub mod pool;

@@ -35,6 +35,12 @@
 //! Jobs must not submit nested jobs to the same pool (the workers a
 //! nested submission would need may all be blocked on it); the engine's
 //! operations never do.
+//!
+//! The serving layer ([`crate::serve`]) sits directly on these sharded
+//! operations: every micro-batch it coalesces dispatches through
+//! [`Engine::infer`](super::Engine::infer), so serving inherits this
+//! determinism contract wholesale — which is what makes a request's
+//! result independent of the batch it lands in.
 
 use std::panic::{self, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};

@@ -3,6 +3,10 @@
 //! input buffer; the consumer (the training loop) drains it. When the
 //! consumer falls behind, the producer blocks — the same backpressure
 //! the real DMA sees when the input buffer fills.
+//!
+//! [`buffer_capacity`] is the shared sizing rule: the training stream
+//! here and the serving request queue ([`crate::serve`]) both bound
+//! their channels to what the hardware input buffer actually holds.
 
 use std::sync::mpsc::{sync_channel, SyncSender};
 use std::thread;
@@ -11,10 +15,33 @@ use anyhow::Result;
 
 use crate::config::SystemConfig;
 
-/// Channel capacity for a given sample width, matching the input buffer.
+/// Bounded-queue capacity in *samples* for a given sample width,
+/// sized like the chip's 4 kB input buffer
+/// ([`SystemConfig::input_buffer_bytes`]):
+///
+/// ```text
+/// capacity = max(1, input_buffer_bytes / (sample_dims * size_of::<f32>()))
+/// ```
+///
+/// Samples cross the DMA front as f32 words, so a 784-dim MNIST sample
+/// occupies 3 136 bytes and barely one fits the buffer, while a 4-dim
+/// Iris sample fits 256 times. (An earlier revision divided by the
+/// dimension count alone, modeling a DMA queue 4× deeper than the
+/// hardware buffer.) A sample wider than the whole buffer still gets
+/// one slot — the DMA streams it through in fragments.
+///
+/// Both the training stream ([`run`]) and the serving front end
+/// ([`crate::serve`]) bound their queues with this capacity.
+///
+/// ```
+/// use restream::coordinator::stream::buffer_capacity;
+/// assert_eq!(buffer_capacity(784), 1); // 4096 / (784 * 4) = 1.30…
+/// assert_eq!(buffer_capacity(4), 256); // 4096 / (4 * 4)
+/// ```
 pub fn buffer_capacity(sample_dims: usize) -> usize {
     let sys = SystemConfig::default();
-    (sys.input_buffer_bytes / sample_dims.max(1)).max(1)
+    let sample_bytes = sample_dims.max(1) * std::mem::size_of::<f32>();
+    (sys.input_buffer_bytes / sample_bytes).max(1)
 }
 
 /// Stream `xs` in `order` through a bounded queue into `consume(i, x)`.
@@ -85,10 +112,43 @@ mod tests {
 
     #[test]
     fn capacity_tracks_input_buffer() {
-        // 4 kB buffer, 784-float samples -> 5 slots; 4-float -> 1024.
-        assert_eq!(buffer_capacity(784), 5);
-        assert_eq!(buffer_capacity(4), 1024);
-        assert_eq!(buffer_capacity(0), 4096);
+        // 4 kB buffer of f32 words: 784 dims -> 3136 B -> 1 slot;
+        // 4 dims -> 16 B -> 256 slots; degenerate 0 dims clamps to the
+        // 1-word sample (1024 slots); oversized samples keep 1 slot.
+        assert_eq!(buffer_capacity(784), 1);
+        assert_eq!(buffer_capacity(4), 256);
+        assert_eq!(buffer_capacity(0), 1024);
+        assert_eq!(buffer_capacity(5000), 1);
+    }
+
+    #[test]
+    fn capacity_pinned_for_registered_apps() {
+        use crate::config::apps;
+        // input_buffer_bytes / (dims * 4), floored, min 1 — pinned per
+        // registered app so the modeled DMA depth cannot silently
+        // drift from the 4 kB hardware buffer again.
+        let expect = [
+            ("iris_class", 256), // 4 dims
+            ("iris_ae", 256),
+            ("kdd_ae", 24),     // 41 dims -> 4096/164
+            ("mnist_class", 1), // 784 dims -> 3136 B/sample
+            ("mnist_dr", 1),
+            ("isolet_class", 1), // 617 dims -> 2468 B/sample
+            ("isolet_dr", 1),
+        ];
+        for (name, capacity) in expect {
+            let net = apps::network(name).unwrap();
+            assert_eq!(
+                buffer_capacity(net.layers[0]),
+                capacity,
+                "{name} ({} dims)",
+                net.layers[0]
+            );
+        }
+        for app in apps::KMEANS_APPS {
+            // 20 reduced dims -> 80 B/sample -> 51 slots
+            assert_eq!(buffer_capacity(app.dims), 51, "{}", app.name);
+        }
     }
 
     #[test]

@@ -20,7 +20,11 @@
 //!   on the request path. Batched operations execute data-parallel over
 //!   the coordinator's worker pool ([`coordinator::pool`]), sharded the
 //!   way the mapper spreads each app over the chip's core mesh —
-//!   bit-identical to sequential execution at any worker count.
+//!   bit-identical to sequential execution at any worker count. On top
+//!   of the pool sits the serving front end ([`serve`]): a bounded
+//!   request queue plus a dynamic micro-batcher that coalesces
+//!   independent single-sample requests into tile-aligned batches
+//!   (`restream serve` on the CLI).
 //!
 //! See `DESIGN.md` for the system inventory, the backend-selection story
 //! and the experiment index, and `EXPERIMENTS.md` for paper-vs-measured
@@ -43,5 +47,6 @@ pub mod noc;
 pub mod power;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod testing;

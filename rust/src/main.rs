@@ -10,7 +10,17 @@
 //! restream infer   --app NAME [--seed N]
 //! restream cluster --app NAME [--epochs N]
 //! restream anomaly [--epochs N]
+//! restream serve   --app NAME [--source stdin|replay] [--max-batch N]
+//!                  [--max-wait-us N] [--clients N] [--requests N]
 //! ```
+//!
+//! `serve` runs the micro-batching request server (`restream::serve`,
+//! DESIGN.md "Serving layer"): `--source stdin` reads one
+//! whitespace/comma-separated sample per line and prints `<id> <out…>`
+//! lines (summary on stderr); the default `--source replay` drives the
+//! server closed-loop from `--clients` threads issuing `--requests`
+//! deterministic requests each and prints the latency/throughput
+//! summary.
 //!
 //! Every functional-math subcommand accepts `--backend native|pjrt`
 //! (default: `$RESTREAM_BACKEND` or `native`) and `--workers N`
@@ -24,6 +34,7 @@ use std::process::ExitCode;
 
 use restream::config::{apps, SystemConfig};
 use restream::coordinator::Engine;
+use restream::serve::{ServeConfig, Server};
 use restream::{datasets, metrics, report};
 
 fn main() -> ExitCode {
@@ -90,6 +101,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         "infer" => cmd_infer(&f)?,
         "cluster" => cmd_cluster(&f)?,
         "anomaly" => cmd_anomaly(&f)?,
+        "serve" => cmd_serve(&f)?,
         other => {
             print_usage();
             anyhow::bail!("unknown command {other}");
@@ -272,12 +284,162 @@ fn cmd_anomaly(f: &HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// The micro-batching request server (DESIGN.md "Serving layer"):
+/// requests stream in over stdin or a synthetic closed-loop replay,
+/// coalesce into tile-aligned batches, and execute on the pooled
+/// engine. Prints the aggregate `ServeReport` when the stream ends.
+fn cmd_serve(f: &HashMap<String, String>) -> anyhow::Result<()> {
+    let app: String = get(f, "app", "iris_class".to_string())
+        .map_err(anyhow::Error::msg)?;
+    let max_batch: usize =
+        get(f, "max-batch", apps::FWD_BATCH).map_err(anyhow::Error::msg)?;
+    let max_wait_us: u64 =
+        get(f, "max-wait-us", 200).map_err(anyhow::Error::msg)?;
+    let clients: usize = get(f, "clients", 4).map_err(anyhow::Error::msg)?;
+    let requests: usize =
+        get(f, "requests", 256).map_err(anyhow::Error::msg)?;
+    let seed: u64 = get(f, "seed", 0).map_err(anyhow::Error::msg)?;
+    let source: String = get(f, "source", "replay".to_string())
+        .map_err(anyhow::Error::msg)?;
+    let net = apps::network(&app)
+        .ok_or_else(|| anyhow::anyhow!("unknown app {app}"))?
+        .clone();
+    let engine = engine_for(f)?;
+    let params = restream::coordinator::init_conductances(net.layers, seed);
+    let dims = net.layers[0];
+    let cfg = ServeConfig {
+        max_batch,
+        max_wait: std::time::Duration::from_micros(max_wait_us),
+        queue_capacity: None,
+    };
+    let banner = format!(
+        "serving {app} ({dims} dims): max batch {}, max wait {max_wait_us} us, \
+         queue {} samples (4 kB input buffer), {} workers",
+        cfg.max_batch.max(1),
+        restream::coordinator::stream::buffer_capacity(dims),
+        engine.workers()
+    );
+    if source == "stdin" {
+        // stdout carries only `<id> <out…>` / `err <msg>` lines
+        eprintln!("{banner}");
+    } else {
+        println!("{banner}");
+    }
+    let server = Server::start(engine, net, params, cfg);
+    match source.as_str() {
+        "stdin" => serve_stdin(&server)?,
+        "replay" => serve_replay(&server, clients, requests, seed)?,
+        other => anyhow::bail!("--source must be stdin or replay, got {other}"),
+    }
+    let report = server.shutdown();
+    if source == "stdin" {
+        // keep stdout clean for the response lines
+        eprint!("{}", report.summary());
+    } else {
+        print!("{}", report.summary());
+    }
+    Ok(())
+}
+
+/// Closed-loop synthetic load: `clients` threads each issue `requests`
+/// deterministic uniform samples back-to-back (each waits for its
+/// response before sending the next — batch sizes therefore track the
+/// number of concurrent clients).
+fn serve_replay(
+    server: &Server,
+    clients: usize,
+    requests: usize,
+    seed: u64,
+) -> anyhow::Result<()> {
+    let dims = server.client().dims();
+    let handles: Vec<_> = (0..clients.max(1))
+        .map(|c| {
+            let client = server.client();
+            std::thread::spawn(move || -> anyhow::Result<()> {
+                let mut rng =
+                    restream::testing::Rng::seeded(seed ^ ((c as u64) << 17));
+                for _ in 0..requests {
+                    client.call(rng.vec_uniform(dims, -0.5, 0.5))?;
+                }
+                Ok(())
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("replay client thread panicked")?;
+    }
+    Ok(())
+}
+
+/// Line protocol: one whitespace/comma-separated f32 sample per stdin
+/// line (blank lines and `#` comments skipped); responses print to
+/// stdout as `<id> <out…>` in request order, bad lines as `err <msg>`.
+fn serve_stdin(server: &Server) -> anyhow::Result<()> {
+    use std::io::BufRead;
+    let client = server.client();
+    // Submission pipelines ahead of printing so requests can coalesce;
+    // a single stdin client means responses complete in request order.
+    // Bad lines travel the same channel as receipts, so the output
+    // lines stay in input-line order.
+    let (pending_tx, pending_rx) = std::sync::mpsc::channel::<
+        Result<restream::serve::Pending, String>,
+    >();
+    let printer = std::thread::spawn(move || {
+        // write! instead of println!: a downstream `| head -1` closes
+        // the pipe mid-stream, and EPIPE must end the protocol
+        // cleanly, not panic the process.
+        use std::io::Write;
+        let stdout = std::io::stdout();
+        let mut out = stdout.lock();
+        for slot in pending_rx {
+            let wrote = match slot.map(restream::serve::Pending::wait) {
+                Ok(Ok(r)) => {
+                    let vals: Vec<String> =
+                        r.out.iter().map(|v| v.to_string()).collect();
+                    writeln!(out, "{} {}", r.id, vals.join(" "))
+                }
+                Ok(Err(e)) => writeln!(out, "err {e:#}"),
+                Err(msg) => writeln!(out, "err {msg}"),
+            };
+            if wrote.is_err() {
+                break; // consumer hung up; drop remaining receipts
+            }
+        }
+    });
+    let stdin = std::io::stdin();
+    for line in stdin.lock().lines() {
+        let line = line?;
+        let text = line.trim();
+        if text.is_empty() || text.starts_with('#') {
+            continue;
+        }
+        let parsed: Result<Vec<f32>, _> = text
+            .split(|c: char| c == ',' || c.is_whitespace())
+            .filter(|s| !s.is_empty())
+            .map(str::parse::<f32>)
+            .collect();
+        let slot = match parsed {
+            Ok(x) => client.submit(x).map_err(|e| format!("{e:#}")),
+            Err(e) => Err(format!("bad sample line: {e}")),
+        };
+        if pending_tx.send(slot).is_err() {
+            break; // printer exited (consumer hung up); stop reading
+        }
+    }
+    drop(pending_tx);
+    printer.join().expect("printer thread panicked");
+    Ok(())
+}
+
 fn print_usage() {
     println!(
         "restream — memristor multicore chip simulator\n\
-         usage: restream <chip|report|train|infer|cluster|anomaly> [--flags]\n\
+         usage: restream <chip|report|train|infer|cluster|anomaly|serve> \
+         [--flags]\n\
          math subcommands take --backend native|pjrt (default native)\n\
          and --workers N (worker-pool size, default $RESTREAM_WORKERS or 1)\n\
+         serve: --app NAME --source stdin|replay --max-batch N \
+         --max-wait-us N --clients N --requests N\n\
          see rust/src/main.rs docs and README.md for details"
     );
 }

@@ -1,6 +1,7 @@
 //! Evaluation metrics: classification accuracy, ROC sweeps for the
 //! anomaly experiment (Figs 18–20), clustering purity (k-means quality),
-//! and small statistics helpers used by the benches.
+//! and small statistics helpers used by the benches and the serving
+//! layer's latency accounting ([`mean`], [`percentile`]).
 
 /// Classification accuracy from predictions and labels.
 pub fn accuracy(pred: &[usize], truth: &[usize]) -> f64 {
@@ -115,6 +116,36 @@ pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() { 0.0 } else { xs.iter().sum::<f64>() / xs.len() as f64 }
 }
 
+/// Linearly-interpolated percentile of an (unsorted) sample, `q` in
+/// `[0, 100]` — the definition NumPy calls `linear`. Returns 0 for an
+/// empty sample. Used by the serving layer for p50/p99 latency
+/// ([`crate::serve::LatencyStats`]).
+///
+/// ```
+/// use restream::metrics::percentile;
+/// let sample = [4.0, 1.0, 3.0, 2.0];
+/// assert_eq!(percentile(&sample, 50.0), 2.5);
+/// assert_eq!(percentile(&sample, 100.0), 4.0);
+/// ```
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    percentile_sorted(&sorted, q)
+}
+
+/// [`percentile`] over an **already ascending-sorted** sample — use
+/// this to take several percentiles of one sample with a single sort
+/// (as [`crate::serve::LatencyStats`] does for p50/p99).
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = (q / 100.0).clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * (rank - lo as f64)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -156,6 +187,21 @@ mod tests {
     fn purity_perfect_and_mixed() {
         assert_eq!(purity(&[0, 0, 1, 1], &[2, 2, 5, 5], 2, 6), 1.0);
         assert_eq!(purity(&[0, 0, 0, 0], &[0, 0, 1, 1], 1, 2), 0.5);
+    }
+
+    #[test]
+    fn percentile_interpolates_and_clamps() {
+        let xs: Vec<f64> = (1..=100).map(|v| v as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 50.5);
+        assert!((percentile(&xs, 99.0) - 99.01).abs() < 1e-9);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        // out-of-range q clamps; singleton and empty are total
+        assert_eq!(percentile(&xs, 250.0), 100.0);
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        // unsorted input is handled
+        assert_eq!(percentile(&[9.0, 1.0, 5.0], 50.0), 5.0);
     }
 
     #[test]

@@ -1,0 +1,189 @@
+//! Dynamic micro-batching over a bounded MPSC queue.
+//!
+//! [`Batcher`] is the coalescing core of the serving front end
+//! (generic, so it is testable without an engine): it drains a
+//! [`std::sync::mpsc`] receiver into batches that dispatch on **batch
+//! full OR max-wait elapsed** — the classic dynamic-batching rule the
+//! TPU serving stack popularised (Jouppi et al., arXiv:1704.04760,
+//! §2: datacenter serving coalesces single-sample requests into
+//! hardware-sized batches because the hardware only reaches peak
+//! throughput at its native tile size).
+//!
+//! The wait only bounds *extra* waiting: items already sitting in the
+//! queue are always taken greedily, so `max_wait = 0` still coalesces
+//! whatever has piled up behind a slow dispatch — it just never stalls
+//! a ready batch hoping for stragglers.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
+use std::time::{Duration, Instant};
+
+/// Coalesces items from a bounded MPSC receiver into dispatch-ready
+/// batches of at most `max_batch` items (see the module docs for the
+/// dispatch rule). Each drained item is paired with the [`Instant`] it
+/// left the queue, so callers can split queue wait from batch wait in
+/// their latency accounting.
+///
+/// ```
+/// use std::sync::mpsc::sync_channel;
+/// use std::time::Duration;
+/// use restream::serve::Batcher;
+///
+/// let (tx, rx) = sync_channel(8);
+/// for i in 0..5 {
+///     tx.send(i).unwrap();
+/// }
+/// drop(tx); // producers gone: the batcher flushes what is queued
+/// let batcher = Batcher::new(rx, 64, Duration::from_micros(200));
+/// let batch = batcher.next_batch().unwrap();
+/// assert_eq!(batch.len(), 5);
+/// assert!(batcher.next_batch().is_none()); // queue closed and empty
+/// ```
+pub struct Batcher<T> {
+    rx: Receiver<T>,
+    max_batch: usize,
+    max_wait: Duration,
+}
+
+impl<T> Batcher<T> {
+    /// Wrap `rx` with a dispatch policy of at most `max_batch` items
+    /// per batch (0 is treated as 1) and at most `max_wait` of waiting
+    /// for stragglers after the first item of a batch arrives.
+    pub fn new(rx: Receiver<T>, max_batch: usize, max_wait: Duration) -> Self {
+        Batcher { rx, max_batch: max_batch.max(1), max_wait }
+    }
+
+    /// Largest batch a single dispatch may carry.
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// Longest a partially-filled batch waits for stragglers.
+    pub fn max_wait(&self) -> Duration {
+        self.max_wait
+    }
+
+    /// Block for the next batch: `(item, dequeued-at)` pairs in arrival
+    /// order, never empty, at most [`Self::max_batch`] long. Returns
+    /// `None` once every sender has hung up and the queue is drained —
+    /// the server's shutdown signal. A sender hanging up mid-batch
+    /// flushes the partial batch rather than losing it.
+    pub fn next_batch(&self) -> Option<Vec<(T, Instant)>> {
+        let first = self.rx.recv().ok()?;
+        let mut batch = vec![(first, Instant::now())];
+        // Greedy phase: take whatever already queued up, without
+        // waiting — this is what keeps `max_wait = 0` a pure
+        // "no extra latency" policy that still batches under load.
+        while batch.len() < self.max_batch {
+            match self.rx.try_recv() {
+                Ok(item) => batch.push((item, Instant::now())),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => return Some(batch),
+            }
+        }
+        // Waiting phase: block for stragglers until the deadline set
+        // by the *first* item of the batch.
+        let deadline = Instant::now() + self.max_wait;
+        while batch.len() < self.max_batch {
+            let Some(left) = deadline.checked_duration_since(Instant::now())
+            else {
+                break;
+            };
+            match self.rx.recv_timeout(left) {
+                Ok(item) => batch.push((item, Instant::now())),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::sync_channel;
+    use std::thread;
+
+    #[test]
+    fn full_batches_dispatch_in_arrival_order() {
+        let (tx, rx) = sync_channel(16);
+        for i in 0..6 {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        let b = Batcher::new(rx, 3, Duration::from_secs(1));
+        let first: Vec<i32> =
+            b.next_batch().unwrap().into_iter().map(|(v, _)| v).collect();
+        let second: Vec<i32> =
+            b.next_batch().unwrap().into_iter().map(|(v, _)| v).collect();
+        assert_eq!(first, vec![0, 1, 2]);
+        assert_eq!(second, vec![3, 4, 5]);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn max_batch_one_is_sequential() {
+        let (tx, rx) = sync_channel(8);
+        for i in 0..4 {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        // 0 clamps to 1; every item dispatches alone, no waiting.
+        let b = Batcher::new(rx, 0, Duration::from_secs(1));
+        assert_eq!(b.max_batch(), 1);
+        for i in 0..4 {
+            let batch = b.next_batch().unwrap();
+            assert_eq!(batch.len(), 1);
+            assert_eq!(batch[0].0, i);
+        }
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn zero_wait_still_coalesces_queued_items() {
+        let (tx, rx) = sync_channel(8);
+        for i in 0..4 {
+            tx.send(i).unwrap();
+        }
+        let b = Batcher::new(rx, 64, Duration::ZERO);
+        // tx is still alive, so only the greedy phase may run — and it
+        // must pick up everything already in the queue.
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 4);
+        drop(tx);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn waits_for_stragglers_within_deadline() {
+        let (tx, rx) = sync_channel(8);
+        let producer = thread::spawn(move || {
+            tx.send(0).unwrap();
+            thread::sleep(Duration::from_millis(10));
+            tx.send(1).unwrap();
+        });
+        let b = Batcher::new(rx, 64, Duration::from_secs(5));
+        // The second item lands well inside the generous deadline, and
+        // the producer hang-up flushes the batch before max_wait.
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 2);
+        assert!(batch[1].1 >= batch[0].1, "dequeue times must be ordered");
+        producer.join().unwrap();
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let (tx, rx) = sync_channel::<i32>(8);
+        tx.send(7).unwrap();
+        let b = Batcher::new(rx, 64, Duration::from_millis(5));
+        // tx stays alive: only the deadline can end this batch.
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "deadline must flush long before a recv() would"
+        );
+        drop(tx);
+    }
+}

@@ -1,0 +1,445 @@
+//! Serving front end: a dynamic micro-batching request server over the
+//! [`Engine`]'s worker pool.
+//!
+//! The paper's chip is built for high-throughput streaming of
+//! recognition traffic, but every batched [`Engine`] operation takes a
+//! *pre-formed* batch — callers that hold single samples (a recognition
+//! request per user, as in the follow-up streaming-multicore paper,
+//! arXiv:1606.04609) would waste almost the whole 64-sample hardware
+//! tile on padding. This module adds the missing request path:
+//!
+//! 1. **Bounded request queue** — [`Client::submit`] sends into a
+//!    bounded MPSC channel sized from the chip's 4 kB input buffer
+//!    ([`stream::buffer_capacity`]); a full queue blocks the submitter,
+//!    the same backpressure the DMA sees when the input buffer fills.
+//! 2. **Dynamic micro-batcher** — [`Batcher`] coalesces pending
+//!    single-sample requests into batches of at most
+//!    [`ServeConfig::max_batch`] (default [`apps::FWD_BATCH`], the
+//!    64-sample tile) and dispatches on *batch full OR max-wait
+//!    elapsed*.
+//! 3. **Pooled execution** — each batch runs through [`Engine::infer`],
+//!    i.e. the PR 2 sharded worker pool, inheriting its determinism
+//!    contract.
+//! 4. **Response routing** — each request's output row travels back
+//!    over its own oneshot channel together with a [`RequestTiming`]
+//!    latency split; aggregate statistics come out of
+//!    [`Server::shutdown`] as a [`ServeReport`].
+//!
+//! # Determinism contract
+//!
+//! A request's result is **bit-identical regardless of which batch it
+//! lands in**. Batching changes only *where* a sample sits inside the
+//! input matrix: the forward math is row-independent, tile padding is
+//! zeros either way, and the sharded execution underneath is already
+//! bit-identical at any worker count (see [`crate::coordinator::pool`]).
+//! `rust/tests/serving_determinism.rs` pins this against single-sample
+//! sequential evaluation across client counts and batch limits.
+//!
+//! # Example
+//!
+//! ```
+//! use restream::config::apps;
+//! use restream::coordinator::{init_conductances, Engine};
+//! use restream::serve::{ServeConfig, Server};
+//!
+//! let net = apps::network("iris_ae").unwrap().clone();
+//! let params = init_conductances(net.layers, 0);
+//! let server =
+//!     Server::start(Engine::native(), net, params, ServeConfig::default());
+//! let response = server.client().call(vec![0.1, -0.2, 0.3, 0.0]).unwrap();
+//! assert_eq!(response.out.len(), 4); // iris_ae reconstruction
+//! let report = server.shutdown();
+//! assert_eq!(report.requests, 1);
+//! ```
+
+mod batcher;
+mod report;
+
+pub use batcher::Batcher;
+pub use report::{LatencyStats, RequestTiming, ServeReport};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{apps, Network};
+use crate::coordinator::{stream, Engine};
+use crate::runtime::ArrayF32;
+
+/// Tuning knobs of a [`Server`].
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Largest batch one dispatch may carry (0 is treated as 1;
+    /// default [`apps::FWD_BATCH`] — the chip's 64-sample tile, past
+    /// which a bigger batch only adds tiles, not efficiency).
+    pub max_batch: usize,
+    /// Longest a partially-filled batch waits for stragglers after its
+    /// first request arrives (default 200 µs). Zero never waits but
+    /// still coalesces whatever is already queued — see [`Batcher`].
+    pub max_wait: Duration,
+    /// Request-queue depth in samples. `None` (the default) sizes it
+    /// from the chip's 4 kB input buffer via
+    /// [`stream::buffer_capacity`] for the app's input width.
+    pub queue_capacity: Option<usize>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_batch: apps::FWD_BATCH,
+            max_wait: Duration::from_micros(200),
+            queue_capacity: None,
+        }
+    }
+}
+
+/// One request in flight: the sample plus the oneshot reply channel
+/// (a rendezvous `sync_channel(1)` — the only message ever sent is the
+/// response, so the send never blocks).
+struct Request {
+    id: u64,
+    x: Vec<f32>,
+    enqueued: Instant,
+    reply: SyncSender<Result<Response, String>>,
+}
+
+/// One served result.
+#[derive(Clone, Debug)]
+pub struct Response {
+    /// Request id assigned at submission ([`Pending::id`]).
+    pub id: u64,
+    /// The network's output row for this request's sample — identical
+    /// to what single-sample sequential [`Engine::infer`] returns.
+    pub out: Vec<f32>,
+    /// Server-side latency split for this request.
+    pub timing: RequestTiming,
+}
+
+/// A submitted request's receipt; redeem with [`Pending::wait`].
+pub struct Pending {
+    id: u64,
+    rx: Receiver<Result<Response, String>>,
+}
+
+impl Pending {
+    /// Id the server will answer under.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block until the response arrives. Errors when the engine failed
+    /// on this request's batch or the server shut down first.
+    pub fn wait(self) -> Result<Response> {
+        match self.rx.recv() {
+            Ok(Ok(response)) => Ok(response),
+            Ok(Err(msg)) => Err(anyhow!("request {}: {msg}", self.id)),
+            Err(_) => Err(anyhow!(
+                "request {}: server shut down before replying",
+                self.id
+            )),
+        }
+    }
+}
+
+/// Cheaply-cloneable handle for submitting requests to a [`Server`].
+///
+/// Every clone shares the server's bounded queue: when the queue is
+/// full, [`Client::submit`] blocks until the batcher drains — the
+/// input-buffer backpressure of the modeled DMA front. The server only
+/// shuts down after **every** clone has been dropped.
+#[derive(Clone)]
+pub struct Client {
+    tx: SyncSender<Request>,
+    dims: usize,
+    next_id: Arc<AtomicU64>,
+}
+
+impl Client {
+    /// Enqueue one sample (must be exactly [`Client::dims`] wide) and
+    /// return a [`Pending`] receipt; blocks while the queue is full.
+    pub fn submit(&self, x: Vec<f32>) -> Result<Pending> {
+        if x.len() != self.dims {
+            return Err(anyhow!(
+                "request has {} dims, the served app wants {}",
+                x.len(),
+                self.dims
+            ));
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (reply, rx) = sync_channel(1);
+        self.tx
+            .send(Request { id, x, enqueued: Instant::now(), reply })
+            .map_err(|_| anyhow!("server is shut down"))?;
+        Ok(Pending { id, rx })
+    }
+
+    /// Submit and block for the response — one closed-loop request.
+    pub fn call(&self, x: Vec<f32>) -> Result<Response> {
+        self.submit(x)?.wait()
+    }
+
+    /// Input width the served network expects.
+    pub fn dims(&self) -> usize {
+        self.dims
+    }
+}
+
+/// A running micro-batching server: one dispatcher thread that owns the
+/// [`Engine`] and the served network, fed by any number of [`Client`]
+/// clones. See the module docs for the pipeline and determinism
+/// contract, and DESIGN.md "Serving layer" for the full lifecycle.
+pub struct Server {
+    client: Client,
+    handle: thread::JoinHandle<ServeReport>,
+}
+
+impl Server {
+    /// Spawn the dispatcher thread over `engine` (which the server now
+    /// owns, worker pool included), serving `net`'s forward path with
+    /// `params`. The request queue is bounded per
+    /// [`ServeConfig::queue_capacity`].
+    pub fn start(
+        engine: Engine,
+        net: Network,
+        params: Vec<ArrayF32>,
+        cfg: ServeConfig,
+    ) -> Server {
+        let dims = net.layers[0];
+        let capacity = cfg
+            .queue_capacity
+            .unwrap_or_else(|| stream::buffer_capacity(dims))
+            .max(1);
+        let (tx, rx) = sync_channel(capacity);
+        let batcher = Batcher::new(rx, cfg.max_batch, cfg.max_wait);
+        let handle = thread::Builder::new()
+            .name("restream-serve".to_string())
+            .spawn(move || serve_loop(engine, net, params, batcher))
+            .expect("spawning serve dispatcher thread");
+        Server {
+            client: Client { tx, dims, next_id: Arc::new(AtomicU64::new(0)) },
+            handle,
+        }
+    }
+
+    /// A new submission handle (any number may exist; all share the
+    /// bounded queue).
+    pub fn client(&self) -> Client {
+        self.client.clone()
+    }
+
+    /// Stop accepting requests and return the aggregate [`ServeReport`].
+    /// Blocks until every outstanding [`Client`] clone has been dropped
+    /// and the final (possibly partial) batch has been answered.
+    pub fn shutdown(self) -> ServeReport {
+        let Server { client, handle } = self;
+        drop(client);
+        handle.join().expect("serve dispatcher thread panicked")
+    }
+}
+
+/// Microseconds from `from` to `to` (saturating at zero).
+fn us_between(from: Instant, to: Instant) -> f64 {
+    to.saturating_duration_since(from).as_secs_f64() * 1e6
+}
+
+/// The dispatcher: drain batches from the queue, run each through the
+/// pooled batched forward, route rows back over the per-request reply
+/// channels, and account latency/throughput. Runs until every client
+/// hangs up.
+fn serve_loop(
+    engine: Engine,
+    net: Network,
+    params: Vec<ArrayF32>,
+    batcher: Batcher<Request>,
+) -> ServeReport {
+    let mut queue_us = Vec::new();
+    let mut batch_us = Vec::new();
+    let mut compute_us = Vec::new();
+    let mut total_us = Vec::new();
+    let mut batches = 0usize;
+    let mut errors = 0usize;
+    let mut span: Option<(Instant, Instant)> = None;
+    while let Some(mut batch) = batcher.next_batch() {
+        let dispatch = Instant::now();
+        // The samples are owned and never needed again after dispatch:
+        // move them out instead of cloning (64×784 floats per full
+        // MNIST tile otherwise copied on every single batch).
+        let xs: Vec<Vec<f32>> = batch
+            .iter_mut()
+            .map(|(request, _)| std::mem::take(&mut request.x))
+            .collect();
+        let result = engine.infer(&net, &params, &xs);
+        let done = Instant::now();
+        let start = span.map_or(dispatch, |(start, _)| start);
+        span = Some((start, done));
+        batches += 1;
+        match result {
+            Ok(rows) => {
+                for ((request, dequeued), out) in
+                    batch.into_iter().zip(rows)
+                {
+                    let timing = RequestTiming {
+                        queue_us: us_between(request.enqueued, dequeued),
+                        batch_us: us_between(dequeued, dispatch),
+                        compute_us: us_between(dispatch, done),
+                    };
+                    queue_us.push(timing.queue_us);
+                    batch_us.push(timing.batch_us);
+                    compute_us.push(timing.compute_us);
+                    total_us.push(timing.total_us());
+                    let _ = request.reply.send(Ok(Response {
+                        id: request.id,
+                        out,
+                        timing,
+                    }));
+                }
+            }
+            Err(e) => {
+                // The whole batch shares the engine failure; each
+                // requester gets the message over its own channel.
+                errors += batch.len();
+                let msg = format!("{e:#}");
+                for (request, _) in batch {
+                    let _ = request.reply.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+    let wall_s = span.map_or(0.0, |(start, end)| {
+        end.saturating_duration_since(start).as_secs_f64()
+    });
+    ServeReport {
+        requests: total_us.len() + errors,
+        batches,
+        errors,
+        wall_s,
+        total: LatencyStats::from_us(&total_us),
+        queue: LatencyStats::from_us(&queue_us),
+        batch_wait: LatencyStats::from_us(&batch_us),
+        compute: LatencyStats::from_us(&compute_us),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::init_conductances;
+
+    fn iris_server(cfg: ServeConfig) -> Server {
+        let net = apps::network("iris_ae").unwrap().clone();
+        let params = init_conductances(net.layers, 3);
+        Server::start(Engine::native(), net, params, cfg)
+    }
+
+    #[test]
+    fn call_round_trips_and_reports_timing() {
+        let server = iris_server(ServeConfig::default());
+        let client = server.client();
+        assert_eq!(client.dims(), 4);
+        let response = client.call(vec![0.1, 0.2, -0.1, 0.0]).unwrap();
+        assert_eq!(response.out.len(), 4);
+        assert!(response.timing.compute_us > 0.0);
+        assert!(response.timing.total_us() >= response.timing.compute_us);
+        drop(client);
+        let report = server.shutdown();
+        assert_eq!(report.requests, 1);
+        assert_eq!(report.batches, 1);
+        assert_eq!(report.errors, 0);
+        assert!(report.throughput_rps() > 0.0);
+    }
+
+    #[test]
+    fn ragged_request_is_rejected_at_submit() {
+        let server = iris_server(ServeConfig::default());
+        let client = server.client();
+        let err = client.submit(vec![0.0; 3]).unwrap_err();
+        assert!(err.to_string().contains("3 dims"), "{err}");
+        drop(client);
+        assert_eq!(server.shutdown().requests, 0);
+    }
+
+    #[test]
+    fn pending_requests_coalesce_into_batches() {
+        // A generous window: all 8 requests from this thread land well
+        // inside the first batch's wait, so far fewer than 8 batches
+        // dispatch (normally exactly 1).
+        let server = iris_server(ServeConfig {
+            max_wait: Duration::from_millis(500),
+            ..ServeConfig::default()
+        });
+        let client = server.client();
+        let pendings: Vec<Pending> = (0..8)
+            .map(|i| {
+                client.submit(vec![i as f32 * 0.05, 0.1, -0.1, 0.2]).unwrap()
+            })
+            .collect();
+        for (i, pending) in pendings.into_iter().enumerate() {
+            assert_eq!(pending.id(), i as u64);
+            assert_eq!(pending.wait().unwrap().id, i as u64);
+        }
+        drop(client);
+        let report = server.shutdown();
+        assert_eq!(report.requests, 8);
+        assert!(report.batches <= 2, "expected coalescing, got {report:?}");
+        assert!(report.mean_batch() >= 4.0);
+    }
+
+    #[test]
+    fn max_batch_one_serves_sequentially() {
+        let server = iris_server(ServeConfig {
+            max_batch: 1,
+            ..ServeConfig::default()
+        });
+        let client = server.client();
+        for _ in 0..5 {
+            client.call(vec![0.3, -0.2, 0.1, 0.0]).unwrap();
+        }
+        drop(client);
+        let report = server.shutdown();
+        assert_eq!(report.requests, 5);
+        assert_eq!(report.batches, 5);
+    }
+
+    #[test]
+    fn queue_capacity_defaults_to_input_buffer() {
+        // The default queue depth follows the 4 kB input buffer: a
+        // tiny explicit override must still serve correctly (depth 1
+        // exercises full-queue backpressure on every submit).
+        let server = iris_server(ServeConfig {
+            queue_capacity: Some(1),
+            ..ServeConfig::default()
+        });
+        let client = server.client();
+        for _ in 0..10 {
+            client.call(vec![0.1, 0.1, 0.1, 0.1]).unwrap();
+        }
+        drop(client);
+        assert_eq!(server.shutdown().requests, 10);
+    }
+
+    #[test]
+    fn broken_params_surface_as_request_errors() {
+        let net = apps::network("iris_ae").unwrap().clone();
+        let mut params = init_conductances(net.layers, 3);
+        // An odd parameter list cannot form (gp, gn) pairs; the engine
+        // rejects the batch and every requester must hear about it.
+        params.pop();
+        let server = Server::start(
+            Engine::native(),
+            net,
+            params,
+            ServeConfig::default(),
+        );
+        let client = server.client();
+        let err = client.call(vec![0.1, 0.2, 0.3, 0.4]).unwrap_err();
+        assert!(err.to_string().starts_with("request 0"), "{err}");
+        drop(client);
+        let report = server.shutdown();
+        assert_eq!(report.errors, 1);
+        assert_eq!(report.requests, 1);
+    }
+}

@@ -1,0 +1,168 @@
+//! Serving metrics: per-request latency split and the aggregate
+//! [`ServeReport`] a [`Server`](super::Server) returns at shutdown.
+//!
+//! Latencies are measured server-side and split along the request
+//! lifecycle (DESIGN.md "Serving layer"): **queue** (bounded input
+//! queue, the 4 kB-input-buffer twin) → **batch** (waiting inside a
+//! forming micro-batch) → **compute** (the pooled batched forward).
+//! All figures are microseconds; order statistics use
+//! [`crate::metrics::percentile`].
+
+use crate::metrics::{mean, percentile_sorted};
+
+/// Where one request's latency went, in microseconds.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RequestTiming {
+    /// Enqueue → drained out of the bounded request queue.
+    pub queue_us: f64,
+    /// Drained → the micro-batch it joined was dispatched.
+    pub batch_us: f64,
+    /// Dispatch → the pooled batched forward finished.
+    pub compute_us: f64,
+}
+
+impl RequestTiming {
+    /// End-to-end server-side latency (µs): queue + batch + compute.
+    pub fn total_us(&self) -> f64 {
+        self.queue_us + self.batch_us + self.compute_us
+    }
+}
+
+/// Order statistics of one latency sample, in microseconds.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LatencyStats {
+    /// Arithmetic mean.
+    pub mean_us: f64,
+    /// Median (50th percentile).
+    pub p50_us: f64,
+    /// 99th percentile — the tail the batching window trades against.
+    pub p99_us: f64,
+    /// Worst observed value.
+    pub max_us: f64,
+}
+
+impl LatencyStats {
+    /// Summarise a sample of microsecond latencies (all zeros when the
+    /// sample is empty). Sorts once and reads every order statistic
+    /// off the sorted copy.
+    pub fn from_us(values: &[f64]) -> LatencyStats {
+        let mut sorted = values.to_vec();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        LatencyStats {
+            mean_us: mean(&sorted),
+            p50_us: percentile_sorted(&sorted, 50.0),
+            p99_us: percentile_sorted(&sorted, 99.0),
+            max_us: sorted.last().copied().unwrap_or(0.0),
+        }
+    }
+}
+
+/// Aggregate statistics of one server lifetime, returned by
+/// [`Server::shutdown`](super::Server::shutdown) and printed by
+/// `restream serve` / the `perf_serving` bench.
+#[derive(Clone, Debug, Default)]
+pub struct ServeReport {
+    /// Requests answered (successes plus errors).
+    pub requests: usize,
+    /// Batches dispatched to the engine.
+    pub batches: usize,
+    /// Requests answered with an error.
+    pub errors: usize,
+    /// First dispatch → last completion (s); the span
+    /// [`Self::throughput_rps`] divides by.
+    pub wall_s: f64,
+    /// End-to-end latency (queue + batch + compute).
+    pub total: LatencyStats,
+    /// Time spent in the bounded request queue.
+    pub queue: LatencyStats,
+    /// Time spent waiting inside a forming micro-batch.
+    pub batch_wait: LatencyStats,
+    /// Time spent in the pooled batched forward.
+    pub compute: LatencyStats,
+}
+
+impl ServeReport {
+    /// Mean requests per dispatched batch (0 before any batch).
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+
+    /// Aggregate throughput in requests per second over
+    /// [`Self::wall_s`] (0 before any request).
+    pub fn throughput_rps(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.wall_s.max(1e-12)
+        }
+    }
+
+    /// Human-readable multi-line summary (what `restream serve`
+    /// prints after the request stream ends).
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "served {} requests in {} batches (mean {:.1}/batch, \
+             {} errors) over {:.3}s -> {:.0} req/s\n",
+            self.requests,
+            self.batches,
+            self.mean_batch(),
+            self.errors,
+            self.wall_s,
+            self.throughput_rps(),
+        );
+        s.push_str(&format!(
+            "latency us: total  p50 {:>8.1}  p99 {:>8.1}  max {:>8.1}\n",
+            self.total.p50_us, self.total.p99_us, self.total.max_us,
+        ));
+        s.push_str(&format!(
+            "            queue  p50 {:>8.1}  batch p50 {:>8.1}  \
+             compute p50 {:>8.1}\n",
+            self.queue.p50_us, self.batch_wait.p50_us, self.compute.p50_us,
+        ));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_total_is_the_sum_of_phases() {
+        let t = RequestTiming { queue_us: 1.0, batch_us: 2.0, compute_us: 4.0 };
+        assert_eq!(t.total_us(), 7.0);
+    }
+
+    #[test]
+    fn latency_stats_order_correctly() {
+        let values: Vec<f64> = (1..=100).map(|v| v as f64).collect();
+        let s = LatencyStats::from_us(&values);
+        assert_eq!(s.p50_us, 50.5);
+        assert!((s.p99_us - 99.01).abs() < 1e-9, "p99 {}", s.p99_us);
+        assert_eq!(s.max_us, 100.0);
+        assert_eq!(s.mean_us, 50.5);
+        let empty = LatencyStats::from_us(&[]);
+        assert_eq!(empty.p50_us, 0.0);
+        assert_eq!(empty.max_us, 0.0);
+    }
+
+    #[test]
+    fn report_ratios_guard_empty_runs() {
+        let r = ServeReport::default();
+        assert_eq!(r.mean_batch(), 0.0);
+        assert_eq!(r.throughput_rps(), 0.0);
+        let r = ServeReport {
+            requests: 12,
+            batches: 4,
+            wall_s: 2.0,
+            ..Default::default()
+        };
+        assert_eq!(r.mean_batch(), 3.0);
+        assert_eq!(r.throughput_rps(), 6.0);
+        assert!(r.summary().contains("12 requests in 4 batches"));
+    }
+}

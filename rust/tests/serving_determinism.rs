@@ -1,0 +1,136 @@
+//! Serving determinism: micro-batching must be a pure scheduling
+//! change. A request's result is **bit-identical** to single-sample
+//! sequential evaluation no matter how many concurrent clients raced
+//! it into the queue or which micro-batch it landed in — batching only
+//! moves a sample's row inside the input matrix, the forward math is
+//! row-independent, and the sharded execution underneath is already
+//! bit-identical at any worker count (`coordinator::pool`).
+//!
+//! Pinned across clients ∈ {1, 4, 16} × max-batch ∈ {1, 64} per the
+//! acceptance criteria, on a cheap app and a mid-sized one.
+
+use std::time::Duration;
+
+use restream::config::{apps, Network};
+use restream::coordinator::{init_conductances, Engine};
+use restream::runtime::ArrayF32;
+use restream::serve::{ServeConfig, Server};
+use restream::testing::Rng;
+
+/// The reference: each sample evaluated alone (batch of one) on the
+/// sequential 1-worker engine.
+fn single_sample_reference(
+    net: &Network,
+    params: &[ArrayF32],
+    xs: &[Vec<f32>],
+) -> Vec<Vec<f32>> {
+    let engine = Engine::native().with_workers(1);
+    xs.iter()
+        .map(|x| {
+            engine
+                .infer(net, params, std::slice::from_ref(x))
+                .unwrap()
+                .pop()
+                .unwrap()
+        })
+        .collect()
+}
+
+#[test]
+fn concurrent_requests_match_single_sample_sequential() {
+    for app in ["iris_class", "kdd_ae"] {
+        let net = apps::network(app).unwrap();
+        let params = init_conductances(net.layers, 9);
+        let mut rng = Rng::seeded(0x5E12 ^ net.layers[0] as u64);
+        let xs: Vec<Vec<f32>> = (0..96)
+            .map(|_| rng.vec_uniform(net.layers[0], -0.5, 0.5))
+            .collect();
+        let expect = single_sample_reference(net, &params, &xs);
+        for &clients in &[1usize, 4, 16] {
+            for &max_batch in &[1usize, 64] {
+                // A wide-open wait forces real coalescing when
+                // max_batch allows it; max_batch = 1 pins the
+                // sequential-dispatch edge of the same path.
+                let cfg = ServeConfig {
+                    max_batch,
+                    max_wait: Duration::from_millis(2),
+                    queue_capacity: None,
+                };
+                let server = Server::start(
+                    Engine::native().with_workers(2),
+                    net.clone(),
+                    params.clone(),
+                    cfg,
+                );
+                let per = xs.len() / clients;
+                let handles: Vec<_> = (0..clients)
+                    .map(|c| {
+                        let client = server.client();
+                        let lo = c * per;
+                        let hi =
+                            if c + 1 == clients { xs.len() } else { lo + per };
+                        let mine: Vec<(usize, Vec<f32>)> = (lo..hi)
+                            .map(|i| (i, xs[i].clone()))
+                            .collect();
+                        std::thread::spawn(move || {
+                            mine.into_iter()
+                                .map(|(i, x)| (i, client.call(x).unwrap().out))
+                                .collect::<Vec<(usize, Vec<f32>)>>()
+                        })
+                    })
+                    .collect();
+                for handle in handles {
+                    for (i, out) in handle.join().unwrap() {
+                        assert_eq!(
+                            expect[i], out,
+                            "{app}: sample {i} diverged at clients={clients}, \
+                             max_batch={max_batch}"
+                        );
+                    }
+                }
+                let report = server.shutdown();
+                assert_eq!(report.requests, xs.len(), "{app}");
+                assert_eq!(report.errors, 0, "{app}");
+                if max_batch == 1 {
+                    // sequential dispatch: one batch per request
+                    assert_eq!(report.batches, xs.len(), "{app}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn results_are_independent_of_the_batching_window() {
+    // Same request stream through aggressively different windows (never
+    // wait vs. always fill) — identical outputs, only timing may move.
+    let net = apps::network("iris_ae").unwrap();
+    let params = init_conductances(net.layers, 21);
+    let mut rng = Rng::seeded(0xBA7C);
+    let xs: Vec<Vec<f32>> = (0..50)
+        .map(|_| rng.vec_uniform(net.layers[0], -0.5, 0.5))
+        .collect();
+    let mut outputs: Vec<Vec<Vec<f32>>> = Vec::new();
+    for max_wait in [Duration::ZERO, Duration::from_millis(5)] {
+        let cfg = ServeConfig {
+            max_wait,
+            ..ServeConfig::default()
+        };
+        let server = Server::start(
+            Engine::native(),
+            net.clone(),
+            params.clone(),
+            cfg,
+        );
+        let client = server.client();
+        let outs: Vec<Vec<f32>> = xs
+            .iter()
+            .map(|x| client.call(x.clone()).unwrap().out)
+            .collect();
+        drop(client);
+        server.shutdown();
+        outputs.push(outs);
+    }
+    assert_eq!(outputs[0], outputs[1]);
+    assert_eq!(outputs[0], single_sample_reference(net, &params, &xs));
+}
