@@ -3,8 +3,8 @@
 
 ARTIFACTS ?= artifacts
 
-.PHONY: build test bench bench-parallel bench-serving clippy doc fmt \
-	artifacts pytest cargotest-pjrt
+.PHONY: build test bench bench-parallel bench-serving bench-train \
+	clippy doc fmt artifacts pytest cargotest-pjrt
 
 build:
 	cargo build --release
@@ -25,6 +25,11 @@ bench-parallel:
 bench-serving:
 	BENCH_SERVING_OUT=$(abspath BENCH_serving.json) \
 		cargo bench --bench perf_serving
+
+# Data-parallel mini-batch training scaling trajectory.
+bench-train:
+	BENCH_TRAIN_OUT=$(abspath BENCH_train.json) \
+		cargo bench --bench perf_train
 
 clippy:
 	cargo clippy --all-targets -- -D warnings

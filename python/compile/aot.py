@@ -58,6 +58,13 @@ def train_chunk_fn(n_layers):
     return fn
 
 
+def grad_fn(n_layers):
+    def fn(*args):
+        params, (xs, ts) = args[: 2 * n_layers], args[2 * n_layers:]
+        return model.mlp_grad_batch(list(params), xs, ts)
+    return fn
+
+
 def infer_fn(n_layers):
     def fn(*args):
         params, (x,) = args[: 2 * n_layers], args[2 * n_layers:]
@@ -100,6 +107,14 @@ def registry():
                      f32(apps.TRAIN_CHUNK, layers[-1]),
                      f32(1, 1)],
             )
+            # data-parallel mini-batch gradient tile (update applied
+            # host-side by the coordinator's shard reduction)
+            add(
+                f"{name}_grad_t{apps.GRAD_TILE}",
+                grad_fn(nl),
+                p + [f32(apps.GRAD_TILE, layers[0]),
+                     f32(apps.GRAD_TILE, layers[-1])],
+            )
         # forward graph
         fwd = ae_fwd_fn(nl) if is_ae else infer_fn(nl)
         add(f"{name}_fwd_b{apps.FWD_BATCH}", fwd,
@@ -122,6 +137,12 @@ def registry():
                     sp + [f32(apps.TRAIN_CHUNK, n_in),
                           f32(apps.TRAIN_CHUNK, n_in),
                           f32(1, 1)],
+                )
+                add(
+                    f"{name}_stage{i}_grad_t{apps.GRAD_TILE}",
+                    grad_fn(2),
+                    sp + [f32(apps.GRAD_TILE, n_in),
+                          f32(apps.GRAD_TILE, n_in)],
                 )
 
     # batched-training variant for the end-to-end example

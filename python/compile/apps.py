@@ -31,3 +31,4 @@ TRAIN_BATCH = 1      # stochastic BP, per-sample, as on chip
 FWD_BATCH = 64       # recognition batch the coordinator streams
 BIG_TRAIN_BATCH = 16  # batched-training variant for the e2e example
 TRAIN_CHUNK = 32      # samples scanned inside one chunked train artifact
+GRAD_TILE = 8        # samples per data-parallel gradient shard (grad_tK)

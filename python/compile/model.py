@@ -149,6 +149,61 @@ def ae_train_step(params, x, lr):
     return mlp_train_step(params, x, jnp.clip(x, -hw.V_RAIL, hw.V_RAIL), lr)
 
 
+def mlp_grad_batch(params, xs, ts):
+    """Per-layer gradient sums of a mini-batch, training pulse withheld.
+
+    The same forward/backward dataflow as :func:`mlp_train_step`, but
+    instead of pulsing each crossbar the per-layer accumulators
+    ``x^T @ quantize_err(delta * f'(dp))`` are returned (summed over the
+    batch rows in order), so a data-parallel coordinator can add the
+    accumulators of several shards and fire **one** update per
+    mini-batch (:func:`apply_grads`). On one sample,
+    ``apply_grads(params, *grads*, lr)`` reproduces
+    :func:`mlp_train_step` exactly — mini-batch size 1 recovers the
+    paper's per-sample stochastic BP.
+
+    xs: (K, n_in); ts: (K, n_out); returns one (n_in+1, n_out) gradient
+    array per layer plus the (K,) per-sample pre-update MSE losses.
+    """
+    y, acts, dps = mlp_forward(params, xs)
+    losses = jnp.mean((ts - y) ** 2, axis=1)
+    n_layers = len(params) // 2
+    delta = quantize_err(ts - y)                     # Eq. 4 + error ADC
+    grads = [None] * n_layers
+    for l in range(n_layers - 1, -1, -1):
+        gpos, gneg = params[2 * l], params[2 * l + 1]
+        # the training unit's discretised delta * f'(DP) product — used
+        # for this layer's accumulator and, through the transposed
+        # crossbar, for the previous layer's error (Fig 10 multiplexes
+        # this circuit), exactly as mlp_train_step's update/backward pair
+        factor = quantize_err(delta * activation_deriv_lut(dps[l]))
+        grads[l] = jax.lax.dot_general(
+            acts[l], factor,
+            dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        if l > 0:
+            delta = crossbar_bwd(factor, gpos, gneg)[:, :-1]  # drop bias
+    return tuple(grads) + (losses,)
+
+
+def apply_grads(params, grads, lr):
+    """Fire one training pulse from summed gradient accumulators.
+
+    ``dw = lr * acc``; ``g+ += dw/2``, ``g- -= dw/2``, clipped to the
+    device range — the update tail of the ``weight_update`` kernel with
+    the accumulation factored out.
+    """
+    out = list(params)
+    for l, g in enumerate(grads):
+        dw = lr * g
+        out[2 * l] = jnp.clip(params[2 * l] + 0.5 * dw,
+                              hw.G_MIN, hw.G_MAX)
+        out[2 * l + 1] = jnp.clip(params[2 * l + 1] - 0.5 * dw,
+                                  hw.G_MIN, hw.G_MAX)
+    return tuple(out)
+
+
 # --------------------------------------------------------------------------
 # clustering-core graphs
 # --------------------------------------------------------------------------

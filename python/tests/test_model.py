@@ -93,6 +93,65 @@ def test_params_respect_conductance_bounds_after_training():
         assert float(jnp.max(g)) <= hw.G_MAX + 1e-6
 
 
+def test_grad_batch_then_apply_recovers_train_step():
+    """The batch-1 recovery contract: computing the gradient and firing
+    the pulse separately reproduces the fused per-sample step (to the
+    last ulp — XLA fusion inside the jitted update kernel reorders one
+    multiply chain, so exact bit-equality is only guaranteed by the
+    Rust native backend, whose scalar loops mirror both paths)."""
+    rng = np.random.default_rng(4)
+    for layers in ([4, 10, 1], [8, 6, 5, 3]):
+        params = _params(layers, seed=7)
+        x = jnp.asarray(rng.uniform(-0.5, 0.5, (1, layers[0])), jnp.float32)
+        t = jnp.asarray(rng.uniform(-0.4, 0.4, (1, layers[-1])), jnp.float32)
+        lr = jnp.full((1, 1), 0.8, jnp.float32)
+        ref = model.mlp_train_step(list(params), x, t, lr)
+        out = model.mlp_grad_batch(list(params), x, t)
+        grads, losses = out[:-1], out[-1]
+        assert losses.shape == (1,)
+        np.testing.assert_allclose(float(losses[0]), float(ref[-1]),
+                                   rtol=1e-6)
+        applied = model.apply_grads(list(params), grads, lr)
+        for l, (a, r) in enumerate(zip(applied, ref[:-1])):
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(r), rtol=0, atol=1e-7,
+                err_msg=f"layers {layers} param {l}")
+
+
+def test_grad_batch_rows_sum_in_order():
+    """A whole-batch accumulator equals the left-to-right sum of its
+    tile accumulators (float-association tolerance) — the property the
+    Rust coordinator's shard reduction is built on."""
+    rng = np.random.default_rng(5)
+    params = _params([4, 6, 2], seed=2)
+    xs = jnp.asarray(rng.uniform(-0.5, 0.5, (16, 4)), jnp.float32)
+    ts = jnp.asarray(rng.uniform(-0.4, 0.4, (16, 2)), jnp.float32)
+    out = model.mlp_grad_batch(list(params), xs, ts)
+    whole, losses = out[:-1], out[-1]
+    assert losses.shape == (16,)
+    total = None
+    for lo in range(0, 16, 8):
+        tile = model.mlp_grad_batch(list(params), xs[lo:lo + 8],
+                                    ts[lo:lo + 8])[:-1]
+        total = tile if total is None else [a + b
+                                            for a, b in zip(total, tile)]
+    for l, (w, s) in enumerate(zip(whole, total)):
+        np.testing.assert_allclose(np.asarray(w), np.asarray(s),
+                                   rtol=0, atol=1e-5,
+                                   err_msg=f"layer {l}")
+
+
+def test_apply_grads_respects_conductance_bounds():
+    params = _params([5, 4, 2], seed=1)
+    huge = [jnp.full_like(params[2 * l], 1e6)
+            for l in range(len(params) // 2)]
+    lr = jnp.full((1, 1), 1.0, jnp.float32)
+    out = model.apply_grads(list(params), huge, lr)
+    for g in out:
+        assert float(jnp.min(g)) >= hw.G_MIN - 1e-6
+        assert float(jnp.max(g)) <= hw.G_MAX + 1e-6
+
+
 def test_kmeans_step_semantics():
     x = jnp.asarray(
         [[0.0, 0.0], [0.1, 0.0], [1.0, 1.0], [0.9, 1.0]], jnp.float32

@@ -19,7 +19,7 @@
 //! results (see `coordinator::pool`); this bench only measures how
 //! fast the fixed computation goes.
 
-use restream::benchutil::{env_usize, section};
+use restream::benchutil::{best_wall, env_usize, section};
 use restream::config::apps;
 use restream::coordinator::{init_conductances, Engine};
 use restream::testing::Rng;
@@ -31,18 +31,6 @@ struct OpResult {
     workers: usize,
     wall_s: f64,
     samples_per_s: f64,
-}
-
-/// Best-of-`repeats` wall clock of `f`, after one warmup run.
-fn best_wall(repeats: usize, mut f: impl FnMut()) -> f64 {
-    f();
-    let mut best = f64::INFINITY;
-    for _ in 0..repeats {
-        let t0 = std::time::Instant::now();
-        f();
-        best = best.min(t0.elapsed().as_secs_f64());
-    }
-    best
 }
 
 fn print_shards(engine: &Engine) {

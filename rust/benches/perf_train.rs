@@ -1,0 +1,151 @@
+//! §Perf: data-parallel scaling of mini-batch training.
+//!
+//! Measures training throughput (samples/s) of the sharded gradient
+//! path — `Engine::train_with` on the mnist_class stack — at 1/2/4/8
+//! workers on the native backend, prints the per-shard busy profile,
+//! and writes the machine-readable trajectory to `BENCH_train.json` —
+//! relative to the bench's working directory, which under `cargo bench`
+//! is the crate root `rust/`; override with `$BENCH_TRAIN_OUT` (CI and
+//! `make bench-train` pin it to the repo root). CI's `bench-smoke` job
+//! runs this at reduced scale and gates on the 4-worker vs 1-worker
+//! speedup staying ≥ 1.0.
+//!
+//! Scale knobs: `$PERF_TRAIN_SAMPLES` (default 256),
+//! `$PERF_TRAIN_BATCH` (default 64) and `$PERF_TRAIN_REPEATS`
+//! (default 3; wall times are best-of-N to shave scheduler noise).
+//!
+//! Determinism note: every configuration trains bit-identical
+//! conductances (see `tests/train_determinism.rs`); this bench only
+//! measures how fast the fixed computation goes.
+
+use restream::benchutil::{best_wall, env_usize, section};
+use restream::config::apps;
+use restream::coordinator::{Engine, TrainReport};
+use restream::testing::Rng;
+
+const WORKER_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+struct TrainResult {
+    workers: usize,
+    wall_s: f64,
+    samples_per_s: f64,
+}
+
+fn print_shards(rep: &TrainReport) {
+    if rep.shard_busy_s.is_empty() {
+        return;
+    }
+    println!(
+        "    grad phase {:.1} ms + apply {:.1} ms over {} shards/batch:",
+        rep.grad_wall_s * 1e3,
+        rep.apply_wall_s * 1e3,
+        rep.shard_busy_s.len()
+    );
+    for (s, busy) in rep.shard_busy_s.iter().enumerate().take(8) {
+        println!("      shard {s:>3}  busy {:>9.2} ms", busy * 1e3);
+    }
+    if rep.shard_busy_s.len() > 8 {
+        println!("      ... {} more shards", rep.shard_busy_s.len() - 8);
+    }
+}
+
+/// (4-worker samples/s) / (1-worker samples/s); 1.0 when either is
+/// missing.
+fn speedup_4v1(results: &[TrainResult]) -> f64 {
+    let at = |w: usize| {
+        results
+            .iter()
+            .find(|r| r.workers == w)
+            .map(|r| r.samples_per_s)
+    };
+    match (at(1), at(4)) {
+        (Some(s1), Some(s4)) if s1 > 0.0 => s4 / s1,
+        _ => 1.0,
+    }
+}
+
+fn json_report(
+    results: &[TrainResult],
+    samples: usize,
+    batch: usize,
+    repeats: usize,
+    speedup: f64,
+) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str(&format!(
+        "  \"bench\": \"perf_train\",\n  \"app\": \"mnist_class\",\n  \
+         \"samples\": {samples},\n  \"batch\": {batch},\n  \
+         \"repeats\": {repeats},\n"
+    ));
+    s.push_str("  \"results\": [\n");
+    for (i, r) in results.iter().enumerate() {
+        let sep = if i + 1 < results.len() { "," } else { "" };
+        s.push_str(&format!(
+            "    {{\"op\": \"train/mnist_class\", \"workers\": {}, \
+             \"wall_s\": {:.6}, \"samples_per_s\": {:.2}}}{sep}\n",
+            r.workers, r.wall_s, r.samples_per_s
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str(&format!("  \"speedup_4v1\": {speedup:.4}\n"));
+    s.push_str("}\n");
+    s
+}
+
+fn main() -> anyhow::Result<()> {
+    let samples = env_usize("PERF_TRAIN_SAMPLES", 256).max(1);
+    let batch = env_usize("PERF_TRAIN_BATCH", 64).max(2);
+    let repeats = env_usize("PERF_TRAIN_REPEATS", 3).max(1);
+    let mut results: Vec<TrainResult> = Vec::new();
+    println!(
+        "perf_train: {samples} samples, mini-batch {batch}, best of \
+         {repeats}, workers {:?}",
+        WORKER_COUNTS
+    );
+
+    section("sharded mini-batch training (mnist_class)");
+    let net = apps::network("mnist_class").unwrap();
+    let mut rng = Rng::seeded(1);
+    let xs: Vec<Vec<f32>> = (0..samples)
+        .map(|_| rng.vec_uniform(net.layers[0], -0.5, 0.5))
+        .collect();
+    let ts: Vec<Vec<f32>> =
+        (0..samples).map(|_| rng.vec_uniform(10, -0.4, 0.4)).collect();
+    for &w in &WORKER_COUNTS {
+        let engine = Engine::native().with_workers(w);
+        let mut last_report: Option<TrainReport> = None;
+        let wall = best_wall(repeats, || {
+            let ts = ts.clone();
+            let (_, rep) = engine
+                .train_with(net, &xs, move |i| ts[i].clone(), 1, 0.3, 7,
+                            batch)
+                .unwrap();
+            last_report = Some(rep);
+        });
+        let samples_per_s = samples as f64 / wall.max(1e-12);
+        println!(
+            "bench train/mnist_class/w{w} {:>10.2} ms  {:>10.0} samples/s",
+            wall * 1e3,
+            samples_per_s
+        );
+        results.push(TrainResult { workers: w, wall_s: wall, samples_per_s });
+        if w == *WORKER_COUNTS.last().unwrap() {
+            if let Some(rep) = &last_report {
+                print_shards(rep);
+            }
+        }
+    }
+
+    let speedup = speedup_4v1(&results);
+    section("summary");
+    println!("4-worker vs 1-worker training speedup: {speedup:.2}x");
+    let out_path = std::env::var("BENCH_TRAIN_OUT")
+        .unwrap_or_else(|_| "BENCH_train.json".to_string());
+    std::fs::write(
+        &out_path,
+        json_report(&results, samples, batch, repeats, speedup),
+    )?;
+    println!("wrote {out_path}");
+    Ok(())
+}

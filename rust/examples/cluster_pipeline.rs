@@ -24,7 +24,9 @@ fn main() -> anyhow::Result<()> {
     // Stage-by-stage AE pre-training (chip reconfigured between stages).
     println!("layerwise pre-training {} ({} stages)…",
              dr.name, dr.layers.len() - 1);
-    let (encoder, reports) = engine.train_dr(dr, &xs, 1, 0.6, 0)?;
+    // batch 1: the paper's per-sample stochastic BP (pass N > 1 for
+    // data-parallel mini-batch pre-training over the worker pool)
+    let (encoder, reports) = engine.train_dr(dr, &xs, 1, 0.6, 0, 1)?;
     for (s, r) in reports.iter().enumerate() {
         println!(
             "  stage {s}: loss {:.4} ({} samples, {:.1}s)",

@@ -38,6 +38,21 @@ pub fn time<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Timing {
     Timing { iters, mean_s: total / iters as f64, min_s, max_s }
 }
 
+/// Best-of-`repeats` wall clock of `f` (seconds), after one unmeasured
+/// warmup run — the policy the scaling benches (`perf_parallel`,
+/// `perf_train`) share for noise-resistant whole-operation walls on
+/// busy CI runners.
+pub fn best_wall<F: FnMut()>(repeats: usize, mut f: F) -> f64 {
+    f();
+    let mut best = f64::INFINITY;
+    for _ in 0..repeats {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
 /// Print a bench line in a stable, grep-able format.
 pub fn report(name: &str, t: &Timing) {
     println!(

@@ -10,6 +10,13 @@ pub const FWD_BATCH: usize = 64;
 pub const BIG_TRAIN_BATCH: usize = 16;
 /// Samples scanned inside one chunked train artifact (`*_trainchunk_cK`).
 pub const TRAIN_CHUNK: usize = 32;
+/// Tile (samples per shard job) of the data-parallel mini-batch
+/// gradient phase (`Backend::grad_batch`): each tile of a mini-batch is
+/// one worker-pool job, mirroring how the clustering core's batch-sized
+/// passes shard `Engine::kmeans`. Shard boundaries depend only on the
+/// mini-batch size and this tile — never the worker count — which is
+/// what makes mini-batch training bit-identical at any pool size.
+pub const GRAD_TILE: usize = 8;
 
 /// What kind of workload an application is (drives mapping + reporting).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -104,6 +111,17 @@ impl Network {
     pub fn stage_artifact(&self, stage: usize) -> String {
         format!("{}_stage{}_train_b{}", self.name, stage, TRAIN_BATCH)
     }
+
+    /// Artifact name of the gradient-batch graph (`model.mlp_grad_batch`,
+    /// one [`GRAD_TILE`]-sample tile of a data-parallel mini-batch).
+    pub fn grad_artifact(&self) -> String {
+        format!("{}_grad_t{}", self.name, GRAD_TILE)
+    }
+
+    /// Artifact name of a DR pretraining stage's gradient-batch graph.
+    pub fn stage_grad_artifact(&self, stage: usize) -> String {
+        format!("{}_stage{}_grad_t{}", self.name, stage, GRAD_TILE)
+    }
 }
 
 impl App {
@@ -138,8 +156,10 @@ mod tests {
         let n = network("kdd_ae").unwrap();
         assert_eq!(n.train_artifact(), "kdd_ae_train_b1");
         assert_eq!(n.fwd_artifact(), "kdd_ae_fwd_b64");
+        assert_eq!(n.grad_artifact(), "kdd_ae_grad_t8");
         let d = network("mnist_dr").unwrap();
         assert_eq!(d.stage_artifact(2), "mnist_dr_stage2_train_b1");
+        assert_eq!(d.stage_grad_artifact(2), "mnist_dr_stage2_grad_t8");
         let k = kmeans_app("isolet_kmeans").unwrap();
         assert_eq!(k.step_artifact(), "isolet_kmeans_step_b64");
     }

@@ -29,8 +29,18 @@
 //! [`WorkerPool`], sharded the way the `mapper` spreads the app over
 //! the chip's core mesh; results are bit-identical to the sequential
 //! path at any worker count (see [`pool`] for the determinism
-//! contract). Training stays sequential — per-sample stochastic BP is
-//! a serial dependence chain by definition.
+//! contract).
+//!
+//! Training parallelises by *mini-batch* ([`Engine::train_with`],
+//! `batch > 1`): each mini-batch splits into fixed
+//! [`apps::GRAD_TILE`]-aligned shards whose gradient sums
+//! ([`Backend::grad_batch`]) compute concurrently on the pool, reduce
+//! left-to-right on one thread, and fire a single weight update
+//! ([`Backend::apply_grads`]) — so trained conductances and loss
+//! curves are bit-identical at any worker count for a fixed batch
+//! size. `batch == 1` takes the untouched per-sample stochastic-BP
+//! path (the paper's section III.E semantics, a serial dependence
+//! chain by definition), which [`Engine::train`] always uses.
 //!
 //! Callers holding *independent single-sample requests* rather than
 //! pre-formed batches go through the serving front end
@@ -66,6 +76,21 @@ pub struct TrainReport {
     /// Host wall-clock of the run (for the perf harness, not the chip
     /// timing model — that is `crate::sim`).
     pub wall_s: f64,
+    /// Mini-batch size the run used (1 = the paper's per-sample
+    /// stochastic BP; [`Engine::train`] always reports 1).
+    pub batch: usize,
+    /// Worker-pool size the gradient phase sharded over.
+    pub workers: usize,
+    /// Wall-clock of the sharded gradient phase summed over every
+    /// mini-batch (s; 0 on the sequential path).
+    pub grad_wall_s: f64,
+    /// Wall-clock of the per-mini-batch weight updates (s; 0 on the
+    /// sequential path — its updates are fused into the backend step).
+    pub apply_wall_s: f64,
+    /// Per-shard busy time accumulated across every mini-batch of the
+    /// run, indexed by shard (= reduction) position; empty on the
+    /// sequential path. The training twin of [`ExecReport::busy_s`].
+    pub shard_busy_s: Vec<f64>,
 }
 
 /// The streaming coordinator.
@@ -147,14 +172,15 @@ impl Engine {
     /// Run one shard job per plan entry on the worker pool, timing each
     /// shard and recording the [`ExecReport`], and return the per-shard
     /// outputs **in shard order** (the caller's left-to-right reduction
-    /// order). Shared by every plan-based sharded operation so the
-    /// stats bookkeeping cannot drift between them.
+    /// order) along with that report (which the training loop folds
+    /// into its [`TrainReport`]). Shared by every plan-based sharded
+    /// operation so the stats bookkeeping cannot drift between them.
     fn run_sharded<T: Send>(
         &self,
         op: String,
         plan: &ShardPlan,
         f: impl Fn(usize, (usize, usize)) -> T + Sync,
-    ) -> Vec<T> {
+    ) -> (Vec<T>, ExecReport) {
         let t0 = Instant::now();
         let timed = self.pool.run(plan.shards(), |s| {
             let t = Instant::now();
@@ -171,13 +197,14 @@ impl Engine {
             });
             outs.push(out);
         }
-        self.record(ExecReport {
+        let report = ExecReport {
             op,
             workers: self.pool.workers(),
             wall_s: t0.elapsed().as_secs_f64(),
             shards,
-        });
-        outs
+        };
+        self.record(report.clone());
+        (outs, report)
     }
 
     /// The default engine: the in-process native backend.
@@ -217,7 +244,8 @@ impl Engine {
     }
 
     /// Train a classifier or plain AE with per-sample stochastic BP.
-    /// `targets(i)` supplies the target row for sample `i`.
+    /// `targets(i)` supplies the target row for sample `i`. Equivalent
+    /// to [`Engine::train_with`] at mini-batch size 1.
     pub fn train(
         &self,
         net: &Network,
@@ -227,16 +255,91 @@ impl Engine {
         lr: f32,
         seed: u64,
     ) -> Result<(Vec<ArrayF32>, TrainReport)> {
+        self.train_with(net, xs, targets, epochs, lr, seed,
+                        apps::TRAIN_BATCH)
+    }
+
+    /// Train with mini-batch gradient accumulation of `batch` samples
+    /// per weight update, the gradient phase sharded data-parallel over
+    /// the worker pool.
+    ///
+    /// * `batch <= 1` runs the paper's per-sample stochastic BP — the
+    ///   exact sequential path of [`Engine::train`], bit for bit.
+    /// * `batch > 1` accumulates `Backend::grad_batch` sums over fixed
+    ///   [`apps::GRAD_TILE`]-aligned shards and applies one update per
+    ///   mini-batch. Epoch sample order is a function of `seed` alone,
+    ///   shard boundaries of the mini-batch size alone, and shard
+    ///   partials reduce left-to-right on one thread — so trained
+    ///   params and loss curves are **bit-identical at any worker
+    ///   count** (`tests/train_determinism.rs` pins both properties).
+    ///
+    /// The native backend accepts any `batch`/dataset combination
+    /// (short tail shards and tail mini-batches just carry fewer
+    /// rows). A backend with a fixed-shape gradient artifact (PJRT —
+    /// `Backend::grad_tile` reports a nonzero tile) additionally
+    /// requires `batch` to be a multiple of the tile and the dataset
+    /// size a multiple of `batch`; violations — and an unloadable
+    /// gradient artifact — fail fast **before** the first epoch.
+    pub fn train_with(
+        &self,
+        net: &Network,
+        xs: &[Vec<f32>],
+        targets: impl Fn(usize) -> Vec<f32>,
+        epochs: usize,
+        lr: f32,
+        seed: u64,
+        batch: usize,
+    ) -> Result<(Vec<ArrayF32>, TrainReport)> {
         let graph = net.train_artifact();
         let chunk_graph =
             format!("{}_trainchunk_c{}", net.name, apps::TRAIN_CHUNK);
+        let grad_graph = net.grad_artifact();
         let params = init_conductances(net.layers, seed);
         self.train_loop(
-            &graph, &chunk_graph, params, xs, &targets, epochs, lr, seed,
+            &graph, &chunk_graph, &grad_graph, params, xs, &targets,
+            epochs, lr, seed, batch,
         )
     }
 
-    /// The generic training loop.
+    /// The generic training loop: dispatches between the sequential
+    /// per-sample path (`batch <= 1`, untouched stochastic-BP
+    /// semantics) and the data-parallel mini-batch path.
+    fn train_loop(
+        &self,
+        graph: &str,
+        chunk_graph: &str,
+        grad_graph: &str,
+        params: Vec<ArrayF32>,
+        xs: &[Vec<f32>],
+        targets: &impl Fn(usize) -> Vec<f32>,
+        epochs: usize,
+        lr: f32,
+        seed: u64,
+        batch: usize,
+    ) -> Result<(Vec<ArrayF32>, TrainReport)> {
+        let start = std::time::Instant::now();
+        let batch = batch.max(1);
+        let mut report = TrainReport {
+            batch,
+            workers: self.pool.workers(),
+            ..TrainReport::default()
+        };
+        let params = if batch == 1 {
+            self.train_epochs_sequential(
+                graph, chunk_graph, params, xs, targets, epochs, lr,
+                seed, &mut report,
+            )?
+        } else {
+            self.train_epochs_minibatch(
+                grad_graph, params, xs, targets, epochs, lr, seed, batch,
+                &mut report,
+            )?
+        };
+        report.wall_s = start.elapsed().as_secs_f64();
+        Ok((params, report))
+    }
+
+    /// The sequential per-sample epochs (the paper's stochastic BP).
     ///
     /// Per-sample semantics are `Backend::train_step` (`params…, x, t,
     /// lr -> params…, loss`); when the backend offers a chunked variant
@@ -245,7 +348,7 @@ impl Engine {
     /// the epoch tail falls back to single steps — for the PJRT backend
     /// this amortises the host/device boundary K-fold (EXPERIMENTS.md
     /// §Perf), for the native backend it batches dispatch.
-    fn train_loop(
+    fn train_epochs_sequential(
         &self,
         graph: &str,
         chunk_graph: &str,
@@ -255,12 +358,11 @@ impl Engine {
         epochs: usize,
         lr: f32,
         seed: u64,
-    ) -> Result<(Vec<ArrayF32>, TrainReport)> {
-        let start = std::time::Instant::now();
+        report: &mut TrainReport,
+    ) -> Result<Vec<ArrayF32>> {
         let chunk_k = self.backend.chunk_size(chunk_graph);
         let dims = xs.first().map_or(0, Vec::len);
         let t_dim = if xs.is_empty() { 0 } else { targets(0).len() };
-        let mut report = TrainReport::default();
         let mut order: Vec<usize> = (0..xs.len()).collect();
         let mut rng = Rng::seeded(seed ^ 0x0BDE);
         for _epoch in 0..epochs {
@@ -329,14 +431,203 @@ impl Engine {
             report.loss_curve.push(epoch_loss / pulled.max(1) as f32);
             report.epochs += 1;
         }
-        report.wall_s = start.elapsed().as_secs_f64();
-        Ok((params, report))
+        Ok(params)
+    }
+
+    /// The data-parallel mini-batch epochs: samples stream through the
+    /// bounded input buffer into mini-batch accumulation buffers
+    /// (mirroring the chunk path), and every full — or tail-short —
+    /// mini-batch runs one sharded gradient step.
+    fn train_epochs_minibatch(
+        &self,
+        grad_graph: &str,
+        mut params: Vec<ArrayF32>,
+        xs: &[Vec<f32>],
+        targets: &impl Fn(usize) -> Vec<f32>,
+        epochs: usize,
+        lr: f32,
+        seed: u64,
+        batch: usize,
+        report: &mut TrainReport,
+    ) -> Result<Vec<ArrayF32>> {
+        let dims = xs.first().map_or(0, Vec::len);
+        let t_dim = if xs.is_empty() { 0 } else { targets(0).len() };
+        // Fail fast on backends with a fixed-shape gradient artifact
+        // (PJRT): every shard must carry exactly `tile` samples, which
+        // requires batch % tile == 0 (no short shard inside a
+        // mini-batch) and n % batch == 0 (no short tail mini-batch).
+        // Checking up front means no epoch runs — and no weight
+        // updates apply — before the configuration error surfaces. A
+        // grad_tile error (unloadable gradient artifact) propagates
+        // here for the same reason.
+        let tile = self.backend.grad_tile(grad_graph)?;
+        if tile > 0 {
+            if tile != apps::GRAD_TILE {
+                // No --batch value can ever satisfy this: the
+                // coordinator always shards at GRAD_TILE samples.
+                return Err(anyhow!(
+                    "backend '{}' lowered {grad_graph} at a \
+                     {tile}-sample gradient tile, but this build \
+                     shards mini-batches at {}-sample tiles \
+                     (apps::GRAD_TILE) — regenerate the artifacts \
+                     (make artifacts) so the two agree",
+                    self.backend.name(),
+                    apps::GRAD_TILE
+                ));
+            }
+            if batch % tile != 0 || xs.len() % batch != 0 {
+                return Err(anyhow!(
+                    "backend '{}' executes fixed {tile}-sample gradient \
+                     tiles ({grad_graph}): mini-batch training needs \
+                     --batch (= {batch}) to be a multiple of {tile} and \
+                     the dataset size (= {}) a multiple of --batch; \
+                     adjust --batch/--samples or use --batch 1",
+                    self.backend.name(),
+                    xs.len()
+                ));
+            }
+        }
+        let mut order: Vec<usize> = (0..xs.len()).collect();
+        // Same generator stream as the sequential path: the epoch
+        // sample order is a function of the seed alone — never of the
+        // batch size or the worker count.
+        let mut rng = Rng::seeded(seed ^ 0x0BDE);
+        for _epoch in 0..epochs {
+            rng.shuffle(&mut order);
+            let mut epoch_loss = 0.0f32;
+            let mut pulled = 0usize;
+            let mut buf_i: Vec<usize> = Vec::with_capacity(batch);
+            let mut buf_x: Vec<f32> = Vec::with_capacity(batch * dims);
+            stream::run(xs, &order, |i, x| {
+                pulled += 1;
+                buf_i.push(i);
+                buf_x.extend_from_slice(x);
+                if buf_i.len() == batch {
+                    epoch_loss += self.minibatch_step(
+                        grad_graph, &mut params, &buf_i, &mut buf_x,
+                        targets, dims, t_dim, lr, report,
+                    )?;
+                    buf_i.clear();
+                }
+                Ok(())
+            })?;
+            if !buf_i.is_empty() {
+                // epoch tail: one short mini-batch, same math
+                epoch_loss += self.minibatch_step(
+                    grad_graph, &mut params, &buf_i, &mut buf_x, targets,
+                    dims, t_dim, lr, report,
+                )?;
+            }
+            report.samples_seen += pulled;
+            report.loss_curve.push(epoch_loss / pulled.max(1) as f32);
+            report.epochs += 1;
+        }
+        Ok(params)
+    }
+
+    /// One data-parallel mini-batch step: split the buffered samples
+    /// into fixed [`apps::GRAD_TILE`]-aligned shards (one tile per
+    /// shard — the clustering core's batch-sized-pass precedent, so
+    /// boundaries depend only on the mini-batch size), compute
+    /// per-shard gradient sums concurrently on the worker pool, fold
+    /// the accumulators left-to-right in shard order on this thread,
+    /// and fire a single weight update. Returns the summed pre-update
+    /// sample losses of the mini-batch.
+    fn minibatch_step(
+        &self,
+        grad_graph: &str,
+        params: &mut Vec<ArrayF32>,
+        buf_i: &[usize],
+        buf_x: &mut Vec<f32>,
+        targets: &impl Fn(usize) -> Vec<f32>,
+        dims: usize,
+        t_dim: usize,
+        lr: f32,
+        report: &mut TrainReport,
+    ) -> Result<f32> {
+        let b = buf_i.len();
+        let xs_arr = ArrayF32::matrix(b, dims, std::mem::take(buf_x))
+            .map_err(anyhow::Error::msg)?;
+        // the take left a zero-capacity Vec behind; re-reserve so the
+        // next mini-batch fills without doubling reallocations
+        buf_x.reserve(b * dims);
+        let mut ts = Vec::with_capacity(b * t_dim);
+        for &j in buf_i {
+            ts.extend(targets(j));
+        }
+        let ts_arr =
+            ArrayF32::matrix(b, t_dim, ts).map_err(anyhow::Error::msg)?;
+        let plan = ShardPlan::contiguous(
+            b,
+            apps::GRAD_TILE,
+            b.div_ceil(apps::GRAD_TILE),
+        );
+        let backend = self.backend.as_ref();
+        let cur: &[ArrayF32] = params;
+        let (shard_outs, exec) = self.run_sharded(
+            format!("grad_batch/{grad_graph}"),
+            &plan,
+            |_, (lo, hi)| -> Result<crate::runtime::GradBatch> {
+                let xs_s = ArrayF32::matrix(
+                    hi - lo,
+                    dims,
+                    xs_arr.data[lo * dims..hi * dims].to_vec(),
+                )
+                .map_err(anyhow::Error::msg)?;
+                let ts_s = ArrayF32::matrix(
+                    hi - lo,
+                    t_dim,
+                    ts_arr.data[lo * t_dim..hi * t_dim].to_vec(),
+                )
+                .map_err(anyhow::Error::msg)?;
+                backend.grad_batch(grad_graph, cur, &xs_s, &ts_s)
+            },
+        );
+        // Left-to-right fold in shard order on this thread: gradient
+        // accumulators sum elementwise, losses sum in sample order —
+        // the fixed reduction the determinism contract requires.
+        let mut total: Vec<ArrayF32> = Vec::new();
+        let mut loss_sum = 0.0f32;
+        for gb in shard_outs {
+            let gb = gb?;
+            loss_sum += gb.losses.iter().sum::<f32>();
+            if total.is_empty() {
+                total = gb.grads;
+            } else {
+                for (acc, g) in total.iter_mut().zip(&gb.grads) {
+                    for (a, v) in acc.data.iter_mut().zip(&g.data) {
+                        *a += v;
+                    }
+                }
+            }
+        }
+        if total.is_empty() {
+            return Err(anyhow!("empty mini-batch"));
+        }
+        let t0 = Instant::now();
+        *params = backend.apply_grads(
+            grad_graph,
+            std::mem::take(params),
+            &total,
+            lr,
+        )?;
+        report.apply_wall_s += t0.elapsed().as_secs_f64();
+        report.grad_wall_s += exec.wall_s;
+        for s in &exec.shards {
+            if report.shard_busy_s.len() <= s.shard {
+                report.shard_busy_s.resize(s.shard + 1, 0.0);
+            }
+            report.shard_busy_s[s.shard] += s.wall_s;
+        }
+        Ok(loss_sum)
     }
 
     /// Layerwise DR pipeline (paper section II): train each AE stage on
     /// the current representation, then re-encode the dataset with the
     /// trained encoder and move on. Returns the encoder-stack params
     /// (matching the `{app}_fwd_b64` artifact layout) plus stage reports.
+    /// `batch` selects each stage's mini-batch size exactly as in
+    /// [`Engine::train_with`] (1 = the sequential per-sample path).
     pub fn train_dr(
         &self,
         net: &Network,
@@ -344,6 +635,7 @@ impl Engine {
         epochs_per_stage: usize,
         lr: f32,
         seed: u64,
+        batch: usize,
     ) -> Result<(Vec<ArrayF32>, Vec<TrainReport>)> {
         if net.kind != AppKind::DimReduction {
             return Err(anyhow!("{} is not a DR app", net.name));
@@ -359,6 +651,7 @@ impl Engine {
                 s,
                 apps::TRAIN_CHUNK
             );
+            let grad_graph = net.stage_grad_artifact(s);
             let stage_params =
                 init_conductances(&[*n_in, *n_hid, *n_in], seed + s as u64);
             let targets = {
@@ -368,12 +661,14 @@ impl Engine {
             let (trained, report) = self.train_loop(
                 &graph,
                 &chunk_graph,
+                &grad_graph,
                 stage_params,
                 &current,
                 &targets,
                 epochs_per_stage,
                 lr,
                 seed + s as u64,
+                batch,
             )?;
             // keep the encoder half; re-encode through it (bit-compatible
             // ideal-crossbar math) for the next stage
@@ -434,7 +729,7 @@ impl Engine {
         // had), so ragged inputs cannot make shards disagree.
         let dims = xs.first().map_or(0, Vec::len);
         let backend = self.backend.as_ref();
-        let shard_outs = self.run_sharded(
+        let (shard_outs, _) = self.run_sharded(
             format!("forward_batch/{graph}"),
             &plan,
             |_, (lo, hi)| {
@@ -532,7 +827,7 @@ impl Engine {
                 .map_err(|e| anyhow!(e))?;
             let graph_ref = &graph;
             let centres_ref = &centres_arr;
-            let tiles = self.run_sharded(
+            let (tiles, _) = self.run_sharded(
                 format!("kmeans/{}", app.name),
                 &plan,
                 |_, (lo, hi)| {
@@ -592,7 +887,7 @@ impl Engine {
         let recon = self.reconstruct(net, params, xs)?;
         let plan = self.shard_plan(net, xs.len());
         let recon_ref = &recon;
-        let parts = self.run_sharded(
+        let (parts, _) = self.run_sharded(
             format!("anomaly_scores/{}", net.name),
             &plan,
             |_, (lo, hi)| -> Vec<f64> {
@@ -763,6 +1058,101 @@ mod tests {
         // healthy params still classify fine
         let good = init_conductances(net.layers, 0);
         assert_eq!(e.classify(&net, &good, &xs).unwrap().len(), 3);
+    }
+
+    #[test]
+    fn fixed_tile_backend_rejects_ragged_batches_before_training() {
+        // A backend with a fixed-shape gradient artifact (the PJRT
+        // path) must fail fast on mini-batch/dataset combinations that
+        // would produce a ragged shard — before any update applies.
+        struct FixedTile(usize);
+        impl crate::runtime::Backend for FixedTile {
+            fn name(&self) -> &'static str {
+                "fixed-tile"
+            }
+            fn grad_tile(&self, grad_graph: &str) -> Result<usize> {
+                if self.0 == 0 {
+                    return Err(anyhow!("artifact {grad_graph} missing"));
+                }
+                Ok(self.0)
+            }
+        }
+        let net = apps::network("iris_ae").unwrap();
+        let mk = || Engine::new(Box::new(FixedTile(apps::GRAD_TILE)));
+        let mut rng = Rng::seeded(1);
+        let xs: Vec<Vec<f32>> =
+            (0..32).map(|_| rng.vec_uniform(4, -0.5, 0.5)).collect();
+        // batch not a multiple of the tile: short shard inside a batch
+        let xs_t = xs.clone();
+        let err = mk()
+            .train_with(net, &xs, move |i| xs_t[i].clone(), 1, 0.5, 0, 12)
+            .unwrap_err();
+        assert!(err.to_string().contains("fixed 8-sample"), "{err}");
+        // dataset not a multiple of the batch: short tail mini-batch
+        let xs27 = &xs[..27];
+        let xs_t: Vec<Vec<f32>> = xs27.to_vec();
+        let err = mk()
+            .train_with(net, xs27, move |i| xs_t[i].clone(), 1, 0.5, 0, 8)
+            .unwrap_err();
+        assert!(err.to_string().contains("multiple of --batch"), "{err}");
+        // aligned configuration passes the check (and the mock's
+        // default native grad math trains fine)
+        let xs_t = xs.clone();
+        assert!(mk()
+            .train_with(net, &xs, move |i| xs_t[i].clone(), 1, 0.5, 0, 8)
+            .is_ok());
+        // a tile that can never match the coordinator's GRAD_TILE
+        // shards gets the regenerate-artifacts message, not --batch
+        // advice
+        let xs_t = xs.clone();
+        let err = Engine::new(Box::new(FixedTile(16)))
+            .train_with(net, &xs, move |i| xs_t[i].clone(), 1, 0.5, 0, 16)
+            .unwrap_err();
+        assert!(err.to_string().contains("regenerate"), "{err}");
+        // an unloadable gradient artifact surfaces before epoch 1 too
+        let xs_t = xs.clone();
+        let err = Engine::new(Box::new(FixedTile(0)))
+            .train_with(net, &xs, move |i| xs_t[i].clone(), 1, 0.5, 0, 8)
+            .unwrap_err();
+        assert!(err.to_string().contains("missing"), "{err}");
+        // the native backend has no tile constraint: ragged is fine
+        let xs_t = xs.clone();
+        assert!(Engine::native()
+            .train_with(net, &xs, move |i| xs_t[i].clone(), 1, 0.5, 0, 12)
+            .is_ok());
+    }
+
+    #[test]
+    fn minibatch_training_runs_and_reports() {
+        let net = apps::network("iris_ae").unwrap(); // 4-2-4, cheap
+        let mut rng = Rng::seeded(3);
+        let xs: Vec<Vec<f32>> =
+            (0..37).map(|_| rng.vec_uniform(4, -0.5, 0.5)).collect();
+        let e = Engine::native().with_workers(2);
+        let xs_t = xs.clone();
+        let (params, rep) = e
+            .train_with(net, &xs, move |i| xs_t[i].clone(), 2, 0.5, 1, 16)
+            .unwrap();
+        assert_eq!(rep.batch, 16);
+        assert_eq!(rep.workers, 2);
+        assert_eq!(rep.epochs, 2);
+        assert_eq!(rep.samples_seen, 74);
+        assert_eq!(rep.loss_curve.len(), 2);
+        // 16-sample mini-batches split into two 8-sample shards
+        assert_eq!(rep.shard_busy_s.len(), 2);
+        assert!(rep.grad_wall_s >= 0.0 && rep.apply_wall_s >= 0.0);
+        assert_eq!(params.len(), 4);
+        // the engine's last sharded op is the gradient phase
+        let pr = e.last_parallel_report().unwrap();
+        assert!(pr.op.starts_with("grad_batch/"), "{}", pr.op);
+        // sequential runs report batch 1 and no shard timings
+        let xs_t = xs.clone();
+        let (_, rep1) = e
+            .train(net, &xs, move |i| xs_t[i].clone(), 1, 0.5, 1)
+            .unwrap();
+        assert_eq!(rep1.batch, 1);
+        assert!(rep1.shard_busy_s.is_empty());
+        assert_eq!(rep1.grad_wall_s, 0.0);
     }
 
     #[test]

@@ -5,9 +5,11 @@
 //! many mesh cores at once and samples stream through them in parallel.
 //! This module gives the simulator the same execution shape: the
 //! [`Engine`](super::Engine)'s batched operations (`infer`, `kmeans`,
-//! `anomaly_scores`) split their input batches into contiguous,
-//! tile-aligned shards ([`ShardPlan`]) and run the shards on a fixed
-//! pool of `std::thread` workers ([`WorkerPool`]).
+//! `anomaly_scores`) and the mini-batch training gradient phase
+//! (`train_with`, `Backend::grad_batch` per shard) split their input
+//! batches into contiguous, tile-aligned shards ([`ShardPlan`]) and run
+//! the shards on a fixed pool of `std::thread` workers
+//! ([`WorkerPool`]).
 //!
 //! # Determinism contract
 //!
@@ -26,11 +28,15 @@
 //! Workers therefore only decide *when* a shard runs, never *what* it
 //! computes or in which order partials combine.
 //!
-//! The default shard count comes from the `mapper`'s core placement
-//! ([`crate::mapper::shard_hint`]): an app that occupies N mesh cores
-//! is sharded N ways, so the pool parallelises the way the chip does.
-//! The pool size comes from `--workers N` on the CLI or the
-//! `RESTREAM_WORKERS` environment variable ([`default_workers`]).
+//! The default shard count of a batched forward comes from the
+//! `mapper`'s core placement ([`crate::mapper::shard_hint`]): an app
+//! that occupies N mesh cores is sharded N ways, so the pool
+//! parallelises the way the chip does. K-means epochs and the training
+//! gradient phase shard one tile per job instead (the clustering
+//! core's batch-sized streaming passes; `apps::GRAD_TILE` samples per
+//! gradient shard). The pool size comes from `--workers N` on the CLI
+//! or the `RESTREAM_WORKERS` environment variable
+//! ([`default_workers`]).
 //!
 //! Jobs must not submit nested jobs to the same pool (the workers a
 //! nested submission would need may all be blocked on it); the engine's

@@ -75,9 +75,62 @@ pub fn bwd(
     out
 }
 
+/// The training unit's discretised pulse factor
+/// `quantize_err(delta * f'(dp))`, shape `(batch, n_out)` — the single
+/// definition shared by the fused [`update`], the backward-pass driver
+/// (`runtime::native::train_step`) and the withheld-pulse gradient
+/// accumulator (`runtime::native::grad_batch`), so the three cannot
+/// drift apart numerically.
+pub fn pulse_factor(delta: &[f32], dp: &[f32]) -> Vec<f32> {
+    delta
+        .iter()
+        .zip(dp.iter())
+        .map(|(&d, &p)| quantize_err(d * activation_deriv_lut(p)))
+        .collect()
+}
+
+/// Per-element gradient accumulator
+/// `acc[i, j] = sum_b x[b, i] * factor[b, j]` (`b` innermost,
+/// ascending) — the batch reduction order every consumer of the
+/// update math shares, which is what makes a withheld-pulse gradient
+/// plus [`apply_acc`] bitwise identical to the fused [`update`].
+pub fn grad_acc(
+    x: &[f32],
+    factor: &[f32],
+    batch: usize,
+    n_in: usize,
+    n_out: usize,
+) -> Vec<f32> {
+    let mut acc = vec![0.0f32; n_in * n_out];
+    for i in 0..n_in {
+        for j in 0..n_out {
+            let mut a = 0.0f32;
+            for b in 0..batch {
+                a += x[b * n_in + i] * factor[b * n_out + j];
+            }
+            acc[i * n_out + j] = a;
+        }
+    }
+    acc
+}
+
+/// Fire the training pulse from an accumulator: `dw = lr * acc`,
+/// `g+ += dw/2`, `g- -= dw/2`, clipped to the device range — the
+/// pulse-firing tail of [`update`], also used on shard-summed
+/// accumulators by the mini-batch path (`Backend::apply_grads`).
+pub fn apply_acc(gpos: &mut [f32], gneg: &mut [f32], acc: &[f32], lr: f32) {
+    for (k, &a) in acc.iter().enumerate() {
+        let dw = lr * a;
+        gpos[k] = (gpos[k] + 0.5 * dw).clamp(hw::G_MIN, hw::G_MAX);
+        gneg[k] = (gneg[k] - 0.5 * dw).clamp(hw::G_MIN, hw::G_MAX);
+    }
+}
+
 /// Weight update (training pulse): mutates `gpos`/`gneg` in place.
 /// Mirrors `kernels.weight_update`: dw = lr * x^T (delta * f'(dp)) with
 /// the product re-discretised and conductances clipped to device range.
+/// Composed from [`pulse_factor`] + [`grad_acc`] + [`apply_acc`] — the
+/// same three pieces the data-parallel gradient path uses.
 pub fn update(
     gpos: &mut [f32],
     gneg: &mut [f32],
@@ -89,25 +142,9 @@ pub fn update(
     n_in: usize,
     n_out: usize,
 ) {
-    // factor = quantize_err(delta * f'(dp)), shape (batch, n_out)
-    let factor: Vec<f32> = delta
-        .iter()
-        .zip(dp.iter())
-        .map(|(&d, &p)| quantize_err(d * activation_deriv_lut(p)))
-        .collect();
-    for i in 0..n_in {
-        let gp = &mut gpos[i * n_out..(i + 1) * n_out];
-        let gn = &mut gneg[i * n_out..(i + 1) * n_out];
-        for j in 0..n_out {
-            let mut acc = 0.0f32;
-            for b in 0..batch {
-                acc += x[b * n_in + i] * factor[b * n_out + j];
-            }
-            let dw = lr * acc;
-            gp[j] = (gp[j] + 0.5 * dw).clamp(hw::G_MIN, hw::G_MAX);
-            gn[j] = (gn[j] - 0.5 * dw).clamp(hw::G_MIN, hw::G_MAX);
-        }
-    }
+    let factor = pulse_factor(delta, dp);
+    let acc = grad_acc(x, &factor, batch, n_in, n_out);
+    apply_acc(gpos, gneg, &acc, lr);
 }
 
 #[cfg(test)]

@@ -34,12 +34,18 @@ impl KMeans {
     }
 
     /// Assign one sample (the clustering core's per-sample operation).
+    /// Distances compare in IEEE total order, so a NaN distance (a
+    /// poisoned centre or sample coordinate) sorts above every finite
+    /// distance and the sample deterministically joins the nearest
+    /// *finite* centre — no panic (pre-fix this was
+    /// `partial_cmp().unwrap()`, the bug class `Engine::classify` and
+    /// `Mlp::accuracy` shared).
     pub fn assign_one(&self, s: &[f32]) -> usize {
         (0..self.k)
             .min_by(|&a, &b| {
-                self.distance(s, a).partial_cmp(&self.distance(s, b)).unwrap()
+                self.distance(s, a).total_cmp(&self.distance(s, b))
             })
-            .unwrap()
+            .unwrap_or(0)
     }
 
     /// One full epoch: assign all samples, recompute centres from the
@@ -274,6 +280,34 @@ mod tests {
         for (u, v) in a.centres.iter().zip(&c.centres) {
             assert!((u - v).abs() < 1e-5, "{u} vs {v}");
         }
+    }
+
+    #[test]
+    fn nan_distances_assign_deterministically_without_panicking() {
+        // One poisoned centre: its distance is NaN, which total-order
+        // sorts above every finite distance, so samples join the
+        // healthy centre. Pre-fix this panicked in partial_cmp.
+        let km = KMeans {
+            k: 2,
+            dims: 2,
+            centres: vec![f32::NAN, f32::NAN, 0.1, 0.1],
+        };
+        assert_eq!(km.assign_one(&[0.1, 0.1]), 1);
+        // all centres poisoned: deterministic first index, still no panic
+        let km = KMeans {
+            k: 2,
+            dims: 2,
+            centres: vec![f32::NAN; 4],
+        };
+        assert_eq!(km.assign_one(&[0.0, 0.0]), 0);
+        // NaN sample against healthy centres: every distance is NaN,
+        // ties break to the first centre
+        let km = KMeans {
+            k: 2,
+            dims: 2,
+            centres: vec![0.0, 0.0, 0.5, 0.5],
+        };
+        assert_eq!(km.assign_one(&[f32::NAN, 0.0]), 0);
     }
 
     #[test]

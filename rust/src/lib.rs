@@ -20,7 +20,10 @@
 //!   on the request path. Batched operations execute data-parallel over
 //!   the coordinator's worker pool ([`coordinator::pool`]), sharded the
 //!   way the mapper spreads each app over the chip's core mesh —
-//!   bit-identical to sequential execution at any worker count. On top
+//!   bit-identical to sequential execution at any worker count — and
+//!   training joins the pool through mini-batch gradient accumulation
+//!   ([`coordinator::Engine::train_with`]; `restream train --batch N`),
+//!   bit-identical at any worker count for a fixed batch size. On top
 //!   of the pool sits the serving front end ([`serve`]): a bounded
 //!   request queue plus a dynamic micro-batcher that coalesces
 //!   independent single-sample requests into tile-aligned batches

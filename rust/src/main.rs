@@ -7,6 +7,7 @@
 //! restream report --table 2|3|4         regenerate a paper table
 //! restream report --vs-gpu train|recog  Figs 22-25 series
 //! restream train   --app NAME [--epochs N] [--lr F] [--seed N]
+//!                  [--batch N]
 //! restream infer   --app NAME [--seed N]
 //! restream cluster --app NAME [--epochs N]
 //! restream anomaly [--epochs N]
@@ -26,8 +27,12 @@
 //! (default: `$RESTREAM_BACKEND` or `native`) and `--workers N`
 //! (default: `$RESTREAM_WORKERS` or 1) — the worker-pool size the
 //! batched operations shard over; results are bit-identical at any
-//! worker count. The native backend needs no artifacts; `pjrt` needs
-//! the crate built with `--features pjrt` plus `make artifacts`.
+//! worker count. `train --batch N` selects the mini-batch size: 1
+//! (default) is the paper's per-sample stochastic BP, N > 1 runs
+//! data-parallel gradient accumulation over the pool with one weight
+//! update per mini-batch — also bit-identical at any `--workers` for a
+//! fixed N. The native backend needs no artifacts; `pjrt` needs the
+//! crate built with `--features pjrt` plus `make artifacts`.
 
 use std::collections::HashMap;
 use std::process::ExitCode;
@@ -141,6 +146,10 @@ fn cmd_train(f: &HashMap<String, String>) -> anyhow::Result<()> {
     let lr: f32 = get(f, "lr", 1.0).map_err(anyhow::Error::msg)?;
     let seed: u64 = get(f, "seed", 0).map_err(anyhow::Error::msg)?;
     let n: usize = get(f, "samples", 512).map_err(anyhow::Error::msg)?;
+    // mini-batch size: 1 = the paper's per-sample stochastic BP;
+    // N > 1 = data-parallel gradient accumulation over the worker pool
+    // (bit-identical at any --workers value for a fixed N)
+    let batch: usize = get(f, "batch", 1).map_err(anyhow::Error::msg)?;
     let net = apps::network(&app)
         .ok_or_else(|| anyhow::anyhow!("unknown app {app}"))?;
     let engine = engine_for(f)?;
@@ -151,7 +160,8 @@ fn cmd_train(f: &HashMap<String, String>) -> anyhow::Result<()> {
     use restream::config::AppKind;
     match net.kind {
         AppKind::DimReduction => {
-            let (_, reports) = engine.train_dr(net, &xs, epochs, lr, seed)?;
+            let (_, reports) =
+                engine.train_dr(net, &xs, epochs, lr, seed, batch)?;
             for (s, r) in reports.iter().enumerate() {
                 println!(
                     "stage {s}: {} epochs, final loss {:.5}, {:.2}s",
@@ -159,19 +169,23 @@ fn cmd_train(f: &HashMap<String, String>) -> anyhow::Result<()> {
                     r.loss_curve.last().unwrap_or(&f32::NAN),
                     r.wall_s
                 );
+                print_train_parallel(r);
             }
         }
         AppKind::Autoencoder => {
             let xs2 = xs.clone();
-            let (_, r) = engine.train(
-                net, &xs, move |i| xs2[i].clone(), epochs, lr, seed)?;
+            let (_, r) = engine.train_with(
+                net, &xs, move |i| xs2[i].clone(), epochs, lr, seed, batch)?;
             print_curve(&r);
+            print_train_parallel(&r);
         }
         _ => {
             let outs = net.layers[net.layers.len() - 1];
-            let (params, r) = engine.train(
-                net, &xs, |i| train_ds.target(i, outs), epochs, lr, seed)?;
+            let (params, r) = engine.train_with(
+                net, &xs, |i| train_ds.target(i, outs), epochs, lr, seed,
+                batch)?;
             print_curve(&r);
+            print_train_parallel(&r);
             let preds = engine.classify(net, &params, &test_ds.rows())?;
             // single-output nets are binary (class 0 vs rest)
             let truth: Vec<usize> = if outs == 1 {
@@ -186,6 +200,25 @@ fn cmd_train(f: &HashMap<String, String>) -> anyhow::Result<()> {
         }
     }
     Ok(())
+}
+
+/// Per-shard stats of a data-parallel training run (only informative
+/// for `--batch N > 1`).
+fn print_train_parallel(r: &restream::coordinator::TrainReport) {
+    if r.batch <= 1 || r.shard_busy_s.is_empty() {
+        return;
+    }
+    let busy: f64 = r.shard_busy_s.iter().sum();
+    println!(
+        "parallel training: batch {}, {} workers, {} shards/mini-batch, \
+         grad {:.3}s (shard busy {:.3}s) + apply {:.3}s",
+        r.batch,
+        r.workers,
+        r.shard_busy_s.len(),
+        r.grad_wall_s,
+        busy,
+        r.apply_wall_s
+    );
 }
 
 fn print_curve(r: &restream::coordinator::TrainReport) {
@@ -438,6 +471,9 @@ fn print_usage() {
          [--flags]\n\
          math subcommands take --backend native|pjrt (default native)\n\
          and --workers N (worker-pool size, default $RESTREAM_WORKERS or 1)\n\
+         train: --batch N (mini-batch size; 1 = per-sample stochastic BP,\n\
+         N > 1 = data-parallel gradient accumulation, bit-identical at\n\
+         any --workers)\n\
          serve: --app NAME --source stdin|replay --max-batch N \
          --max-wait-us N --clients N --requests N\n\
          see rust/src/main.rs docs and README.md for details"

@@ -24,9 +24,11 @@ pub struct RocPoint {
 }
 
 /// Sweep a decision threshold over anomaly scores. `is_attack[i]`
-/// labels each score; a sample is flagged when `score > threshold`.
-/// This regenerates the paper's Fig 20 ("detection rate for different
-/// decision parameters").
+/// labels each score; a sample is flagged when `score >= threshold`
+/// (inclusive, so at the top threshold — the maximum score — the
+/// max-scoring sample is still flagged; an earlier strict `>` silently
+/// understated TPR at that point). This regenerates the paper's Fig 20
+/// ("detection rate for different decision parameters").
 pub fn roc_sweep(scores: &[f64], is_attack: &[bool], n_points: usize)
     -> Vec<RocPoint> {
     assert_eq!(scores.len(), is_attack.len());
@@ -40,7 +42,7 @@ pub fn roc_sweep(scores: &[f64], is_attack: &[bool], n_points: usize)
             let mut tp = 0;
             let mut fp = 0;
             for (s, &a) in scores.iter().zip(is_attack) {
-                if *s > thr {
+                if *s >= thr {
                     if a {
                         tp += 1;
                     } else {
@@ -57,12 +59,23 @@ pub fn roc_sweep(scores: &[f64], is_attack: &[bool], n_points: usize)
         .collect()
 }
 
-/// Area under the ROC curve by trapezoid over the sweep (sorted by FPR).
+/// Area under the ROC curve by trapezoid over the sweep (sorted by
+/// FPR). NaN-safe: points with a non-finite coordinate (a sweep over
+/// all-NaN scores produces them) are dropped rather than poisoning the
+/// sort, and the (0,0)/(1,1) anchor endpoints are only added when the
+/// sweep doesn't already contain them.
 pub fn auc(points: &[RocPoint]) -> f64 {
-    let mut pts: Vec<(f64, f64)> = points.iter().map(|p| (p.fpr, p.tpr)).collect();
-    pts.push((0.0, 0.0));
-    pts.push((1.0, 1.0));
-    pts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut pts: Vec<(f64, f64)> = points
+        .iter()
+        .filter(|p| p.fpr.is_finite() && p.tpr.is_finite())
+        .map(|p| (p.fpr, p.tpr))
+        .collect();
+    for anchor in [(0.0, 0.0), (1.0, 1.0)] {
+        if !pts.contains(&anchor) {
+            pts.push(anchor);
+        }
+    }
+    pts.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
     pts.windows(2)
         .map(|w| (w[1].0 - w[0].0) * (w[0].1 + w[1].1) / 2.0)
         .sum()
@@ -181,6 +194,42 @@ mod tests {
         let labels = vec![false, false, true, false, true, true];
         let pts = roc_sweep(&scores, &labels, 64);
         assert!(tpr_at_fpr(&pts, 0.5) >= tpr_at_fpr(&pts, 0.1));
+    }
+
+    #[test]
+    fn roc_top_threshold_flags_max_scoring_sample() {
+        // The max-scoring attack must count at thr = hi (inclusive
+        // compare); pre-fix the strict `>` reported tpr = 0 there.
+        let scores = vec![0.1, 0.5, 0.9];
+        let labels = vec![false, false, true];
+        let pts = roc_sweep(&scores, &labels, 5);
+        let top = pts.last().unwrap();
+        assert_eq!(top.threshold, 0.9);
+        assert_eq!(top.tpr, 1.0, "max sample missed at top threshold");
+        assert_eq!(top.fpr, 0.0);
+    }
+
+    #[test]
+    fn auc_survives_nan_points_and_dedupes_anchors() {
+        // NaN sweep points (all-NaN scores) are dropped, not sorted on;
+        // pre-fix this was a partial_cmp().unwrap() panic.
+        let nanp = RocPoint { threshold: f64::NAN, tpr: f64::NAN,
+                              fpr: f64::NAN };
+        let good = RocPoint { threshold: 0.5, tpr: 0.8, fpr: 0.2 };
+        let a = auc(&[nanp, good]);
+        assert!(a.is_finite() && (0.0..=1.0).contains(&a), "auc {a}");
+        // a sweep that already contains the (0,0)/(1,1) anchors gets
+        // them once, not twice — the trapezoid count stays minimal
+        let ends = [
+            RocPoint { threshold: 1.0, tpr: 0.0, fpr: 0.0 },
+            RocPoint { threshold: 0.5, tpr: 1.0, fpr: 0.5 },
+            RocPoint { threshold: 0.0, tpr: 1.0, fpr: 1.0 },
+        ];
+        let with_ends = auc(&ends);
+        assert!((with_ends - 0.75).abs() < 1e-12, "auc {with_ends}");
+        // all points NaN: anchors alone give the chance diagonal
+        let chance = auc(&[nanp]);
+        assert!((chance - 0.5).abs() < 1e-12, "auc {chance}");
     }
 
     #[test]

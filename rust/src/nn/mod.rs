@@ -285,6 +285,11 @@ impl Mlp {
     }
 
     /// Classifier accuracy by argmax (or sign for single-output nets).
+    /// The argmax uses IEEE total order, so a non-finite output (NaN
+    /// from a poisoned conductance or a diverged run) yields a
+    /// deterministic — if wrong — prediction instead of a panic (the
+    /// same bug class `Engine::classify` fixed; that path additionally
+    /// reports the NaN as an error).
     pub fn accuracy(&self, xs: &[Vec<f32>], ys: &[usize]) -> f64 {
         let mut correct = 0;
         for (x, &y) in xs.iter().zip(ys) {
@@ -294,9 +299,9 @@ impl Mlp {
             } else {
                 out.iter()
                     .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .max_by(|a, b| a.1.total_cmp(b.1))
                     .map(|(i, _)| i)
-                    .unwrap()
+                    .unwrap_or(0)
             };
             correct += usize::from(pred == y);
         }
@@ -377,6 +382,28 @@ mod tests {
         for x in xs.iter().take(20) {
             assert_eq!(net.forward_on(&backend, x).unwrap(), net.forward(x));
         }
+    }
+
+    #[test]
+    fn accuracy_survives_nan_outputs() {
+        // A poisoned conductance drives every output to NaN; pre-fix
+        // the argmax was partial_cmp().unwrap() and panicked here.
+        let mut rng = Rng::seeded(2);
+        let mut net = Mlp::init(&[4, 5, 3], Constraint::None, &mut rng);
+        for (gp, gn) in &mut net.params {
+            for g in gp.iter_mut().chain(gn.iter_mut()) {
+                *g = f32::NAN;
+            }
+        }
+        let xs = vec![vec![0.1f32, -0.2, 0.3, 0.0]; 4];
+        let ys = vec![0usize, 1, 2, 0];
+        let acc = net.accuracy(&xs, &ys);
+        assert!((0.0..=1.0).contains(&acc), "acc {acc}");
+        // healthy params still score normally
+        let mut rng = Rng::seeded(2);
+        let net = Mlp::init(&[4, 5, 3], Constraint::None, &mut rng);
+        let acc = net.accuracy(&xs, &ys);
+        assert!((0.0..=1.0).contains(&acc));
     }
 
     #[test]

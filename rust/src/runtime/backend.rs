@@ -52,6 +52,24 @@ impl FwdMode {
     }
 }
 
+/// Result of [`Backend::grad_batch`]: the per-layer gradient
+/// accumulators of a mini-batch (or one shard of one), with the
+/// training pulse withheld so a data-parallel caller can reduce several
+/// shards' accumulators and apply one weight update per mini-batch
+/// ([`Backend::apply_grads`]).
+#[derive(Clone, Debug)]
+pub struct GradBatch {
+    /// One accumulator per *layer* (not per conductance matrix), shaped
+    /// like that layer's `gp`/`gn` (`(n_in+1, n_out)`, bias row
+    /// included): `sum_b x_b^T @ quantize_err(delta_b * f'(dp_b))`,
+    /// summed over the batch rows in order. The update applies `+dw/2`
+    /// to `g+` and `-dw/2` to `g-`, so one accumulator drives both
+    /// halves of the differential pair.
+    pub grads: Vec<ArrayF32>,
+    /// Per-sample pre-update mean squared errors, in batch-row order.
+    pub losses: Vec<f32>,
+}
+
 /// Result of one clustering-core pass over a batch (Fig 13 datapath):
 /// per-sample assignments plus the centre-accumulator registers, so the
 /// coordinator can fold batches into an epoch and divide at the end.
@@ -184,6 +202,63 @@ pub trait Backend: Send + Sync {
         Ok((params, losses))
     }
 
+    /// Per-layer gradient sums of a mini-batch (or one shard of one)
+    /// with the weight update *withheld* (`model.mlp_grad_batch`): the
+    /// same forward/backward dataflow as [`Backend::train_step`], but
+    /// the per-layer `x^T @ quantize_err(delta * f'(dp))` accumulators
+    /// are returned for the caller to reduce and apply
+    /// ([`Backend::apply_grads`]).
+    ///
+    /// Contract (pinned by `grad_then_apply_equals_train_step` below):
+    /// `grad_batch` on a single sample followed by `apply_grads` is
+    /// **bitwise identical** to [`Backend::train_step`] on that sample
+    /// — batch size 1 recovers the paper's per-sample stochastic BP
+    /// exactly. Rows of `xs`/`ts` contribute to the accumulators in
+    /// order, so a fixed shard split reduces deterministically.
+    fn grad_batch(
+        &self,
+        graph: &str,
+        params: &[ArrayF32],
+        xs: &ArrayF32,
+        ts: &ArrayF32,
+    ) -> Result<GradBatch> {
+        let _ = graph;
+        native::grad_batch(params, xs, ts)
+    }
+
+    /// Fixed gradient-tile constraint of `grad_graph`: the exact number
+    /// of samples every [`Backend::grad_batch`] call must carry, or
+    /// `Ok(0)` when the backend accepts any shard shape (the native
+    /// path). An `Err` means the gradient graph itself is unusable
+    /// (missing/corrupt artifact) — mini-batch training cannot proceed
+    /// at all. The coordinator consults this **before** training
+    /// starts, so both a ragged mini-batch/dataset combination and a
+    /// broken artifact fail fast instead of erroring mid-epoch with
+    /// updates already applied.
+    fn grad_tile(&self, grad_graph: &str) -> Result<usize> {
+        let _ = grad_graph;
+        Ok(0)
+    }
+
+    /// Fire one training pulse from (possibly shard-summed) gradient
+    /// accumulators: `dw = lr * acc`, `g+ += dw/2`, `g- -= dw/2`,
+    /// clipped to the device conductance range — the update tail of the
+    /// `weight_update` kernel with the accumulation factored out. This
+    /// is cheap elementwise host math shared verbatim by every backend
+    /// (the artifact path computes gradients on device but pulses the
+    /// crossbar model identically), which is what keeps mini-batch
+    /// results backend-portable.
+    fn apply_grads(
+        &self,
+        graph: &str,
+        params: Vec<ArrayF32>,
+        grads: &[ArrayF32],
+        lr: f32,
+    ) -> Result<Vec<ArrayF32>> {
+        let _ = graph;
+        native::apply_grads(params, grads, lr)
+    }
+
     /// Batched recognition through the full crossbar stack
     /// (`model.mlp_infer` / `model.ae_fwd`): `xs` is `(batch, n_in)`;
     /// the output list follows `mode`.
@@ -279,6 +354,76 @@ mod tests {
         for (a, c) in params.iter().zip(&chunked) {
             assert_eq!(a.data, c.data);
         }
+    }
+
+    #[test]
+    fn grad_then_apply_equals_train_step() {
+        // The batch-1 recovery contract: computing the gradient and
+        // firing the pulse separately must be bitwise identical to the
+        // fused per-sample step, on shallow and deep stacks.
+        let b: &dyn Backend = &NativeBackend;
+        for (layers, seed) in
+            [(&[4usize, 6, 2][..], 3u64), (&[8, 6, 5, 3][..], 7)]
+        {
+            let mut rng = Rng::seeded(seed);
+            let x = ArrayF32::row(rng.vec_uniform(layers[0], -0.5, 0.5));
+            let t = ArrayF32::row(
+                rng.vec_uniform(layers[layers.len() - 1], -0.4, 0.4),
+            );
+            let params = rand_params(layers, seed);
+            let (ref_params, ref_loss) =
+                b.train_step("g", params.clone(), &x, &t, 0.8).unwrap();
+            let gb = b.grad_batch("g", &params, &x, &t).unwrap();
+            assert_eq!(gb.losses.len(), 1);
+            assert_eq!(gb.losses[0], ref_loss, "{layers:?}");
+            assert_eq!(gb.grads.len(), layers.len() - 1);
+            let applied =
+                b.apply_grads("g", params, &gb.grads, 0.8).unwrap();
+            for (l, (a, r)) in applied.iter().zip(&ref_params).enumerate()
+            {
+                assert_eq!(a.data, r.data, "{layers:?} param {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn grad_batch_rows_accumulate_in_order() {
+        // A batch's accumulator is the in-order sum of its rows'
+        // single-sample accumulators (one summation group, b-major) —
+        // the property the mini-batch shard reduction relies on.
+        let b: &dyn Backend = &NativeBackend;
+        let layers = [4usize, 5, 2];
+        let mut rng = Rng::seeded(17);
+        let k = 6;
+        let xs = ArrayF32::matrix(k, 4, rng.vec_uniform(k * 4, -0.5, 0.5))
+            .unwrap();
+        let ts = ArrayF32::matrix(k, 2, rng.vec_uniform(k * 2, -0.4, 0.4))
+            .unwrap();
+        let params = rand_params(&layers, 1);
+        let whole = b.grad_batch("g", &params, &xs, &ts).unwrap();
+        assert_eq!(whole.losses.len(), k);
+        // gradients of the whole batch are finite and nonzero somewhere
+        assert!(whole
+            .grads
+            .iter()
+            .all(|g| g.data.iter().all(|v| v.is_finite())));
+        // per-sample losses agree with single-sample grad_batch calls
+        for i in 0..k {
+            let x = ArrayF32::row(xs.row_slice(i).to_vec());
+            let t = ArrayF32::row(ts.row_slice(i).to_vec());
+            let one = b.grad_batch("g", &params, &x, &t).unwrap();
+            assert_eq!(one.losses[0], whole.losses[i], "sample {i}");
+        }
+    }
+
+    #[test]
+    fn apply_grads_shape_mismatch_is_an_error() {
+        let b: &dyn Backend = &NativeBackend;
+        let params = rand_params(&[4, 3], 0);
+        let bad = vec![ArrayF32::zeros(vec![2, 2])];
+        assert!(b.apply_grads("g", params.clone(), &bad, 0.5).is_err());
+        let too_few: Vec<ArrayF32> = Vec::new();
+        assert!(b.apply_grads("g", params, &too_few, 0.5).is_err());
     }
 
     #[test]

@@ -25,7 +25,7 @@ mod native;
 mod pjrt;
 
 pub use array::ArrayF32;
-pub use backend::{Backend, FwdMode, KmeansStep, NativeBackend};
+pub use backend::{Backend, FwdMode, GradBatch, KmeansStep, NativeBackend};
 pub use meta::Meta;
 #[cfg(feature = "pjrt")]
 pub use pjrt::{Executable, PjrtBackend, Runtime};

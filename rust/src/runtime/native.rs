@@ -12,7 +12,7 @@
 
 use anyhow::{bail, ensure, Result};
 
-use super::backend::{FwdMode, KmeansStep};
+use super::backend::{FwdMode, GradBatch, KmeansStep};
 use super::ArrayF32;
 use crate::config::hwspec as hw;
 use crate::crossbar::{ideal, quant};
@@ -240,13 +240,7 @@ pub(crate) fn train_step(
         // back-propagate first, through the *pre-update* conductances
         // (the chip reads the crossbar before pulsing it)
         let prev_delta = if l > 0 {
-            let eff: Vec<f32> = delta
-                .iter()
-                .zip(&dps[l].data)
-                .map(|(&d, &p)| {
-                    quant::quantize_err(d * quant::activation_deriv_lut(p))
-                })
-                .collect();
+            let eff = ideal::pulse_factor(&delta, &dps[l].data);
             let (gp, gn) = (&params[2 * l], &params[2 * l + 1]);
             let back =
                 ideal::bwd(&eff, &gp.data, &gn.data, batch, rows, n_out);
@@ -278,6 +272,114 @@ pub(crate) fn train_step(
         }
     }
     Ok(loss)
+}
+
+/// Per-layer gradient sums of a mini-batch (`model.mlp_grad_batch`):
+/// the same forward/backward dataflow as [`train_step`], but the
+/// training pulse is *withheld* — the per-layer `x^T @ quantize_err(
+/// delta * f'(dp))` accumulators are returned instead of applied, so a
+/// data-parallel caller can sum the accumulators of several shards and
+/// fire one pulse per mini-batch ([`apply_grads`]).
+///
+/// Structurally shares `ideal::update`'s math — [`ideal::pulse_factor`]
+/// and [`ideal::grad_acc`] are the very functions the fused update
+/// composes — so `grad_batch` + [`apply_grads`] on one sample is
+/// **bitwise identical** to [`train_step`] on that sample by
+/// construction: the recovery-at-batch-1 contract `runtime::backend`
+/// documents.
+pub(crate) fn grad_batch(
+    params: &[ArrayF32],
+    xs: &ArrayF32,
+    ts: &ArrayF32,
+) -> Result<GradBatch> {
+    let (acts, dps, y) = forward_traced(params, xs)?;
+    let n_layers = params.len() / 2;
+    ensure!(
+        ts.shape == y.shape,
+        "targets have shape {:?} but the net outputs {:?}",
+        ts.shape,
+        y.shape
+    );
+    let (batch, n_last) = (y.shape[0], y.shape[1]);
+    // per-sample pre-update MSE: at batch 1 this is the same j-ordered
+    // sum / n_out reduction train_step performs over t.data
+    let mut losses = Vec::with_capacity(batch);
+    for b in 0..batch {
+        let mut s = 0.0f32;
+        for j in 0..n_last {
+            let d = ts.data[b * n_last + j] - y.data[b * n_last + j];
+            s += d * d;
+        }
+        losses.push(s / n_last as f32);
+    }
+    // Eq. 4 + the 8-bit error ADC
+    let mut delta: Vec<f32> = ts
+        .data
+        .iter()
+        .zip(&y.data)
+        .map(|(&ti, &yi)| quant::quantize_err(ti - yi))
+        .collect();
+    let mut grads: Vec<ArrayF32> = (0..n_layers)
+        .map(|l| ArrayF32::zeros(params[2 * l].shape.clone()))
+        .collect();
+    for l in (0..n_layers).rev() {
+        let rows = acts[l].shape[1];
+        let n_out = dps[l].shape[1];
+        // the training unit's discretised delta * f'(DP) product — used
+        // both for this layer's accumulator and (through the transposed
+        // crossbar) for the previous layer's error, exactly as
+        // train_step's update/backward pair computes it
+        let factor = ideal::pulse_factor(&delta, &dps[l].data);
+        grads[l].data =
+            ideal::grad_acc(&acts[l].data, &factor, batch, rows, n_out);
+        if l > 0 {
+            let (gp, gn) = (&params[2 * l], &params[2 * l + 1]);
+            let back =
+                ideal::bwd(&factor, &gp.data, &gn.data, batch, rows, n_out);
+            // drop each row's bias-column error (`[:, :-1]`)
+            let w = rows - 1;
+            let mut pd = Vec::with_capacity(batch * w);
+            for b in 0..batch {
+                pd.extend_from_slice(&back[b * rows..b * rows + w]);
+            }
+            delta = pd;
+        }
+    }
+    Ok(GradBatch { grads, losses })
+}
+
+/// Fire one training pulse from summed per-layer gradient accumulators
+/// (`grads` as returned by [`grad_batch`], possibly summed over several
+/// shards), via [`ideal::apply_acc`] — the same pulse-firing tail
+/// `ideal::update` composes, so the mini-batch update and the fused
+/// per-sample update share one definition.
+pub(crate) fn apply_grads(
+    mut params: Vec<ArrayF32>,
+    grads: &[ArrayF32],
+    lr: f32,
+) -> Result<Vec<ArrayF32>> {
+    ensure!(
+        params.len() == 2 * grads.len(),
+        "{} gradient arrays for {} (gp, gn) parameter pairs",
+        grads.len(),
+        params.len() / 2
+    );
+    for (l, (pair, g)) in params.chunks_mut(2).zip(grads).enumerate() {
+        ensure!(
+            pair[0].shape == g.shape,
+            "layer {l}: gradient shape {:?} != conductance shape {:?}",
+            g.shape,
+            pair[0].shape
+        );
+        let (gp_half, gn_half) = pair.split_at_mut(1);
+        ideal::apply_acc(
+            &mut gp_half[0].data,
+            &mut gn_half[0].data,
+            &g.data,
+            lr,
+        );
+    }
+    Ok(params)
 }
 
 /// Scan per-sample stochastic BP over the rows of `xs`/`ts`

@@ -35,7 +35,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
-use super::backend::{Backend, FwdMode, KmeansStep};
+use super::backend::{Backend, FwdMode, GradBatch, KmeansStep};
 use super::{ArrayF32, Meta};
 
 /// A loaded, compiled artifact.
@@ -262,6 +262,59 @@ impl Backend for PjrtBackend {
             outs.len()
         );
         Ok((outs, losses.data))
+    }
+
+    /// The artifact's tile is fixed at lowering time; report it (`xs`
+    /// is the second input from the end: `params…, xs, ts`) so the
+    /// coordinator can reject ragged mini-batch configurations before
+    /// training starts rather than erroring mid-epoch. A load failure
+    /// propagates — unlike [`Backend::chunk_size`]'s fallback-to-0
+    /// (where a missing chunk artifact legitimately means "use the
+    /// per-sample path"), there is no gradient path without this
+    /// artifact, so swallowing the error would only defer it to the
+    /// first mini-batch.
+    fn grad_tile(&self, grad_graph: &str) -> Result<usize> {
+        let exe = self.rt.load(grad_graph)?;
+        ensure!(
+            exe.meta.inputs.len() >= 2,
+            "{grad_graph}: meta lists {} inputs, expected params…, xs, ts",
+            exe.meta.inputs.len()
+        );
+        Ok(exe.meta.inputs[exe.meta.inputs.len() - 2][0])
+    }
+
+    /// Gradient tile through the `{app}_grad_tK` artifact
+    /// (`model.mlp_grad_batch`): inputs `params…, xs, ts`, outputs one
+    /// per-layer accumulator each plus the per-sample losses. The
+    /// artifact's tile size is fixed at lowering time; the coordinator
+    /// pre-checks it via [`Backend::grad_tile`], and the meta sidecar
+    /// validation still rejects any ragged shard loudly at the call.
+    /// The companion weight update stays on the trait's host default
+    /// ([`Backend::apply_grads`]) — it is cheap elementwise math shared
+    /// bit-for-bit by every backend, and keeping it on the host spares
+    /// a per-mini-batch artifact round-trip of every conductance matrix.
+    fn grad_batch(
+        &self,
+        graph: &str,
+        params: &[ArrayF32],
+        xs: &ArrayF32,
+        ts: &ArrayF32,
+    ) -> Result<GradBatch> {
+        let exe = self.rt.load(graph)?;
+        let mut ins = params.to_vec();
+        ins.push(xs.clone());
+        ins.push(ts.clone());
+        let mut outs = exe.run(&ins)?;
+        let losses = outs
+            .pop()
+            .ok_or_else(|| anyhow!("{graph} returned nothing"))?;
+        ensure!(
+            outs.len() == params.len() / 2,
+            "{graph} returned {} gradient arrays, expected {}",
+            outs.len(),
+            params.len() / 2
+        );
+        Ok(GradBatch { grads: outs, losses: losses.data })
     }
 
     fn forward_batch(

@@ -115,6 +115,29 @@ fn kmeans_handles_non_multiple_batch_sizes() {
 }
 
 #[test]
+fn iris_minibatch_training_converges_and_classifies() {
+    // The data-parallel path must not just be deterministic — it must
+    // still learn. Mini-batch 8 accumulates summed gradients (one
+    // pulse per batch), so a lower lr than the per-sample run.
+    let e = engine().with_workers(4);
+    let net = apps::network("iris_class").unwrap();
+    let ds = datasets::iris(0);
+    let (train, test) = ds.split(0.8, 0);
+    let xs = train.rows();
+    let (params, rep) = e
+        .train_with(net, &xs, |i| train.target(i, 1), 15, 0.5, 0, 8)
+        .unwrap();
+    assert_eq!(rep.epochs, 15);
+    assert_eq!(rep.batch, 8);
+    let first = rep.loss_curve[0];
+    let last = *rep.loss_curve.last().unwrap();
+    assert!(last < first * 0.5, "loss {first} -> {last}");
+    let preds = e.classify(net, &params, &test.rows()).unwrap();
+    let truth: Vec<usize> = test.y.iter().map(|&y| y.min(1)).collect();
+    assert!(metrics::accuracy(&preds, &truth) > 0.9);
+}
+
+#[test]
 fn training_is_deterministic_for_a_seed() {
     let e = engine();
     let net = apps::network("iris_class").unwrap();

@@ -1,0 +1,209 @@
+//! Training determinism: the data-parallel mini-batch path must be a
+//! pure scheduling change, exactly like the sharded inference layer.
+//!
+//! * `--batch 1` (i.e. [`Engine::train_with`] at batch 1) takes the
+//!   untouched sequential stochastic-BP path, so its trained params and
+//!   loss curves are **bit-identical** to [`Engine::train`] — the
+//!   pre-mini-batch goldens — on every registered application.
+//! * `--batch N` results are **bit-identical across worker counts**
+//!   {1, 2, 4, 7}: shard boundaries are fixed by the mini-batch size
+//!   (never the pool), and gradient partials reduce left-to-right on
+//!   one thread (see `coordinator::pool` for the contract).
+
+use restream::config::apps;
+use restream::coordinator::Engine;
+use restream::runtime::ArrayF32;
+use restream::testing::Rng;
+
+/// Worker counts swept below; 7 is deliberately coprime with the
+/// 8-sample gradient tile.
+const SWEEP: [usize; 3] = [2, 4, 7];
+
+fn rows(rng: &mut Rng, n: usize, dims: usize) -> Vec<Vec<f32>> {
+    (0..n).map(|_| rng.vec_uniform(dims, -0.5, 0.5)).collect()
+}
+
+fn targets_for(rng: &mut Rng, n: usize, t_dim: usize) -> Vec<Vec<f32>> {
+    (0..n).map(|_| rng.vec_uniform(t_dim, -0.4, 0.4)).collect()
+}
+
+fn assert_params_eq(a: &[ArrayF32], b: &[ArrayF32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: param count");
+    for (l, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.data, y.data, "{what}: param {l}");
+    }
+}
+
+#[test]
+fn batch_1_matches_sequential_goldens_on_all_apps() {
+    // train_with(batch = 1) must reproduce Engine::train bit for bit —
+    // params and loss curve — on every registered network (the big
+    // ISOLET stacks run fewer samples to keep debug-mode time sane).
+    for net in apps::NETWORKS {
+        let n = if net.layers[0] > 500 { 5 } else { 12 };
+        let t_dim = net.layers[net.layers.len() - 1];
+        let mut rng = Rng::seeded(0xBA7C ^ net.layers[0] as u64);
+        let xs = rows(&mut rng, n, net.layers[0]);
+        let ts = targets_for(&mut rng, n, t_dim);
+        let e = Engine::native();
+        let ts_a = ts.clone();
+        let (ref_params, ref_rep) = e
+            .train(net, &xs, move |i| ts_a[i].clone(), 2, 0.8, 5)
+            .unwrap();
+        let ts_b = ts.clone();
+        let (params, rep) = e
+            .train_with(net, &xs, move |i| ts_b[i].clone(), 2, 0.8, 5, 1)
+            .unwrap();
+        assert_params_eq(&ref_params, &params, net.name);
+        assert_eq!(ref_rep.loss_curve, rep.loss_curve, "{}", net.name);
+        assert_eq!(rep.batch, 1, "{}", net.name);
+        // batch 1 is sequential even on a multi-worker engine
+        let e7 = Engine::native().with_workers(7);
+        let ts_c = ts.clone();
+        let (params7, rep7) = e7
+            .train_with(net, &xs, move |i| ts_c[i].clone(), 2, 0.8, 5, 1)
+            .unwrap();
+        assert_params_eq(&ref_params, &params7, net.name);
+        assert_eq!(ref_rep.loss_curve, rep7.loss_curve, "{}", net.name);
+    }
+}
+
+#[test]
+fn batch_n_is_bit_identical_across_worker_counts() {
+    // Mini-batch gradients shard over the pool; trained params and
+    // loss curves must not depend on how many workers ran the shards.
+    // Batch 20 with the 8-sample tile gives 3 shards (last short), and
+    // 50 samples leave a 10-sample tail mini-batch each epoch.
+    for (name, n, batch) in [
+        ("iris_class", 50usize, 20usize),
+        ("iris_ae", 50, 20),
+        ("kdd_ae", 45, 16),
+    ] {
+        let net = apps::network(name).unwrap();
+        let t_dim = net.layers[net.layers.len() - 1];
+        let mut rng = Rng::seeded(0xD00D ^ n as u64);
+        let xs = rows(&mut rng, n, net.layers[0]);
+        let ts = targets_for(&mut rng, n, t_dim);
+        let ts_r = ts.clone();
+        let (ref_params, ref_rep) = Engine::native()
+            .with_workers(1)
+            .train_with(net, &xs, move |i| ts_r[i].clone(), 3, 0.4, 9,
+                        batch)
+            .unwrap();
+        for &w in &SWEEP {
+            let ts_w = ts.clone();
+            let (params, rep) = Engine::native()
+                .with_workers(w)
+                .train_with(net, &xs, move |i| ts_w[i].clone(), 3, 0.4,
+                            9, batch)
+                .unwrap();
+            assert_params_eq(
+                &ref_params,
+                &params,
+                &format!("{name} at {w} workers"),
+            );
+            assert_eq!(
+                ref_rep.loss_curve, rep.loss_curve,
+                "{name} loss curve at {w} workers"
+            );
+            assert_eq!(rep.workers, w, "{name}");
+            assert_eq!(rep.batch, batch, "{name}");
+        }
+    }
+}
+
+#[test]
+fn deep_stack_minibatch_is_worker_invariant() {
+    // One multi-layer classifier (4-layer chain rule through the
+    // sharded gradient path) at reduced scale.
+    let net = apps::network("mnist_class").unwrap();
+    let mut rng = Rng::seeded(0xDEE9);
+    let n = 18;
+    let xs = rows(&mut rng, n, net.layers[0]);
+    let ts = targets_for(&mut rng, n, 10);
+    let ts_r = ts.clone();
+    let (ref_params, _) = Engine::native()
+        .with_workers(1)
+        .train_with(net, &xs, move |i| ts_r[i].clone(), 1, 0.3, 2, 16)
+        .unwrap();
+    for &w in &[4usize, 7] {
+        let ts_w = ts.clone();
+        let (params, _) = Engine::native()
+            .with_workers(w)
+            .train_with(net, &xs, move |i| ts_w[i].clone(), 1, 0.3, 2, 16)
+            .unwrap();
+        assert_params_eq(
+            &ref_params,
+            &params,
+            &format!("mnist_class at {w} workers"),
+        );
+    }
+}
+
+#[test]
+fn dr_pipeline_minibatch_is_worker_invariant() {
+    // The layerwise DR pipeline threads the same mini-batch machinery
+    // through every stage; encoder params must be worker-invariant too.
+    let net = apps::network("mnist_dr").unwrap();
+    let mut rng = Rng::seeded(0xD12);
+    let xs = rows(&mut rng, 10, net.layers[0]);
+    let (ref_enc, ref_reports) = Engine::native()
+        .with_workers(1)
+        .train_dr(net, &xs, 1, 0.3, 4, 8)
+        .unwrap();
+    let (enc, reports) = Engine::native()
+        .with_workers(4)
+        .train_dr(net, &xs, 1, 0.3, 4, 8)
+        .unwrap();
+    assert_params_eq(&ref_enc, &enc, "mnist_dr encoder");
+    assert_eq!(ref_reports.len(), reports.len());
+    for (s, (a, b)) in ref_reports.iter().zip(&reports).enumerate() {
+        assert_eq!(a.loss_curve, b.loss_curve, "stage {s}");
+    }
+}
+
+#[test]
+fn minibatch_losses_use_start_of_batch_params() {
+    // One mini-batch spanning the whole epoch (batch = n = 10, so two
+    // 8/2 gradient shards): every reported per-sample loss must be
+    // computed under the start-of-batch parameter snapshot, so the
+    // epoch-mean loss equals the mean of single-sample grad_batch
+    // losses under the *initial* conductances. A regression that
+    // applies updates between shards, or scores losses after the
+    // update, shifts the second shard's losses by ~the first update's
+    // step — orders of magnitude above the summation-order tolerance.
+    use restream::coordinator::init_conductances;
+    use restream::runtime::{ArrayF32 as Arr, Backend, NativeBackend};
+    let net = apps::network("iris_class").unwrap();
+    let mut rng = Rng::seeded(77);
+    let n = 10;
+    let xs = rows(&mut rng, n, 4);
+    let ts = targets_for(&mut rng, n, 1);
+    let seed = 3u64;
+    let ts_c = ts.clone();
+    let (_, rep) = Engine::native()
+        .with_workers(2)
+        .train_with(net, &xs, move |i| ts_c[i].clone(), 1, 0.5, seed, n)
+        .unwrap();
+    assert_eq!(rep.loss_curve.len(), 1);
+    let params = init_conductances(net.layers, seed);
+    let backend = NativeBackend;
+    let mut sum = 0.0f32;
+    for i in 0..n {
+        let gb = backend
+            .grad_batch(
+                "g",
+                &params,
+                &Arr::row(xs[i].clone()),
+                &Arr::row(ts[i].clone()),
+            )
+            .unwrap();
+        sum += gb.losses[0];
+    }
+    let expect = sum / n as f32;
+    let got = rep.loss_curve[0];
+    assert!(
+        (got - expect).abs() < 1e-5,
+        "epoch loss {got} != frozen-params mean {expect}"
+    );
+}
