@@ -3,8 +3,8 @@
 
 ARTIFACTS ?= artifacts
 
-.PHONY: build test bench bench-parallel bench-serving bench-train \
-	clippy doc fmt artifacts pytest cargotest-pjrt
+.PHONY: build test bench bench-multiapp bench-parallel bench-serving \
+	bench-train clippy doc fmt artifacts pytest cargotest-pjrt
 
 build:
 	cargo build --release
@@ -25,6 +25,11 @@ bench-parallel:
 bench-serving:
 	BENCH_SERVING_OUT=$(abspath BENCH_serving.json) \
 		cargo bench --bench perf_serving
+
+# Multi-tenant serving: resident-set sweep vs dedicated servers.
+bench-multiapp:
+	BENCH_MULTIAPP_OUT=$(abspath BENCH_multiapp.json) \
+		cargo bench --bench perf_multiapp
 
 # Data-parallel mini-batch training scaling trajectory.
 bench-train:

@@ -1,0 +1,266 @@
+//! §Perf: multi-tenant serving — many resident apps on one chip vs
+//! dedicated single-app servers.
+//!
+//! Sweeps resident sets of growing size (prefixes of the app list)
+//! and, for each set, measures:
+//!
+//! * **multi** — every app served concurrently from one shared
+//!   `chip::ChipScheduler` (per-app queues + batchers, deficit-round-
+//!   robin dispatch onto one engine), `--clients`-per-app closed-loop
+//!   load;
+//! * **dedicated** — the same apps served one after another, each from
+//!   its own dedicated `serve::Server` under the identical load; the
+//!   baseline throughput divides total requests by the *sum* of the
+//!   dedicated walls (N sequential single-app servers).
+//!
+//! Batching makes co-residency nearly free: the shared dispatcher
+//! executes the same batches the dedicated servers would, just
+//! interleaved, so aggregate multi-tenant throughput should stay close
+//! to the dedicated aggregate. CI's bench-smoke job runs this at
+//! reduced scale and fails when the full-set ratio drops below 0.8x.
+//! A final forced-swap row serves the full set on a deliberately tiny
+//! chip (4 cores) to price the reconfiguration path.
+//!
+//! Writes the machine-readable summary to `BENCH_multiapp.json`
+//! (override with `$BENCH_MULTIAPP_OUT`; CI and `make bench-multiapp`
+//! pin it to the repo root). Scale knobs: `$PERF_MULTIAPP_REQUESTS`
+//! (per client, default 128) and `$PERF_MULTIAPP_CLIENTS` (per app,
+//! default 4).
+//!
+//! Determinism note: per-app results are bit-identical to a dedicated
+//! server in every configuration (`tests/multiapp_determinism.rs`);
+//! this bench only measures how fast the answers come back.
+
+use std::time::Instant;
+
+use restream::chip::{ChipApp, ChipConfig, ChipScheduler};
+use restream::config::apps;
+use restream::coordinator::{init_conductances, Engine};
+use restream::serve::{Client, ServeConfig, Server};
+use restream::testing::Rng;
+
+use restream::benchutil::{env_usize, section};
+
+const APPS: [&str; 3] = ["iris_ae", "kdd_ae", "iris_class"];
+
+struct Row {
+    n_apps: usize,
+    apps: Vec<String>,
+    multi_rps: f64,
+    dedicated_rps: f64,
+    ratio: f64,
+    occupancy_pct: f64,
+    swaps: usize,
+    reconfig_total_us: f64,
+}
+
+/// Deterministic per-app request pool.
+fn pool_for(dims: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::seeded(0xBEEF ^ (seed << 8));
+    (0..256).map(|_| rng.vec_uniform(dims, -0.5, 0.5)).collect()
+}
+
+/// Hammer one submission handle from `clients` closed-loop threads
+/// (`requests` each) and return the load-generator wall (s).
+fn drive(client_proto: &Client, pool: &[Vec<f32>], clients: usize,
+         requests: usize) -> f64 {
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let client = client_proto.clone();
+            let rows: Vec<Vec<f32>> = (0..requests)
+                .map(|r| pool[(c * 131 + r) % pool.len()].clone())
+                .collect();
+            std::thread::spawn(move || {
+                for x in rows {
+                    client.call(x).expect("bench request failed");
+                }
+            })
+        })
+        .collect();
+    for handle in handles {
+        handle.join().expect("bench client thread panicked");
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+fn chip_app(name: &str) -> ChipApp {
+    let net = apps::network(name).unwrap().clone();
+    let params = init_conductances(net.layers, 0);
+    ChipApp { net, params }
+}
+
+/// N dedicated single-app servers, run one after another; returns the
+/// summed wall (s) over `set`.
+fn dedicated_wall(set: &[&str], pools: &[Vec<Vec<f32>>], clients: usize,
+                  requests: usize) -> f64 {
+    let mut total = 0.0;
+    for (a, name) in set.iter().enumerate() {
+        let app = chip_app(name);
+        let server = Server::start(
+            Engine::native(),
+            app.net,
+            app.params,
+            ServeConfig::default(),
+        );
+        total += drive(&server.client(), &pools[a], clients, requests);
+        server.shutdown();
+    }
+    total
+}
+
+/// One shared scheduler hosting the whole set, all apps loaded
+/// concurrently; returns (wall, occupancy %, swaps, reconfig s).
+fn multi_wall(set: &[&str], pools: &[Vec<Vec<f32>>], clients: usize,
+              requests: usize, cfg: ChipConfig)
+    -> (f64, f64, usize, f64) {
+    let hosted: Vec<ChipApp> = set.iter().map(|n| chip_app(n)).collect();
+    let chip = ChipScheduler::start(Engine::native(), hosted, cfg)
+        .expect("chip scheduler failed to start");
+    let t0 = Instant::now();
+    let handles: Vec<_> = set
+        .iter()
+        .enumerate()
+        .map(|(a, name)| {
+            let client = chip.client(name).unwrap();
+            let pool = pools[a].clone();
+            std::thread::spawn(move || {
+                drive(&client, &pool, clients, requests);
+            })
+        })
+        .collect();
+    for handle in handles {
+        handle.join().expect("bench app-load thread panicked");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let report = chip.shutdown();
+    (wall, report.occupancy_pct, report.swaps, report.reconfig_total_s)
+}
+
+fn json_row(r: &Row) -> String {
+    let names: Vec<String> =
+        r.apps.iter().map(|a| format!("\"{a}\"")).collect();
+    format!(
+        "{{\"n_apps\": {}, \"apps\": [{}], \"multi_rps\": {:.2}, \
+         \"dedicated_rps\": {:.2}, \"ratio\": {:.4}, \
+         \"occupancy_pct\": {:.2}, \"swaps\": {}, \
+         \"reconfig_total_us\": {:.2}}}",
+        r.n_apps,
+        names.join(", "),
+        r.multi_rps,
+        r.dedicated_rps,
+        r.ratio,
+        r.occupancy_pct,
+        r.swaps,
+        r.reconfig_total_us
+    )
+}
+
+fn main() -> anyhow::Result<()> {
+    let requests = env_usize("PERF_MULTIAPP_REQUESTS", 128).max(1);
+    let clients = env_usize("PERF_MULTIAPP_CLIENTS", 4).max(1);
+    let pools: Vec<Vec<Vec<f32>>> = APPS
+        .iter()
+        .enumerate()
+        .map(|(a, name)| {
+            let dims = apps::network(name).unwrap().layers[0];
+            pool_for(dims, a as u64)
+        })
+        .collect();
+    println!(
+        "perf_multiapp: apps {APPS:?}, {clients} clients/app, \
+         {requests} requests/client"
+    );
+
+    section("resident-set sweep (shared chip vs dedicated servers)");
+    let mut rows = Vec::new();
+    for n in 1..=APPS.len() {
+        let set: Vec<&str> = APPS[..n].to_vec();
+        let total_requests = (n * clients * requests) as f64;
+        let ded_wall = dedicated_wall(&set, &pools, clients, requests);
+        let (wall, occupancy_pct, swaps, reconfig_s) = multi_wall(
+            &set,
+            &pools,
+            clients,
+            requests,
+            ChipConfig::default(),
+        );
+        let row = Row {
+            n_apps: n,
+            apps: set.iter().map(|s| s.to_string()).collect(),
+            multi_rps: total_requests / wall.max(1e-12),
+            dedicated_rps: total_requests / ded_wall.max(1e-12),
+            ratio: ded_wall / wall.max(1e-12),
+            occupancy_pct,
+            swaps,
+            reconfig_total_us: reconfig_s * 1e6,
+        };
+        println!(
+            "bench multiapp/n{}  multi {:>9.0} req/s  dedicated \
+             {:>9.0} req/s  ratio {:.2}x  occupancy {:>5.1}%  \
+             {} swaps",
+            row.n_apps,
+            row.multi_rps,
+            row.dedicated_rps,
+            row.ratio,
+            row.occupancy_pct,
+            row.swaps
+        );
+        rows.push(row);
+    }
+
+    section("forced swapping (full set on a 4-core chip)");
+    let set: Vec<&str> = APPS.to_vec();
+    let tiny = ChipConfig {
+        sys: restream::config::SystemConfig {
+            neural_cores: 4,
+            ..Default::default()
+        },
+        ..ChipConfig::default()
+    };
+    let (wall, _, swaps, reconfig_s) =
+        multi_wall(&set, &pools, clients, requests, tiny);
+    let swap_rps = (set.len() * clients * requests) as f64
+        / wall.max(1e-12);
+    println!(
+        "bench multiapp/swap4  {swap_rps:>9.0} req/s  {swaps} swaps  \
+         reconfig charged {:.1} us",
+        reconfig_s * 1e6
+    );
+
+    section("summary");
+    let full = rows.last().expect("at least one set");
+    println!(
+        "{}-resident aggregate vs {} dedicated sequential servers: \
+         {:.2}x",
+        full.n_apps, full.n_apps, full.ratio
+    );
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str(&format!(
+        "  \"bench\": \"perf_multiapp\",\n  \
+         \"requests_per_client\": {requests},\n  \
+         \"clients_per_app\": {clients},\n"
+    ));
+    json.push_str("  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let sep = if i + 1 < rows.len() { "," } else { "" };
+        json.push_str(&format!("    {}{sep}\n", json_row(r)));
+    }
+    json.push_str("  ],\n");
+    json.push_str(&format!(
+        "  \"swap_demo\": {{\"chip_cores\": 4, \"rps\": {swap_rps:.2}, \
+         \"swaps\": {swaps}, \"reconfig_total_us\": {:.2}}},\n",
+        reconfig_s * 1e6
+    ));
+    json.push_str(&format!(
+        "  \"n_apps_full\": {},\n  \"ratio_full_set\": {:.4}\n",
+        full.n_apps, full.ratio
+    ));
+    json.push_str("}\n");
+    let out_path = std::env::var("BENCH_MULTIAPP_OUT")
+        .unwrap_or_else(|_| "BENCH_multiapp.json".to_string());
+    std::fs::write(&out_path, json)?;
+    println!("wrote {out_path}");
+    Ok(())
+}

@@ -1,0 +1,664 @@
+//! Multi-tenant chip scheduler: many resident applications served from
+//! one simulated 144-core mesh, with modeled reconfiguration.
+//!
+//! The paper's title word is *reconfigurable*: the mesh is statically
+//! time-multiplexed and re-programmed between workloads (sections II,
+//! V.B), and the follow-up streaming-multicore paper (arXiv:1606.04609)
+//! frames the chip as a shared recognition server. Datacenter
+//! accelerators win precisely by co-residency — many models scheduled
+//! onto one die (Jouppi et al., arXiv:1704.04760) — so this module
+//! turns the single-app serving front ([`crate::serve`]) into a
+//! multi-tenant one:
+//!
+//! 1. **Admission** — every hosted app is placement-checked against
+//!    the mesh ([`crate::mapper::place_at`]) and gets a *core offset*
+//!    so co-resident placements occupy disjoint mesh stops
+//!    ([`plan_residency`]). A set whose combined peak demand exceeds
+//!    the chip is rejected up front when
+//!    [`ChipConfig::require_resident`] is set; otherwise the overflow
+//!    is served via swapping (below).
+//! 2. **Per-app ingress** — each app keeps its own bounded request
+//!    queue (sized from the 4 kB input buffer for *its* input width)
+//!    and its own [`Batcher`], so per-app batching math is exactly the
+//!    dedicated [`Server`](crate::serve::Server)'s.
+//! 3. **Deficit-round-robin dispatch** — formed batches from every app
+//!    multiplex onto **one** shared engine (and its worker pool)
+//!    through a DRR picker: each backlogged app earns
+//!    [`ChipConfig::quantum`] samples of credit per rotation, so a hot
+//!    app cannot starve the others while idle apps cost nothing. The
+//!    per-app ready FIFOs between batcher and dispatcher are
+//!    depth-bounded, so backpressure reaches all the way back to
+//!    `Client::submit` (the in-flight bound is the ingress capacity
+//!    plus a couple of batches — never the submission rate).
+//! 4. **Modeled reconfiguration** — dispatching a non-resident app
+//!    swaps it in: least-recently-dispatched residents are evicted
+//!    until it fits, and the switch-image + conductance re-program cost
+//!    ([`crate::sim::reconfig_cost`]) is charged into the report. The
+//!    cost is *modeled* (accounted, never slept), so functional results
+//!    are unaffected.
+//!
+//! # Determinism contract
+//!
+//! Per-app results are **bit-identical to a dedicated single-app
+//! [`Server`](crate::serve::Server)** serving the same network and
+//! parameters. Co-residency changes only *when* an app's batches
+//! dispatch, never what they compute: batching math is the shared
+//! [`Batcher`]; dispatch runs the same
+//! [`Engine::infer`](crate::coordinator::Engine::infer) over the app's
+//! own `(net, params)`; and the pool underneath is bit-identical at any
+//! worker count ([`crate::coordinator::pool`]). Swaps move mesh
+//! residency, not numerics — conductances live in host memory either
+//! way. `rust/tests/multiapp_determinism.rs` pins this across apps ×
+//! clients × workers, including a schedule that forces swaps.
+//!
+//! # Example
+//!
+//! ```
+//! use restream::chip::{ChipApp, ChipConfig, ChipScheduler};
+//! use restream::config::apps;
+//! use restream::coordinator::{init_conductances, Engine};
+//!
+//! let host = |name: &str| {
+//!     let net = apps::network(name).unwrap().clone();
+//!     let params = init_conductances(net.layers, 0);
+//!     ChipApp { net, params }
+//! };
+//! let chip = ChipScheduler::start(
+//!     Engine::native(),
+//!     vec![host("iris_ae"), host("kdd_ae")],
+//!     ChipConfig::default(),
+//! )
+//! .unwrap();
+//! let out = chip
+//!     .client("iris_ae")
+//!     .unwrap()
+//!     .call(vec![0.1, -0.2, 0.3, 0.0])
+//!     .unwrap();
+//! assert_eq!(out.out.len(), 4); // iris_ae reconstruction
+//! let report = chip.shutdown();
+//! assert_eq!(report.apps.len(), 2);
+//! assert_eq!(report.total_requests(), 1);
+//! ```
+
+mod report;
+mod residency;
+
+pub use report::{AppServeReport, MultiServeReport};
+pub use residency::{
+    footprint, greedy_admission, plan_residency, plan_slots, AppFootprint,
+    ResidentSlot,
+};
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{apps, Network, SystemConfig};
+use crate::coordinator::{stream, Engine};
+use crate::runtime::ArrayF32;
+use crate::serve::{
+    answer_batch, take_batch_inputs, Batcher, Client, Request, ServeStats,
+};
+
+use residency::Residency;
+
+/// One application hosted by a [`ChipScheduler`]: its network plus the
+/// conductance parameters to serve it with.
+#[derive(Clone)]
+pub struct ChipApp {
+    /// The served network (drives mapping, ingress width and batching).
+    pub net: Network,
+    /// Conductance parameters, as [`Server`](crate::serve::Server)
+    /// takes them.
+    pub params: Vec<ArrayF32>,
+}
+
+/// Tuning knobs of a [`ChipScheduler`].
+#[derive(Clone, Debug)]
+pub struct ChipConfig {
+    /// The chip the residents share (default: the paper's 144-core
+    /// 12x12 mesh).
+    pub sys: SystemConfig,
+    /// Per-app micro-batch limit, as
+    /// [`ServeConfig::max_batch`](crate::serve::ServeConfig::max_batch).
+    pub max_batch: usize,
+    /// Per-app batching window, as
+    /// [`ServeConfig::max_wait`](crate::serve::ServeConfig::max_wait).
+    pub max_wait: Duration,
+    /// Per-app ingress queue depth override. `None` (the default)
+    /// sizes each app's queue from the 4 kB input buffer for its input
+    /// width ([`stream::buffer_capacity`]).
+    pub queue_capacity: Option<usize>,
+    /// DRR quantum in samples: the dispatch credit every backlogged app
+    /// earns per round-robin rotation (default [`apps::FWD_BATCH`] —
+    /// one full hardware tile per turn).
+    pub quantum: usize,
+    /// When true, [`ChipScheduler::start`] rejects app sets whose
+    /// combined peak core demand exceeds the chip ([`plan_residency`])
+    /// instead of serving the overflow via swapping.
+    pub require_resident: bool,
+}
+
+impl Default for ChipConfig {
+    fn default() -> Self {
+        ChipConfig {
+            sys: SystemConfig::default(),
+            max_batch: apps::FWD_BATCH,
+            max_wait: Duration::from_micros(200),
+            queue_capacity: None,
+            quantum: apps::FWD_BATCH,
+            require_resident: false,
+        }
+    }
+}
+
+/// A batch formed by one app's [`Batcher`], ready to dispatch.
+type ReadyBatch = Vec<(Request, Instant)>;
+
+/// Formed batches one app may have waiting in its ready FIFO before
+/// its batcher blocks. This is the backpressure link that keeps the
+/// bounded-ingress story true end to end: a full FIFO blocks the
+/// app's batcher thread, a blocked batcher stops draining the app's
+/// bounded ingress queue, and a full ingress queue blocks
+/// `Client::submit` — the DMA input-buffer rule. Per-app in-flight
+/// work is therefore bounded by
+/// `ingress capacity + (READY_DEPTH + 1) * max_batch` samples, never
+/// by the client submission rate.
+const READY_DEPTH: usize = 2;
+
+/// Hand-off stage between the per-app batcher threads and the single
+/// dispatcher: depth-bounded per-app FIFOs of formed batches plus a
+/// count of batchers still running (the dispatcher exits when it hits
+/// zero with every FIFO drained).
+struct ReadyQueues {
+    state: Mutex<ReadyState>,
+    cv: Condvar,
+}
+
+struct ReadyState {
+    queues: Vec<VecDeque<ReadyBatch>>,
+    open: usize,
+}
+
+impl ReadyQueues {
+    fn new(apps: usize) -> ReadyQueues {
+        ReadyQueues {
+            state: Mutex::new(ReadyState {
+                queues: (0..apps).map(|_| VecDeque::new()).collect(),
+                open: apps,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Queue a formed batch, blocking while the app's FIFO is at
+    /// [`READY_DEPTH`] — the dispatcher's pop wakes blocked pushers.
+    /// No deadlock is possible: a blocked pusher implies a non-empty
+    /// FIFO, so the dispatcher never waits while one exists.
+    fn push(&self, app: usize, batch: ReadyBatch) {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        while st.queues[app].len() >= READY_DEPTH {
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        st.queues[app].push_back(batch);
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    fn close_one(&self) {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        st.open -= 1;
+        drop(st);
+        self.cv.notify_all();
+    }
+}
+
+/// Deficit-round-robin picker over per-app batch FIFOs (Shreedhar &
+/// Varghese's DRR, at sample granularity). Each visit to a backlogged
+/// app banks `quantum` samples of credit; a batch dispatches once the
+/// app's credit covers its size, and an app whose FIFO empties forfeits
+/// leftover credit — the classic rule that stops idle flows from
+/// hoarding. One hot app therefore gets at most `quantum` samples of
+/// service per rotation while others are backlogged.
+struct Drr {
+    quantum: usize,
+    deficit: Vec<usize>,
+    cursor: usize,
+}
+
+impl Drr {
+    fn new(apps: usize, quantum: usize) -> Drr {
+        Drr { quantum: quantum.max(1), deficit: vec![0; apps], cursor: 0 }
+    }
+
+    /// Pop the next batch to dispatch, or `None` when every FIFO is
+    /// empty. Terminates because some backlogged app's credit grows by
+    /// `quantum` per rotation until it covers its head batch.
+    fn pick<T>(
+        &mut self,
+        queues: &mut [VecDeque<Vec<T>>],
+    ) -> Option<(usize, Vec<T>)> {
+        if queues.iter().all(VecDeque::is_empty) {
+            return None;
+        }
+        loop {
+            let i = self.cursor;
+            self.cursor = (self.cursor + 1) % queues.len();
+            if queues[i].is_empty() {
+                self.deficit[i] = 0;
+                continue;
+            }
+            self.deficit[i] += self.quantum;
+            let need = queues[i].front().map_or(0, Vec::len);
+            if self.deficit[i] >= need {
+                let batch = queues[i].pop_front().expect("non-empty queue");
+                self.deficit[i] -= need;
+                if queues[i].is_empty() {
+                    self.deficit[i] = 0;
+                }
+                return Some((i, batch));
+            }
+        }
+    }
+}
+
+/// A running multi-tenant scheduler: per-app batcher threads feeding
+/// one dispatcher thread that owns the shared [`Engine`]. See the
+/// module docs for the pipeline, fairness and determinism contracts,
+/// and DESIGN.md "Multi-tenant serving" for the swap lifecycle.
+pub struct ChipScheduler {
+    clients: Vec<(String, Client)>,
+    batchers: Vec<thread::JoinHandle<()>>,
+    dispatcher: thread::JoinHandle<MultiServeReport>,
+}
+
+impl ChipScheduler {
+    /// Spawn the scheduler over `engine` (which it now owns, worker
+    /// pool included), hosting every app in `hosted`. Fails when the
+    /// app list is empty or has duplicate names, when any app cannot
+    /// map onto `cfg.sys` at all, or — with
+    /// [`ChipConfig::require_resident`] — when the set's combined peak
+    /// core demand exceeds the chip.
+    pub fn start(
+        engine: Engine,
+        hosted: Vec<ChipApp>,
+        cfg: ChipConfig,
+    ) -> Result<ChipScheduler> {
+        if hosted.is_empty() {
+            return Err(anyhow!("the chip scheduler needs at least one app"));
+        }
+        for (i, a) in hosted.iter().enumerate() {
+            if hosted[..i].iter().any(|b| b.net.name == a.net.name) {
+                return Err(anyhow!(
+                    "app {} is hosted twice — each resident needs a \
+                     unique name",
+                    a.net.name
+                ));
+            }
+        }
+        cfg.sys.validate().map_err(anyhow::Error::msg)?;
+        let footprints: Vec<AppFootprint> = hosted
+            .iter()
+            .map(|a| footprint(&a.net, &cfg.sys))
+            .collect::<std::result::Result<_, String>>()
+            .map_err(anyhow::Error::msg)?;
+        if cfg.require_resident {
+            plan_slots(&footprints, &cfg.sys).map_err(anyhow::Error::msg)?;
+        }
+        let ready = Arc::new(ReadyQueues::new(hosted.len()));
+        let mut clients = Vec::with_capacity(hosted.len());
+        let mut batchers = Vec::with_capacity(hosted.len());
+        for (i, app) in hosted.iter().enumerate() {
+            let dims = app.net.layers[0];
+            let capacity = cfg
+                .queue_capacity
+                .unwrap_or_else(|| stream::buffer_capacity(dims))
+                .max(1);
+            let (client, rx) = Client::channel(dims, capacity);
+            let batcher = Batcher::new(rx, cfg.max_batch, cfg.max_wait);
+            let ready_tx = Arc::clone(&ready);
+            let handle = thread::Builder::new()
+                .name(format!("restream-chip-batch-{}", app.net.name))
+                .spawn(move || {
+                    while let Some(batch) = batcher.next_batch() {
+                        ready_tx.push(i, batch);
+                    }
+                    ready_tx.close_one();
+                })
+                .expect("spawning chip batcher thread");
+            clients.push((app.net.name.to_string(), client));
+            batchers.push(handle);
+        }
+        let quantum = cfg.quantum;
+        let budget = cfg.sys.neural_cores;
+        let dispatcher = thread::Builder::new()
+            .name("restream-chip-dispatch".to_string())
+            .spawn(move || {
+                dispatch_loop(engine, hosted, footprints, ready, quantum,
+                              budget)
+            })
+            .expect("spawning chip dispatcher thread");
+        Ok(ChipScheduler { clients, batchers, dispatcher })
+    }
+
+    /// Names of the hosted apps, in registration order.
+    pub fn apps(&self) -> Vec<String> {
+        self.clients.iter().map(|(name, _)| name.clone()).collect()
+    }
+
+    /// A submission handle for `app` (any number may exist; clones of
+    /// one app share that app's bounded ingress queue).
+    pub fn client(&self, app: &str) -> Result<Client> {
+        self.clients
+            .iter()
+            .find(|(name, _)| name == app)
+            .map(|(_, client)| client.clone())
+            .ok_or_else(|| {
+                anyhow!("app {app} is not hosted by this scheduler")
+            })
+    }
+
+    /// Stop accepting requests and return the aggregate
+    /// [`MultiServeReport`]. Blocks until every outstanding client
+    /// clone (of every app) has been dropped and the final batches have
+    /// been answered — the same contract as
+    /// [`Server::shutdown`](crate::serve::Server::shutdown).
+    pub fn shutdown(self) -> MultiServeReport {
+        let ChipScheduler { clients, batchers, dispatcher } = self;
+        drop(clients);
+        for handle in batchers {
+            handle.join().expect("chip batcher thread panicked");
+        }
+        dispatcher.join().expect("chip dispatcher thread panicked")
+    }
+}
+
+/// The shared dispatcher: DRR-pick ready batches across apps, swap the
+/// owning app in when it is not resident (charging the modeled
+/// reconfiguration), run the batch on the shared engine and route the
+/// replies. Runs until every app's batcher has closed and every FIFO
+/// is drained.
+fn dispatch_loop(
+    engine: Engine,
+    hosted: Vec<ChipApp>,
+    footprints: Vec<AppFootprint>,
+    ready: Arc<ReadyQueues>,
+    quantum: usize,
+    budget: usize,
+) -> MultiServeReport {
+    let n = hosted.len();
+    let mut drr = Drr::new(n, quantum);
+    let mut stats: Vec<ServeStats> = (0..n).map(|_| ServeStats::default()).collect();
+    let mut residency =
+        Residency::new(budget, footprints.iter().map(|f| f.cores).collect());
+    let mut swaps_in = vec![0usize; n];
+    let mut reconfig_s = vec![0.0f64; n];
+    // Initial residents pay their configuration once up front — the
+    // chip must be programmed before the first sample either way.
+    for i in 0..n {
+        if residency.is_resident(i) {
+            reconfig_s[i] += footprints[i].reconfig.total_s();
+        }
+    }
+    let mut swaps = 0usize;
+    let mut evictions = 0usize;
+    let mut span: Option<(Instant, Instant)> = None;
+    loop {
+        let picked = {
+            let mut st =
+                ready.state.lock().unwrap_or_else(|e| e.into_inner());
+            loop {
+                if let Some(p) = drr.pick(&mut st.queues) {
+                    break Some(p);
+                }
+                if st.open == 0 {
+                    break None;
+                }
+                st = ready
+                    .cv
+                    .wait(st)
+                    .unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        let Some((i, mut batch)) = picked else { break };
+        // The pop freed FIFO space: wake any batcher blocked on a
+        // full ready FIFO (see ReadyQueues::push).
+        ready.cv.notify_all();
+        // Modeled reconfiguration: a non-resident app swaps in before
+        // its batch may run; the charge is accounted, never slept.
+        let outcome = residency.ensure(i);
+        if outcome.swapped_in {
+            swaps_in[i] += 1;
+            swaps += 1;
+            evictions += outcome.evicted.len();
+            reconfig_s[i] += footprints[i].reconfig.total_s();
+        }
+        let dispatch = Instant::now();
+        let xs = take_batch_inputs(&mut batch);
+        let result = engine.infer(&hosted[i].net, &hosted[i].params, &xs);
+        let done = Instant::now();
+        let start = span.map_or(dispatch, |(start, _)| start);
+        span = Some((start, done));
+        answer_batch(result, batch, dispatch, done, &mut stats[i]);
+    }
+    let offsets = residency.offsets();
+    let apps: Vec<AppServeReport> = (0..n)
+        .map(|i| AppServeReport {
+            app: footprints[i].app.clone(),
+            cores: footprints[i].cores,
+            resident: residency.is_resident(i),
+            offset: offsets[i],
+            swaps_in: swaps_in[i],
+            reconfig_s: reconfig_s[i],
+            serve: stats[i].finish(),
+        })
+        .collect();
+    MultiServeReport {
+        apps,
+        wall_s: span.map_or(0.0, |(start, end)| {
+            end.saturating_duration_since(start).as_secs_f64()
+        }),
+        chip_cores: budget,
+        occupancy_pct: 100.0 * residency.peak_used() as f64
+            / budget.max(1) as f64,
+        swaps,
+        evictions,
+        reconfig_total_s: reconfig_s.iter().sum(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::init_conductances;
+
+    fn host(name: &str, seed: u64) -> ChipApp {
+        let net = apps::network(name).unwrap().clone();
+        let params = init_conductances(net.layers, seed);
+        ChipApp { net, params }
+    }
+
+    /// Build `n` real ingress requests (the reply receipts are
+    /// dropped — only the queueing behaviour is under test).
+    fn raw_requests(n: usize) -> Vec<Request> {
+        let (client, rx) = Client::channel(2, n.max(1));
+        let pendings: Vec<_> = (0..n)
+            .map(|_| client.submit(vec![0.0, 0.0]).unwrap())
+            .collect();
+        drop(client);
+        drop(pendings);
+        rx.iter().collect()
+    }
+
+    #[test]
+    fn ready_fifos_apply_backpressure_to_batchers() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let ready = Arc::new(ReadyQueues::new(1));
+        let pushed = Arc::new(AtomicUsize::new(0));
+        let ready2 = Arc::clone(&ready);
+        let pushed2 = Arc::clone(&pushed);
+        let reqs = raw_requests(READY_DEPTH + 1);
+        let producer = thread::spawn(move || {
+            for req in reqs {
+                ready2.push(0, vec![(req, Instant::now())]);
+                pushed2.fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        // the producer fills the FIFO, then must block on the extra
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while pushed.load(Ordering::SeqCst) < READY_DEPTH
+            && Instant::now() < deadline
+        {
+            thread::sleep(Duration::from_millis(5));
+        }
+        thread::sleep(Duration::from_millis(30));
+        assert_eq!(
+            pushed.load(Ordering::SeqCst),
+            READY_DEPTH,
+            "push past READY_DEPTH must block"
+        );
+        // a dispatcher-style pop frees a slot and wakes the pusher
+        {
+            let mut st =
+                ready.state.lock().unwrap_or_else(|e| e.into_inner());
+            st.queues[0].pop_front().expect("FIFO full");
+            drop(st);
+            ready.cv.notify_all();
+        }
+        producer.join().unwrap();
+        assert_eq!(pushed.load(Ordering::SeqCst), READY_DEPTH + 1);
+    }
+
+    #[test]
+    fn drr_interleaves_a_hot_app_with_a_light_one() {
+        // App 0 has a deep backlog of full 64-sample batches; app 1 has
+        // single-sample batches. With quantum 64 every rotation serves
+        // both — the hot app cannot starve the light one.
+        let mut q: Vec<VecDeque<Vec<u32>>> = vec![
+            (0..8).map(|_| vec![0u32; 64]).collect(),
+            (0..4).map(|_| vec![1u32; 1]).collect(),
+        ];
+        let mut drr = Drr::new(2, 64);
+        let mut order = Vec::new();
+        while let Some((i, _)) = drr.pick(&mut q) {
+            order.push(i);
+        }
+        assert_eq!(order.len(), 12);
+        // the first four rotations alternate 0, 1, 0, 1, ...
+        assert_eq!(&order[..8], &[0, 1, 0, 1, 0, 1, 0, 1]);
+        // afterwards only app 0's backlog remains
+        assert_eq!(&order[8..], &[0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn drr_banks_credit_for_oversized_batches() {
+        // One 10-sample batch under a quantum of 4 needs three
+        // rotations of banked credit before it dispatches.
+        let mut q: Vec<VecDeque<Vec<u32>>> =
+            vec![VecDeque::from(vec![vec![0u32; 10]])];
+        let mut drr = Drr::new(1, 4);
+        let (i, batch) = drr.pick(&mut q).unwrap();
+        assert_eq!(i, 0);
+        assert_eq!(batch.len(), 10);
+        assert!(drr.pick(&mut q).is_none());
+    }
+
+    #[test]
+    fn round_trips_across_co_resident_apps() {
+        let chip = ChipScheduler::start(
+            Engine::native(),
+            vec![host("iris_ae", 3), host("kdd_ae", 3)],
+            ChipConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(chip.apps(), vec!["iris_ae", "kdd_ae"]);
+        assert!(chip.client("nope").is_err());
+        let iris = chip.client("iris_ae").unwrap();
+        let kdd = chip.client("kdd_ae").unwrap();
+        assert_eq!(iris.dims(), 4);
+        assert_eq!(kdd.dims(), 41);
+        for _ in 0..3 {
+            let r = iris.call(vec![0.1, -0.2, 0.3, 0.0]).unwrap();
+            assert_eq!(r.out.len(), 4);
+            let r = kdd.call(vec![0.05; 41]).unwrap();
+            assert_eq!(r.out.len(), 41);
+        }
+        drop(iris);
+        drop(kdd);
+        let report = chip.shutdown();
+        assert_eq!(report.total_requests(), 6);
+        assert_eq!(report.total_errors(), 0);
+        assert_eq!(report.apps[0].serve.requests, 3);
+        assert_eq!(report.apps[1].serve.requests, 3);
+        // both fit the 144-core chip side by side: no swaps, and both
+        // end resident at disjoint offsets with initial config charged
+        assert_eq!(report.swaps, 0);
+        assert!(report.apps.iter().all(|a| a.resident));
+        let mut offs: Vec<usize> =
+            report.apps.iter().map(|a| a.offset.unwrap()).collect();
+        offs.sort_unstable();
+        assert_eq!(offs, vec![0, 2]);
+        assert!(report.reconfig_total_s > 0.0);
+        assert!(report.occupancy_pct > 0.0 && report.occupancy_pct < 100.0);
+        assert!(report.aggregate_rps() > 0.0);
+    }
+
+    #[test]
+    fn duplicate_and_empty_app_sets_are_rejected() {
+        let err = ChipScheduler::start(
+            Engine::native(),
+            Vec::new(),
+            ChipConfig::default(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("at least one"), "{err}");
+        let err = ChipScheduler::start(
+            Engine::native(),
+            vec![host("iris_ae", 0), host("iris_ae", 1)],
+            ChipConfig::default(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("hosted twice"), "{err}");
+    }
+
+    #[test]
+    fn require_resident_rejects_an_overflowing_set() {
+        // A 2-core chip cannot co-host two 2-core apps residently...
+        let cfg = ChipConfig {
+            sys: SystemConfig { neural_cores: 2, ..Default::default() },
+            require_resident: true,
+            ..ChipConfig::default()
+        };
+        let err = ChipScheduler::start(
+            Engine::native(),
+            vec![host("iris_ae", 0), host("kdd_ae", 0)],
+            cfg.clone(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("chip has 2"), "{err}");
+        // ...but the default (swapping) scheduler hosts the same set.
+        let chip = ChipScheduler::start(
+            Engine::native(),
+            vec![host("iris_ae", 0), host("kdd_ae", 0)],
+            ChipConfig { require_resident: false, ..cfg },
+        )
+        .unwrap();
+        let iris = chip.client("iris_ae").unwrap();
+        let kdd = chip.client("kdd_ae").unwrap();
+        iris.call(vec![0.0; 4]).unwrap();
+        kdd.call(vec![0.0; 41]).unwrap();
+        iris.call(vec![0.1; 4]).unwrap();
+        drop(iris);
+        drop(kdd);
+        let report = chip.shutdown();
+        // serving all three batches forced at least one swap-in, each
+        // charged a modeled reconfiguration
+        assert!(report.swaps >= 1, "swaps {}", report.swaps);
+        assert!(report.evictions >= 1);
+        assert!(report.reconfig_total_s > 0.0);
+        assert_eq!(report.total_errors(), 0);
+    }
+}

@@ -1,0 +1,164 @@
+//! Multi-tenant serving metrics: per-app serve statistics plus the
+//! chip-level residency/swap accounting, returned by
+//! [`ChipScheduler::shutdown`](super::ChipScheduler::shutdown) and
+//! printed by `restream serve --apps` / the `perf_multiapp` bench.
+
+use crate::serve::ServeReport;
+
+/// One hosted application's share of a scheduler lifetime.
+#[derive(Clone, Debug)]
+pub struct AppServeReport {
+    /// Application name.
+    pub app: String,
+    /// Peak simultaneous core demand of the app's serving config.
+    pub cores: usize,
+    /// Whether the app was resident when the scheduler shut down.
+    pub resident: bool,
+    /// Row-major core offset of the app's placement at shutdown
+    /// (`None` while swapped out).
+    pub offset: Option<usize>,
+    /// Times the app was swapped in after start (0 = never evicted or
+    /// initially resident and never displaced).
+    pub swaps_in: usize,
+    /// Modeled reconfiguration time charged to this app (s): initial
+    /// configuration plus every swap-in.
+    pub reconfig_s: f64,
+    /// The app's own latency/throughput statistics — the same shape a
+    /// dedicated single-app [`Server`](crate::serve::Server) returns.
+    pub serve: ServeReport,
+}
+
+/// Aggregate statistics of one [`ChipScheduler`](super::ChipScheduler)
+/// lifetime.
+#[derive(Clone, Debug, Default)]
+pub struct MultiServeReport {
+    /// Per-app breakdown, in registration order.
+    pub apps: Vec<AppServeReport>,
+    /// First dispatch -> last completion across every app (s).
+    pub wall_s: f64,
+    /// The chip's neural-core budget the residents shared.
+    pub chip_cores: usize,
+    /// Peak resident core demand as a percentage of the budget.
+    pub occupancy_pct: f64,
+    /// Swap-ins performed after start (each charged a reconfiguration).
+    pub swaps: usize,
+    /// Residents evicted to make room for those swap-ins.
+    pub evictions: usize,
+    /// Total modeled reconfiguration time charged (s).
+    pub reconfig_total_s: f64,
+}
+
+impl MultiServeReport {
+    /// Requests answered across every app (successes plus errors).
+    pub fn total_requests(&self) -> usize {
+        self.apps.iter().map(|a| a.serve.requests).sum()
+    }
+
+    /// Batches dispatched across every app.
+    pub fn total_batches(&self) -> usize {
+        self.apps.iter().map(|a| a.serve.batches).sum()
+    }
+
+    /// Requests answered with an error across every app.
+    pub fn total_errors(&self) -> usize {
+        self.apps.iter().map(|a| a.serve.errors).sum()
+    }
+
+    /// Aggregate throughput in requests per second over [`Self::wall_s`]
+    /// (0 before any request).
+    pub fn aggregate_rps(&self) -> f64 {
+        let requests = self.total_requests();
+        if requests == 0 {
+            0.0
+        } else {
+            requests as f64 / self.wall_s.max(1e-12)
+        }
+    }
+
+    /// Human-readable multi-line summary (what `restream serve --apps`
+    /// prints after the request streams end).
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "multi-tenant chip: {} apps on {} cores, peak occupancy \
+             {:.1}%, {} swaps ({} evictions), reconfig charged {:.1} us\n",
+            self.apps.len(),
+            self.chip_cores,
+            self.occupancy_pct,
+            self.swaps,
+            self.evictions,
+            self.reconfig_total_s * 1e6,
+        );
+        for a in &self.apps {
+            let place = match a.offset {
+                Some(o) => format!("@{o:>3}"),
+                None => "out ".to_string(),
+            };
+            s.push_str(&format!(
+                "  {:<14} {:>3} cores {place}  {:>6} req / {:>5} batches \
+                 ({} err)  p50 {:>8.1} us  p99 {:>8.1} us  \
+                 {} swap-ins, reconfig {:.1} us\n",
+                a.app,
+                a.cores,
+                a.serve.requests,
+                a.serve.batches,
+                a.serve.errors,
+                a.serve.total.p50_us,
+                a.serve.total.p99_us,
+                a.swaps_in,
+                a.reconfig_s * 1e6,
+            ));
+        }
+        s.push_str(&format!(
+            "aggregate: {} requests in {} batches over {:.3}s -> \
+             {:.0} req/s\n",
+            self.total_requests(),
+            self.total_batches(),
+            self.wall_s,
+            self.aggregate_rps(),
+        ));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregates_sum_over_apps() {
+        let app = |name: &str, requests: usize| AppServeReport {
+            app: name.to_string(),
+            cores: 2,
+            resident: true,
+            offset: Some(0),
+            swaps_in: 1,
+            reconfig_s: 1e-6,
+            serve: ServeReport {
+                requests,
+                batches: requests / 2,
+                errors: 0,
+                wall_s: 1.0,
+                ..Default::default()
+            },
+        };
+        let r = MultiServeReport {
+            apps: vec![app("a", 10), app("b", 30)],
+            wall_s: 2.0,
+            chip_cores: 144,
+            occupancy_pct: 2.8,
+            swaps: 2,
+            evictions: 1,
+            reconfig_total_s: 2e-6,
+        };
+        assert_eq!(r.total_requests(), 40);
+        assert_eq!(r.total_batches(), 20);
+        assert_eq!(r.total_errors(), 0);
+        assert_eq!(r.aggregate_rps(), 20.0);
+        let s = r.summary();
+        assert!(s.contains("2 apps"), "{s}");
+        assert!(s.contains("40 requests"), "{s}");
+        // the empty report guards its ratios
+        let empty = MultiServeReport::default();
+        assert_eq!(empty.aggregate_rps(), 0.0);
+    }
+}

@@ -1,0 +1,353 @@
+//! Residency accounting: which applications occupy which cores of the
+//! 144-core mesh, and what admitting one costs.
+//!
+//! An application's **footprint** is the peak simultaneous core demand
+//! of its serving configuration (the recognition mapping, exactly as
+//! `sim::recognition_cost` maps it) plus its modeled reconfiguration
+//! cost ([`crate::sim::reconfig_cost`]). A **resident set** is a group
+//! of footprints packed side by side into the mesh's row-major core
+//! order: each resident gets a *core offset*, its placement is
+//! re-derived at that offset via [`crate::mapper::place_at`], and the
+//! resulting mesh stops are checked disjoint — occupancy is explicit,
+//! not implied.
+//!
+//! [`plan_residency`] is the admission gate: it fails fast, with a
+//! per-app breakdown, when the set's combined demand exceeds the chip.
+//! The scheduler's dynamic swap path (`super::ChipScheduler`) reuses
+//! the same footprints with an LRU eviction policy for sets that are
+//! *allowed* to overflow.
+
+use crate::config::{Network, SystemConfig};
+use crate::mapper::{place_at, StageMap};
+use crate::sim::{self, ReconfigCost};
+
+/// Static footprint of one application on the chip: what residency
+/// costs in cores and what (re)admission costs in modeled time.
+#[derive(Clone, Debug)]
+pub struct AppFootprint {
+    /// Application name.
+    pub app: String,
+    /// Peak simultaneous core demand of the serving configuration.
+    pub cores: usize,
+    /// Modeled cost of (re)configuring the chip for this app — charged
+    /// by the scheduler on every swap-in.
+    pub reconfig: ReconfigCost,
+    /// The serving-configuration stage, kept for placement checks at
+    /// admission time.
+    stage: StageMap,
+}
+
+/// Compute the serving footprint of `net` on `sys`. The mapping is
+/// [`sim::serving_map`] — the one home of the "serving runs the
+/// deployed forward network" remap rule — built once here and priced
+/// in place via [`sim::reconfig_cost_of`] (no re-mapping). Errors when
+/// the app cannot map at all (a single layer larger than the core
+/// budget).
+pub fn footprint(net: &Network, sys: &SystemConfig)
+    -> Result<AppFootprint, String> {
+    let map = sim::serving_map(net, sys)?;
+    let stage = map
+        .stages
+        .into_iter()
+        .next()
+        .ok_or_else(|| format!("{}: mapping produced no stages", net.name))?;
+    let reconfig = sim::reconfig_cost_of(&stage, sys);
+    Ok(AppFootprint {
+        app: net.name.to_string(),
+        cores: stage.cores_used(),
+        reconfig,
+        stage,
+    })
+}
+
+/// Greedy admission in listed order: each app becomes resident — at
+/// the next packed offset — if it still fits next to everyone admitted
+/// before it; apps that do not fit are skipped (`None`), and later,
+/// smaller apps may still be admitted. This is **the** initial
+/// admission rule: the scheduler's `Residency` state and the
+/// `restream report --occupancy` table both call it, so the report can
+/// never drift from what the scheduler actually does.
+pub fn greedy_admission(cores: &[usize], budget: usize)
+    -> Vec<Option<usize>> {
+    let mut slots = Vec::with_capacity(cores.len());
+    let mut used = 0usize;
+    for &need in cores {
+        if used + need <= budget {
+            slots.push(Some(used));
+            used += need;
+        } else {
+            slots.push(None);
+        }
+    }
+    slots
+}
+
+/// One resident's slot on the mesh: `cores` mesh cores starting at
+/// row-major core id `offset`.
+#[derive(Clone, Debug)]
+pub struct ResidentSlot {
+    /// Application name.
+    pub app: String,
+    /// Peak simultaneous core demand.
+    pub cores: usize,
+    /// Row-major core id the app's placement starts at.
+    pub offset: usize,
+}
+
+/// Admission check for a *fully resident* set: compute every app's
+/// [`footprint`] and hand them to [`plan_slots`].
+pub fn plan_residency(nets: &[&Network], sys: &SystemConfig)
+    -> Result<Vec<ResidentSlot>, String> {
+    let footprints = nets
+        .iter()
+        .map(|net| footprint(net, sys))
+        .collect::<Result<Vec<_>, String>>()?;
+    plan_slots(&footprints, sys)
+}
+
+/// [`plan_residency`] over already-computed footprints (the scheduler
+/// computes each app's footprint once and reuses it here): place every
+/// app side by side on one chip, offsets assigned by
+/// [`greedy_admission`] in listed order, and placement-check each at
+/// its offset (disjoint mesh stops). Errors — descriptively, with the
+/// per-app core breakdown — when the combined peak demand exceeds the
+/// chip's core budget.
+pub fn plan_slots(footprints: &[AppFootprint], sys: &SystemConfig)
+    -> Result<Vec<ResidentSlot>, String> {
+    let cores: Vec<usize> = footprints.iter().map(|fp| fp.cores).collect();
+    let used: usize = cores.iter().sum();
+    if used > sys.neural_cores {
+        let detail: Vec<String> = footprints
+            .iter()
+            .map(|fp| format!("{}={}", fp.app, fp.cores))
+            .collect();
+        return Err(format!(
+            "resident set needs {used} neural cores but the chip has \
+             {}: {}; drop an app or serve the overflow via \
+             reconfiguration (swapping)",
+            sys.neural_cores,
+            detail.join(" + ")
+        ));
+    }
+    // Placement-check every slot at its offset: stops must be disjoint
+    // across residents (they are by construction — offsets partition
+    // the row-major core order — but the check keeps the invariant
+    // honest if the mapper's placement rule ever changes).
+    let offsets = greedy_admission(&cores, sys.neural_cores);
+    let mut slots = Vec::with_capacity(footprints.len());
+    let mut taken: std::collections::HashSet<(usize, usize)> =
+        std::collections::HashSet::new();
+    for (fp, slot) in footprints.iter().zip(&offsets) {
+        let offset = slot.expect("the whole set fits the chip");
+        let placement = place_at(&fp.stage, sys, offset);
+        // A multi-phase stage legitimately reuses its own stops across
+        // phases (the chip reconfigures between them) — dedupe within
+        // the app before checking across apps.
+        let mine: std::collections::HashSet<(usize, usize)> =
+            placement.coords.iter().flatten().copied().collect();
+        for xy in mine {
+            if !taken.insert(xy) {
+                return Err(format!(
+                    "{}: placement at offset {offset} reuses mesh stop \
+                     {xy:?}",
+                    fp.app
+                ));
+            }
+        }
+        slots.push(ResidentSlot {
+            app: fp.app.clone(),
+            cores: fp.cores,
+            offset,
+        });
+    }
+    Ok(slots)
+}
+
+/// Dynamic residency state of the running scheduler: who is on the
+/// chip now, in least-recently-dispatched order, under a fixed core
+/// budget. Offsets re-pack contiguously on every change — the modeled
+/// reconfiguration re-places the incoming app anyway, and the paper's
+/// chip is fully re-programmed between workloads (section II).
+#[derive(Debug)]
+pub(crate) struct Residency {
+    budget: usize,
+    demand: Vec<usize>,
+    resident: Vec<bool>,
+    /// Resident app indices, least-recently-dispatched first.
+    lru: std::collections::VecDeque<usize>,
+    used: usize,
+    peak_used: usize,
+}
+
+/// Outcome of one [`Residency::ensure`] call.
+pub(crate) struct SwapOutcome {
+    /// True when the app had to be swapped in (was not resident).
+    pub(crate) swapped_in: bool,
+    /// Apps evicted to make room, in eviction order.
+    pub(crate) evicted: Vec<usize>,
+}
+
+impl Residency {
+    /// Initial admission via [`greedy_admission`] in app order: an app
+    /// becomes resident if it still fits next to everyone admitted
+    /// before it.
+    pub(crate) fn new(budget: usize, demand: Vec<usize>) -> Residency {
+        let n = demand.len();
+        let admitted = greedy_admission(&demand, budget);
+        let mut r = Residency {
+            budget,
+            demand,
+            resident: vec![false; n],
+            lru: std::collections::VecDeque::new(),
+            used: 0,
+            peak_used: 0,
+        };
+        for (i, slot) in admitted.iter().enumerate() {
+            if slot.is_some() {
+                r.resident[i] = true;
+                r.used += r.demand[i];
+                r.lru.push_back(i);
+            }
+        }
+        r.peak_used = r.used;
+        r
+    }
+
+    pub(crate) fn is_resident(&self, i: usize) -> bool {
+        self.resident[i]
+    }
+
+    pub(crate) fn peak_used(&self) -> usize {
+        self.peak_used
+    }
+
+    /// Make app `i` resident — evicting least-recently-dispatched
+    /// residents until it fits — and mark it most recently dispatched.
+    pub(crate) fn ensure(&mut self, i: usize) -> SwapOutcome {
+        if self.resident[i] {
+            if let Some(pos) = self.lru.iter().position(|&j| j == i) {
+                self.lru.remove(pos);
+            }
+            self.lru.push_back(i);
+            return SwapOutcome { swapped_in: false, evicted: Vec::new() };
+        }
+        let mut evicted = Vec::new();
+        while self.used + self.demand[i] > self.budget {
+            let victim = self
+                .lru
+                .pop_front()
+                .expect("app exceeds the chip alone — rejected at start");
+            self.resident[victim] = false;
+            self.used -= self.demand[victim];
+            evicted.push(victim);
+        }
+        self.resident[i] = true;
+        self.used += self.demand[i];
+        self.lru.push_back(i);
+        self.peak_used = self.peak_used.max(self.used);
+        SwapOutcome { swapped_in: true, evicted }
+    }
+
+    /// Current offsets: residents packed contiguously in LRU order,
+    /// `None` for swapped-out apps.
+    pub(crate) fn offsets(&self) -> Vec<Option<usize>> {
+        let mut offsets = vec![None; self.demand.len()];
+        let mut next = 0usize;
+        for &i in &self.lru {
+            offsets[i] = Some(next);
+            next += self.demand[i];
+        }
+        offsets
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::apps;
+
+    #[test]
+    fn footprints_match_the_mapper() {
+        let sys = SystemConfig::default();
+        let kdd = footprint(apps::network("kdd_ae").unwrap(), &sys).unwrap();
+        assert_eq!(kdd.app, "kdd_ae");
+        assert_eq!(kdd.cores, 2);
+        assert!(kdd.reconfig.total_s() > 0.0);
+        // iris_ae maps one core per layer (4->2, 2->4)
+        let iris =
+            footprint(apps::network("iris_ae").unwrap(), &sys).unwrap();
+        assert_eq!(iris.cores, 2);
+    }
+
+    #[test]
+    fn plan_packs_offsets_in_order() {
+        let sys = SystemConfig::default();
+        let nets = [
+            apps::network("iris_ae").unwrap(),
+            apps::network("kdd_ae").unwrap(),
+            apps::network("iris_class").unwrap(),
+        ];
+        let slots = plan_residency(&nets.iter().copied().collect::<Vec<_>>(),
+                                   &sys).unwrap();
+        assert_eq!(slots.len(), 3);
+        assert_eq!(slots[0].offset, 0);
+        assert_eq!(slots[1].offset, 2); // after iris_ae's two cores
+        assert_eq!(slots[2].offset, 4); // after kdd_ae's two cores
+    }
+
+    #[test]
+    fn greedy_admission_skips_and_continues() {
+        // budget 4, demands [2, 3, 1]: app 1 does not fit after app 0,
+        // but app 2 still does — skip-and-continue, offsets packed.
+        assert_eq!(
+            greedy_admission(&[2, 3, 1], 4),
+            vec![Some(0), None, Some(2)]
+        );
+        assert_eq!(greedy_admission(&[], 4), Vec::<Option<usize>>::new());
+        assert_eq!(greedy_admission(&[5], 4), vec![None]);
+        assert_eq!(greedy_admission(&[0, 4], 4), vec![Some(0), Some(0)]);
+    }
+
+    #[test]
+    fn plan_rejects_oversubscription_descriptively() {
+        // A 2-core chip cannot co-host iris_ae (2) and kdd_ae (2).
+        let sys = SystemConfig { neural_cores: 2, ..Default::default() };
+        let nets = [
+            apps::network("iris_ae").unwrap(),
+            apps::network("kdd_ae").unwrap(),
+        ];
+        let err = plan_residency(
+            &nets.iter().copied().collect::<Vec<_>>(),
+            &sys,
+        )
+        .unwrap_err();
+        assert!(err.contains("needs 4 neural cores"), "{err}");
+        assert!(err.contains("chip has 2"), "{err}");
+        assert!(err.contains("kdd_ae=2"), "{err}");
+    }
+
+    #[test]
+    fn residency_swaps_lru_first() {
+        // budget 3, demands [1, 1, 2]: apps 0 and 1 start resident.
+        let mut r = Residency::new(3, vec![1, 1, 2]);
+        assert!(r.is_resident(0) && r.is_resident(1) && !r.is_resident(2));
+        assert_eq!(r.peak_used(), 2);
+        // app 2 needs 2: evicts the LRU resident (app 0)
+        let s = r.ensure(2);
+        assert!(s.swapped_in);
+        assert_eq!(s.evicted, vec![0]);
+        assert!(!r.is_resident(0) && r.is_resident(1) && r.is_resident(2));
+        assert_eq!(r.peak_used(), 3);
+        // touching app 1 refreshes it, so app 0's return evicts app 2
+        let s = r.ensure(1);
+        assert!(!s.swapped_in && s.evicted.is_empty());
+        let s = r.ensure(0);
+        assert!(s.swapped_in);
+        assert_eq!(s.evicted, vec![2]);
+        // offsets pack residents contiguously (LRU order: 1 then 0)
+        let offsets = r.offsets();
+        assert_eq!(offsets[1], Some(0));
+        assert_eq!(offsets[0], Some(1));
+        assert_eq!(offsets[2], None);
+    }
+}

@@ -326,6 +326,19 @@ mod tests {
     }
 
     #[test]
+    fn shard_plan_of_zero_items_is_empty() {
+        // The multi-tenant scheduler leans on this edge: an app whose
+        // queue drains to nothing must plan zero shards (no worker-pool
+        // jobs), at any tile/shard parameterisation.
+        for (tile, shards) in [(1, 1), (64, 4), (8, 144)] {
+            let plan = ShardPlan::contiguous(0, tile, shards);
+            assert_eq!(plan.shards(), 0, "tile {tile}, shards {shards}");
+            assert!(plan.bounds.is_empty());
+            assert_eq!(plan.tile, tile);
+        }
+    }
+
+    #[test]
     fn shard_plan_matches_hand_example() {
         // 130 items in 64-item tiles = 3 tiles; 5 requested shards clamp
         // to 3, one tile each.

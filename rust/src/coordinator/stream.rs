@@ -8,7 +8,8 @@
 //! here and the serving request queue ([`crate::serve`]) both bound
 //! their channels to what the hardware input buffer actually holds.
 
-use std::sync::mpsc::{sync_channel, SyncSender};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::sync_channel;
 use std::thread;
 
 use anyhow::Result;
@@ -44,36 +45,99 @@ pub fn buffer_capacity(sample_dims: usize) -> usize {
     (sys.input_buffer_bytes / sample_bytes).max(1)
 }
 
+/// Observability probe for [`run_probed`]: counts the sample copies
+/// alive between the producer cloning them out of the dataset and the
+/// consumer finishing with them. The bounded-memory story of the
+/// 4 kB-buffer stream is exactly that this stays at
+/// `buffer_capacity + 2` (the queued samples, plus one in the
+/// producer's hands mid-send, plus one in the consumer's hands) — never
+/// the dataset size. `stream.rs`'s regression tests pin that bound.
+#[derive(Debug, Default)]
+pub struct StreamProbe {
+    in_flight: AtomicUsize,
+    peak: AtomicUsize,
+}
+
+impl StreamProbe {
+    /// A fresh probe (all counters zero).
+    pub fn new() -> StreamProbe {
+        StreamProbe::default()
+    }
+
+    fn cloned(&self) {
+        let now = self.in_flight.fetch_add(1, Ordering::SeqCst) + 1;
+        self.peak.fetch_max(now, Ordering::SeqCst);
+    }
+
+    fn consumed(&self) {
+        self.in_flight.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Most sample copies ever alive at once during the run.
+    pub fn peak(&self) -> usize {
+        self.peak.load(Ordering::SeqCst)
+    }
+}
+
 /// Stream `xs` in `order` through a bounded queue into `consume(i, x)`.
 /// The producer runs on its own thread; any consumer error stops the
 /// stream and is returned.
+///
+/// The producer copies **lazily, one sample at a time** as it sends
+/// (the DMA reads DRAM per sample; an earlier revision cloned the whole
+/// epoch's worth up front, so the "bounded 4 kB buffer" memory story
+/// only held for the channel, not the producer). Peak live copies are
+/// bounded by the channel capacity plus two regardless of dataset size
+/// — observable through [`run_probed`].
 pub fn run(
     xs: &[Vec<f32>],
     order: &[usize],
+    consume: impl FnMut(usize, &[f32]) -> Result<()>,
+) -> Result<()> {
+    run_probed(xs, order, consume, None)
+}
+
+/// [`run`] with an optional [`StreamProbe`] counting live sample
+/// copies — the regression hook for the bounded-memory contract.
+pub fn run_probed(
+    xs: &[Vec<f32>],
+    order: &[usize],
     mut consume: impl FnMut(usize, &[f32]) -> Result<()>,
+    probe: Option<&StreamProbe>,
 ) -> Result<()> {
     let cap = buffer_capacity(xs.first().map_or(1, Vec::len));
-    let (tx, rx): (SyncSender<(usize, Vec<f32>)>, _) = sync_channel(cap);
-    // The producer owns copies (the DMA reads DRAM, not our heap).
-    let items: Vec<(usize, Vec<f32>)> =
-        order.iter().map(|&i| (i, xs[i].clone())).collect();
-    let producer = thread::spawn(move || {
-        for it in items {
-            if tx.send(it).is_err() {
-                break; // consumer hung up (error path)
+    let (tx, rx) = sync_channel::<(usize, Vec<f32>)>(cap);
+    thread::scope(|scope| {
+        let producer = scope.spawn(move || {
+            for &i in order {
+                // One copy per sample; the bounded send blocks while
+                // the channel is full (the DMA's input-buffer
+                // backpressure), so at most one copy waits here.
+                let x = xs[i].clone();
+                if let Some(p) = probe {
+                    p.cloned();
+                }
+                if tx.send((i, x)).is_err() {
+                    break; // consumer hung up (error path)
+                }
+            }
+        });
+        let mut result = Ok(());
+        for (i, x) in rx.iter() {
+            let consumed = consume(i, &x);
+            drop(x);
+            if let Some(p) = probe {
+                p.consumed();
+            }
+            if let Err(e) = consumed {
+                result = Err(e);
+                break;
             }
         }
-    });
-    let mut result = Ok(());
-    for (i, x) in rx.iter() {
-        if let Err(e) = consume(i, &x) {
-            result = Err(e);
-            break;
-        }
-    }
-    drop(rx);
-    let _ = producer.join();
-    result
+        drop(rx);
+        let _ = producer.join();
+        result
+    })
 }
 
 #[cfg(test)]
@@ -149,6 +213,58 @@ mod tests {
             // 20 reduced dims -> 80 B/sample -> 51 slots
             assert_eq!(buffer_capacity(app.dims), 51, "{}", app.name);
         }
+    }
+
+    #[test]
+    fn producer_copies_stay_bounded_by_the_buffer() {
+        // 2048-dim samples -> 8 kB each -> a 1-slot channel. Cloning
+        // the whole epoch up front (the pre-fix behaviour) would put
+        // all 50 copies in flight at once; the lazy producer keeps at
+        // most capacity + 2 alive (queued + one mid-send + one being
+        // consumed), independent of dataset size.
+        let xs: Vec<Vec<f32>> =
+            (0..50).map(|i| vec![i as f32; 2048]).collect();
+        let order: Vec<usize> = (0..50).collect();
+        let cap = buffer_capacity(2048);
+        assert_eq!(cap, 1);
+        let probe = StreamProbe::new();
+        let mut n = 0;
+        run_probed(
+            &xs,
+            &order,
+            |i, x| {
+                assert_eq!(x[0] as usize, i);
+                n += 1;
+                Ok(())
+            },
+            Some(&probe),
+        )
+        .unwrap();
+        assert_eq!(n, 50);
+        assert!(probe.peak() >= 1);
+        assert!(
+            probe.peak() <= cap + 2,
+            "peak {} live copies > bound {}",
+            probe.peak(),
+            cap + 2
+        );
+    }
+
+    #[test]
+    fn zero_dim_samples_clamp_to_one_word() {
+        // Degenerate 0-dim samples price as one f32 word: the 4 kB
+        // buffer holds 1024 of them, and the stream still delivers.
+        assert_eq!(buffer_capacity(0), 1024);
+        let xs: Vec<Vec<f32>> = vec![Vec::new(); 5];
+        let order: Vec<usize> = (0..5).collect();
+        let mut n = 0;
+        run(&xs, &order, |_, x| {
+            assert!(x.is_empty());
+            n += 1;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(n, 5);
     }
 
     #[test]

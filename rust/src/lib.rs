@@ -27,13 +27,19 @@
 //!   of the pool sits the serving front end ([`serve`]): a bounded
 //!   request queue plus a dynamic micro-batcher that coalesces
 //!   independent single-sample requests into tile-aligned batches
-//!   (`restream serve` on the CLI).
+//!   (`restream serve` on the CLI), and on top of *that* the
+//!   multi-tenant chip scheduler ([`chip`]): many apps resident on one
+//!   simulated 144-core mesh — placement-checked with per-app core
+//!   offsets, dispatched deficit-round-robin onto one shared pool,
+//!   overflow served via modeled reconfiguration swaps
+//!   (`restream serve --apps`).
 //!
 //! See `DESIGN.md` for the system inventory, the backend-selection story
 //! and the experiment index, and `EXPERIMENTS.md` for paper-vs-measured
 //! results.
 
 pub mod benchutil;
+pub mod chip;
 pub mod config;
 pub mod coordinator;
 pub mod cores;

@@ -6,6 +6,7 @@
 //! restream chip                          chip inventory + area budget
 //! restream report --table 2|3|4         regenerate a paper table
 //! restream report --vs-gpu train|recog  Figs 22-25 series
+//! restream report --occupancy all|A,B,…  multi-tenant occupancy table
 //! restream train   --app NAME [--epochs N] [--lr F] [--seed N]
 //!                  [--batch N]
 //! restream infer   --app NAME [--seed N]
@@ -13,6 +14,8 @@
 //! restream anomaly [--epochs N]
 //! restream serve   --app NAME [--source stdin|replay] [--max-batch N]
 //!                  [--max-wait-us N] [--clients N] [--requests N]
+//! restream serve   --apps A,B,C [--max-batch N] [--max-wait-us N]
+//!                  [--clients N] [--requests N]
 //! ```
 //!
 //! `serve` runs the micro-batching request server (`restream::serve`,
@@ -21,7 +24,10 @@
 //! lines (summary on stderr); the default `--source replay` drives the
 //! server closed-loop from `--clients` threads issuing `--requests`
 //! deterministic requests each and prints the latency/throughput
-//! summary.
+//! summary. `serve --apps` hosts every listed app as a resident of one
+//! simulated chip (`restream::chip`, DESIGN.md "Multi-tenant serving")
+//! and prints the `MultiServeReport` — per-app latency, occupancy,
+//! swaps and the modeled reconfiguration time charged.
 //!
 //! Every functional-math subcommand accepts `--backend native|pjrt`
 //! (default: `$RESTREAM_BACKEND` or `native`) and `--workers N`
@@ -98,8 +104,17 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                 }
             } else if let Some(which) = f.get("vs-gpu") {
                 print!("{}", report::vs_gpu_table(&sys, which == "train"));
+            } else if let Some(spec) = f.get("occupancy") {
+                print!(
+                    "{}",
+                    report::occupancy_table(&sys, spec)
+                        .map_err(anyhow::Error::msg)?
+                );
             } else {
-                anyhow::bail!("report needs --table N or --vs-gpu train|recog");
+                anyhow::bail!(
+                    "report needs --table N, --vs-gpu train|recog or \
+                     --occupancy all|app,app,…"
+                );
             }
         }
         "train" => cmd_train(&f)?,
@@ -322,6 +337,9 @@ fn cmd_anomaly(f: &HashMap<String, String>) -> anyhow::Result<()> {
 /// coalesce into tile-aligned batches, and execute on the pooled
 /// engine. Prints the aggregate `ServeReport` when the stream ends.
 fn cmd_serve(f: &HashMap<String, String>) -> anyhow::Result<()> {
+    if let Some(apps_list) = f.get("apps") {
+        return cmd_serve_multi(f, apps_list);
+    }
     let app: String = get(f, "app", "iris_class".to_string())
         .map_err(anyhow::Error::msg)?;
     let max_batch: usize =
@@ -371,6 +389,88 @@ fn cmd_serve(f: &HashMap<String, String>) -> anyhow::Result<()> {
     } else {
         print!("{}", report.summary());
     }
+    Ok(())
+}
+
+/// Multi-tenant serving (`restream serve --apps a,b,c`; DESIGN.md
+/// "Multi-tenant serving"): every listed app becomes a resident of one
+/// simulated chip behind a `chip::ChipScheduler` — per-app bounded
+/// queues and batchers, deficit-round-robin dispatch onto one shared
+/// worker pool, overflow beyond the 144-core mesh served via modeled
+/// reconfiguration swaps. Drives a closed-loop replay (`--clients`
+/// threads per app, `--requests` each) and prints the
+/// `MultiServeReport`: per-app p50/p99, occupancy, swap count and the
+/// reconfiguration time charged.
+fn cmd_serve_multi(
+    f: &HashMap<String, String>,
+    apps_list: &str,
+) -> anyhow::Result<()> {
+    use restream::chip::{ChipApp, ChipConfig, ChipScheduler};
+    let max_batch: usize =
+        get(f, "max-batch", apps::FWD_BATCH).map_err(anyhow::Error::msg)?;
+    let max_wait_us: u64 =
+        get(f, "max-wait-us", 200).map_err(anyhow::Error::msg)?;
+    let clients: usize = get(f, "clients", 4).map_err(anyhow::Error::msg)?;
+    let requests: usize =
+        get(f, "requests", 256).map_err(anyhow::Error::msg)?;
+    let seed: u64 = get(f, "seed", 0).map_err(anyhow::Error::msg)?;
+    let names: Vec<&str> = apps_list
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .collect();
+    if names.is_empty() {
+        anyhow::bail!("--apps needs a comma-separated app list");
+    }
+    let mut hosted = Vec::with_capacity(names.len());
+    for name in &names {
+        let net = apps::network(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown app {name}"))?
+            .clone();
+        let params = restream::coordinator::init_conductances(
+            net.layers, seed,
+        );
+        hosted.push(ChipApp { net, params });
+    }
+    let engine = engine_for(f)?;
+    let workers = engine.workers();
+    let cfg = ChipConfig {
+        max_batch,
+        max_wait: std::time::Duration::from_micros(max_wait_us),
+        ..ChipConfig::default()
+    };
+    println!(
+        "multi-tenant serve: {} apps ({}), max batch {}, max wait \
+         {max_wait_us} us, {clients} clients/app x {requests} requests, \
+         {workers} workers",
+        names.len(),
+        names.join(","),
+        cfg.max_batch.max(1),
+    );
+    let chip = ChipScheduler::start(engine, hosted, cfg)?;
+    let mut handles = Vec::new();
+    for (a, name) in names.iter().enumerate() {
+        for c in 0..clients.max(1) {
+            let client = chip.client(name)?;
+            let dims = client.dims();
+            let client_seed =
+                seed ^ ((a as u64) << 32) ^ ((c as u64) << 17);
+            handles.push(std::thread::spawn(
+                move || -> anyhow::Result<()> {
+                    let mut rng =
+                        restream::testing::Rng::seeded(client_seed);
+                    for _ in 0..requests {
+                        client.call(rng.vec_uniform(dims, -0.5, 0.5))?;
+                    }
+                    Ok(())
+                },
+            ));
+        }
+    }
+    for h in handles {
+        h.join().expect("replay client thread panicked")?;
+    }
+    print!("{}", chip.shutdown().summary());
     Ok(())
 }
 
@@ -476,6 +576,12 @@ fn print_usage() {
          any --workers)\n\
          serve: --app NAME --source stdin|replay --max-batch N \
          --max-wait-us N --clients N --requests N\n\
+         serve --apps A,B,C: multi-tenant chip scheduler (per-app \
+         queues,\n\
+         DRR dispatch, modeled reconfiguration swaps; closed-loop \
+         replay)\n\
+         report --occupancy all|A,B,…: per-app core demand, offsets \
+         and fit\n\
          see rust/src/main.rs docs and README.md for details"
     );
 }

@@ -18,7 +18,7 @@
 
 mod placement;
 
-pub use placement::{place, Placement};
+pub use placement::{place, place_at, Placement};
 
 use crate::config::hwspec as hw;
 use crate::config::{AppKind, Network, SystemConfig};

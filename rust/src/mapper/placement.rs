@@ -43,6 +43,22 @@ fn row_segment(n_in: usize, row_splits: usize, rs: usize) -> (usize, usize) {
 /// the chip is reconfigured between phases, so mesh stops are reused and
 /// cross-phase activations spill through the memory port.
 pub fn place(stage: &StageMap, sys: &SystemConfig) -> Placement {
+    place_at(stage, sys, 0)
+}
+
+/// [`place`] with the stage's cores shifted `core_offset` slots into the
+/// mesh's row-major core order. The multi-tenant chip scheduler
+/// (`crate::chip`) gives every resident application its own offset so
+/// co-resident placements occupy disjoint mesh stops — occupancy made
+/// explicit. The memory port keeps its fixed mesh stop, so the derived
+/// transfer lists stay valid; callers must keep
+/// `core_offset + stage.cores_used()` within the chip's core budget
+/// ([`SystemConfig::neural_cores`]).
+pub fn place_at(
+    stage: &StageMap,
+    sys: &SystemConfig,
+    core_offset: usize,
+) -> Placement {
     // phase index of each layer
     let mut phase_of = vec![0usize; stage.layers.len()];
     for (pi, phase) in stage.phases.iter().enumerate() {
@@ -52,7 +68,7 @@ pub fn place(stage: &StageMap, sys: &SystemConfig) -> Placement {
     }
     let mut coords: Vec<Vec<Xy>> = vec![Vec::new(); stage.layers.len()];
     for phase in &stage.phases {
-        let mut next = 0usize;
+        let mut next = core_offset;
         for &l in phase {
             for _ in &stage.layers[l].slices {
                 coords[l].push(sys.core_xy(next));
@@ -232,6 +248,32 @@ mod tests {
         assert_eq!(p.fwd_transfers[1].bits, 15 * 3);
         // errors go the other way at 8 bits
         assert_eq!(p.bwd_transfers[0].bits, 15 * 8);
+    }
+
+    #[test]
+    fn offset_placement_shifts_stops_and_stays_disjoint() {
+        // Two co-resident apps: kdd_ae (2 cores) at offset 0 and
+        // another kdd_ae at offset 2 must occupy disjoint mesh stops —
+        // the multi-tenant scheduler's residency invariant.
+        let sys = SystemConfig::default();
+        let net = apps::network("kdd_ae").unwrap();
+        let map = map_network(net, &sys).unwrap();
+        let stage = &map.stages[0];
+        let a = place_at(stage, &sys, 0);
+        let b = place_at(stage, &sys, 2);
+        let stops = |p: &Placement| -> Vec<Xy> {
+            p.coords.iter().flatten().copied().collect()
+        };
+        let sa = stops(&a);
+        let sb = stops(&b);
+        assert_eq!(sa, vec![sys.core_xy(0), sys.core_xy(1)]);
+        assert_eq!(sb, vec![sys.core_xy(2), sys.core_xy(3)]);
+        assert!(sa.iter().all(|xy| !sb.contains(xy)), "stops overlap");
+        // traffic shape is offset-independent (same bits, same count)
+        assert_eq!(a.fwd_transfers.len(), b.fwd_transfers.len());
+        for (ta, tb) in a.fwd_transfers.iter().zip(&b.fwd_transfers) {
+            assert_eq!(ta.bits, tb.bits);
+        }
     }
 
     #[test]

@@ -254,6 +254,18 @@ mod tests {
     }
 
     #[test]
+    fn percentile_single_element_is_total() {
+        // A one-request latency sample must answer every percentile
+        // with that request's latency — the multi-tenant scheduler's
+        // per-app splits start at a single request.
+        for q in [0.0, 50.0, 99.0, 100.0, 250.0] {
+            assert_eq!(percentile(&[3.25], q), 3.25, "q = {q}");
+            assert_eq!(percentile_sorted(&[3.25], q), 3.25, "q = {q}");
+        }
+        assert_eq!(mean(&[3.25]), 3.25);
+    }
+
+    #[test]
     fn histogram_bins_and_edges() {
         let h = histogram(&[0.0, 0.49, 0.5, 0.99, 1.0], 0.0, 1.0, 2);
         assert_eq!(h, vec![2, 3]);

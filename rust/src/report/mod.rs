@@ -2,6 +2,7 @@
 //! evaluation section, printed as aligned text (the benches and the CLI
 //! `report` subcommand both go through here).
 
+use crate::chip;
 use crate::config::{apps, SystemConfig};
 use crate::cores::Step;
 use crate::gpu;
@@ -143,6 +144,72 @@ pub fn vs_gpu_table(sys: &SystemConfig, train: bool) -> String {
     )
 }
 
+/// Multi-tenant occupancy table (`restream report --occupancy`): for a
+/// comma-separated app list (or `all`), the per-app core demand, the
+/// row-major core offset it would get as a resident (apps are packed
+/// greedily in listed order — the chip scheduler's admission rule), its
+/// share of the mesh, whether it fits residently or must be served via
+/// reconfiguration (swapping), and the modeled reconfiguration cost of
+/// (re)deploying it ([`crate::sim::reconfig_cost`]).
+pub fn occupancy_table(sys: &SystemConfig, spec: &str)
+    -> Result<String, String> {
+    let names: Vec<&str> = if spec == "all" {
+        apps::NETWORKS.iter().map(|n| n.name).collect()
+    } else {
+        spec.split(',').map(str::trim).filter(|s| !s.is_empty()).collect()
+    };
+    if names.is_empty() {
+        return Err(
+            "no apps given (--occupancy all or a comma-separated list)"
+                .into(),
+        );
+    }
+    let mut footprints = Vec::with_capacity(names.len());
+    for name in &names {
+        let net = apps::network(name)
+            .ok_or_else(|| format!("unknown app {name}"))?;
+        footprints.push(chip::footprint(net, sys)?);
+    }
+    // The scheduler's own initial-admission rule decides who fits —
+    // the table can never drift from what serving actually does.
+    let cores: Vec<usize> = footprints.iter().map(|fp| fp.cores).collect();
+    let slots = chip::greedy_admission(&cores, sys.neural_cores);
+    let mut used = 0usize;
+    let mut swapped = 0usize;
+    let mut rows = Vec::with_capacity(names.len());
+    for (fp, slot) in footprints.iter().zip(&slots) {
+        let (offset, fit) = match slot {
+            Some(offset) => {
+                used += fp.cores;
+                (offset.to_string(), "resident".to_string())
+            }
+            None => {
+                swapped += 1;
+                ("-".to_string(), "reconfig (swap)".to_string())
+            }
+        };
+        rows.push(vec![
+            fp.app.clone(),
+            fp.cores.to_string(),
+            offset,
+            format!("{:.1}", 100.0 * fp.cores as f64
+                / sys.neural_cores as f64),
+            fit,
+            format!("{:.1}", fp.reconfig.total_s() * 1e6),
+        ]);
+    }
+    let table = render_table(
+        &["app", "#cores", "offset", "mesh %", "fit", "reconfig (us)"],
+        &rows,
+    );
+    Ok(format!(
+        "{table}resident: {used}/{} cores ({:.1}% occupancy), {swapped} \
+         app(s) served via reconfiguration\n",
+        sys.neural_cores,
+        100.0 * used as f64 / sys.neural_cores as f64,
+    ))
+}
+
 /// Section VI.F: chip inventory and area budget.
 pub fn chip_summary(sys: &SystemConfig) -> String {
     let mesh_stops = sys.mesh_w * sys.mesh_h + 2;
@@ -199,6 +266,23 @@ mod tests {
             .map(|v| v.energy_eff)
             .fold(0.0, f64::max);
         assert!(max_eff > 1e4, "max eff {max_eff}");
+    }
+
+    #[test]
+    fn occupancy_table_packs_and_marks_overflow() {
+        let sys = SystemConfig::default();
+        // small set: everything resident, offsets packed in order
+        let t = occupancy_table(&sys, "iris_ae,kdd_ae").unwrap();
+        assert!(t.contains("iris_ae"), "{t}");
+        assert!(t.contains("resident: 4/144 cores"), "{t}");
+        assert!(t.contains("0 app(s) served via reconfiguration"), "{t}");
+        // the full registry oversubscribes the chip: someone must swap
+        let t = occupancy_table(&sys, "all").unwrap();
+        assert!(t.contains("reconfig (swap)"), "{t}");
+        // errors are descriptive
+        assert!(occupancy_table(&sys, "nope").unwrap_err()
+            .contains("unknown app"));
+        assert!(occupancy_table(&sys, "").is_err());
     }
 
     #[test]

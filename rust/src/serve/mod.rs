@@ -56,6 +56,7 @@ mod batcher;
 mod report;
 
 pub use batcher::Batcher;
+pub(crate) use report::ServeStats;
 pub use report::{LatencyStats, RequestTiming, ServeReport};
 
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -99,12 +100,14 @@ impl Default for ServeConfig {
 
 /// One request in flight: the sample plus the oneshot reply channel
 /// (a rendezvous `sync_channel(1)` — the only message ever sent is the
-/// response, so the send never blocks).
-struct Request {
-    id: u64,
-    x: Vec<f32>,
-    enqueued: Instant,
-    reply: SyncSender<Result<Response, String>>,
+/// response, so the send never blocks). Crate-visible so the
+/// multi-tenant chip scheduler (`crate::chip`) dispatches the same
+/// ingress type through [`answer_batch`].
+pub(crate) struct Request {
+    pub(crate) id: u64,
+    pub(crate) x: Vec<f32>,
+    pub(crate) enqueued: Instant,
+    pub(crate) reply: SyncSender<Result<Response, String>>,
 }
 
 /// One served result.
@@ -159,6 +162,20 @@ pub struct Client {
 }
 
 impl Client {
+    /// Build a submission handle plus the receiving end of its bounded
+    /// ingress queue (`capacity` samples deep, clamped to at least 1).
+    /// [`Server::start`] builds one; the multi-tenant chip scheduler
+    /// builds one **per hosted app**.
+    pub(crate) fn channel(
+        dims: usize,
+        capacity: usize,
+    ) -> (Client, Receiver<Request>) {
+        let (tx, rx) = sync_channel(capacity.max(1));
+        let client =
+            Client { tx, dims, next_id: Arc::new(AtomicU64::new(0)) };
+        (client, rx)
+    }
+
     /// Enqueue one sample (must be exactly [`Client::dims`] wide) and
     /// return a [`Pending`] receipt; blocks while the queue is full.
     pub fn submit(&self, x: Vec<f32>) -> Result<Pending> {
@@ -213,16 +230,13 @@ impl Server {
             .queue_capacity
             .unwrap_or_else(|| stream::buffer_capacity(dims))
             .max(1);
-        let (tx, rx) = sync_channel(capacity);
+        let (client, rx) = Client::channel(dims, capacity);
         let batcher = Batcher::new(rx, cfg.max_batch, cfg.max_wait);
         let handle = thread::Builder::new()
             .name("restream-serve".to_string())
             .spawn(move || serve_loop(engine, net, params, batcher))
             .expect("spawning serve dispatcher thread");
-        Server {
-            client: Client { tx, dims, next_id: Arc::new(AtomicU64::new(0)) },
-            handle,
-        }
+        Server { client, handle }
     }
 
     /// A new submission handle (any number may exist; all share the
@@ -246,6 +260,59 @@ fn us_between(from: Instant, to: Instant) -> f64 {
     to.saturating_duration_since(from).as_secs_f64() * 1e6
 }
 
+/// Move the owned samples out of a drained batch for dispatch. The
+/// samples are never needed again after dispatch: moving instead of
+/// cloning saves 64×784 floats per full MNIST tile on every batch.
+pub(crate) fn take_batch_inputs(
+    batch: &mut [(Request, Instant)],
+) -> Vec<Vec<f32>> {
+    batch
+        .iter_mut()
+        .map(|(request, _)| std::mem::take(&mut request.x))
+        .collect()
+}
+
+/// Route one dispatched batch's outcome back over the per-request reply
+/// channels and fold its timings into `stats`. Shared by the single-app
+/// dispatcher ([`serve_loop`]) and the multi-tenant chip scheduler
+/// (`crate::chip`), so the two cannot drift in batching math or latency
+/// accounting.
+pub(crate) fn answer_batch(
+    result: Result<Vec<Vec<f32>>>,
+    batch: Vec<(Request, Instant)>,
+    dispatch: Instant,
+    done: Instant,
+    stats: &mut ServeStats,
+) {
+    stats.record_batch(dispatch, done);
+    match result {
+        Ok(rows) => {
+            for ((request, dequeued), out) in batch.into_iter().zip(rows) {
+                let timing = RequestTiming {
+                    queue_us: us_between(request.enqueued, dequeued),
+                    batch_us: us_between(dequeued, dispatch),
+                    compute_us: us_between(dispatch, done),
+                };
+                stats.record_timing(timing);
+                let _ = request.reply.send(Ok(Response {
+                    id: request.id,
+                    out,
+                    timing,
+                }));
+            }
+        }
+        Err(e) => {
+            // The whole batch shares the engine failure; each
+            // requester gets the message over its own channel.
+            stats.record_errors(batch.len());
+            let msg = format!("{e:#}");
+            for (request, _) in batch {
+                let _ = request.reply.send(Err(msg.clone()));
+            }
+        }
+    }
+}
+
 /// The dispatcher: drain batches from the queue, run each through the
 /// pooled batched forward, route rows back over the per-request reply
 /// channels, and account latency/throughput. Runs until every client
@@ -256,72 +323,15 @@ fn serve_loop(
     params: Vec<ArrayF32>,
     batcher: Batcher<Request>,
 ) -> ServeReport {
-    let mut queue_us = Vec::new();
-    let mut batch_us = Vec::new();
-    let mut compute_us = Vec::new();
-    let mut total_us = Vec::new();
-    let mut batches = 0usize;
-    let mut errors = 0usize;
-    let mut span: Option<(Instant, Instant)> = None;
+    let mut stats = ServeStats::default();
     while let Some(mut batch) = batcher.next_batch() {
         let dispatch = Instant::now();
-        // The samples are owned and never needed again after dispatch:
-        // move them out instead of cloning (64×784 floats per full
-        // MNIST tile otherwise copied on every single batch).
-        let xs: Vec<Vec<f32>> = batch
-            .iter_mut()
-            .map(|(request, _)| std::mem::take(&mut request.x))
-            .collect();
+        let xs = take_batch_inputs(&mut batch);
         let result = engine.infer(&net, &params, &xs);
         let done = Instant::now();
-        let start = span.map_or(dispatch, |(start, _)| start);
-        span = Some((start, done));
-        batches += 1;
-        match result {
-            Ok(rows) => {
-                for ((request, dequeued), out) in
-                    batch.into_iter().zip(rows)
-                {
-                    let timing = RequestTiming {
-                        queue_us: us_between(request.enqueued, dequeued),
-                        batch_us: us_between(dequeued, dispatch),
-                        compute_us: us_between(dispatch, done),
-                    };
-                    queue_us.push(timing.queue_us);
-                    batch_us.push(timing.batch_us);
-                    compute_us.push(timing.compute_us);
-                    total_us.push(timing.total_us());
-                    let _ = request.reply.send(Ok(Response {
-                        id: request.id,
-                        out,
-                        timing,
-                    }));
-                }
-            }
-            Err(e) => {
-                // The whole batch shares the engine failure; each
-                // requester gets the message over its own channel.
-                errors += batch.len();
-                let msg = format!("{e:#}");
-                for (request, _) in batch {
-                    let _ = request.reply.send(Err(msg.clone()));
-                }
-            }
-        }
+        answer_batch(result, batch, dispatch, done, &mut stats);
     }
-    let wall_s = span.map_or(0.0, |(start, end)| {
-        end.saturating_duration_since(start).as_secs_f64()
-    });
-    ServeReport {
-        requests: total_us.len() + errors,
-        batches,
-        errors,
-        wall_s,
-        total: LatencyStats::from_us(&total_us),
-        queue: LatencyStats::from_us(&queue_us),
-        batch_wait: LatencyStats::from_us(&batch_us),
-        compute: LatencyStats::from_us(&compute_us),
-    }
+    stats.finish()
 }
 
 #[cfg(test)]

@@ -8,6 +8,8 @@
 //! All figures are microseconds; order statistics use
 //! [`crate::metrics::percentile`].
 
+use std::time::Instant;
+
 use crate::metrics::{mean, percentile_sorted};
 
 /// Where one request's latency went, in microseconds.
@@ -53,6 +55,61 @@ impl LatencyStats {
             p50_us: percentile_sorted(&sorted, 50.0),
             p99_us: percentile_sorted(&sorted, 99.0),
             max_us: sorted.last().copied().unwrap_or(0.0),
+        }
+    }
+}
+
+/// Running accumulation of one dispatch stream's timings — the mutable
+/// state behind a [`ServeReport`]. The single-app dispatcher
+/// (`serve_loop`) keeps one; the multi-tenant chip scheduler
+/// (`crate::chip`) keeps one **per resident app**, which is what makes
+/// per-app latency splits fall out of shared dispatch for free.
+#[derive(Debug, Default)]
+pub(crate) struct ServeStats {
+    queue_us: Vec<f64>,
+    batch_us: Vec<f64>,
+    compute_us: Vec<f64>,
+    total_us: Vec<f64>,
+    batches: usize,
+    errors: usize,
+    /// First dispatch -> last completion.
+    span: Option<(Instant, Instant)>,
+}
+
+impl ServeStats {
+    /// Note one dispatched batch (span bookkeeping + batch count).
+    pub(crate) fn record_batch(&mut self, dispatch: Instant, done: Instant) {
+        let start = self.span.map_or(dispatch, |(start, _)| start);
+        self.span = Some((start, done));
+        self.batches += 1;
+    }
+
+    /// Note one successfully answered request's latency split.
+    pub(crate) fn record_timing(&mut self, timing: RequestTiming) {
+        self.queue_us.push(timing.queue_us);
+        self.batch_us.push(timing.batch_us);
+        self.compute_us.push(timing.compute_us);
+        self.total_us.push(timing.total_us());
+    }
+
+    /// Note `n` requests answered with an error.
+    pub(crate) fn record_errors(&mut self, n: usize) {
+        self.errors += n;
+    }
+
+    /// Freeze the accumulation into the aggregate [`ServeReport`].
+    pub(crate) fn finish(&self) -> ServeReport {
+        ServeReport {
+            requests: self.total_us.len() + self.errors,
+            batches: self.batches,
+            errors: self.errors,
+            wall_s: self.span.map_or(0.0, |(start, end)| {
+                end.saturating_duration_since(start).as_secs_f64()
+            }),
+            total: LatencyStats::from_us(&self.total_us),
+            queue: LatencyStats::from_us(&self.queue_us),
+            batch_wait: LatencyStats::from_us(&self.batch_us),
+            compute: LatencyStats::from_us(&self.compute_us),
         }
     }
 }
@@ -148,6 +205,46 @@ mod tests {
         let empty = LatencyStats::from_us(&[]);
         assert_eq!(empty.p50_us, 0.0);
         assert_eq!(empty.max_us, 0.0);
+    }
+
+    #[test]
+    fn latency_stats_single_sample_is_total() {
+        // A single-element sample must answer every percentile with the
+        // element itself (the scheduler's per-app splits start at one
+        // request; metrics::percentile is pinned the same way).
+        let s = LatencyStats::from_us(&[42.0]);
+        assert_eq!(s.p50_us, 42.0);
+        assert_eq!(s.p99_us, 42.0);
+        assert_eq!(s.max_us, 42.0);
+        assert_eq!(s.mean_us, 42.0);
+    }
+
+    #[test]
+    fn stats_accumulate_into_a_report() {
+        let mut stats = ServeStats::default();
+        let t0 = Instant::now();
+        stats.record_batch(t0, t0);
+        stats.record_timing(RequestTiming {
+            queue_us: 1.0,
+            batch_us: 2.0,
+            compute_us: 3.0,
+        });
+        stats.record_timing(RequestTiming {
+            queue_us: 3.0,
+            batch_us: 4.0,
+            compute_us: 5.0,
+        });
+        stats.record_errors(1);
+        let r = stats.finish();
+        assert_eq!(r.requests, 3);
+        assert_eq!(r.batches, 1);
+        assert_eq!(r.errors, 1);
+        assert_eq!(r.total.max_us, 12.0);
+        assert_eq!(r.queue.mean_us, 2.0);
+        // an untouched accumulator freezes into the empty report
+        let empty = ServeStats::default().finish();
+        assert_eq!(empty.requests, 0);
+        assert_eq!(empty.wall_s, 0.0);
     }
 
     #[test]

@@ -20,9 +20,11 @@
 //! rows use the digital core's cycle model instead.
 
 use crate::config::{apps, AppKind, Network, SystemConfig};
-use crate::cores::{ClusterCore, Step};
+use crate::cores::risc::ConfigWork;
+use crate::cores::{ClusterCore, RiscCore, Step};
 use crate::mapper::{self, place, LayerMap, StageMap};
 use crate::memory::DmaEngine;
+use crate::noc::switch::SwitchConfig;
 use crate::noc::{Schedule, Transfer};
 use crate::power::{self, neural_core, EnergyAccount};
 
@@ -202,18 +204,27 @@ pub fn train_cost(net: &Network, sys: &SystemConfig) -> Result<CostRow, String> 
     Ok(CostRow::from_account(net.name, map.cores_used(), &acc))
 }
 
-/// Table IV row: per-sample recognition cost (full forward pass).
-pub fn recognition_cost(net: &Network, sys: &SystemConfig)
-    -> Result<CostRow, String> {
-    // Recognition always runs the deployed network: for DR apps that is
-    // the trained encoder stack, mapped as a plain feed-forward net.
+/// The serving-configuration mapping of `net`: recognition (and
+/// serving) always runs the deployed forward network — for DR apps the
+/// trained encoder stack — so the net is mapped as a plain
+/// feed-forward classifier. The single home of that remap rule, shared
+/// by [`recognition_cost`], [`reconfig_cost`] and the multi-tenant
+/// scheduler's footprints (`crate::chip`), so the three cannot drift.
+pub fn serving_map(net: &Network, sys: &SystemConfig)
+    -> Result<mapper::NetworkMap, String> {
     let fwd_net = Network {
         name: net.name,
         layers: net.layers,
         kind: AppKind::Classifier,
         classes: net.classes,
     };
-    let map = mapper::map_network(&fwd_net, sys)?;
+    mapper::map_network(&fwd_net, sys)
+}
+
+/// Table IV row: per-sample recognition cost (full forward pass).
+pub fn recognition_cost(net: &Network, sys: &SystemConfig)
+    -> Result<CostRow, String> {
+    let map = serving_map(net, sys)?;
     let mut acc = EnergyAccount::new();
     stage_recog_cost(&map.stages[0], sys, &mut acc);
     Ok(CostRow::from_account(net.name, map.cores_used(), &acc))
@@ -240,6 +251,94 @@ pub fn kmeans_cost(app: &apps::App, sys: &SystemConfig, train: bool,
     acc.time_s += time;
     acc.breakdown.compute_j += core.energy_j(time);
     Ok(CostRow::from_account(app.name, 1, &acc))
+}
+
+/// Modeled cost of reconfiguring the chip to host one application's
+/// serving (recognition) configuration — what the "reconfigurable" in
+/// the paper's title costs when the chip switches workloads (section
+/// II: the mesh is statically time-multiplexed and reprogrammed between
+/// applications). Two phases compose the swap:
+///
+/// 1. **Switch images** — the RISC core compiles the app's static TDM
+///    schedule ([`Schedule`], built from its [`place`]ment) into per-
+///    router SRAM slot images ([`SwitchConfig`]) and writes them over
+///    the config bus ([`RiscCore::config_time_s`]).
+/// 2. **Conductance programming** — every mapped crossbar's weight
+///    matrix is rewritten row by row, one update pulse per occupied row
+///    ([`Step::Update`]); rows program sequentially because the single
+///    RISC core drives the programming DACs.
+///
+/// The multi-tenant scheduler ([`crate::chip`]) charges this cost into
+/// its report on every swap-in (it never sleeps for it — the
+/// reconfiguration is modeled, not emulated).
+#[derive(Clone, Debug)]
+pub struct ReconfigCost {
+    /// Peak simultaneous cores of the serving configuration.
+    pub cores: usize,
+    /// Routers whose SRAM images are rewritten (occupied mesh stops
+    /// plus the memory port).
+    pub routers: usize,
+    /// Switch SRAM bits written across those routers.
+    pub switch_bits: u64,
+    /// Crossbar rows re-programmed (one update pulse each).
+    pub weight_rows: u64,
+    /// RISC configuration-phase time: switch images + descriptors (s).
+    pub config_time_s: f64,
+    /// Crossbar programming time: rows x update-pulse time (s).
+    pub program_time_s: f64,
+}
+
+impl ReconfigCost {
+    /// Total modeled reconfiguration time (s): switch-image writes plus
+    /// conductance programming.
+    pub fn total_s(&self) -> f64 {
+        self.config_time_s + self.program_time_s
+    }
+}
+
+/// Compute the [`ReconfigCost`] of deploying `net`'s serving
+/// configuration ([`serving_map`]).
+pub fn reconfig_cost(net: &Network, sys: &SystemConfig)
+    -> Result<ReconfigCost, String> {
+    let map = serving_map(net, sys)?;
+    Ok(reconfig_cost_of(&map.stages[0], sys))
+}
+
+/// [`ReconfigCost`] of deploying an already-mapped serving stage — the
+/// multi-tenant scheduler builds each app's [`serving_map`] once and
+/// prices it here without re-mapping.
+pub fn reconfig_cost_of(stage: &StageMap, sys: &SystemConfig)
+    -> ReconfigCost {
+    let placement = place(stage, sys);
+    // The static TDM schedule of the forward traffic fixes how many
+    // slot images every router needs.
+    let sched = Schedule::build(&placement.fwd_transfers, sys.link_bits);
+    let slots = sched.makespan_slots().max(1) as usize;
+    let cores = stage.cores_used();
+    let routers = cores + 1; // occupied stops + the memory port
+    let switch_bits =
+        (routers * SwitchConfig::with_slots(slots).config_bits()) as u64;
+    let risc = RiscCore { clock_hz: sys.clock_hz };
+    let work = ConfigWork {
+        neural_cores: cores,
+        routers,
+        switch_bits: switch_bits as usize,
+        dma_descriptors: 2, // input stream in, result stream out
+    };
+    let weight_rows: u64 = stage
+        .layers
+        .iter()
+        .flat_map(|l| l.slices.iter())
+        .map(|s| s.core.inputs as u64)
+        .sum();
+    ReconfigCost {
+        cores,
+        routers,
+        switch_bits,
+        weight_rows,
+        config_time_s: risc.config_time_s(&work),
+        program_time_s: weight_rows as f64 * Step::Update.time_s(),
+    }
 }
 
 /// All Table III rows in paper order.
@@ -330,6 +429,28 @@ mod tests {
         let cl = train_cost(net("mnist_class"), &sys()).unwrap();
         assert!(ae.time_s > 1.2 * cl.time_s,
                 "ae {} cl {}", ae.time_s, cl.time_s);
+    }
+
+    #[test]
+    fn reconfig_cost_tracks_app_size() {
+        let kdd = reconfig_cost(net("kdd_ae"), &sys()).unwrap();
+        let mnist = reconfig_cost(net("mnist_class"), &sys()).unwrap();
+        // both phases cost something, and bigger apps cost more
+        assert!(kdd.total_s() > 0.0);
+        assert!(kdd.switch_bits > 0 && kdd.weight_rows > 0);
+        assert!(mnist.cores > kdd.cores);
+        assert!(mnist.switch_bits > kdd.switch_bits);
+        assert!(mnist.weight_rows > kdd.weight_rows);
+        assert!(mnist.total_s() > kdd.total_s());
+        // conductance programming dominates the switch images for a
+        // crossbar-heavy app (thousands of rows vs a few kB of SRAM)
+        assert!(mnist.program_time_s > mnist.config_time_s);
+        // a full-app swap stays well under a millisecond-scale budget
+        // per phase pair — reconfiguration is cheap relative to epochs
+        assert!(mnist.total_s() < 10e-3, "{}", mnist.total_s());
+        // kdd rows: 42-row encoder + 16-row decoder crossbars
+        assert_eq!(kdd.weight_rows, 42 + 16);
+        assert_eq!(kdd.routers, kdd.cores + 1);
     }
 
     #[test]
