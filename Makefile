@@ -3,8 +3,9 @@
 
 ARTIFACTS ?= artifacts
 
-.PHONY: build test bench bench-multiapp bench-parallel bench-serving \
-	bench-train clippy doc fmt artifacts pytest cargotest-pjrt
+.PHONY: build test bench bench-ckpt bench-multiapp bench-parallel \
+	bench-serving bench-train clippy doc fmt artifacts pytest \
+	cargotest-pjrt
 
 build:
 	cargo build --release
@@ -35,6 +36,11 @@ bench-multiapp:
 bench-train:
 	BENCH_TRAIN_OUT=$(abspath BENCH_train.json) \
 		cargo bench --bench perf_train
+
+# Checkpoint save/restore bandwidth and recovery-time objective.
+bench-ckpt:
+	BENCH_CKPT_OUT=$(abspath BENCH_ckpt.json) \
+		cargo bench --bench perf_ckpt
 
 clippy:
 	cargo clippy --all-targets -- -D warnings

@@ -1,0 +1,245 @@
+#!/usr/bin/env python3
+"""Generate the golden checkpoint fixture under rust/tests/data/golden_ckpt/.
+
+Independent (Python) implementation of the Rust checkpoint wire format —
+`rust/src/checkpoint/{codec,manifest,mod}.rs` — so the cross-language
+fixture pins the format: if the Rust encoder or the hwspec fingerprint
+drifts, `rust/tests/checkpoint_determinism.rs::golden_fixture_*` fails.
+
+Every float in the fixture is exactly representable in f32 (dyadic
+rationals), so the bytes are identical on every platform.
+
+Run from the repo root (idempotent, output is committed):
+
+    python3 python/tests/gen_ckpt_fixture.py
+"""
+
+import os
+import struct
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from compile import hwspec  # noqa: E402
+
+
+# --- FNV-1a 64 (mirror of checkpoint::codec::fnv64) -------------------
+
+FNV_OFFSET = 0xCBF2_9CE4_8422_2325
+FNV_PRIME = 0x0000_0100_0000_01B3
+MASK64 = (1 << 64) - 1
+
+
+def fnv64(data: bytes) -> int:
+    h = FNV_OFFSET
+    for b in data:
+        h ^= b
+        h = (h * FNV_PRIME) & MASK64
+    return h
+
+
+assert fnv64(b"") == 0xCBF2_9CE4_8422_2325
+assert fnv64(b"a") == 0xAF63_DC4C_8601_EC8C
+assert fnv64(b"foobar") == 0x8594_4171_F739_67E8
+
+
+# --- fixed-width LE codec (mirror of checkpoint::codec::Writer) -------
+
+
+class Writer:
+    def __init__(self):
+        self.buf = bytearray()
+
+    def magic(self, m: bytes):
+        assert len(m) == 4
+        self.buf += m
+
+    def u8(self, v: int):
+        self.buf += struct.pack("<B", v)
+
+    def u32(self, v: int):
+        self.buf += struct.pack("<I", v)
+
+    def u64(self, v: int):
+        self.buf += struct.pack("<Q", v)
+
+    def f32(self, v: float):
+        self.buf += struct.pack("<f", v)
+
+    def bytes_field(self, v: bytes):
+        self.u32(len(v))
+        self.buf += v
+
+    def index_vec(self, v):
+        self.u64(len(v))
+        for x in v:
+            self.u64(x)
+
+    def f32_vec(self, v):
+        self.u64(len(v))
+        for x in v:
+            self.f32(x)
+
+    def array(self, shape, data):
+        n = 1
+        for d in shape:
+            n *= d
+        assert n == len(data), (shape, len(data))
+        self.u32(len(shape))
+        for d in shape:
+            self.u64(d)
+        self.f32_vec(data)
+
+    def arrays(self, arrs):
+        self.u32(len(arrs))
+        for shape, data in arrs:
+            self.array(shape, data)
+
+    def finish(self) -> bytes:
+        return bytes(self.buf)
+
+
+# --- hwspec fingerprint (mirror of checkpoint::hwspec_fingerprint) ----
+
+# The coordinator tile sizes live in rust/src/config/apps.rs and the
+# clustering-core limits in rust/src/config/hwspec.rs (the Python
+# hwspec mirror predates the clustering core); all are part of the
+# determinism contract (shard shapes / datapath sizing), hence
+# fingerprinted.
+KMEANS_MAX_CENTRES = 32
+KMEANS_MAX_DIM = 32
+GRAD_TILE = 8
+FWD_BATCH = 64
+TRAIN_CHUNK = 32
+
+
+def hwspec_fingerprint() -> int:
+    payload = bytearray()
+    for v in [
+        hwspec.V_RAIL,
+        hwspec.H_SLOPE,
+        hwspec.H_CLIP_IN,
+        hwspec.ERR_MAX,
+        hwspec.G_MIN,
+        hwspec.G_MAX,
+    ]:
+        payload += struct.pack("<f", v)
+    for v in [
+        hwspec.OUT_BITS,
+        hwspec.ERR_BITS,
+        hwspec.LUT_SIZE,
+        hwspec.CORE_INPUTS,
+        hwspec.CORE_NEURONS,
+        KMEANS_MAX_CENTRES,
+        KMEANS_MAX_DIM,
+        GRAD_TILE,
+        FWD_BATCH,
+        TRAIN_CHUNK,
+    ]:
+        payload += struct.pack("<Q", v)
+    return fnv64(bytes(payload))
+
+
+# --- the fixture state (iris_ae at epoch 3) ---------------------------
+
+FORMAT_VERSION = 1
+APP = "iris_ae"
+KIND_AUTOENCODER = 1
+LAYERS = [4, 2, 4]
+SEED = 42
+LR = 0.5
+BATCH = 2
+STAGE = 0
+EPOCHS_DONE = 3
+N_SAMPLES = 6
+SAMPLES_SEEN = EPOCHS_DONE * N_SAMPLES
+RNG = [
+    0x0123_4567_89AB_CDEF,
+    0x0FED_CBA9_8765_4321,
+    0x1122_3344_5566_7788,
+    0x8877_6655_4433_2211,
+]
+ORDER = [3, 1, 0, 2, 5, 4]
+LOSS_CURVE = [0.5, 0.25, 0.125]
+
+
+def ramp(shape, base):
+    """Deterministic dyadic-rational fill: base + i/64."""
+    n = 1
+    for d in shape:
+        n *= d
+    return [base + i / 64.0 for i in range(n)]
+
+
+# Live conductance pairs [gp0, gn0, gp1, gn1]; shapes follow the
+# (inputs+bias) x neurons convention of init_conductances.
+PARAMS = [
+    ([5, 2], ramp([5, 2], 0.25)),
+    ([5, 2], ramp([5, 2], 0.125)),
+    ([3, 4], ramp([3, 4], 0.5)),
+    ([3, 4], ramp([3, 4], 0.0625)),
+]
+ENCODER = []  # plain (non-DR) app
+
+
+def encode_state() -> bytes:
+    w = Writer()
+    w.magic(b"RSCK")
+    w.u32(FORMAT_VERSION)
+    w.bytes_field(APP.encode())
+    w.u8(KIND_AUTOENCODER)
+    w.index_vec(LAYERS)
+    w.u64(hwspec_fingerprint())
+    w.u64(SEED)
+    w.f32(LR)
+    w.u64(BATCH)
+    w.u64(STAGE)
+    w.u64(EPOCHS_DONE)
+    w.u64(SAMPLES_SEEN)
+    w.u64(N_SAMPLES)
+    for s in RNG:
+        w.u64(s)
+    w.index_vec(ORDER)
+    w.f32_vec(LOSS_CURVE)
+    return w.finish()
+
+
+def encode_params() -> bytes:
+    w = Writer()
+    w.magic(b"RSPW")
+    w.u32(FORMAT_VERSION)
+    w.arrays(ENCODER)
+    w.arrays(PARAMS)
+    return w.finish()
+
+
+def main():
+    root = os.path.join(os.path.dirname(__file__), "..", "..")
+    name = f"ckpt-s{STAGE:03d}-e{EPOCHS_DONE:06d}"
+    out = os.path.join(root, "rust", "tests", "data", "golden_ckpt", name)
+    os.makedirs(out, exist_ok=True)
+
+    state = encode_state()
+    params = encode_params()
+    manifest = (
+        "restream-checkpoint v1\n"
+        f"app {APP}\n"
+        f"stage {STAGE} epoch {EPOCHS_DONE}\n"
+        f"file state.bin {len(state)} {fnv64(state):016x}\n"
+        f"file params.bin {len(params)} {fnv64(params):016x}\n"
+    )
+
+    with open(os.path.join(out, "state.bin"), "wb") as f:
+        f.write(state)
+    with open(os.path.join(out, "params.bin"), "wb") as f:
+        f.write(params)
+    with open(os.path.join(out, "MANIFEST"), "w") as f:
+        f.write(manifest)
+
+    print(f"wrote {out}")
+    print(f"  state.bin  {len(state)} bytes  fnv {fnv64(state):016x}")
+    print(f"  params.bin {len(params)} bytes  fnv {fnv64(params):016x}")
+    print(f"  hwspec fingerprint {hwspec_fingerprint():016x}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,134 @@
+//! §Perf: checkpoint save/restore cost vs the work it protects.
+//!
+//! Measures, on the mnist_class stack (the largest single-stage app):
+//!
+//! * **save bandwidth** — encode + atomic commit of a full
+//!   [`TrainState`] (MB/s over the payload bytes),
+//! * **restore bandwidth** — manifest verify + decode back into a
+//!   `TrainState`,
+//! * **recovery-time objective** — restore seconds vs the wall seconds
+//!   of one training epoch: a checkpoint is only worth taking if
+//!   restoring it costs (much) less than recomputing the epoch it
+//!   saves, so CI's `bench-smoke` gates on `restore_s < epoch_s`.
+//!
+//! Writes `BENCH_ckpt.json` (override the path with `$BENCH_CKPT_OUT`).
+//! Scale knobs: `$PERF_CKPT_SAMPLES` (default 64, the epoch size),
+//! `$PERF_CKPT_REPEATS` (default 3; times are best-of-N).
+//!
+//! Determinism note: restore is bit-exact (`tests/
+//! checkpoint_determinism.rs`); this bench only measures how fast the
+//! fixed bytes move.
+
+use restream::benchutil::{best_wall, env_usize, section};
+use restream::checkpoint::{self, TrainState};
+use restream::config::apps;
+use restream::coordinator::{init_conductances, Engine};
+use restream::testing::Rng;
+
+fn json_report(
+    payload_bytes: u64,
+    save_s: f64,
+    restore_s: f64,
+    epoch_s: f64,
+    samples: usize,
+    repeats: usize,
+) -> String {
+    let mb = payload_bytes as f64 / (1024.0 * 1024.0);
+    format!(
+        "{{\n  \"bench\": \"perf_ckpt\",\n  \"app\": \"mnist_class\",\n  \
+         \"samples\": {samples},\n  \"repeats\": {repeats},\n  \
+         \"payload_bytes\": {payload_bytes},\n  \
+         \"save_s\": {save_s:.6},\n  \
+         \"save_mb_s\": {:.2},\n  \
+         \"restore_s\": {restore_s:.6},\n  \
+         \"restore_mb_s\": {:.2},\n  \
+         \"epoch_s\": {epoch_s:.6},\n  \
+         \"rto_ratio\": {:.4}\n}}\n",
+        mb / save_s.max(1e-12),
+        mb / restore_s.max(1e-12),
+        restore_s / epoch_s.max(1e-12),
+    )
+}
+
+fn main() -> anyhow::Result<()> {
+    let samples = env_usize("PERF_CKPT_SAMPLES", 64).max(1);
+    let repeats = env_usize("PERF_CKPT_REPEATS", 3).max(1);
+    let net = apps::network("mnist_class").unwrap();
+    println!(
+        "perf_ckpt: {} ({:?}), {samples}-sample epoch, best of {repeats}",
+        net.name, net.layers
+    );
+
+    // A realistic full-size state: live conductances plus a cursor
+    // mid-run (the order permutation scales with the dataset).
+    let mut state = TrainState::fresh(net, 7, 0.3, 16);
+    state.epochs_done = 3;
+    state.samples_seen = 3 * samples;
+    state.n_samples = samples;
+    state.rng = Rng::seeded(7).state();
+    state.order = (0..samples).rev().collect();
+    state.loss_curve = vec![0.5, 0.4, 0.3];
+    state.params = init_conductances(net.layers, 7);
+    let payload_bytes = state.payload_bytes();
+
+    let dir = std::env::temp_dir()
+        .join(format!("restream-perf-ckpt-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    section("save (encode + atomic commit)");
+    let save_s = best_wall(repeats, || {
+        checkpoint::save(&dir, &state).unwrap();
+    });
+    println!(
+        "bench ckpt/save {:>10.2} ms  {:>8.1} MB/s  ({payload_bytes} \
+         payload bytes)",
+        save_s * 1e3,
+        payload_bytes as f64 / (1024.0 * 1024.0) / save_s.max(1e-12)
+    );
+
+    section("restore (verify + decode)");
+    let path = checkpoint::latest(&dir)?.expect("checkpoint saved above");
+    let mut restored = None;
+    let restore_s = best_wall(repeats, || {
+        restored = Some(checkpoint::load(&path).unwrap());
+    });
+    assert_eq!(restored.as_ref(), Some(&state), "restore must be bit-exact");
+    println!(
+        "bench ckpt/restore {:>10.2} ms  {:>8.1} MB/s",
+        restore_s * 1e3,
+        payload_bytes as f64 / (1024.0 * 1024.0) / restore_s.max(1e-12)
+    );
+
+    section("recovery-time objective (restore vs one epoch)");
+    let mut rng = Rng::seeded(1);
+    let xs: Vec<Vec<f32>> = (0..samples)
+        .map(|_| rng.vec_uniform(net.layers[0], -0.5, 0.5))
+        .collect();
+    let ts: Vec<Vec<f32>> =
+        (0..samples).map(|_| rng.vec_uniform(10, -0.4, 0.4)).collect();
+    let engine = Engine::native().with_workers(4);
+    let epoch_s = best_wall(repeats, || {
+        let ts = ts.clone();
+        engine
+            .train_with(net, &xs, move |i| ts[i].clone(), 1, 0.3, 7, 16)
+            .unwrap();
+    });
+    let ratio = restore_s / epoch_s.max(1e-12);
+    println!(
+        "one {samples}-sample epoch: {:.2} ms; restore costs {:.4} of \
+         an epoch",
+        epoch_s * 1e3,
+        ratio
+    );
+
+    let out_path = std::env::var("BENCH_CKPT_OUT")
+        .unwrap_or_else(|_| "BENCH_ckpt.json".to_string());
+    std::fs::write(
+        &out_path,
+        json_report(payload_bytes, save_s, restore_s, epoch_s, samples,
+                    repeats),
+    )?;
+    println!("wrote {out_path}");
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}

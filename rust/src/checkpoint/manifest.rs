@@ -1,0 +1,313 @@
+//! Checkpoint manifest: the per-file integrity record and the atomic
+//! commit protocol.
+//!
+//! A checkpoint directory is *invisible until complete*: every payload
+//! file is written into a `.tmp-…` staging directory, the `MANIFEST`
+//! (listing each file's byte length and FNV-1a 64 checksum) is written
+//! last, and the staging directory is renamed into place in one
+//! filesystem operation. A crash at any point leaves either the old
+//! checkpoint or a `.tmp-…` directory that [`super::latest`] ignores —
+//! never a half-written checkpoint that a restore could read.
+//!
+//! The manifest is a small LF-terminated text file:
+//!
+//! ```text
+//! restream-checkpoint v1
+//! app iris_ae
+//! stage 0 epoch 2
+//! file state.bin 167 9d2c5e8f01a3b47c
+//! file params.bin 288 0f1e2d3c4b5a6978
+//! ```
+//!
+//! Only the header and `file` lines are load-bearing; the `app`/`stage`
+//! lines are for humans running `cat`.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use super::codec::fnv64;
+use super::CheckpointError;
+
+/// Name of the manifest file inside a checkpoint directory.
+pub const MANIFEST_FILE: &str = "MANIFEST";
+/// First line of every manifest; bump the `v` on a format break.
+pub const MANIFEST_HEADER: &str = "restream-checkpoint v1";
+
+/// One payload file recorded in the manifest.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ManifestEntry {
+    /// File name relative to the checkpoint directory.
+    pub name: String,
+    /// Byte length (a short file is reported as Truncated, not as a
+    /// checksum failure — the distinction matters when diagnosing a
+    /// crashed copy vs flipped bits).
+    pub len: u64,
+    /// FNV-1a 64 checksum of the whole file.
+    pub fnv: u64,
+}
+
+/// Render the manifest text for `entries` plus the human header lines.
+pub fn render(
+    app: &str,
+    stage: usize,
+    epoch: usize,
+    entries: &[ManifestEntry],
+) -> String {
+    let mut s = String::new();
+    s.push_str(MANIFEST_HEADER);
+    s.push('\n');
+    s.push_str(&format!("app {app}\n"));
+    s.push_str(&format!("stage {stage} epoch {epoch}\n"));
+    for e in entries {
+        s.push_str(&format!("file {} {} {:016x}\n", e.name, e.len, e.fnv));
+    }
+    s
+}
+
+/// Parse a manifest back into its `file` entries.
+pub fn parse(
+    text: &str,
+    path: &Path,
+) -> Result<Vec<ManifestEntry>, CheckpointError> {
+    let mut lines = text.lines();
+    match lines.next() {
+        Some(h) if h == MANIFEST_HEADER => {}
+        other => {
+            return Err(CheckpointError::BadFormat {
+                file: path.to_path_buf(),
+                detail: format!(
+                    "manifest header {other:?}, want {MANIFEST_HEADER:?}"
+                ),
+            })
+        }
+    }
+    let mut entries = Vec::new();
+    for line in lines {
+        let mut parts = line.split_whitespace();
+        if parts.next() != Some("file") {
+            continue; // informational line
+        }
+        let bad = || CheckpointError::BadFormat {
+            file: path.to_path_buf(),
+            detail: format!("unparseable manifest line: {line:?}"),
+        };
+        let name = parts.next().ok_or_else(bad)?.to_string();
+        let len: u64 =
+            parts.next().ok_or_else(bad)?.parse().map_err(|_| bad())?;
+        let fnv = u64::from_str_radix(parts.next().ok_or_else(bad)?, 16)
+            .map_err(|_| bad())?;
+        entries.push(ManifestEntry { name, len, fnv });
+    }
+    if entries.is_empty() {
+        return Err(CheckpointError::BadFormat {
+            file: path.to_path_buf(),
+            detail: "manifest lists no files".to_string(),
+        });
+    }
+    Ok(entries)
+}
+
+/// Read and integrity-check every file the checkpoint directory's
+/// manifest lists, returning `(name, bytes)` pairs in manifest order.
+/// Length mismatches surface as [`CheckpointError::Truncated`], content
+/// corruption as [`CheckpointError::ChecksumMismatch`].
+pub fn read_verified(
+    dir: &Path,
+) -> Result<Vec<(String, Vec<u8>)>, CheckpointError> {
+    let mpath = dir.join(MANIFEST_FILE);
+    let text = fs::read_to_string(&mpath).map_err(|err| {
+        CheckpointError::io(mpath.clone(), err)
+    })?;
+    let entries = parse(&text, &mpath)?;
+    let mut out = Vec::with_capacity(entries.len());
+    for e in &entries {
+        let fpath = dir.join(&e.name);
+        let bytes = fs::read(&fpath)
+            .map_err(|err| CheckpointError::io(fpath.clone(), err))?;
+        if bytes.len() as u64 != e.len {
+            return Err(CheckpointError::Truncated {
+                file: fpath,
+                needed: e.len,
+                got: bytes.len() as u64,
+            });
+        }
+        let got = fnv64(&bytes);
+        if got != e.fnv {
+            return Err(CheckpointError::ChecksumMismatch {
+                file: fpath,
+                expected: e.fnv,
+                got,
+            });
+        }
+        out.push((e.name.clone(), bytes));
+    }
+    Ok(out)
+}
+
+/// Atomically commit a checkpoint: stage every `(name, bytes)` file
+/// plus the manifest under `dir/.tmp-<name>`, then rename the staging
+/// directory to `dir/<name>` (replacing any previous checkpoint of the
+/// same name). Returns the final checkpoint path.
+pub fn commit(
+    dir: &Path,
+    name: &str,
+    app: &str,
+    stage: usize,
+    epoch: usize,
+    files: &[(&str, &[u8])],
+) -> Result<PathBuf, CheckpointError> {
+    fs::create_dir_all(dir)
+        .map_err(|err| CheckpointError::io(dir.to_path_buf(), err))?;
+    let staging = dir.join(format!(".tmp-{name}"));
+    let final_dir = dir.join(name);
+    if staging.exists() {
+        fs::remove_dir_all(&staging)
+            .map_err(|err| CheckpointError::io(staging.clone(), err))?;
+    }
+    fs::create_dir_all(&staging)
+        .map_err(|err| CheckpointError::io(staging.clone(), err))?;
+    let mut entries = Vec::with_capacity(files.len());
+    for (fname, bytes) in files {
+        let fpath = staging.join(fname);
+        fs::write(&fpath, bytes)
+            .map_err(|err| CheckpointError::io(fpath, err))?;
+        entries.push(ManifestEntry {
+            name: (*fname).to_string(),
+            len: bytes.len() as u64,
+            fnv: fnv64(bytes),
+        });
+    }
+    let mpath = staging.join(MANIFEST_FILE);
+    fs::write(&mpath, render(app, stage, epoch, &entries))
+        .map_err(|err| CheckpointError::io(mpath, err))?;
+    if final_dir.exists() {
+        fs::remove_dir_all(&final_dir)
+            .map_err(|err| CheckpointError::io(final_dir.clone(), err))?;
+    }
+    fs::rename(&staging, &final_dir)
+        .map_err(|err| CheckpointError::io(final_dir.clone(), err))?;
+    Ok(final_dir)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "restream-manifest-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn render_parse_roundtrip() {
+        let entries = vec![
+            ManifestEntry {
+                name: "state.bin".into(),
+                len: 167,
+                fnv: 0x9d2c_5e8f_01a3_b47c,
+            },
+            ManifestEntry {
+                name: "params.bin".into(),
+                len: 288,
+                fnv: 0x0f1e_2d3c_4b5a_6978,
+            },
+        ];
+        let text = render("iris_ae", 0, 2, &entries);
+        let back = parse(&text, Path::new("MANIFEST")).unwrap();
+        assert_eq!(back, entries);
+    }
+
+    #[test]
+    fn bad_header_and_garbled_lines_are_typed() {
+        let p = Path::new("MANIFEST");
+        assert!(matches!(
+            parse("not-a-manifest\n", p),
+            Err(CheckpointError::BadFormat { .. })
+        ));
+        let text = format!("{MANIFEST_HEADER}\nfile a.bin nope ffff\n");
+        assert!(matches!(
+            parse(&text, p),
+            Err(CheckpointError::BadFormat { .. })
+        ));
+        let text = format!("{MANIFEST_HEADER}\napp only-info-lines\n");
+        assert!(matches!(
+            parse(&text, p),
+            Err(CheckpointError::BadFormat { .. })
+        ));
+    }
+
+    #[test]
+    fn commit_then_verify_roundtrips_and_replaces() {
+        let dir = scratch("commit");
+        let path = commit(
+            &dir,
+            "ckpt-s000-e000001",
+            "iris_ae",
+            0,
+            1,
+            &[("state.bin", b"abc".as_slice()), ("params.bin", b"defg")],
+        )
+        .unwrap();
+        assert!(path.ends_with("ckpt-s000-e000001"));
+        let files = read_verified(&path).unwrap();
+        assert_eq!(files[0].0, "state.bin");
+        assert_eq!(files[0].1, b"abc");
+        assert_eq!(files[1].1, b"defg");
+        // committing the same name again replaces the old contents
+        let path2 = commit(
+            &dir,
+            "ckpt-s000-e000001",
+            "iris_ae",
+            0,
+            1,
+            &[("state.bin", b"xyz".as_slice()), ("params.bin", b"defg")],
+        )
+        .unwrap();
+        assert_eq!(path, path2);
+        let files = read_verified(&path2).unwrap();
+        assert_eq!(files[0].1, b"xyz");
+        // no staging leftovers
+        assert!(!dir.join(".tmp-ckpt-s000-e000001").exists());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corruption_classes_are_distinguished() {
+        let dir = scratch("corrupt");
+        let path = commit(
+            &dir,
+            "ckpt-s000-e000002",
+            "iris_ae",
+            0,
+            2,
+            &[("state.bin", b"hello-checkpoint".as_slice())],
+        )
+        .unwrap();
+        // truncation → Truncated (length check fires before checksum)
+        fs::write(path.join("state.bin"), b"hello").unwrap();
+        match read_verified(&path) {
+            Err(CheckpointError::Truncated { needed, got, .. }) => {
+                assert_eq!(needed, 16);
+                assert_eq!(got, 5);
+            }
+            other => panic!("want Truncated, got {other:?}"),
+        }
+        // same length, flipped bits → ChecksumMismatch
+        fs::write(path.join("state.bin"), b"hello-checkpoinX").unwrap();
+        assert!(matches!(
+            read_verified(&path),
+            Err(CheckpointError::ChecksumMismatch { .. })
+        ));
+        // a listed file missing entirely → Io (with the file's path)
+        fs::remove_file(path.join("state.bin")).unwrap();
+        assert!(matches!(
+            read_verified(&path),
+            Err(CheckpointError::Io { .. })
+        ));
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,614 @@
+//! Versioned training-state checkpoints: crash-safe snapshots of
+//! everything a training run needs to resume **bit-identically**.
+//!
+//! The paper's architecture trains *and* serves; production training
+//! additionally survives crashes. A checkpoint captures the full
+//! resume state at an epoch boundary:
+//!
+//! * layer conductances (the live [`ArrayF32`] parameter pairs, plus
+//!   the completed-stage encoder pairs of a DR pipeline),
+//! * the optimizer cursor (completed epochs, samples seen, partial
+//!   loss curve, mini-batch size, learning rate, seed),
+//! * the RNG stream position (the raw xoshiro256++ state of the epoch
+//!   shuffler) and the current sample-order permutation,
+//! * app identity (name, kind, layer list) and the build's hardware
+//!   fingerprint ([`hwspec_fingerprint`]).
+//!
+//! Because PRs 2–5 pinned the determinism contract — fixed shard
+//! boundaries, left-to-right reduction, epoch order a function of the
+//! seed stream alone — restoring this state and continuing produces
+//! conductances **byte-identical** to the uninterrupted run
+//! (`tests/checkpoint_determinism.rs` proves it per app).
+//!
+//! On disk a checkpoint is a directory committed atomically (staging
+//! dir + rename, manifest with per-file FNV-1a checksums — see
+//! [`manifest`]) holding two payloads encoded by the fixed-width LE
+//! [`codec`]:
+//!
+//! | file | contents |
+//! |------|----------|
+//! | `state.bin`  | magic `RSCK`, version, app identity, fingerprint, optimizer cursor, RNG state, order, loss curve |
+//! | `params.bin` | magic `RSPW`, version, encoder arrays, live parameter arrays |
+//! | `MANIFEST`   | header, per-file byte length + FNV-1a 64 checksum |
+//!
+//! Failures are **typed** ([`CheckpointError`]) and total: a truncated
+//! file, flipped bit, foreign app, or mismatched hardware build is
+//! reported before any training state is touched — never a panic,
+//! never a half-applied restore.
+
+pub mod codec;
+pub mod manifest;
+
+pub use codec::fnv64;
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::config::hwspec as hw;
+use crate::config::{apps, AppKind, Network};
+use crate::runtime::ArrayF32;
+
+/// On-disk format version of `state.bin`/`params.bin`.
+pub const FORMAT_VERSION: u32 = 1;
+
+const STATE_MAGIC: &[u8; 4] = b"RSCK";
+const PARAMS_MAGIC: &[u8; 4] = b"RSPW";
+const STATE_FILE: &str = "state.bin";
+const PARAMS_FILE: &str = "params.bin";
+
+/// Everything that can go wrong saving or restoring a checkpoint.
+/// Every variant names the offending file or quantity so an operator
+/// can tell a crashed copy (truncation) from bit rot (checksum) from a
+/// checkpoint that simply belongs to a different app or build.
+#[derive(Debug)]
+pub enum CheckpointError {
+    /// Filesystem operation failed.
+    Io { path: PathBuf, err: std::io::Error },
+    /// No checkpoint found where one was required.
+    Missing { path: PathBuf },
+    /// A file is shorter than its manifest entry or a field's decoder
+    /// needs bytes the payload does not have.
+    Truncated { file: PathBuf, needed: u64, got: u64 },
+    /// File length matches but the FNV-1a checksum does not.
+    ChecksumMismatch { file: PathBuf, expected: u64, got: u64 },
+    /// Structurally invalid payload (bad magic, version, field).
+    BadFormat { file: PathBuf, detail: String },
+    /// A stored `u64` length/index does not fit this target's `usize`.
+    Overflow { file: PathBuf, field: &'static str, value: u64 },
+    /// Checkpoint belongs to a different application.
+    AppMismatch { expected: String, found: String },
+    /// Checkpoint was written under different hardware constants.
+    FingerprintMismatch { expected: u64, found: u64 },
+    /// Checkpoint is internally inconsistent with the requested resume
+    /// (dataset size, hyper-parameters, order length…).
+    StateMismatch { detail: String },
+}
+
+impl CheckpointError {
+    pub(crate) fn io(path: PathBuf, err: std::io::Error) -> CheckpointError {
+        CheckpointError::Io { path, err }
+    }
+}
+
+impl fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CheckpointError::Io { path, err } => {
+                write!(f, "checkpoint I/O on {}: {err}", path.display())
+            }
+            CheckpointError::Missing { path } => {
+                write!(f, "no checkpoint found at {}", path.display())
+            }
+            CheckpointError::Truncated { file, needed, got } => write!(
+                f,
+                "checkpoint file {} truncated: need {needed} bytes, \
+                 have {got}",
+                file.display()
+            ),
+            CheckpointError::ChecksumMismatch { file, expected, got } => {
+                write!(
+                    f,
+                    "checksum mismatch in {}: manifest says {expected:016x}, \
+                     file hashes to {got:016x}",
+                    file.display()
+                )
+            }
+            CheckpointError::BadFormat { file, detail } => {
+                write!(f, "malformed checkpoint {}: {detail}", file.display())
+            }
+            CheckpointError::Overflow { file, field, value } => write!(
+                f,
+                "checkpoint {}: {field} = {value} does not fit this \
+                 target's usize",
+                file.display()
+            ),
+            CheckpointError::AppMismatch { expected, found } => write!(
+                f,
+                "checkpoint belongs to app '{found}', not '{expected}'"
+            ),
+            CheckpointError::FingerprintMismatch { expected, found } => {
+                write!(
+                    f,
+                    "hwspec fingerprint mismatch: this build is \
+                     {expected:016x}, checkpoint was written under \
+                     {found:016x}"
+                )
+            }
+            CheckpointError::StateMismatch { detail } => {
+                write!(f, "checkpoint does not match this run: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {}
+
+/// Fingerprint of the hardware constants the training math depends on.
+///
+/// FNV-1a 64 over the LE bytes of every `hwspec` constant plus the
+/// coordinator tile sizes — if any of them changes, old checkpoints'
+/// conductances were trained under different quantisers/shard shapes
+/// and a resume would silently diverge, so [`TrainState::verify_matches`]
+/// refuses them with [`CheckpointError::FingerprintMismatch`].
+/// `python/tests/gen_ckpt_fixture.py` computes the same value from the
+/// Python hwspec mirror; the golden-fixture test cross-checks the two.
+pub fn hwspec_fingerprint() -> u64 {
+    let mut bytes = Vec::with_capacity(26 * 8);
+    for v in [
+        hw::V_RAIL,
+        hw::H_SLOPE,
+        hw::H_CLIP_IN,
+        hw::ERR_MAX,
+        hw::G_MIN,
+        hw::G_MAX,
+    ] {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    for v in [
+        hw::OUT_BITS as u64,
+        hw::ERR_BITS as u64,
+        hw::LUT_SIZE as u64,
+        hw::CORE_INPUTS as u64,
+        hw::CORE_NEURONS as u64,
+        hw::KMEANS_MAX_CENTRES as u64,
+        hw::KMEANS_MAX_DIM as u64,
+        apps::GRAD_TILE as u64,
+        apps::FWD_BATCH as u64,
+        apps::TRAIN_CHUNK as u64,
+    ] {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    fnv64(&bytes)
+}
+
+fn kind_tag(kind: AppKind) -> u8 {
+    match kind {
+        AppKind::Classifier => 0,
+        AppKind::Autoencoder => 1,
+        AppKind::DimReduction => 2,
+        AppKind::Kmeans => 3,
+    }
+}
+
+/// Full resume state of a training run at an epoch boundary.
+///
+/// Fields are public so tests (and tooling) can inspect or perturb
+/// them; [`save`]/[`load`] are the only serialisation paths.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainState {
+    /// Registered app name (checked against the resume target).
+    pub app: String,
+    /// [`kind_tag`] of the app's [`AppKind`].
+    pub kind: u8,
+    /// Layer sizes, input first (checked against the resume target).
+    pub layers: Vec<usize>,
+    /// [`hwspec_fingerprint`] of the build that wrote the checkpoint.
+    pub fingerprint: u64,
+    /// Training seed the run was started with.
+    pub seed: u64,
+    /// Learning rate (bit-compared on resume: a different lr cannot
+    /// reproduce the uninterrupted run).
+    pub lr: f32,
+    /// Mini-batch size (1 = the sequential stochastic-BP path).
+    pub batch: usize,
+    /// DR pipeline stage the cursor sits in (0 for plain apps).
+    pub stage: usize,
+    /// Completed epochs within the current stage.
+    pub epochs_done: usize,
+    /// Samples consumed so far (current stage).
+    pub samples_seen: usize,
+    /// Dataset size the order permutation covers.
+    pub n_samples: usize,
+    /// Raw xoshiro256++ state of the epoch shuffler — the RNG stream
+    /// position, so the next epoch's shuffle continues the exact
+    /// sequence the uninterrupted run would have drawn.
+    pub rng: [u64; 4],
+    /// Current sample-order permutation (the cumulative result of
+    /// `epochs_done` in-place shuffles).
+    pub order: Vec<usize>,
+    /// Per-epoch mean losses accumulated so far (current stage).
+    pub loss_curve: Vec<f32>,
+    /// Encoder conductance pairs of completed DR stages (empty for
+    /// plain apps).
+    pub encoder: Vec<ArrayF32>,
+    /// Live training conductances `[gp0, gn0, gp1, gn1, …]`.
+    pub params: Vec<ArrayF32>,
+}
+
+impl TrainState {
+    /// Fresh state for `net` at epoch 0 of stage `stage` — the caller
+    /// fills in the cursor fields as training progresses.
+    pub fn fresh(net: &Network, seed: u64, lr: f32, batch: usize) -> Self {
+        TrainState {
+            app: net.name.to_string(),
+            kind: kind_tag(net.kind),
+            layers: net.layers.to_vec(),
+            fingerprint: hwspec_fingerprint(),
+            seed,
+            lr,
+            batch: batch.max(1),
+            stage: 0,
+            epochs_done: 0,
+            samples_seen: 0,
+            n_samples: 0,
+            rng: [0; 4],
+            order: Vec::new(),
+            loss_curve: Vec::new(),
+            encoder: Vec::new(),
+            params: Vec::new(),
+        }
+    }
+
+    /// Directory name this state saves under — lexicographic order of
+    /// the names equals (stage, epoch) order, which is what makes
+    /// [`latest`] a plain string max.
+    pub fn dir_name(&self) -> String {
+        format!("ckpt-s{:03}-e{:06}", self.stage, self.epochs_done)
+    }
+
+    /// Verify this checkpoint belongs to `net` as compiled into this
+    /// binary: app name, kind, layer list and hardware fingerprint.
+    /// Typed errors, no partial effects.
+    pub fn verify_matches(
+        &self,
+        net: &Network,
+    ) -> Result<(), CheckpointError> {
+        if self.app != net.name {
+            return Err(CheckpointError::AppMismatch {
+                expected: net.name.to_string(),
+                found: self.app.clone(),
+            });
+        }
+        if self.layers != net.layers || self.kind != kind_tag(net.kind) {
+            return Err(CheckpointError::StateMismatch {
+                detail: format!(
+                    "app '{}' is registered with layers {:?} (kind {}), \
+                     checkpoint carries {:?} (kind {})",
+                    net.name,
+                    net.layers,
+                    kind_tag(net.kind),
+                    self.layers,
+                    self.kind
+                ),
+            });
+        }
+        let expected = hwspec_fingerprint();
+        if self.fingerprint != expected {
+            return Err(CheckpointError::FingerprintMismatch {
+                expected,
+                found: self.fingerprint,
+            });
+        }
+        Ok(())
+    }
+
+    /// Total payload bytes of the two binary files (for bandwidth
+    /// accounting in `perf_ckpt`).
+    pub fn payload_bytes(&self) -> u64 {
+        (self.encode_state().len() + self.encode_params().len()) as u64
+    }
+
+    fn encode_state(&self) -> Vec<u8> {
+        let mut w = codec::Writer::new();
+        w.magic(STATE_MAGIC);
+        w.u32(FORMAT_VERSION);
+        w.bytes(self.app.as_bytes());
+        w.u8(self.kind);
+        w.index_vec(&self.layers);
+        w.u64(self.fingerprint);
+        w.u64(self.seed);
+        w.f32(self.lr);
+        w.u64(self.batch as u64);
+        w.u64(self.stage as u64);
+        w.u64(self.epochs_done as u64);
+        w.u64(self.samples_seen as u64);
+        w.u64(self.n_samples as u64);
+        for s in self.rng {
+            w.u64(s);
+        }
+        w.index_vec(&self.order);
+        w.f32_vec(&self.loss_curve);
+        w.finish()
+    }
+
+    fn encode_params(&self) -> Vec<u8> {
+        let mut w = codec::Writer::new();
+        w.magic(PARAMS_MAGIC);
+        w.u32(FORMAT_VERSION);
+        w.arrays(&self.encoder);
+        w.arrays(&self.params);
+        w.finish()
+    }
+
+    fn decode(
+        state_bytes: &[u8],
+        params_bytes: &[u8],
+        dir: &Path,
+    ) -> Result<TrainState, CheckpointError> {
+        let sp = dir.join(STATE_FILE);
+        let mut r = codec::Reader::new(state_bytes, &sp);
+        r.magic(STATE_MAGIC)?;
+        let version = r.u32()?;
+        if version != FORMAT_VERSION {
+            return Err(CheckpointError::BadFormat {
+                file: sp,
+                detail: format!(
+                    "format version {version}, this build reads \
+                     {FORMAT_VERSION}"
+                ),
+            });
+        }
+        let app = String::from_utf8(r.bytes()?.to_vec()).map_err(|e| {
+            CheckpointError::BadFormat {
+                file: sp.clone(),
+                detail: format!("app name is not utf-8: {e}"),
+            }
+        })?;
+        let kind = r.u8()?;
+        let layers = r.index_vec("layers")?;
+        let fingerprint = r.u64()?;
+        let seed = r.u64()?;
+        let lr = r.f32()?;
+        let batch = r.to_index(r_u64(&mut r)?, "batch")?;
+        let stage = r.to_index(r_u64(&mut r)?, "stage")?;
+        let epochs_done = r.to_index(r_u64(&mut r)?, "epochs_done")?;
+        let samples_seen = r.to_index(r_u64(&mut r)?, "samples_seen")?;
+        let n_samples = r.to_index(r_u64(&mut r)?, "n_samples")?;
+        let mut rng = [0u64; 4];
+        for s in rng.iter_mut() {
+            *s = r.u64()?;
+        }
+        let order = r.index_vec("order")?;
+        let loss_curve = r.f32_vec("loss_curve")?;
+        r.expect_end()?;
+        if order.len() != n_samples {
+            return Err(CheckpointError::BadFormat {
+                file: sp,
+                detail: format!(
+                    "order permutation has {} entries for {} samples",
+                    order.len(),
+                    n_samples
+                ),
+            });
+        }
+        let pp = dir.join(PARAMS_FILE);
+        let mut r = codec::Reader::new(params_bytes, &pp);
+        r.magic(PARAMS_MAGIC)?;
+        let pversion = r.u32()?;
+        if pversion != FORMAT_VERSION {
+            return Err(CheckpointError::BadFormat {
+                file: pp,
+                detail: format!(
+                    "format version {pversion}, this build reads \
+                     {FORMAT_VERSION}"
+                ),
+            });
+        }
+        let encoder = r.arrays()?;
+        let params = r.arrays()?;
+        r.expect_end()?;
+        Ok(TrainState {
+            app,
+            kind,
+            layers,
+            fingerprint,
+            seed,
+            lr,
+            batch,
+            stage,
+            epochs_done,
+            samples_seen,
+            n_samples,
+            rng,
+            order,
+            loss_curve,
+            encoder,
+            params,
+        })
+    }
+}
+
+// Borrow helper: `r.to_index(r.u64()?, …)` double-borrows the reader;
+// route the mutable read through a free function instead.
+fn r_u64(r: &mut codec::Reader<'_>) -> Result<u64, CheckpointError> {
+    r.u64()
+}
+
+/// Save `state` as an atomically committed checkpoint directory under
+/// `dir` (named [`TrainState::dir_name`]); returns the final path.
+pub fn save(
+    dir: &Path,
+    state: &TrainState,
+) -> Result<PathBuf, CheckpointError> {
+    let state_bytes = state.encode_state();
+    let params_bytes = state.encode_params();
+    manifest::commit(
+        dir,
+        &state.dir_name(),
+        &state.app,
+        state.stage,
+        state.epochs_done,
+        &[
+            (STATE_FILE, state_bytes.as_slice()),
+            (PARAMS_FILE, params_bytes.as_slice()),
+        ],
+    )
+}
+
+/// Load and integrity-check one checkpoint directory. Verifies the
+/// manifest checksums before decoding; all failures are typed.
+pub fn load(ckpt_dir: &Path) -> Result<TrainState, CheckpointError> {
+    let files = manifest::read_verified(ckpt_dir)?;
+    let find = |name: &str| {
+        files
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, b)| b.as_slice())
+            .ok_or_else(|| CheckpointError::Missing {
+                path: ckpt_dir.join(name),
+            })
+    };
+    let state_bytes = find(STATE_FILE)?;
+    let params_bytes = find(PARAMS_FILE)?;
+    TrainState::decode(state_bytes, params_bytes, ckpt_dir)
+}
+
+/// Most recent complete checkpoint under `dir` (highest stage, then
+/// epoch — the [`TrainState::dir_name`] encoding makes that a string
+/// max), or `None` when the directory holds none. Staging leftovers
+/// (`.tmp-…`) and directories without a manifest are ignored — they
+/// are crashes, not checkpoints.
+pub fn latest(dir: &Path) -> Result<Option<PathBuf>, CheckpointError> {
+    let entries = match fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(err) if err.kind() == std::io::ErrorKind::NotFound => {
+            return Ok(None)
+        }
+        Err(err) => return Err(CheckpointError::io(dir.to_path_buf(), err)),
+    };
+    let mut best: Option<(String, PathBuf)> = None;
+    for entry in entries {
+        let entry =
+            entry.map_err(|err| CheckpointError::io(dir.to_path_buf(), err))?;
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if !name.starts_with("ckpt-") {
+            continue;
+        }
+        let path = entry.path();
+        if !path.join(manifest::MANIFEST_FILE).is_file() {
+            continue; // incomplete (crashed mid-commit)
+        }
+        let newer = match &best {
+            None => true,
+            Some((b, _)) => name > *b,
+        };
+        if newer {
+            best = Some((name, path));
+        }
+    }
+    Ok(best.map(|(_, p)| p))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::init_conductances;
+
+    fn scratch(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "restream-ckpt-mod-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    fn sample_state(epoch: usize) -> TrainState {
+        let net = apps::network("iris_ae").unwrap();
+        let mut s = TrainState::fresh(net, 7, 0.5, 1);
+        s.stage = 0;
+        s.epochs_done = epoch;
+        s.samples_seen = 6 * epoch;
+        s.n_samples = 6;
+        s.rng = [1, 2, 3, 4];
+        s.order = vec![3, 1, 0, 2, 5, 4];
+        s.loss_curve = (0..epoch).map(|e| 0.5 / (e + 1) as f32).collect();
+        s.params = init_conductances(net.layers, 7);
+        s
+    }
+
+    #[test]
+    fn save_load_roundtrips_bit_exact() {
+        let dir = scratch("roundtrip");
+        let state = sample_state(2);
+        let path = save(&dir, &state).unwrap();
+        assert!(path.ends_with("ckpt-s000-e000002"));
+        let back = load(&path).unwrap();
+        assert_eq!(back, state);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn latest_picks_highest_stage_then_epoch() {
+        let dir = scratch("latest");
+        assert!(latest(&dir).unwrap().is_none());
+        save(&dir, &sample_state(1)).unwrap();
+        save(&dir, &sample_state(3)).unwrap();
+        let mut staged = sample_state(2);
+        staged.stage = 1;
+        save(&dir, &staged).unwrap();
+        // an incomplete dir (no manifest) must be ignored
+        fs::create_dir_all(dir.join("ckpt-s009-e000009")).unwrap();
+        let best = latest(&dir).unwrap().unwrap();
+        assert!(best.ends_with("ckpt-s001-e000002"), "{best:?}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn verify_matches_rejects_foreign_apps_and_builds() {
+        let net = apps::network("iris_ae").unwrap();
+        let other = apps::network("iris_class").unwrap();
+        let state = sample_state(1);
+        state.verify_matches(net).unwrap();
+        assert!(matches!(
+            state.verify_matches(other),
+            Err(CheckpointError::AppMismatch { .. })
+        ));
+        let mut poisoned = sample_state(1);
+        poisoned.fingerprint ^= 1;
+        assert!(matches!(
+            poisoned.verify_matches(net),
+            Err(CheckpointError::FingerprintMismatch { .. })
+        ));
+        let mut wrong_layers = sample_state(1);
+        wrong_layers.layers = vec![4, 3, 4];
+        assert!(matches!(
+            wrong_layers.verify_matches(net),
+            Err(CheckpointError::StateMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn fingerprint_is_stable_within_a_build() {
+        assert_eq!(hwspec_fingerprint(), hwspec_fingerprint());
+        assert_ne!(hwspec_fingerprint(), 0);
+    }
+
+    #[test]
+    fn errors_render_their_diagnosis() {
+        let e = CheckpointError::ChecksumMismatch {
+            file: PathBuf::from("params.bin"),
+            expected: 0xAB,
+            got: 0xCD,
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("checksum"), "{msg}");
+        assert!(msg.contains("00000000000000ab"), "{msg}");
+        let e = CheckpointError::FingerprintMismatch {
+            expected: 1,
+            found: 2,
+        };
+        assert!(e.to_string().contains("fingerprint"));
+    }
+}

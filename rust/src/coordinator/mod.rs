@@ -56,11 +56,13 @@ pub use pool::{
     default_workers, ExecReport, ShardPlan, ShardTiming, WorkerPool,
 };
 
+use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use crate::checkpoint::{self, CheckpointError, TrainState};
 use crate::config::{apps, AppKind, Network, SystemConfig};
 use crate::mapper;
 use crate::runtime::{ArrayF32, Backend, FwdMode, KmeansStep, NativeBackend};
@@ -91,6 +93,170 @@ pub struct TrainReport {
     /// run, indexed by shard (= reduction) position; empty on the
     /// sequential path. The training twin of [`ExecReport::busy_s`].
     pub shard_busy_s: Vec<f64>,
+    /// Gradient shards that had to be reassigned to surviving workers
+    /// after a worker death, summed over the run (0 in healthy
+    /// operation — see the [`pool`] worker-failure recovery contract).
+    pub recovered_shards: usize,
+}
+
+/// Position of a training run at an epoch boundary: everything the
+/// epoch loops carry from one epoch to the next. Persisted inside a
+/// [`TrainState`] checkpoint and restored by the `*_checkpointed`
+/// entry points, which is what makes a resumed run **bit-identical**
+/// to an uninterrupted one — the restored cursor replays the exact RNG
+/// stream position and sample order the interrupted run would have
+/// continued with.
+#[derive(Clone, Debug)]
+pub struct TrainCursor {
+    /// DR pipeline stage (0 for single-stage apps).
+    pub stage: usize,
+    /// Completed epochs within the current stage.
+    pub epochs_done: usize,
+    /// Samples consumed so far (current stage).
+    pub samples_seen: usize,
+    /// Mean per-sample loss of each completed epoch (current stage).
+    pub loss_curve: Vec<f32>,
+    /// The epoch shuffler, parked exactly where the last completed
+    /// epoch left it.
+    pub rng: Rng,
+    /// Current sample-order permutation (shuffled in place at the top
+    /// of every epoch).
+    pub order: Vec<usize>,
+}
+
+impl TrainCursor {
+    /// Cursor at the very start of training: identity order, the
+    /// seed's canonical shuffler stream (`seed ^ 0x0BDE`, shared by
+    /// the sequential and mini-batch paths).
+    pub fn fresh(n_samples: usize, seed: u64) -> TrainCursor {
+        TrainCursor {
+            stage: 0,
+            epochs_done: 0,
+            samples_seen: 0,
+            loss_curve: Vec::new(),
+            rng: Rng::seeded(seed ^ 0x0BDE),
+            order: (0..n_samples).collect(),
+        }
+    }
+
+    /// Cursor at the position a checkpoint recorded.
+    pub fn from_state(state: &TrainState) -> TrainCursor {
+        TrainCursor {
+            stage: state.stage,
+            epochs_done: state.epochs_done,
+            samples_seen: state.samples_seen,
+            loss_curve: state.loss_curve.clone(),
+            rng: Rng::from_state(state.rng),
+            order: state.order.clone(),
+        }
+    }
+}
+
+/// Per-epoch callback of the training loop, invoked after every
+/// completed epoch with the updated cursor and the current parameters.
+/// Returning `Ok(false)` halts training gracefully at this epoch
+/// boundary (the checkpointed entry points use this to honour
+/// [`CheckpointOpts::stop_after`] — and tests use it to simulate a
+/// preemption at an exact epoch).
+pub type EpochHook<'a> =
+    dyn FnMut(&TrainCursor, &[ArrayF32]) -> Result<bool> + 'a;
+
+/// Checkpoint policy of a `*_checkpointed` training run.
+#[derive(Clone, Debug)]
+pub struct CheckpointOpts {
+    /// Directory the checkpoints commit under (created on demand).
+    pub dir: PathBuf,
+    /// Save every N completed epochs (0 is treated as 1). A checkpoint
+    /// is additionally always written at the final epoch and at a
+    /// graceful halt, so no completed work is ever lost.
+    pub every: usize,
+    /// Resume from the most recent complete checkpoint under `dir`
+    /// when one exists (fresh start otherwise). The checkpoint must
+    /// match the requested app, hardware fingerprint and
+    /// hyper-parameters — mismatches are typed errors, and the engine
+    /// performs no training before they surface.
+    pub resume: bool,
+    /// Halt gracefully after this many epochs have run *in this call*
+    /// (counted across DR stages). The preemption knob: tests use it
+    /// to cut a run at an exact epoch and resume it later.
+    pub stop_after: Option<usize>,
+}
+
+impl CheckpointOpts {
+    /// Checkpoint into `dir` every epoch, no resume, no early halt.
+    pub fn new(dir: impl Into<PathBuf>) -> CheckpointOpts {
+        CheckpointOpts {
+            dir: dir.into(),
+            every: 1,
+            resume: false,
+            stop_after: None,
+        }
+    }
+}
+
+/// Package the current training position as a persistable [`TrainState`].
+fn snapshot(
+    net: &Network,
+    seed: u64,
+    lr: f32,
+    batch: usize,
+    cursor: &TrainCursor,
+    encoder: &[ArrayF32],
+    params: &[ArrayF32],
+) -> TrainState {
+    let mut s = TrainState::fresh(net, seed, lr, batch);
+    s.stage = cursor.stage;
+    s.epochs_done = cursor.epochs_done;
+    s.samples_seen = cursor.samples_seen;
+    s.n_samples = cursor.order.len();
+    s.rng = cursor.rng.state();
+    s.order = cursor.order.clone();
+    s.loss_curve = cursor.loss_curve.clone();
+    s.encoder = encoder.to_vec();
+    s.params = params.to_vec();
+    s
+}
+
+/// Check a loaded checkpoint against the run it is asked to resume:
+/// identity ([`TrainState::verify_matches`]) plus every hyper-parameter
+/// that feeds the deterministic replay. All failures are typed and
+/// fire before any training state is touched.
+fn validate_resume(
+    state: &TrainState,
+    net: &Network,
+    n_samples: usize,
+    seed: u64,
+    lr: f32,
+    batch: usize,
+) -> Result<(), CheckpointError> {
+    state.verify_matches(net)?;
+    let mismatch =
+        |detail: String| CheckpointError::StateMismatch { detail };
+    if state.seed != seed {
+        return Err(mismatch(format!(
+            "checkpoint was trained with seed {}, this run asks for {seed}",
+            state.seed
+        )));
+    }
+    if state.lr.to_bits() != lr.to_bits() {
+        return Err(mismatch(format!(
+            "checkpoint was trained at lr {}, this run asks for {lr}",
+            state.lr
+        )));
+    }
+    if state.batch != batch.max(1) {
+        return Err(mismatch(format!(
+            "checkpoint was trained at batch {}, this run asks for {batch}",
+            state.batch
+        )));
+    }
+    if state.n_samples != n_samples {
+        return Err(mismatch(format!(
+            "checkpoint covers {} samples, this dataset has {n_samples}",
+            state.n_samples
+        )));
+    }
+    Ok(())
 }
 
 /// The streaming coordinator.
@@ -202,6 +368,7 @@ impl Engine {
             workers: self.pool.workers(),
             wall_s: t0.elapsed().as_secs_f64(),
             shards,
+            recovered_shards: self.pool.recovered_last_run(),
         };
         self.record(report.clone());
         (outs, report)
@@ -290,20 +457,190 @@ impl Engine {
         seed: u64,
         batch: usize,
     ) -> Result<(Vec<ArrayF32>, TrainReport)> {
+        self.train_impl(net, xs, &targets, epochs, lr, seed, batch, None)
+    }
+
+    /// [`Engine::train_with`] under a checkpoint policy: snapshots of
+    /// the full training state commit atomically under `opts.dir` every
+    /// [`CheckpointOpts::every`] epochs (and at the final or halt
+    /// epoch), and `opts.resume` restarts from the most recent complete
+    /// checkpoint instead of epoch 0. Because the restored cursor
+    /// replays the exact RNG stream position and sample order, the
+    /// resumed run's final conductances and loss curve are
+    /// **bit-identical** to the uninterrupted run's — for every
+    /// registered app, at any worker count and batch size
+    /// (`tests/checkpoint_determinism.rs` pins all of it). The returned
+    /// report spans the whole training history (resumed epochs
+    /// included), exactly as the uninterrupted run would report it.
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_checkpointed(
+        &self,
+        net: &Network,
+        xs: &[Vec<f32>],
+        targets: impl Fn(usize) -> Vec<f32>,
+        epochs: usize,
+        lr: f32,
+        seed: u64,
+        batch: usize,
+        opts: &CheckpointOpts,
+    ) -> Result<(Vec<ArrayF32>, TrainReport)> {
+        self.train_impl(
+            net, xs, &targets, epochs, lr, seed, batch, Some(opts),
+        )
+    }
+
+    /// Shared body of [`Engine::train_with`] /
+    /// [`Engine::train_checkpointed`]: one code path, so the
+    /// checkpointed variant cannot drift from the plain one.
+    #[allow(clippy::too_many_arguments)]
+    fn train_impl(
+        &self,
+        net: &Network,
+        xs: &[Vec<f32>],
+        targets: &impl Fn(usize) -> Vec<f32>,
+        epochs: usize,
+        lr: f32,
+        seed: u64,
+        batch: usize,
+        opts: Option<&CheckpointOpts>,
+    ) -> Result<(Vec<ArrayF32>, TrainReport)> {
+        let batch = batch.max(1);
+        let resumed = match opts {
+            Some(o) if o.resume => {
+                let state =
+                    self.load_resume(net, xs.len(), seed, lr, batch,
+                                     &o.dir)?;
+                if let Some(s) = &state {
+                    if s.stage != 0 {
+                        return Err(CheckpointError::StateMismatch {
+                            detail: format!(
+                                "checkpoint sits in DR stage {}, but {} \
+                                 trains in a single stage",
+                                s.stage, net.name
+                            ),
+                        }
+                        .into());
+                    }
+                }
+                state
+            }
+            _ => None,
+        };
+        let (mut cursor, params) = match resumed {
+            Some(state) => {
+                let cursor = TrainCursor::from_state(&state);
+                (cursor, state.params)
+            }
+            None => (
+                TrainCursor::fresh(xs.len(), seed),
+                init_conductances(net.layers, seed),
+            ),
+        };
         let graph = net.train_artifact();
         let chunk_graph =
             format!("{}_trainchunk_c{}", net.name, apps::TRAIN_CHUNK);
         let grad_graph = net.grad_artifact();
-        let params = init_conductances(net.layers, seed);
+        let mut ran = 0usize;
+        let mut hook: Box<EpochHook<'_>> = match opts {
+            Some(o) => {
+                let dir = o.dir.clone();
+                let every = o.every.max(1);
+                let stop_after = o.stop_after;
+                Box::new(
+                    move |cursor: &TrainCursor,
+                          params: &[ArrayF32]|
+                          -> Result<bool> {
+                        ran += 1;
+                        let halting =
+                            stop_after.is_some_and(|n| ran >= n);
+                        let done = cursor.epochs_done >= epochs;
+                        if halting
+                            || done
+                            || cursor.epochs_done % every == 0
+                        {
+                            let state = snapshot(
+                                net, seed, lr, batch, cursor, &[], params,
+                            );
+                            checkpoint::save(&dir, &state)?;
+                        }
+                        Ok(!halting)
+                    },
+                )
+            }
+            None => Box::new(|_, _| Ok(true)),
+        };
         self.train_loop(
-            &graph, &chunk_graph, &grad_graph, params, xs, &targets,
-            epochs, lr, seed, batch,
+            &graph, &chunk_graph, &grad_graph, params, xs, targets,
+            epochs, lr, batch, &mut cursor, &mut hook,
         )
+    }
+
+    /// Load-and-validate the resume source: the most recent complete
+    /// checkpoint under `dir`, or `None` for a fresh start when the
+    /// directory holds none yet.
+    fn load_resume(
+        &self,
+        net: &Network,
+        n_samples: usize,
+        seed: u64,
+        lr: f32,
+        batch: usize,
+        dir: &Path,
+    ) -> Result<Option<TrainState>> {
+        let Some(path) = checkpoint::latest(dir)? else {
+            return Ok(None);
+        };
+        let state = checkpoint::load(&path)?;
+        validate_resume(&state, net, n_samples, seed, lr, batch)?;
+        Ok(Some(state))
+    }
+
+    /// Write `state` as an atomically committed checkpoint under `dir`;
+    /// returns the checkpoint's final path. Thin engine-level wrapper
+    /// over [`checkpoint::save`] — the `*_checkpointed` entry points
+    /// call it per epoch, and the CLI uses it for the final snapshot.
+    pub fn save_checkpoint(
+        &self,
+        dir: &Path,
+        state: &TrainState,
+    ) -> Result<PathBuf, CheckpointError> {
+        checkpoint::save(dir, state)
+    }
+
+    /// Load (and integrity-check) the most recent complete checkpoint
+    /// under `dir`. Every failure — missing directory, truncated file,
+    /// checksum mismatch, foreign app or build — is a typed
+    /// [`CheckpointError`], and the engine itself is never mutated:
+    /// restoring happens only by handing the returned state to a
+    /// `*_checkpointed` entry point, so a failed load leaves the engine
+    /// exactly as it was.
+    pub fn resume_from(
+        &self,
+        dir: &Path,
+    ) -> Result<TrainState, CheckpointError> {
+        let path = checkpoint::latest(dir)?.ok_or_else(|| {
+            CheckpointError::Missing { path: dir.to_path_buf() }
+        })?;
+        checkpoint::load(&path)
+    }
+
+    /// Arm a one-shot simulated worker failure on the engine's pool:
+    /// during the next sharded operation, the worker picking up shard
+    /// `shard` dies and the pool recovers by reassigning the shard (see
+    /// [`WorkerPool::inject_failure`]). Test-only surface.
+    #[cfg(any(test, feature = "faultinject"))]
+    pub fn inject_worker_failure(&self, shard: usize) {
+        self.pool.inject_failure(shard);
     }
 
     /// The generic training loop: dispatches between the sequential
     /// per-sample path (`batch <= 1`, untouched stochastic-BP
-    /// semantics) and the data-parallel mini-batch path.
+    /// semantics) and the data-parallel mini-batch path. `cursor`
+    /// carries the epoch position (possibly restored from a
+    /// checkpoint); the loop trains until `cursor.epochs_done` reaches
+    /// `epochs` or `hook` requests a halt. The returned report spans
+    /// the cursor's whole history, not just the epochs this call ran.
+    #[allow(clippy::too_many_arguments)]
     fn train_loop(
         &self,
         graph: &str,
@@ -314,11 +651,19 @@ impl Engine {
         targets: &impl Fn(usize) -> Vec<f32>,
         epochs: usize,
         lr: f32,
-        seed: u64,
         batch: usize,
+        cursor: &mut TrainCursor,
+        hook: &mut EpochHook<'_>,
     ) -> Result<(Vec<ArrayF32>, TrainReport)> {
         let start = std::time::Instant::now();
         let batch = batch.max(1);
+        if cursor.order.len() != xs.len() {
+            return Err(anyhow!(
+                "training cursor covers {} samples, dataset has {}",
+                cursor.order.len(),
+                xs.len()
+            ));
+        }
         let mut report = TrainReport {
             batch,
             workers: self.pool.workers(),
@@ -327,14 +672,17 @@ impl Engine {
         let params = if batch == 1 {
             self.train_epochs_sequential(
                 graph, chunk_graph, params, xs, targets, epochs, lr,
-                seed, &mut report,
+                cursor, hook,
             )?
         } else {
             self.train_epochs_minibatch(
-                grad_graph, params, xs, targets, epochs, lr, seed, batch,
-                &mut report,
+                grad_graph, params, xs, targets, epochs, lr, batch,
+                cursor, &mut report, hook,
             )?
         };
+        report.epochs = cursor.epochs_done;
+        report.samples_seen = cursor.samples_seen;
+        report.loss_curve = cursor.loss_curve.clone();
         report.wall_s = start.elapsed().as_secs_f64();
         Ok((params, report))
     }
@@ -348,6 +696,12 @@ impl Engine {
     /// the epoch tail falls back to single steps — for the PJRT backend
     /// this amortises the host/device boundary K-fold (EXPERIMENTS.md
     /// §Perf), for the native backend it batches dispatch.
+    ///
+    /// Epochs run from `cursor.epochs_done` up to `epochs`; the cursor
+    /// advances at every epoch boundary and `hook` can halt the loop
+    /// there (chunk buffers always drain within an epoch, so an epoch
+    /// boundary is a clean checkpoint cut).
+    #[allow(clippy::too_many_arguments)]
     fn train_epochs_sequential(
         &self,
         graph: &str,
@@ -357,22 +711,20 @@ impl Engine {
         targets: &impl Fn(usize) -> Vec<f32>,
         epochs: usize,
         lr: f32,
-        seed: u64,
-        report: &mut TrainReport,
+        cursor: &mut TrainCursor,
+        hook: &mut EpochHook<'_>,
     ) -> Result<Vec<ArrayF32>> {
         let chunk_k = self.backend.chunk_size(chunk_graph);
         let dims = xs.first().map_or(0, Vec::len);
         let t_dim = if xs.is_empty() { 0 } else { targets(0).len() };
-        let mut order: Vec<usize> = (0..xs.len()).collect();
-        let mut rng = Rng::seeded(seed ^ 0x0BDE);
-        for _epoch in 0..epochs {
-            rng.shuffle(&mut order);
+        while cursor.epochs_done < epochs {
+            cursor.rng.shuffle(&mut cursor.order);
             let mut epoch_loss = 0.0f32;
             let mut pulled = 0usize;
             // chunk accumulation buffers (flushed at chunk_k samples)
             let mut buf_i: Vec<usize> = Vec::with_capacity(chunk_k);
             let mut buf_x: Vec<f32> = Vec::with_capacity(chunk_k * dims);
-            stream::run(xs, &order, |i, x| {
+            stream::run(xs, &cursor.order, |i, x| {
                 pulled += 1;
                 if chunk_k > 1 {
                     buf_i.push(i);
@@ -427,9 +779,12 @@ impl Engine {
                 params = next;
                 epoch_loss += loss;
             }
-            report.samples_seen += pulled;
-            report.loss_curve.push(epoch_loss / pulled.max(1) as f32);
-            report.epochs += 1;
+            cursor.samples_seen += pulled;
+            cursor.loss_curve.push(epoch_loss / pulled.max(1) as f32);
+            cursor.epochs_done += 1;
+            if !hook(cursor, &params)? {
+                break;
+            }
         }
         Ok(params)
     }
@@ -438,6 +793,7 @@ impl Engine {
     /// bounded input buffer into mini-batch accumulation buffers
     /// (mirroring the chunk path), and every full — or tail-short —
     /// mini-batch runs one sharded gradient step.
+    #[allow(clippy::too_many_arguments)]
     fn train_epochs_minibatch(
         &self,
         grad_graph: &str,
@@ -446,9 +802,10 @@ impl Engine {
         targets: &impl Fn(usize) -> Vec<f32>,
         epochs: usize,
         lr: f32,
-        seed: u64,
         batch: usize,
+        cursor: &mut TrainCursor,
         report: &mut TrainReport,
+        hook: &mut EpochHook<'_>,
     ) -> Result<Vec<ArrayF32>> {
         let dims = xs.first().map_or(0, Vec::len);
         let t_dim = if xs.is_empty() { 0 } else { targets(0).len() };
@@ -487,18 +844,17 @@ impl Engine {
                 ));
             }
         }
-        let mut order: Vec<usize> = (0..xs.len()).collect();
-        // Same generator stream as the sequential path: the epoch
-        // sample order is a function of the seed alone — never of the
-        // batch size or the worker count.
-        let mut rng = Rng::seeded(seed ^ 0x0BDE);
-        for _epoch in 0..epochs {
-            rng.shuffle(&mut order);
+        // Same generator stream as the sequential path (the cursor's
+        // rng is seeded `seed ^ 0x0BDE` by `TrainCursor::fresh`): the
+        // epoch sample order is a function of the seed stream alone —
+        // never of the batch size or the worker count.
+        while cursor.epochs_done < epochs {
+            cursor.rng.shuffle(&mut cursor.order);
             let mut epoch_loss = 0.0f32;
             let mut pulled = 0usize;
             let mut buf_i: Vec<usize> = Vec::with_capacity(batch);
             let mut buf_x: Vec<f32> = Vec::with_capacity(batch * dims);
-            stream::run(xs, &order, |i, x| {
+            stream::run(xs, &cursor.order, |i, x| {
                 pulled += 1;
                 buf_i.push(i);
                 buf_x.extend_from_slice(x);
@@ -518,9 +874,12 @@ impl Engine {
                     dims, t_dim, lr, report,
                 )?;
             }
-            report.samples_seen += pulled;
-            report.loss_curve.push(epoch_loss / pulled.max(1) as f32);
-            report.epochs += 1;
+            cursor.samples_seen += pulled;
+            cursor.loss_curve.push(epoch_loss / pulled.max(1) as f32);
+            cursor.epochs_done += 1;
+            if !hook(cursor, &params)? {
+                break;
+            }
         }
         Ok(params)
     }
@@ -613,6 +972,7 @@ impl Engine {
         )?;
         report.apply_wall_s += t0.elapsed().as_secs_f64();
         report.grad_wall_s += exec.wall_s;
+        report.recovered_shards += exec.recovered_shards.len();
         for s in &exec.shards {
             if report.shard_busy_s.len() <= s.shard {
                 report.shard_busy_s.resize(s.shard + 1, 0.0);
@@ -637,13 +997,110 @@ impl Engine {
         seed: u64,
         batch: usize,
     ) -> Result<(Vec<ArrayF32>, Vec<TrainReport>)> {
+        self.train_dr_impl(net, xs, epochs_per_stage, lr, seed, batch,
+                           None)
+    }
+
+    /// [`Engine::train_dr`] under a checkpoint policy — the DR sibling
+    /// of [`Engine::train_checkpointed`]. A checkpoint records the
+    /// pipeline stage, the completed stages' encoder conductances and
+    /// the in-flight stage's full cursor; resuming re-encodes the
+    /// dataset through the stored encoder stack (the exact
+    /// `params::encode_layer` math the uninterrupted pipeline ran) and
+    /// continues the interrupted stage mid-flight, so the final encoder
+    /// stack is **bit-identical** to an uninterrupted run. On a
+    /// graceful halt ([`CheckpointOpts::stop_after`]) the returned
+    /// encoder stack covers completed stages only; stage reports cover
+    /// the stages this call entered.
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_dr_checkpointed(
+        &self,
+        net: &Network,
+        xs: &[Vec<f32>],
+        epochs_per_stage: usize,
+        lr: f32,
+        seed: u64,
+        batch: usize,
+        opts: &CheckpointOpts,
+    ) -> Result<(Vec<ArrayF32>, Vec<TrainReport>)> {
+        self.train_dr_impl(
+            net, xs, epochs_per_stage, lr, seed, batch, Some(opts),
+        )
+    }
+
+    /// Shared body of [`Engine::train_dr`] /
+    /// [`Engine::train_dr_checkpointed`].
+    #[allow(clippy::too_many_arguments)]
+    fn train_dr_impl(
+        &self,
+        net: &Network,
+        xs: &[Vec<f32>],
+        epochs_per_stage: usize,
+        lr: f32,
+        seed: u64,
+        batch: usize,
+        opts: Option<&CheckpointOpts>,
+    ) -> Result<(Vec<ArrayF32>, Vec<TrainReport>)> {
         if net.kind != AppKind::DimReduction {
             return Err(anyhow!("{} is not a DR app", net.name));
         }
-        let mut encoder_params: Vec<ArrayF32> = Vec::new();
-        let mut reports = Vec::new();
+        let stages = net.dr_stages().len();
+        let resumed = match opts {
+            Some(o) if o.resume => {
+                let state =
+                    self.load_resume(net, xs.len(), seed, lr,
+                                     batch.max(1), &o.dir)?;
+                if let Some(s) = &state {
+                    if s.stage >= stages {
+                        return Err(CheckpointError::StateMismatch {
+                            detail: format!(
+                                "checkpoint sits in stage {} but {} has \
+                                 only {stages} stages",
+                                s.stage, net.name
+                            ),
+                        }
+                        .into());
+                    }
+                    if s.encoder.len() != 2 * s.stage {
+                        return Err(CheckpointError::StateMismatch {
+                            detail: format!(
+                                "checkpoint carries {} encoder arrays \
+                                 for stage {} (want {})",
+                                s.encoder.len(),
+                                s.stage,
+                                2 * s.stage
+                            ),
+                        }
+                        .into());
+                    }
+                }
+                state
+            }
+            _ => None,
+        };
+        let start_stage = resumed.as_ref().map_or(0, |s| s.stage);
+        let mut encoder_params: Vec<ArrayF32> = resumed
+            .as_ref()
+            .map_or_else(Vec::new, |s| s.encoder.clone());
+        // Rebuild the in-flight representation by re-encoding the raw
+        // dataset through the stored encoder stack — deterministic
+        // ideal-crossbar math, identical to the re-encodes the
+        // uninterrupted pipeline performed stage by stage.
         let mut current: Vec<Vec<f32>> = xs.to_vec();
+        for pair in encoder_params.chunks(2) {
+            current = current
+                .iter()
+                .map(|x| params::encode_layer(x, &pair[0], &pair[1]))
+                .collect();
+        }
+        let mut restored =
+            resumed.map(|s| (TrainCursor::from_state(&s), s.params));
+        let mut reports = Vec::new();
+        let mut ran = 0usize;
         for (s, (n_in, n_hid)) in net.dr_stages().iter().enumerate() {
+            if s < start_stage {
+                continue;
+            }
             let graph = net.stage_artifact(s);
             let chunk_graph = format!(
                 "{}_stage{}_trainchunk_c{}",
@@ -652,11 +1109,56 @@ impl Engine {
                 apps::TRAIN_CHUNK
             );
             let grad_graph = net.stage_grad_artifact(s);
-            let stage_params =
-                init_conductances(&[*n_in, *n_hid, *n_in], seed + s as u64);
+            let (mut cursor, stage_params) = match restored.take() {
+                Some(r) => r,
+                None => {
+                    let mut c =
+                        TrainCursor::fresh(current.len(), seed + s as u64);
+                    c.stage = s;
+                    (
+                        c,
+                        init_conductances(
+                            &[*n_in, *n_hid, *n_in],
+                            seed + s as u64,
+                        ),
+                    )
+                }
+            };
             let targets = {
                 let cur = current.clone();
                 move |i: usize| cur[i].clone()
+            };
+            let mut hook: Box<EpochHook<'_>> = match opts {
+                Some(o) => {
+                    let dir = o.dir.clone();
+                    let every = o.every.max(1);
+                    let stop_after = o.stop_after;
+                    let ran = &mut ran;
+                    let encoder = encoder_params.clone();
+                    Box::new(
+                        move |cursor: &TrainCursor,
+                              params: &[ArrayF32]|
+                              -> Result<bool> {
+                            *ran += 1;
+                            let halting =
+                                stop_after.is_some_and(|n| *ran >= n);
+                            let done =
+                                cursor.epochs_done >= epochs_per_stage;
+                            if halting
+                                || done
+                                || cursor.epochs_done % every == 0
+                            {
+                                let state = snapshot(
+                                    net, seed, lr, batch, cursor,
+                                    &encoder, params,
+                                );
+                                checkpoint::save(&dir, &state)?;
+                            }
+                            Ok(!halting)
+                        },
+                    )
+                }
+                None => Box::new(|_, _| Ok(true)),
             };
             let (trained, report) = self.train_loop(
                 &graph,
@@ -667,9 +1169,18 @@ impl Engine {
                 &targets,
                 epochs_per_stage,
                 lr,
-                seed + s as u64,
                 batch,
+                &mut cursor,
+                &mut hook,
             )?;
+            drop(hook);
+            reports.push(report);
+            if cursor.epochs_done < epochs_per_stage {
+                // graceful halt mid-stage: the checkpoint written at
+                // the halt epoch carries the resume point; the
+                // incomplete stage contributes no encoder
+                break;
+            }
             // keep the encoder half; re-encode through it (bit-compatible
             // ideal-crossbar math) for the next stage
             let (gp, gn) = (&trained[0], &trained[1]);
@@ -678,7 +1189,6 @@ impl Engine {
                 .map(|x| params::encode_layer(x, gp, gn))
                 .collect();
             encoder_params.extend_from_slice(&trained[..2]);
-            reports.push(report);
         }
         Ok((encoder_params, reports))
     }

@@ -42,6 +42,24 @@
 //! nested submission would need may all be blocked on it); the engine's
 //! operations never do.
 //!
+//! # Worker-failure recovery
+//!
+//! A worker thread that dies mid-operation (simulated by
+//! [`WorkerPool::inject_failure`], available under
+//! `cfg(any(test, feature = "faultinject"))`) takes its current shard
+//! down with it. The pool detects the death through the ack channel —
+//! every submitted job sends exactly one ack, `Done` after computing or
+//! `Died(shard)` when the failure fires — and **resubmits the dead
+//! worker's shard** to the surviving workers. The recovered shard runs
+//! the identical closure over the identical bounds, and the caller's
+//! left-to-right fold consumes slots in shard order regardless of which
+//! worker filled them, so a run with a killed worker produces results
+//! **bit-identical** to an undisturbed run (`tests/fault_recovery.rs`
+//! pins this through full training runs). Reassigned shard indices are
+//! reported through [`WorkerPool::recovered_last_run`] and flow into
+//! [`ExecReport::recovered_shards`]. Recovery needs a surviving worker,
+//! so fault injection requires a pool of at least two threads.
+//!
 //! The serving layer ([`crate::serve`]) sits directly on these sharded
 //! operations: every micro-batch it coalesces dispatches through
 //! [`Engine::infer`](super::Engine::infer), so serving inherits this
@@ -49,7 +67,7 @@
 //! result independent of the batch it lands in.
 
 use std::panic::{self, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 
@@ -132,6 +150,9 @@ pub struct ExecReport {
     pub wall_s: f64,
     /// Per-shard timings, in shard (= reduction) order.
     pub shards: Vec<ShardTiming>,
+    /// Shards that were reassigned to surviving workers after a worker
+    /// death this run (empty in healthy operation).
+    pub recovered_shards: Vec<usize>,
 }
 
 impl ExecReport {
@@ -142,7 +163,23 @@ impl ExecReport {
     }
 }
 
-type Job = Box<dyn FnOnce() + Send + 'static>;
+/// What a job tells its worker thread after running: keep serving the
+/// queue, or exit (the thread *is* the simulated hardware failure).
+enum JobOutcome {
+    Continue,
+    Exit,
+}
+
+/// One ack per submitted job back to the coordinator thread.
+enum Ack {
+    /// The job computed and stored its result.
+    Done,
+    /// The worker died before computing shard `.0`; the coordinator
+    /// must reassign it.
+    Died(usize),
+}
+
+type Job = Box<dyn FnOnce() -> JobOutcome + Send + 'static>;
 
 /// A fixed pool of worker threads executing indexed jobs.
 ///
@@ -157,6 +194,14 @@ pub struct WorkerPool {
     /// `mpsc::Sender`'s `Sync`-ness (stabilised later than our MSRV).
     tx: Option<Mutex<mpsc::Sender<Job>>>,
     handles: Vec<thread::JoinHandle<()>>,
+    /// One-shot fault plan: the shard index whose worker the next run
+    /// kills ([`WorkerPool::inject_failure`]). Armed only by the fault
+    /// hook; always `None` in production.
+    fault: Mutex<Option<usize>>,
+    /// Shard indices reassigned during the most recent run.
+    recovered: Mutex<Vec<usize>>,
+    /// Worker threads that have exited on a simulated failure.
+    lost: Arc<AtomicUsize>,
 }
 
 impl WorkerPool {
@@ -164,14 +209,23 @@ impl WorkerPool {
     /// inline execution, no threads).
     pub fn new(workers: usize) -> WorkerPool {
         let workers = workers.max(1);
+        let lost = Arc::new(AtomicUsize::new(0));
         if workers == 1 {
-            return WorkerPool { workers: 1, tx: None, handles: Vec::new() };
+            return WorkerPool {
+                workers: 1,
+                tx: None,
+                handles: Vec::new(),
+                fault: Mutex::new(None),
+                recovered: Mutex::new(Vec::new()),
+                lost,
+            };
         }
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
         let mut handles = Vec::with_capacity(workers);
         for w in 0..workers {
             let rx = Arc::clone(&rx);
+            let lost = Arc::clone(&lost);
             let handle = thread::Builder::new()
                 .name(format!("restream-shard-{w}"))
                 .spawn(move || loop {
@@ -181,14 +235,28 @@ impl WorkerPool {
                     let job =
                         rx.lock().unwrap_or_else(|e| e.into_inner()).recv();
                     match job {
-                        Ok(job) => job(),
+                        Ok(job) => {
+                            if let JobOutcome::Exit = job() {
+                                // simulated hardware failure: this
+                                // worker leaves the pool for good
+                                lost.fetch_add(1, Ordering::SeqCst);
+                                break;
+                            }
+                        }
                         Err(_) => break,
                     }
                 })
                 .expect("spawning pool worker thread");
             handles.push(handle);
         }
-        WorkerPool { workers, tx: Some(Mutex::new(tx)), handles }
+        WorkerPool {
+            workers,
+            tx: Some(Mutex::new(tx)),
+            handles,
+            fault: Mutex::new(None),
+            recovered: Mutex::new(Vec::new()),
+            lost,
+        }
     }
 
     /// Pool size (1 = inline sequential execution).
@@ -196,28 +264,80 @@ impl WorkerPool {
         self.workers
     }
 
+    /// Arm the one-shot fault plan: during the **next** [`WorkerPool::run`],
+    /// the worker that picks up shard `shard` dies before computing it
+    /// (its thread exits — the software analogue of a mesh core going
+    /// dark), and the pool must recover by reassigning the shard.
+    /// Requires a threaded pool (≥ 2 workers): recovery needs a
+    /// survivor. A `shard` beyond the next run's job count disarms
+    /// harmlessly.
+    #[cfg(any(test, feature = "faultinject"))]
+    pub fn inject_failure(&self, shard: usize) {
+        assert!(
+            self.workers >= 2,
+            "inject_failure needs a threaded pool (>= 2 workers): a \
+             1-worker pool runs shards inline on the caller, and a dead \
+             sole worker has no survivor to recover on"
+        );
+        *self.fault.lock().unwrap_or_else(|e| e.into_inner()) = Some(shard);
+    }
+
+    /// Shard indices that were reassigned to surviving workers during
+    /// the most recent [`WorkerPool::run`] (empty in healthy operation).
+    pub fn recovered_last_run(&self) -> Vec<usize> {
+        self.recovered
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .clone()
+    }
+
+    /// Number of worker threads that have died on a simulated failure
+    /// over the pool's lifetime.
+    pub fn lost_workers(&self) -> usize {
+        self.lost.load(Ordering::SeqCst)
+    }
+
     /// Run `jobs` indexed jobs, returning their results **in job
     /// order** (job order, not completion order, so callers' fold is
     /// deterministic). Blocks until every job has finished; if any job
     /// panicked, panics after all of them are done.
+    ///
+    /// If the one-shot fault plan is armed
+    /// ([`WorkerPool::inject_failure`]), the victim shard's worker dies
+    /// before computing and the shard is resubmitted to the survivors —
+    /// its slot is filled by the reassigned execution, so the returned
+    /// vector (and any fold over it) is indistinguishable from a
+    /// healthy run.
     pub fn run<T, F>(&self, jobs: usize, f: F) -> Vec<T>
     where
         T: Send,
         F: Fn(usize) -> T + Sync,
     {
+        self.recovered
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .clear();
         if jobs == 0 {
             return Vec::new();
         }
+        // Take the fault plan exactly once per run: a resubmitted shard
+        // must not be re-killed, or recovery could never terminate.
+        let armed = self
+            .fault
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .take()
+            .filter(|&s| s < jobs);
         let Some(tx) = &self.tx else {
             return (0..jobs).map(&f).collect();
         };
-        if jobs == 1 {
+        if jobs == 1 && armed.is_none() {
             return vec![f(0)];
         }
         let slots: Vec<Mutex<Option<T>>> =
             (0..jobs).map(|_| Mutex::new(None)).collect();
         let panicked = AtomicBool::new(false);
-        let (done_tx, done_rx) = mpsc::channel::<()>();
+        let (done_tx, done_rx) = mpsc::channel::<Ack>();
         let run_one = |i: usize| {
             match panic::catch_unwind(AssertUnwindSafe(|| f(i))) {
                 Ok(v) => {
@@ -227,35 +347,65 @@ impl WorkerPool {
                 Err(_) => panicked.store(true, Ordering::SeqCst),
             }
         };
+        let run_ref: &(dyn Fn(usize) + Sync) = &run_one;
+        // SAFETY: the only thing the lifetime erasure permits is the
+        // worker threads calling `run_one` (and through it `f` and
+        // the locals it borrows) while this stack frame is alive.
+        // The frame cannot be left before every submitted job has
+        // executed: every job — including reassigned ones — sends
+        // exactly one ack on `done_tx` (`Done` after running its
+        // catch_unwind-wrapped payload, `Died` without running it),
+        // and the loop below blocks until it has collected `jobs`
+        // `Done` acks, resubmitting on every `Died`.
+        let run_static = unsafe {
+            std::mem::transmute::<
+                &(dyn Fn(usize) + Sync),
+                &'static (dyn Fn(usize) + Sync),
+            >(run_ref)
+        };
         {
-            let run_ref: &(dyn Fn(usize) + Sync) = &run_one;
-            // SAFETY: the only thing the lifetime erasure permits is the
-            // worker threads calling `run_one` (and through it `f` and
-            // the locals it borrows) while this stack frame is alive.
-            // The frame cannot be left before every submitted job has
-            // executed: each job sends on `done_tx` after running (its
-            // payload is wrapped in catch_unwind, so the send is
-            // unconditional), and we block on exactly `jobs` acks below
-            // before returning.
-            let run_static = unsafe {
-                std::mem::transmute::<
-                    &(dyn Fn(usize) + Sync),
-                    &'static (dyn Fn(usize) + Sync),
-                >(run_ref)
-            };
             let tx = tx.lock().unwrap_or_else(|e| e.into_inner());
             for i in 0..jobs {
                 let done = done_tx.clone();
+                let kill = armed == Some(i);
                 let job: Job = Box::new(move || {
+                    if kill {
+                        // die *before* computing: the shard result is
+                        // lost with the worker, exactly as a real crash
+                        // would lose it
+                        let _ = done.send(Ack::Died(i));
+                        return JobOutcome::Exit;
+                    }
                     run_static(i);
-                    let _ = done.send(());
+                    let _ = done.send(Ack::Done);
+                    JobOutcome::Continue
                 });
                 tx.send(job).expect("worker pool hung up");
             }
         }
-        for _ in 0..jobs {
-            done_rx.recv().expect("a worker dropped a job");
+        let mut finished = 0usize;
+        let mut recovered: Vec<usize> = Vec::new();
+        while finished < jobs {
+            match done_rx.recv().expect("a worker dropped a job") {
+                Ack::Done => finished += 1,
+                Ack::Died(i) => {
+                    // reassign the dead worker's shard to the survivors
+                    recovered.push(i);
+                    let done = done_tx.clone();
+                    let job: Job = Box::new(move || {
+                        run_static(i);
+                        let _ = done.send(Ack::Done);
+                        JobOutcome::Continue
+                    });
+                    tx.lock()
+                        .unwrap_or_else(|e| e.into_inner())
+                        .send(job)
+                        .expect("worker pool hung up");
+                }
+            }
         }
+        *self.recovered.lock().unwrap_or_else(|e| e.into_inner()) =
+            recovered;
         if panicked.load(Ordering::SeqCst) {
             panic!("a worker shard panicked (original panic on stderr)");
         }
@@ -405,6 +555,59 @@ mod tests {
             }
             i
         });
+    }
+
+    #[test]
+    fn injected_failure_recovers_with_identical_results() {
+        for workers in [2usize, 4] {
+            let pool = WorkerPool::new(workers);
+            let healthy = pool.run(9, |i| i * 10);
+            assert!(pool.recovered_last_run().is_empty());
+            pool.inject_failure(3);
+            let recovered = pool.run(9, |i| i * 10);
+            assert_eq!(
+                recovered, healthy,
+                "at {workers} workers: results must not depend on the \
+                 failure"
+            );
+            assert_eq!(pool.recovered_last_run(), vec![3]);
+            assert_eq!(pool.lost_workers(), 1);
+            // the plan is one-shot: the next run is healthy again,
+            // and the report resets
+            let again = pool.run(9, |i| i * 10);
+            assert_eq!(again, healthy);
+            assert!(pool.recovered_last_run().is_empty());
+            assert_eq!(pool.lost_workers(), 1);
+        }
+    }
+
+    #[test]
+    fn failure_on_a_single_job_run_still_recovers() {
+        // jobs == 1 normally takes the inline shortcut; an armed fault
+        // must route through the pool so the death/reassignment cycle
+        // actually executes.
+        let pool = WorkerPool::new(2);
+        pool.inject_failure(0);
+        assert_eq!(pool.run(1, |i| i + 41), vec![41]);
+        assert_eq!(pool.recovered_last_run(), vec![0]);
+    }
+
+    #[test]
+    fn out_of_range_fault_plan_disarms() {
+        let pool = WorkerPool::new(2);
+        pool.inject_failure(99);
+        assert_eq!(pool.run(4, |i| i), vec![0, 1, 2, 3]);
+        assert!(pool.recovered_last_run().is_empty());
+        assert_eq!(pool.lost_workers(), 0);
+        // and the stale plan does not linger into later runs
+        assert_eq!(pool.run(200, |i| i).len(), 200);
+        assert!(pool.recovered_last_run().is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "threaded pool")]
+    fn inject_failure_rejects_inline_pools() {
+        WorkerPool::new(1).inject_failure(0);
     }
 
     #[test]

@@ -32,13 +32,21 @@
 //!   simulated 144-core mesh — placement-checked with per-app core
 //!   offsets, dispatched deficit-round-robin onto one shared pool,
 //!   overflow served via modeled reconfiguration swaps
-//!   (`restream serve --apps`).
+//!   (`restream serve --apps`). Training runs survive crashes through
+//!   the [`checkpoint`] subsystem: atomically committed, checksummed
+//!   snapshots of the full training state (`restream train
+//!   --checkpoint DIR --every N --resume`) that resume
+//!   **bit-identically**, and the worker pool recovers a worker death
+//!   mid-epoch by reassigning the dead worker's shards — also
+//!   bit-identically ([`coordinator::pool`], "Worker-failure
+//!   recovery").
 //!
 //! See `DESIGN.md` for the system inventory, the backend-selection story
 //! and the experiment index, and `EXPERIMENTS.md` for paper-vs-measured
 //! results.
 
 pub mod benchutil;
+pub mod checkpoint;
 pub mod chip;
 pub mod config;
 pub mod coordinator;

@@ -8,7 +8,7 @@
 //! restream report --vs-gpu train|recog  Figs 22-25 series
 //! restream report --occupancy all|A,B,…  multi-tenant occupancy table
 //! restream train   --app NAME [--epochs N] [--lr F] [--seed N]
-//!                  [--batch N]
+//!                  [--batch N] [--checkpoint DIR [--every N] [--resume]]
 //! restream infer   --app NAME [--seed N]
 //! restream cluster --app NAME [--epochs N]
 //! restream anomaly [--epochs N]
@@ -37,8 +37,13 @@
 //! (default) is the paper's per-sample stochastic BP, N > 1 runs
 //! data-parallel gradient accumulation over the pool with one weight
 //! update per mini-batch — also bit-identical at any `--workers` for a
-//! fixed N. The native backend needs no artifacts; `pjrt` needs the
-//! crate built with `--features pjrt` plus `make artifacts`.
+//! fixed N. `train --checkpoint DIR` commits a verified snapshot of
+//! the full training state every `--every N` epochs (default 1) and
+//! `--resume` restarts from the latest complete one, continuing
+//! **bit-identically** to the uninterrupted run (`restream::checkpoint`,
+//! DESIGN.md "Fault tolerance"). The native backend needs no artifacts;
+//! `pjrt` needs the crate built with `--features pjrt` plus
+//! `make artifacts`.
 
 use std::collections::HashMap;
 use std::process::ExitCode;
@@ -59,18 +64,23 @@ fn main() -> ExitCode {
     }
 }
 
-/// Parse `--key value` pairs after the subcommand.
+/// Parse `--key value` pairs after the subcommand. A flag followed by
+/// another flag (or by nothing) is a bare boolean switch and parses as
+/// `true` — `--resume` and `--resume true` are equivalent.
 fn flags(args: &[String]) -> Result<HashMap<String, String>, String> {
     let mut m = HashMap::new();
-    let mut it = args.iter();
+    let mut it = args.iter().peekable();
     while let Some(k) = it.next() {
         let key = k
             .strip_prefix("--")
             .ok_or_else(|| format!("expected --flag, got {k}"))?;
-        let v = it
-            .next()
-            .ok_or_else(|| format!("--{key} needs a value"))?;
-        m.insert(key.to_string(), v.clone());
+        let v = match it.peek() {
+            Some(next) if !next.starts_with("--") => {
+                it.next().unwrap().clone()
+            }
+            _ => "true".to_string(),
+        };
+        m.insert(key.to_string(), v);
     }
     Ok(m)
 }
@@ -165,6 +175,23 @@ fn cmd_train(f: &HashMap<String, String>) -> anyhow::Result<()> {
     // N > 1 = data-parallel gradient accumulation over the worker pool
     // (bit-identical at any --workers value for a fixed N)
     let batch: usize = get(f, "batch", 1).map_err(anyhow::Error::msg)?;
+    // checkpoint policy: --checkpoint DIR commits a verified snapshot
+    // every --every epochs; --resume restarts from the latest complete
+    // one (bit-identical to the uninterrupted run)
+    let every: usize = get(f, "every", 1).map_err(anyhow::Error::msg)?;
+    let resume: bool = get(f, "resume", false).map_err(anyhow::Error::msg)?;
+    let ckpt = match f.get("checkpoint") {
+        Some(dir) => Some(restream::coordinator::CheckpointOpts {
+            dir: dir.into(),
+            every: every.max(1),
+            resume,
+            stop_after: None,
+        }),
+        None if resume => {
+            anyhow::bail!("--resume needs --checkpoint DIR")
+        }
+        None => None,
+    };
     let net = apps::network(&app)
         .ok_or_else(|| anyhow::anyhow!("unknown app {app}"))?;
     let engine = engine_for(f)?;
@@ -175,8 +202,11 @@ fn cmd_train(f: &HashMap<String, String>) -> anyhow::Result<()> {
     use restream::config::AppKind;
     match net.kind {
         AppKind::DimReduction => {
-            let (_, reports) =
-                engine.train_dr(net, &xs, epochs, lr, seed, batch)?;
+            let (_, reports) = match &ckpt {
+                Some(opts) => engine.train_dr_checkpointed(
+                    net, &xs, epochs, lr, seed, batch, opts)?,
+                None => engine.train_dr(net, &xs, epochs, lr, seed, batch)?,
+            };
             for (s, r) in reports.iter().enumerate() {
                 println!(
                     "stage {s}: {} epochs, final loss {:.5}, {:.2}s",
@@ -189,16 +219,25 @@ fn cmd_train(f: &HashMap<String, String>) -> anyhow::Result<()> {
         }
         AppKind::Autoencoder => {
             let xs2 = xs.clone();
-            let (_, r) = engine.train_with(
-                net, &xs, move |i| xs2[i].clone(), epochs, lr, seed, batch)?;
+            let targets = move |i: usize| xs2[i].clone();
+            let (_, r) = match &ckpt {
+                Some(opts) => engine.train_checkpointed(
+                    net, &xs, targets, epochs, lr, seed, batch, opts)?,
+                None => engine.train_with(
+                    net, &xs, targets, epochs, lr, seed, batch)?,
+            };
             print_curve(&r);
             print_train_parallel(&r);
         }
         _ => {
             let outs = net.layers[net.layers.len() - 1];
-            let (params, r) = engine.train_with(
-                net, &xs, |i| train_ds.target(i, outs), epochs, lr, seed,
-                batch)?;
+            let targets = |i: usize| train_ds.target(i, outs);
+            let (params, r) = match &ckpt {
+                Some(opts) => engine.train_checkpointed(
+                    net, &xs, targets, epochs, lr, seed, batch, opts)?,
+                None => engine.train_with(
+                    net, &xs, targets, epochs, lr, seed, batch)?,
+            };
             print_curve(&r);
             print_train_parallel(&r);
             let preds = engine.classify(net, &params, &test_ds.rows())?;
@@ -220,6 +259,12 @@ fn cmd_train(f: &HashMap<String, String>) -> anyhow::Result<()> {
 /// Per-shard stats of a data-parallel training run (only informative
 /// for `--batch N > 1`).
 fn print_train_parallel(r: &restream::coordinator::TrainReport) {
+    if r.recovered_shards > 0 {
+        println!(
+            "worker recovery: {} shard(s) reassigned after worker death",
+            r.recovered_shards
+        );
+    }
     if r.batch <= 1 || r.shard_busy_s.is_empty() {
         return;
     }
@@ -574,6 +619,11 @@ fn print_usage() {
          train: --batch N (mini-batch size; 1 = per-sample stochastic BP,\n\
          N > 1 = data-parallel gradient accumulation, bit-identical at\n\
          any --workers)\n\
+         train: --checkpoint DIR [--every N] [--resume] (atomic, \
+         checksummed\n\
+         snapshots every N epochs; --resume continues bit-identically \
+         from\n\
+         the latest complete one)\n\
          serve: --app NAME --source stdin|replay --max-batch N \
          --max-wait-us N --clients N --requests N\n\
          serve --apps A,B,C: multi-tenant chip scheduler (per-app \

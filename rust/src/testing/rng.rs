@@ -21,6 +21,23 @@ impl Rng {
         Rng { s: [next(), next(), next(), next()] }
     }
 
+    /// Raw generator state, for checkpointing the stream position.
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator at an exact stream position previously read
+    /// with [`Rng::state`]. The all-zero state is a xoshiro fixed point
+    /// (it only ever emits zeros), so it is mapped to `seeded(0)` —
+    /// no legitimate checkpoint can contain it, since seeding goes
+    /// through splitmix64.
+    pub fn from_state(s: [u64; 4]) -> Self {
+        if s == [0; 4] {
+            return Rng::seeded(0);
+        }
+        Rng { s }
+    }
+
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[0]
             .wrapping_add(self.s[3])

@@ -1,0 +1,244 @@
+//! Checkpoint failure paths: every way a restore can go wrong must be
+//! a **typed** [`CheckpointError`] — never a panic, never a partially
+//! mutated engine. After any failed resume the same engine trains
+//! normally and bit-identically to a fresh one.
+
+use std::path::PathBuf;
+
+use restream::checkpoint::{self, CheckpointError};
+use restream::config::apps;
+use restream::coordinator::{CheckpointOpts, Engine};
+use restream::runtime::ArrayF32;
+use restream::testing::Rng;
+
+fn scratch(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "restream-ckpt-neg-{tag}-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn rows(rng: &mut Rng, n: usize, dims: usize) -> Vec<Vec<f32>> {
+    (0..n).map(|_| rng.vec_uniform(dims, -0.5, 0.5)).collect()
+}
+
+fn assert_params_eq(a: &[ArrayF32], b: &[ArrayF32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: param count");
+    for (l, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.data, y.data, "{what}: param {l}");
+    }
+}
+
+/// Train iris_ae for 2 epochs with checkpointing into a fresh `tag`
+/// directory; returns (dir, the checkpoint path, the dataset).
+fn make_checkpoint(tag: &str) -> (PathBuf, PathBuf, Vec<Vec<f32>>) {
+    let net = apps::network("iris_ae").unwrap();
+    let mut rng = Rng::seeded(0xBAD ^ tag.len() as u64);
+    let xs = rows(&mut rng, 8, net.layers[0]);
+    let dir = scratch(tag);
+    let xs2 = xs.clone();
+    Engine::native()
+        .train_checkpointed(net, &xs, move |i| xs2[i].clone(), 2, 0.5, 3,
+                            1, &CheckpointOpts::new(&dir))
+        .unwrap();
+    let path = checkpoint::latest(&dir).unwrap().unwrap();
+    (dir, path, xs)
+}
+
+#[test]
+fn truncated_payload_is_a_typed_error() {
+    let (dir, path, _) = make_checkpoint("trunc");
+    let bytes = std::fs::read(path.join("state.bin")).unwrap();
+    std::fs::write(path.join("state.bin"), &bytes[..bytes.len() - 9])
+        .unwrap();
+    match checkpoint::load(&path) {
+        Err(CheckpointError::Truncated { needed, got, .. }) => {
+            assert_eq!(needed, bytes.len() as u64);
+            assert_eq!(got, bytes.len() as u64 - 9);
+        }
+        other => panic!("want Truncated, got {other:?}"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn flipped_bit_is_a_checksum_mismatch_not_a_decode_attempt() {
+    let (dir, path, _) = make_checkpoint("flip");
+    let mut bytes = std::fs::read(path.join("params.bin")).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40; // same length, different content
+    std::fs::write(path.join("params.bin"), &bytes).unwrap();
+    assert!(matches!(
+        checkpoint::load(&path),
+        Err(CheckpointError::ChecksumMismatch { .. })
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn missing_directory_is_missing_not_a_panic() {
+    let dir = scratch("missing");
+    assert!(matches!(
+        Engine::native().resume_from(&dir),
+        Err(CheckpointError::Missing { .. })
+    ));
+    // a directory that exists but holds no checkpoints is also Missing
+    std::fs::create_dir_all(&dir).unwrap();
+    assert!(matches!(
+        Engine::native().resume_from(&dir),
+        Err(CheckpointError::Missing { .. })
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn foreign_app_checkpoint_is_rejected_before_training() {
+    // iris_ae checkpoint, iris_class resume: the typed mismatch must
+    // surface through the anyhow boundary with its diagnosis intact,
+    // and the engine must stay fully usable afterwards.
+    let (dir, _, _) = make_checkpoint("foreign");
+    let net = apps::network("iris_class").unwrap();
+    let mut rng = Rng::seeded(0xF0E);
+    let xs = rows(&mut rng, 8, net.layers[0]);
+    let ts: Vec<Vec<f32>> =
+        (0..8).map(|_| rng.vec_uniform(1, -0.4, 0.4)).collect();
+    let engine = Engine::native();
+    let mut opts = CheckpointOpts::new(&dir);
+    opts.resume = true;
+    let ts_a = ts.clone();
+    let err = engine
+        .train_checkpointed(net, &xs, move |i| ts_a[i].clone(), 2, 0.5,
+                            3, 1, &opts)
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("belongs to app 'iris_ae'"),
+        "diagnosis lost: {msg}"
+    );
+
+    // no partial mutation: the failed resume did not train anything —
+    // the same engine now trains bit-identically to a fresh one
+    let ts_b = ts.clone();
+    let (p_after, _) = engine
+        .train_with(net, &xs, move |i| ts_b[i].clone(), 2, 0.5, 3, 1)
+        .unwrap();
+    let ts_c = ts.clone();
+    let (p_fresh, _) = Engine::native()
+        .train_with(net, &xs, move |i| ts_c[i].clone(), 2, 0.5, 3, 1)
+        .unwrap();
+    assert_params_eq(&p_fresh, &p_after, "engine after failed resume");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fingerprint_mismatch_is_rejected() {
+    // Rewrite the checkpoint with a flipped hardware fingerprint (the
+    // writer recomputes checksums, so only the fingerprint check can
+    // object) — resuming must refuse with the typed error.
+    let (dir, path, xs) = make_checkpoint("fprint");
+    let mut state = checkpoint::load(&path).unwrap();
+    state.fingerprint ^= 0xDEAD;
+    checkpoint::save(&dir, &state).unwrap();
+
+    let net = apps::network("iris_ae").unwrap();
+    let mut opts = CheckpointOpts::new(&dir);
+    opts.resume = true;
+    let xs2 = xs.clone();
+    let err = Engine::native()
+        .train_checkpointed(net, &xs, move |i| xs2[i].clone(), 4, 0.5, 3,
+                            1, &opts)
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("fingerprint mismatch"), "{msg}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn hyperparameter_drift_is_rejected() {
+    // A checkpoint can only continue the exact run it recorded: a
+    // different seed, lr, batch or dataset size cannot replay the same
+    // stream and must be refused, not silently diverge.
+    let (dir, _, xs) = make_checkpoint("hyper");
+    let net = apps::network("iris_ae").unwrap();
+    let mut opts = CheckpointOpts::new(&dir);
+    opts.resume = true;
+
+    let cases: Vec<(&str, u64, f32, usize, usize)> = vec![
+        ("seed", 4, 0.5, 1, 8),
+        ("lr", 3, 0.25, 1, 8),
+        ("batch", 3, 0.5, 2, 8),
+        ("samples", 3, 0.5, 1, 6),
+    ];
+    for (what, seed, lr, batch, n) in cases {
+        let xs_n: Vec<Vec<f32>> = xs[..n].to_vec();
+        let xs2 = xs_n.clone();
+        let err = Engine::native()
+            .train_checkpointed(net, &xs_n, move |i| xs2[i].clone(), 4,
+                                lr, seed, batch, &opts)
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("checkpoint"),
+            "{what}: diagnosis lost: {msg}"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn garbled_manifest_and_trailing_bytes_are_bad_format() {
+    let (dir, path, _) = make_checkpoint("garble");
+    // trailing garbage after a structurally valid payload
+    let mut bytes = std::fs::read(path.join("state.bin")).unwrap();
+    bytes.extend_from_slice(b"\0\0\0\0");
+    std::fs::write(path.join("state.bin"), &bytes).unwrap();
+    // keep the manifest consistent so the decoder (not the checksum)
+    // is what objects
+    let state_fnv = checkpoint::fnv64(&bytes);
+    let manifest = std::fs::read_to_string(path.join("MANIFEST")).unwrap();
+    let fixed: String = manifest
+        .lines()
+        .map(|l| {
+            if l.starts_with("file state.bin") {
+                format!("file state.bin {} {:016x}\n", bytes.len(),
+                        state_fnv)
+            } else {
+                format!("{l}\n")
+            }
+        })
+        .collect();
+    std::fs::write(path.join("MANIFEST"), fixed).unwrap();
+    match checkpoint::load(&path) {
+        Err(CheckpointError::BadFormat { detail, .. }) => {
+            assert!(detail.contains("trailing"), "{detail}");
+        }
+        other => panic!("want BadFormat, got {other:?}"),
+    }
+
+    // a manifest with a mangled header is BadFormat too
+    std::fs::write(path.join("MANIFEST"), "restream-checkpoint v999\n")
+        .unwrap();
+    assert!(matches!(
+        checkpoint::load(&path),
+        Err(CheckpointError::BadFormat { .. })
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn staging_leftovers_are_never_resumed() {
+    // A crash mid-commit leaves a `.tmp-…` staging dir; latest() must
+    // skip it (and any ckpt dir without a manifest) rather than resume
+    // a half-written snapshot.
+    let (dir, path, _) = make_checkpoint("staging");
+    let staged = dir.join(".tmp-ckpt-s000-e000099");
+    std::fs::create_dir_all(&staged).unwrap();
+    std::fs::write(staged.join("state.bin"), b"partial").unwrap();
+    let manifestless = dir.join("ckpt-s000-e000098");
+    std::fs::create_dir_all(&manifestless).unwrap();
+    let latest = checkpoint::latest(&dir).unwrap().unwrap();
+    assert_eq!(latest, path, "latest must be the last complete commit");
+    let _ = std::fs::remove_dir_all(&dir);
+}

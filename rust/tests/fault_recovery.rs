@@ -1,0 +1,165 @@
+//! Worker-failure recovery: a worker dying mid-epoch is a pure
+//! scheduling event. The pool reassigns the dead worker's shard to a
+//! survivor, the left-to-right gradient reduction is unchanged, and the
+//! trained conductances are **bit-identical** to the healthy run —
+//! while `TrainReport::recovered_shards` records that the recovery
+//! actually happened.
+//!
+//! The failure is injected deterministically through
+//! `Engine::inject_worker_failure` (the `faultinject` feature, enabled
+//! for tests by the crate's self dev-dependency): the next sharded
+//! operation kills the worker that picks up the given shard index
+//! mid-computation.
+
+use restream::config::apps;
+use restream::coordinator::Engine;
+use restream::runtime::ArrayF32;
+use restream::testing::Rng;
+
+fn rows(rng: &mut Rng, n: usize, dims: usize) -> Vec<Vec<f32>> {
+    (0..n).map(|_| rng.vec_uniform(dims, -0.5, 0.5)).collect()
+}
+
+fn targets_for(rng: &mut Rng, n: usize, t_dim: usize) -> Vec<Vec<f32>> {
+    (0..n).map(|_| rng.vec_uniform(t_dim, -0.4, 0.4)).collect()
+}
+
+fn assert_params_eq(a: &[ArrayF32], b: &[ArrayF32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: param count");
+    for (l, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.data, y.data, "{what}: param {l}");
+    }
+}
+
+#[test]
+fn worker_death_mid_epoch_is_bit_invisible_at_2_and_4_workers() {
+    // 40 samples at batch 16 → mini-batches of 16/16/8, each gradient
+    // pass sharded into 8-sample tiles → shard 1 exists in every
+    // mini-batch. Killing its worker during the first mini-batch of
+    // epoch 1 (mid-epoch by construction) must not change a single bit
+    // of the trained conductances or the loss curve.
+    let net = apps::network("iris_class").unwrap();
+    let mut rng = Rng::seeded(0xFA11);
+    let n = 40;
+    let xs = rows(&mut rng, n, net.layers[0]);
+    let ts = targets_for(&mut rng, n, 1);
+    for &w in &[2usize, 4] {
+        let what = format!("iris_class at {w} workers");
+        let ts_h = ts.clone();
+        let (ref_params, ref_rep) = Engine::native()
+            .with_workers(w)
+            .train_with(net, &xs, move |i| ts_h[i].clone(), 2, 0.4, 9, 16)
+            .unwrap();
+        assert_eq!(
+            ref_rep.recovered_shards, 0,
+            "{what}: healthy run must report no recoveries"
+        );
+
+        let engine = Engine::native().with_workers(w);
+        engine.inject_worker_failure(1);
+        let ts_f = ts.clone();
+        let (params, rep) = engine
+            .train_with(net, &xs, move |i| ts_f[i].clone(), 2, 0.4, 9, 16)
+            .unwrap();
+        assert_params_eq(&ref_params, &params, &what);
+        assert_eq!(rep.loss_curve, ref_rep.loss_curve, "{what}");
+        assert_eq!(
+            rep.recovered_shards, 1,
+            "{what}: the one-shot failure must surface as exactly one \
+             recovered shard"
+        );
+        assert_eq!(rep.samples_seen, ref_rep.samples_seen, "{what}");
+    }
+}
+
+#[test]
+fn recovery_on_the_last_short_shard_is_bit_invisible() {
+    // kdd_ae at batch 20 shards into 8/8/4 tiles; kill the short tail
+    // shard (index 2) — reassignment of a partial tile must fold back
+    // into the identical position.
+    let net = apps::network("kdd_ae").unwrap();
+    let mut rng = Rng::seeded(0xFA12);
+    let n = 40;
+    let xs = rows(&mut rng, n, net.layers[0]);
+    let xs_h = xs.clone();
+    let (ref_params, ref_rep) = Engine::native()
+        .with_workers(4)
+        .train_with(net, &xs, move |i| xs_h[i].clone(), 2, 0.4, 3, 20)
+        .unwrap();
+
+    let engine = Engine::native().with_workers(4);
+    engine.inject_worker_failure(2);
+    let xs_f = xs.clone();
+    let (params, rep) = engine
+        .train_with(net, &xs, move |i| xs_f[i].clone(), 2, 0.4, 3, 20)
+        .unwrap();
+    assert_params_eq(&ref_params, &params, "kdd_ae tail shard");
+    assert_eq!(rep.loss_curve, ref_rep.loss_curve);
+    assert_eq!(rep.recovered_shards, 1);
+}
+
+#[test]
+fn worker_death_then_checkpoint_resume_still_bit_identical() {
+    // The two recovery mechanisms compose: a worker dies mid-epoch in
+    // the interrupted half of a checkpointed run, the run halts at the
+    // epoch boundary, and the resumed half finishes — all bit-identical
+    // to the uninterrupted healthy run.
+    use restream::coordinator::CheckpointOpts;
+    let net = apps::network("iris_ae").unwrap();
+    let mut rng = Rng::seeded(0xFA13);
+    let n = 24;
+    let xs = rows(&mut rng, n, net.layers[0]);
+    let xs_h = xs.clone();
+    let (ref_params, ref_rep) = Engine::native()
+        .with_workers(2)
+        .train_with(net, &xs, move |i| xs_h[i].clone(), 4, 0.5, 7, 8)
+        .unwrap();
+
+    let dir = std::env::temp_dir().join(format!(
+        "restream-fault-ckpt-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let engine = Engine::native().with_workers(2);
+    engine.inject_worker_failure(0);
+    let mut opts = CheckpointOpts::new(&dir);
+    opts.stop_after = Some(2);
+    let xs_a = xs.clone();
+    let (_, cut_rep) = engine
+        .train_checkpointed(net, &xs, move |i| xs_a[i].clone(), 4, 0.5,
+                            7, 8, &opts)
+        .unwrap();
+    assert_eq!(cut_rep.recovered_shards, 1);
+
+    let mut opts = CheckpointOpts::new(&dir);
+    opts.resume = true;
+    let xs_b = xs.clone();
+    let (params, rep) = engine
+        .train_checkpointed(net, &xs, move |i| xs_b[i].clone(), 4, 0.5,
+                            7, 8, &opts)
+        .unwrap();
+    assert_params_eq(&ref_params, &params, "fault + checkpoint resume");
+    assert_eq!(rep.loss_curve, ref_rep.loss_curve);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn sharded_inference_also_recovers_bit_identically() {
+    // The recovery protocol lives in the pool, not the training loop —
+    // a batched inference run over the same pool recovers the same way.
+    let net = apps::network("iris_class").unwrap();
+    let mut rng = Rng::seeded(0xFA14);
+    let xs = rows(&mut rng, 96, net.layers[0]);
+    let params = restream::coordinator::init_conductances(net.layers, 11);
+    let ref_out = Engine::native()
+        .with_workers(3)
+        .infer(net, &params, &xs)
+        .unwrap();
+
+    let engine = Engine::native().with_workers(3);
+    engine.inject_worker_failure(0);
+    let out = engine.infer(net, &params, &xs).unwrap();
+    assert_eq!(ref_out, out, "recovered inference outputs");
+    let rep = engine.last_parallel_report().unwrap();
+    assert_eq!(rep.recovered_shards, vec![0]);
+}
