@@ -3,9 +3,9 @@
 
 ARTIFACTS ?= artifacts
 
-.PHONY: build test bench bench-ckpt bench-multiapp bench-parallel \
-	bench-serving bench-train clippy doc fmt artifacts pytest \
-	cargotest-pjrt
+.PHONY: build test bench bench-ckpt bench-cluster bench-multiapp \
+	bench-parallel bench-serving bench-train clippy doc fmt artifacts \
+	pytest cargotest-pjrt
 
 build:
 	cargo build --release
@@ -36,6 +36,11 @@ bench-multiapp:
 bench-train:
 	BENCH_TRAIN_OUT=$(abspath BENCH_train.json) \
 		cargo bench --bench perf_train
+
+# Multi-chip cluster scaling: hot app replicated across the fleet.
+bench-cluster:
+	BENCH_CLUSTER_OUT=$(abspath BENCH_cluster.json) \
+		cargo bench --bench perf_cluster
 
 # Checkpoint save/restore bandwidth and recovery-time objective.
 bench-ckpt:

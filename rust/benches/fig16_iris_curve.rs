@@ -2,7 +2,7 @@
 //! Iris dataset (4-10-1 network) through the full artifact path.
 
 use restream::config::apps;
-use restream::coordinator::Engine;
+use restream::coordinator::{Engine, TrainOptions};
 use restream::{datasets, metrics};
 
 fn main() -> anyhow::Result<()> {
@@ -12,13 +12,16 @@ fn main() -> anyhow::Result<()> {
     let ds = datasets::iris(0);
     let (train, test) = ds.split(0.8, 0);
     let xs = train.rows();
-    let (params, rep) =
-        engine.train(net, &xs, |i| train.target(i, 1), 30, 1.0, 0)?;
+    let run = engine.fit(
+        net, &xs, |i| train.target(i, 1), 30, 1.0, 0,
+        &TrainOptions::new(),
+    )?;
+    let (params, rep) = (&run.params, run.last_report().unwrap());
     println!("{:>6} {:>10}", "epoch", "MSE loss");
     for (e, l) in rep.loss_curve.iter().enumerate() {
         println!("{e:>6} {l:>10.5}");
     }
-    let preds = engine.classify(net, &params, &test.rows())?;
+    let preds = engine.classify(net, params, &test.rows())?;
     let truth: Vec<usize> = test.y.iter().map(|&y| y.min(1)).collect();
     println!(
         "\nfinal loss {:.4} (from {:.4}); test accuracy {:.3}",

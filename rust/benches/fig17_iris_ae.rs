@@ -3,7 +3,7 @@
 //! scatter plot plus per-class centroids.
 
 use restream::config::apps;
-use restream::coordinator::Engine;
+use restream::coordinator::{Engine, TrainOptions};
 use restream::datasets;
 
 fn main() -> anyhow::Result<()> {
@@ -13,9 +13,11 @@ fn main() -> anyhow::Result<()> {
     let ds = datasets::iris(0);
     let xs = ds.rows();
     let xs_t = xs.clone();
-    let (params, _) =
-        engine.train(net, &xs, move |i| xs_t[i].clone(), 40, 0.8, 1)?;
-    let codes = engine.encode(net, &params, &xs)?;
+    let run = engine.fit(
+        net, &xs, move |i| xs_t[i].clone(), 40, 0.8, 1,
+        &TrainOptions::new(),
+    )?;
+    let codes = engine.encode(net, &run.params, &xs)?;
 
     // character scatter: 24x50 grid over the code range
     const W: usize = 50;

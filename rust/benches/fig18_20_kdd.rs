@@ -4,7 +4,7 @@
 //! packets).
 
 use restream::config::apps;
-use restream::coordinator::Engine;
+use restream::coordinator::{Engine, TrainOptions};
 use restream::{datasets, metrics};
 
 fn main() -> anyhow::Result<()> {
@@ -14,12 +14,15 @@ fn main() -> anyhow::Result<()> {
     let k = datasets::kdd(5292, 800, 800, 0);
     let xs = k.train.rows();
     let xs_t = xs.clone();
-    let (params, rep) =
-        engine.train(net, &xs, move |i| xs_t[i].clone(), 3, 0.8, 0)?;
+    let run = engine.fit(
+        net, &xs, move |i| xs_t[i].clone(), 3, 0.8, 0,
+        &TrainOptions::new(),
+    )?;
+    let (params, rep) = (&run.params, run.last_report().unwrap());
     println!("trained 41->15->41 AE on {} normal packets; loss {:.4} -> {:.4}",
              xs.len(), rep.loss_curve[0], rep.loss_curve.last().unwrap());
 
-    let scores = engine.anomaly_scores(net, &params, &k.test.rows())?;
+    let scores = engine.anomaly_scores(net, params, &k.test.rows())?;
     let (mut normal, mut attack) = (Vec::new(), Vec::new());
     for (s, &a) in scores.iter().zip(&k.test_attack) {
         if a { attack.push(*s) } else { normal.push(*s) }

@@ -22,7 +22,7 @@
 use restream::benchutil::{best_wall, env_usize, section};
 use restream::checkpoint::{self, TrainState};
 use restream::config::apps;
-use restream::coordinator::{init_conductances, Engine};
+use restream::coordinator::{init_conductances, Engine, TrainOptions};
 use restream::testing::Rng;
 
 fn json_report(
@@ -110,7 +110,8 @@ fn main() -> anyhow::Result<()> {
     let epoch_s = best_wall(repeats, || {
         let ts = ts.clone();
         engine
-            .train_with(net, &xs, move |i| ts[i].clone(), 1, 0.3, 7, 16)
+            .fit(net, &xs, move |i| ts[i].clone(), 1, 0.3, 7,
+                 &TrainOptions::new().batch(16))
             .unwrap();
     });
     let ratio = restore_s / epoch_s.max(1e-12);

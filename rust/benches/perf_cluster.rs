@@ -1,0 +1,185 @@
+//! §Perf: multi-chip cluster scaling — one hot app replicated across a
+//! growing fleet of chips behind the cluster router.
+//!
+//! The paper's throughput story is per chip; serving recognition
+//! traffic from millions of users takes a fleet. This bench asks the
+//! only question the cluster layer adds: **does replicating a hot app
+//! across N chips buy ~N× aggregate throughput?** For each fleet size
+//! in {1, 2, 4} it
+//!
+//! * hosts the hot app (`mnist_class`, the heaviest recognition
+//!   network) replicated fleet-wide, one single-worker engine per chip
+//!   so fleet size — not engine parallelism — is the variable;
+//! * hammers the cluster router with `--clients` closed-loop threads
+//!   (`requests` each) through `ClusterClient`'s least-loaded routing;
+//! * records aggregate req/s, the best of `$PERF_CLUSTER_REPEATS`
+//!   fresh-cluster runs.
+//!
+//! Routing is the only addition over a dedicated chip, so throughput
+//! should scale near-linearly while per-request results stay
+//! bit-identical to a dedicated server (`tests/cluster_determinism.rs`
+//! pins that; this bench only measures speed). CI's bench-smoke job
+//! runs this at reduced scale and fails when the 4-chip fleet does not
+//! reach at least 2× the 1-chip throughput.
+//!
+//! Writes the machine-readable summary to `BENCH_cluster.json`
+//! (override with `$BENCH_CLUSTER_OUT`; CI and `make bench-cluster`
+//! pin it to the repo root). Scale knobs: `$PERF_CLUSTER_REQUESTS`
+//! (per client, default 64), `$PERF_CLUSTER_CLIENTS` (default 8) and
+//! `$PERF_CLUSTER_REPEATS` (default 3).
+
+use std::time::Instant;
+
+use restream::cluster::{Cluster, ClusterApp, ClusterConfig};
+use restream::config::apps;
+use restream::coordinator::{init_conductances, Engine};
+use restream::testing::Rng;
+
+use restream::benchutil::{env_usize, section};
+
+/// The replicated hot app: the deepest recognition network keeps the
+/// chips compute-bound, so routing overhead cannot hide the scaling.
+const HOT_APP: &str = "mnist_class";
+
+/// Fleet sizes swept (the CI gate compares the last to the first).
+const FLEETS: [usize; 3] = [1, 2, 4];
+
+struct Row {
+    chips: usize,
+    rps: f64,
+    wall_s: f64,
+    routed: Vec<u64>,
+}
+
+/// Deterministic request pool shared by every fleet size.
+fn request_pool(dims: usize) -> Vec<Vec<f32>> {
+    let mut rng = Rng::seeded(0xC1057E4);
+    (0..256).map(|_| rng.vec_uniform(dims, -0.5, 0.5)).collect()
+}
+
+/// Start a fresh `chips`-wide fleet hosting the hot app replicated on
+/// every chip, drive it closed-loop, and return (wall s, routed/chip).
+fn drive_fleet(
+    chips: usize,
+    pool: &[Vec<f32>],
+    clients: usize,
+    requests: usize,
+) -> (f64, Vec<u64>) {
+    let net = apps::network(HOT_APP).unwrap().clone();
+    let params = init_conductances(net.layers, 0);
+    let cluster = Cluster::start(
+        vec![ClusterApp::new(net, params).replicated(chips)],
+        ClusterConfig { chips, ..ClusterConfig::default() },
+        |_chip| Ok(Engine::native().with_workers(1)),
+    )
+    .expect("cluster failed to start");
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let client = cluster.client(HOT_APP).unwrap();
+            let rows: Vec<Vec<f32>> = (0..requests)
+                .map(|r| pool[(c * 131 + r) % pool.len()].clone())
+                .collect();
+            std::thread::spawn(move || {
+                for x in rows {
+                    client.call(x).expect("bench request failed");
+                }
+            })
+        })
+        .collect();
+    for handle in handles {
+        handle.join().expect("bench client thread panicked");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let report = cluster.shutdown();
+    let routed = report.chips.iter().map(|c| c.routed).collect();
+    (wall, routed)
+}
+
+fn json_row(r: &Row) -> String {
+    let routed: Vec<String> =
+        r.routed.iter().map(|n| n.to_string()).collect();
+    format!(
+        "{{\"chips\": {}, \"rps\": {:.2}, \"wall_s\": {:.4}, \
+         \"routed\": [{}]}}",
+        r.chips,
+        r.rps,
+        r.wall_s,
+        routed.join(", ")
+    )
+}
+
+fn main() -> anyhow::Result<()> {
+    let requests = env_usize("PERF_CLUSTER_REQUESTS", 64).max(1);
+    let clients = env_usize("PERF_CLUSTER_CLIENTS", 8).max(1);
+    let repeats = env_usize("PERF_CLUSTER_REPEATS", 3).max(1);
+    let dims = apps::network(HOT_APP).unwrap().layers[0];
+    let pool = request_pool(dims);
+    let total = (clients * requests) as f64;
+    println!(
+        "perf_cluster: hot app {HOT_APP}, {clients} clients x \
+         {requests} requests, best of {repeats}"
+    );
+
+    section("fleet sweep (hot app replicated fleet-wide)");
+    let mut rows = Vec::new();
+    for &chips in &FLEETS {
+        let mut best_wall = f64::INFINITY;
+        let mut best_routed = Vec::new();
+        for _ in 0..repeats {
+            let (wall, routed) =
+                drive_fleet(chips, &pool, clients, requests);
+            if wall < best_wall {
+                best_wall = wall;
+                best_routed = routed;
+            }
+        }
+        let row = Row {
+            chips,
+            rps: total / best_wall.max(1e-12),
+            wall_s: best_wall,
+            routed: best_routed,
+        };
+        println!(
+            "bench cluster/chips{}  {:>9.0} req/s  wall {:.3}s  \
+             routed {:?}",
+            row.chips, row.rps, row.wall_s, row.routed
+        );
+        rows.push(row);
+    }
+
+    section("summary");
+    let base = &rows[0];
+    let top = rows.last().expect("at least one fleet size");
+    let speedup = top.rps / base.rps.max(1e-12);
+    println!(
+        "{}-chip fleet vs 1 chip: {:.2}x aggregate throughput",
+        top.chips, speedup
+    );
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str(&format!(
+        "  \"bench\": \"perf_cluster\",\n  \
+         \"hot_app\": \"{HOT_APP}\",\n  \
+         \"requests_per_client\": {requests},\n  \
+         \"clients\": {clients},\n  \
+         \"repeats\": {repeats},\n"
+    ));
+    json.push_str("  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let sep = if i + 1 < rows.len() { "," } else { "" };
+        json.push_str(&format!("    {}{sep}\n", json_row(r)));
+    }
+    json.push_str("  ],\n");
+    json.push_str(&format!(
+        "  \"rps_1chip\": {:.2},\n  \"rps_4chip\": {:.2},\n  \
+         \"speedup_4v1\": {:.4}\n",
+        base.rps, top.rps, speedup
+    ));
+    json.push_str("}\n");
+    let out_path = std::env::var("BENCH_CLUSTER_OUT")
+        .unwrap_or_else(|_| "BENCH_cluster.json".to_string());
+    std::fs::write(&out_path, json)?;
+    println!("wrote {out_path}");
+    Ok(())
+}

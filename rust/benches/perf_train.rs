@@ -20,7 +20,7 @@
 
 use restream::benchutil::{best_wall, env_usize, section};
 use restream::config::apps;
-use restream::coordinator::{Engine, TrainReport};
+use restream::coordinator::{Engine, TrainOptions, TrainReport};
 use restream::testing::Rng;
 
 const WORKER_COUNTS: [usize; 4] = [1, 2, 4, 8];
@@ -117,11 +117,11 @@ fn main() -> anyhow::Result<()> {
         let mut last_report: Option<TrainReport> = None;
         let wall = best_wall(repeats, || {
             let ts = ts.clone();
-            let (_, rep) = engine
-                .train_with(net, &xs, move |i| ts[i].clone(), 1, 0.3, 7,
-                            batch)
+            let run = engine
+                .fit(net, &xs, move |i| ts[i].clone(), 1, 0.3, 7,
+                     &TrainOptions::new().batch(batch))
                 .unwrap();
-            last_report = Some(rep);
+            last_report = run.reports.into_iter().next_back();
         });
         let samples_per_s = samples as f64 / wall.max(1e-12);
         println!(

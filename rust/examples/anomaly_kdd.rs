@@ -8,7 +8,7 @@
 //! ```
 
 use restream::config::apps;
-use restream::coordinator::Engine;
+use restream::coordinator::{Engine, TrainOptions};
 use restream::{datasets, metrics};
 
 fn bar(n: usize, scale: f64) -> String {
@@ -25,13 +25,16 @@ fn main() -> anyhow::Result<()> {
     let xs = k.train.rows();
     println!("training {} on {} normal packets", net.name, xs.len());
     let xs_t = xs.clone();
-    let (params, rep) =
-        engine.train(net, &xs, move |i| xs_t[i].clone(), 3, 0.8, 0)?;
+    let run = engine.fit(
+        net, &xs, move |i| xs_t[i].clone(), 3, 0.8, 0,
+        &TrainOptions::new(),
+    )?;
+    let rep = run.last_report().unwrap();
     for (e, l) in rep.loss_curve.iter().enumerate() {
         println!("  epoch {e}: recon loss {l:.5}");
     }
 
-    let scores = engine.anomaly_scores(net, &params, &k.test.rows())?;
+    let scores = engine.anomaly_scores(net, &run.params, &k.test.rows())?;
     let normal: Vec<f64> = scores
         .iter()
         .zip(&k.test_attack)

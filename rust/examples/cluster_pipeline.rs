@@ -10,7 +10,7 @@
 //! ```
 
 use restream::config::apps;
-use restream::coordinator::Engine;
+use restream::coordinator::{Engine, TrainOptions};
 use restream::{datasets, metrics};
 
 fn main() -> anyhow::Result<()> {
@@ -24,9 +24,13 @@ fn main() -> anyhow::Result<()> {
     // Stage-by-stage AE pre-training (chip reconfigured between stages).
     println!("layerwise pre-training {} ({} stages)…",
              dr.name, dr.layers.len() - 1);
-    // batch 1: the paper's per-sample stochastic BP (pass N > 1 for
+    // batch 1: the paper's per-sample stochastic BP (add .batch(N) for
     // data-parallel mini-batch pre-training over the worker pool)
-    let (encoder, reports) = engine.train_dr(dr, &xs, 1, 0.6, 0, 1)?;
+    let run = engine.fit(
+        dr, &xs, |_| Vec::new(), 1, 0.6, 0,
+        &TrainOptions::new().dr(),
+    )?;
+    let (encoder, reports) = (&run.params, &run.reports);
     for (s, r) in reports.iter().enumerate() {
         println!(
             "  stage {s}: loss {:.4} ({} samples, {:.1}s)",
@@ -37,7 +41,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     // Encode through the full encoder stack (the DR forward graph).
-    let codes = engine.encode(dr, &encoder, &xs)?;
+    let codes = engine.encode(dr, encoder, &xs)?;
     println!("encoded {} samples to {} dims", codes.len(), codes[0].len());
 
     // Cluster the codes on the digital clustering core model.

@@ -11,7 +11,7 @@
 //! for the XLA artifact path.
 
 use restream::config::{apps, SystemConfig};
-use restream::coordinator::Engine;
+use restream::coordinator::{Engine, TrainOptions};
 use restream::{datasets, metrics, report, sim};
 
 fn main() -> anyhow::Result<()> {
@@ -27,15 +27,18 @@ fn main() -> anyhow::Result<()> {
     //    functionally executed by the selected compute backend
     let net = apps::network("iris_class").unwrap();
     let engine = Engine::open_default()?;
-    let (params, rep) =
-        engine.train(net, &xs, |i| train.target(i, 1), 20, 1.0, 0)?;
+    let run = engine.fit(
+        net, &xs, |i| train.target(i, 1), 20, 1.0, 0,
+        &TrainOptions::new(),
+    )?;
+    let (params, rep) = (&run.params, run.last_report().unwrap());
     println!("loss curve (every 4th epoch):");
     for (e, l) in rep.loss_curve.iter().enumerate().step_by(4) {
         println!("  epoch {e:>2}: {l:.4}");
     }
 
     // 3. evaluate (binary: setosa vs rest — the net has one output)
-    let preds = engine.classify(net, &params, &test.rows())?;
+    let preds = engine.classify(net, params, &test.rows())?;
     let truth: Vec<usize> = test.y.iter().map(|&y| y.min(1)).collect();
     println!("test accuracy: {:.3}", metrics::accuracy(&preds, &truth));
 

@@ -100,7 +100,8 @@ use crate::config::{apps, Network, SystemConfig};
 use crate::coordinator::{stream, Engine};
 use crate::runtime::ArrayF32;
 use crate::serve::{
-    answer_batch, take_batch_inputs, Batcher, Client, Request, ServeStats,
+    answer_batch, take_batch_inputs, Batcher, Client, Pending, Request,
+    ServeStats, Service, StatsAccum,
 };
 
 use residency::Residency;
@@ -376,6 +377,36 @@ impl ChipScheduler {
     }
 }
 
+/// The unified serving surface (see [`crate::serve::Service`]): submit
+/// routes through the per-app [`Client`], live stats sum per-app
+/// acceptance, shutdown collapses the [`MultiServeReport`] into the
+/// interface-level counters.
+impl Service for ChipScheduler {
+    fn apps(&self) -> Vec<String> {
+        ChipScheduler::apps(self)
+    }
+
+    fn submit(&self, app: &str, x: Vec<f32>) -> Result<Pending> {
+        ChipScheduler::client(self, app)?.submit(x)
+    }
+
+    fn stats(&self) -> ServeStats {
+        ServeStats {
+            apps: self.clients.len(),
+            requests: self
+                .clients
+                .iter()
+                .map(|(_, client)| client.submitted())
+                .sum(),
+            ..ServeStats::default()
+        }
+    }
+
+    fn shutdown(self: Box<Self>) -> ServeStats {
+        ChipScheduler::shutdown(*self).stats()
+    }
+}
+
 /// The shared dispatcher: DRR-pick ready batches across apps, swap the
 /// owning app in when it is not resident (charging the modeled
 /// reconfiguration), run the batch on the shared engine and route the
@@ -391,7 +422,8 @@ fn dispatch_loop(
 ) -> MultiServeReport {
     let n = hosted.len();
     let mut drr = Drr::new(n, quantum);
-    let mut stats: Vec<ServeStats> = (0..n).map(|_| ServeStats::default()).collect();
+    let mut stats: Vec<StatsAccum> =
+        (0..n).map(|_| StatsAccum::default()).collect();
     let mut residency =
         Residency::new(budget, footprints.iter().map(|f| f.cores).collect());
     let mut swaps_in = vec![0usize; n];
@@ -604,6 +636,30 @@ mod tests {
         assert!(report.reconfig_total_s > 0.0);
         assert!(report.occupancy_pct > 0.0 && report.occupancy_pct < 100.0);
         assert!(report.aggregate_rps() > 0.0);
+    }
+
+    #[test]
+    fn serves_through_the_service_trait() {
+        let svc: Box<dyn Service> = Box::new(
+            ChipScheduler::start(
+                Engine::native(),
+                vec![host("iris_ae", 3), host("kdd_ae", 3)],
+                ChipConfig::default(),
+            )
+            .unwrap(),
+        );
+        assert_eq!(svc.apps(), vec!["iris_ae", "kdd_ae"]);
+        assert!(svc.submit("nope", vec![0.0; 4]).is_err());
+        let r = svc.call("iris_ae", vec![0.1, -0.2, 0.3, 0.0]).unwrap();
+        assert_eq!(r.out.len(), 4);
+        let r = svc.call("kdd_ae", vec![0.05; 41]).unwrap();
+        assert_eq!(r.out.len(), 41);
+        let live = svc.stats();
+        assert_eq!((live.apps, live.requests), (2, 2));
+        let done = svc.shutdown();
+        assert_eq!(done.apps, 2);
+        assert_eq!(done.requests, 2);
+        assert_eq!(done.errors, 0);
     }
 
     #[test]

@@ -75,6 +75,18 @@ impl MultiServeReport {
         }
     }
 
+    /// Collapse into the interface-level
+    /// [`ServeStats`](crate::serve::ServeStats) counters.
+    pub fn stats(&self) -> crate::serve::ServeStats {
+        crate::serve::ServeStats {
+            apps: self.apps.len(),
+            requests: self.total_requests(),
+            batches: self.total_batches(),
+            errors: self.total_errors(),
+            wall_s: self.wall_s,
+        }
+    }
+
     /// Human-readable multi-line summary (what `restream serve --apps`
     /// prints after the request streams end).
     pub fn summary(&self) -> String {
@@ -154,6 +166,10 @@ mod tests {
         assert_eq!(r.total_batches(), 20);
         assert_eq!(r.total_errors(), 0);
         assert_eq!(r.aggregate_rps(), 20.0);
+        let flat = r.stats();
+        assert_eq!(flat.apps, 2);
+        assert_eq!(flat.requests, 40);
+        assert_eq!(flat.wall_s, 2.0);
         let s = r.summary();
         assert!(s.contains("2 apps"), "{s}");
         assert!(s.contains("40 requests"), "{s}");

@@ -1,0 +1,623 @@
+//! Typed command-line parsing for the `restream` binary.
+//!
+//! The binary's subcommands used to share one ad-hoc `--key value`
+//! HashMap; this module replaces that with a small typed layer: every
+//! subcommand parses into its own option struct with defaults applied,
+//! values validated, and **unknown flags rejected** (a typo like
+//! `--epoch 9` is an error, not a silently ignored flag). `main.rs`
+//! only pattern-matches the resulting [`Command`] — no string lookups
+//! survive past [`parse`].
+//!
+//! Flag syntax is unchanged: `--key value` pairs after the subcommand,
+//! where a flag followed by another flag (or by nothing) is a bare
+//! boolean switch (`--resume` equals `--resume true`). When a flag
+//! repeats, the last value wins.
+
+use std::collections::HashMap;
+
+use crate::config::apps;
+
+/// One parsed `restream` invocation.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Command {
+    /// No subcommand: print usage and exit cleanly.
+    Usage,
+    /// `restream chip` — chip inventory and area budget.
+    Chip,
+    /// `restream report --…` — regenerate a paper table or series.
+    Report(ReportCmd),
+    /// `restream train --…` — train an app on the simulated chip.
+    Train(TrainCmd),
+    /// `restream infer --…` — forward-only throughput probe.
+    Infer(InferCmd),
+    /// `restream cluster --…` — k-means clustering (the paper's
+    /// clustering workload; unrelated to the serving [`crate::cluster`]
+    /// fleet, which `serve --chips` drives).
+    Kmeans(KmeansCmd),
+    /// `restream anomaly --…` — KDD autoencoder anomaly detection.
+    Anomaly(AnomalyCmd),
+    /// `restream serve --…` — the serving stack (single app,
+    /// multi-tenant chip, or multi-chip cluster).
+    Serve(ServeCmd),
+}
+
+/// What `restream report` should print.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ReportCmd {
+    /// `--table 2|3|4`: a paper table.
+    Table(u8),
+    /// `--vs-gpu train|recog`: the Figs 22-25 series.
+    VsGpu {
+        /// True for the training series, false for recognition.
+        train: bool,
+    },
+    /// `--occupancy all|A,B,…`: the multi-tenant occupancy table.
+    Occupancy(String),
+}
+
+/// Backend/worker-pool selection shared by every functional-math
+/// subcommand (`--backend native|pjrt`, `--workers N`). `None` defers
+/// to the environment (`$RESTREAM_BACKEND` / `$RESTREAM_WORKERS`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct EngineOpts {
+    /// `--backend`, if given.
+    pub backend: Option<String>,
+    /// `--workers`, if given.
+    pub workers: Option<usize>,
+}
+
+/// `restream train` options.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainCmd {
+    /// `--app` (default `iris_class`).
+    pub app: String,
+    /// `--epochs` (default 5).
+    pub epochs: usize,
+    /// `--lr` (default 1.0).
+    pub lr: f32,
+    /// `--seed` (default 0).
+    pub seed: u64,
+    /// `--samples` (default 512): dataset size before the 80/20 split.
+    pub samples: usize,
+    /// `--batch` (default 1): mini-batch size; 1 is the paper's
+    /// per-sample stochastic BP.
+    pub batch: usize,
+    /// `--checkpoint DIR [--every N] [--resume]`, if given.
+    pub checkpoint: Option<CheckpointCmd>,
+    /// Backend/worker selection.
+    pub engine: EngineOpts,
+}
+
+/// The checkpoint policy of a `restream train --checkpoint` run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CheckpointCmd {
+    /// `--checkpoint DIR`: the snapshot directory.
+    pub dir: String,
+    /// `--every N` (default 1, floored to 1): epochs per snapshot.
+    pub every: usize,
+    /// `--resume`: restart from the latest complete snapshot.
+    pub resume: bool,
+}
+
+/// `restream infer` options.
+#[derive(Clone, Debug, PartialEq)]
+pub struct InferCmd {
+    /// `--app` (default `iris_class`).
+    pub app: String,
+    /// `--seed` (default 0).
+    pub seed: u64,
+    /// Backend/worker selection.
+    pub engine: EngineOpts,
+}
+
+/// `restream cluster` (k-means) options.
+#[derive(Clone, Debug, PartialEq)]
+pub struct KmeansCmd {
+    /// `--app` (default `mnist_kmeans`).
+    pub app: String,
+    /// `--epochs` (default 10).
+    pub epochs: usize,
+    /// `--seed` (default 0).
+    pub seed: u64,
+    /// Backend/worker selection.
+    pub engine: EngineOpts,
+}
+
+/// `restream anomaly` options.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AnomalyCmd {
+    /// `--epochs` (default 3).
+    pub epochs: usize,
+    /// `--seed` (default 0).
+    pub seed: u64,
+    /// Backend/worker selection.
+    pub engine: EngineOpts,
+}
+
+/// Load-generation knobs shared by every serving mode.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeLoad {
+    /// `--max-batch` (default [`apps::FWD_BATCH`]).
+    pub max_batch: usize,
+    /// `--max-wait-us` (default 200).
+    pub max_wait_us: u64,
+    /// `--clients` (default 4): replay threads (per app when serving
+    /// several).
+    pub clients: usize,
+    /// `--requests` (default 256): requests per replay thread.
+    pub requests: usize,
+    /// `--seed` (default 0): parameter init and replay streams.
+    pub seed: u64,
+}
+
+/// `restream serve` — which serving stack to run.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServeCmd {
+    /// `--app NAME`: one dedicated [`Server`](crate::serve::Server).
+    Single(ServeSingleCmd),
+    /// `--apps A,B,…`: a multi-tenant chip
+    /// ([`ChipScheduler`](crate::chip::ChipScheduler)), or with
+    /// `--chips N > 1` a whole fleet ([`Cluster`](crate::cluster::Cluster)).
+    Multi(ServeMultiCmd),
+}
+
+/// Single-app serving options.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeSingleCmd {
+    /// `--app` (default `iris_class`).
+    pub app: String,
+    /// `--source stdin` (default: `replay`).
+    pub stdin: bool,
+    /// Load-generation knobs.
+    pub load: ServeLoad,
+    /// Backend/worker selection.
+    pub engine: EngineOpts,
+}
+
+/// Multi-app serving options (one chip, or a cluster of them).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeMultiCmd {
+    /// `--apps A,B,…`: the hosted app names.
+    pub apps: Vec<String>,
+    /// `--chips` (default 1): fleet size; above 1 the apps serve from a
+    /// [`Cluster`](crate::cluster::Cluster) instead of one chip.
+    pub chips: usize,
+    /// `--replicas` (default 1): serving replicas requested for every
+    /// listed app (clamped to the fleet size at placement).
+    pub replicas: usize,
+    /// Load-generation knobs.
+    pub load: ServeLoad,
+    /// Backend/worker selection (each chip builds its own engine).
+    pub engine: EngineOpts,
+}
+
+/// The `--key value` pairs of one subcommand, consumed flag by flag so
+/// that leftovers can be rejected.
+struct FlagSet {
+    flags: HashMap<String, String>,
+}
+
+impl FlagSet {
+    /// Parse `--key value` pairs. A flag followed by another flag (or
+    /// by nothing) is a bare boolean switch and stores `"true"`.
+    fn new(args: &[String]) -> Result<FlagSet, String> {
+        let mut flags = HashMap::new();
+        let mut it = args.iter().peekable();
+        while let Some(k) = it.next() {
+            let key = k
+                .strip_prefix("--")
+                .ok_or_else(|| format!("expected --flag, got {k}"))?;
+            let v = match it.peek() {
+                Some(next) if !next.starts_with("--") => {
+                    it.next().unwrap().clone()
+                }
+                _ => "true".to_string(),
+            };
+            flags.insert(key.to_string(), v);
+        }
+        Ok(FlagSet { flags })
+    }
+
+    /// Remove `--key` and return its raw value, if given.
+    fn take(&mut self, key: &str) -> Option<String> {
+        self.flags.remove(key)
+    }
+
+    /// Remove and parse `--key`, falling back to `default`.
+    fn get<T: std::str::FromStr>(
+        &mut self,
+        key: &str,
+        default: T,
+    ) -> Result<T, String> {
+        match self.flags.remove(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("bad value for --{key}: {v}")),
+        }
+    }
+
+    /// Remove and parse `--key`, `None` when absent.
+    fn opt<T: std::str::FromStr>(
+        &mut self,
+        key: &str,
+    ) -> Result<Option<T>, String> {
+        match self.flags.remove(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("bad value for --{key}: {v}")),
+        }
+    }
+
+    /// Error on any flag the subcommand did not consume.
+    fn finish(self) -> Result<(), String> {
+        if self.flags.is_empty() {
+            return Ok(());
+        }
+        let mut left: Vec<String> =
+            self.flags.keys().map(|k| format!("--{k}")).collect();
+        left.sort();
+        Err(format!(
+            "unknown flag(s) for this command: {}",
+            left.join(" ")
+        ))
+    }
+}
+
+/// Parse one invocation (the argument list after the binary name).
+/// Every subcommand rejects flags it does not define.
+pub fn parse(args: &[String]) -> Result<Command, String> {
+    let Some(cmd) = args.first() else {
+        return Ok(Command::Usage);
+    };
+    let mut f = FlagSet::new(&args[1..])?;
+    let parsed = match cmd.as_str() {
+        "chip" => Command::Chip,
+        "report" => Command::Report(parse_report(&mut f)?),
+        "train" => Command::Train(parse_train(&mut f)?),
+        "infer" => Command::Infer(InferCmd {
+            app: f.get("app", "iris_class".to_string())?,
+            seed: f.get("seed", 0)?,
+            engine: engine_opts(&mut f)?,
+        }),
+        "cluster" => Command::Kmeans(KmeansCmd {
+            app: f.get("app", "mnist_kmeans".to_string())?,
+            epochs: f.get("epochs", 10)?,
+            seed: f.get("seed", 0)?,
+            engine: engine_opts(&mut f)?,
+        }),
+        "anomaly" => Command::Anomaly(AnomalyCmd {
+            epochs: f.get("epochs", 3)?,
+            seed: f.get("seed", 0)?,
+            engine: engine_opts(&mut f)?,
+        }),
+        "serve" => Command::Serve(parse_serve(&mut f)?),
+        other => return Err(format!("unknown command {other}")),
+    };
+    f.finish()?;
+    Ok(parsed)
+}
+
+fn engine_opts(f: &mut FlagSet) -> Result<EngineOpts, String> {
+    Ok(EngineOpts { backend: f.take("backend"), workers: f.opt("workers")? })
+}
+
+fn parse_report(f: &mut FlagSet) -> Result<ReportCmd, String> {
+    // Precedence mirrors the old parser: --table, then --vs-gpu, then
+    // --occupancy.
+    if let Some(t) = f.take("table") {
+        return match t.as_str() {
+            "2" => Ok(ReportCmd::Table(2)),
+            "3" => Ok(ReportCmd::Table(3)),
+            "4" => Ok(ReportCmd::Table(4)),
+            other => Err(format!("unknown table {other}")),
+        };
+    }
+    if let Some(which) = f.take("vs-gpu") {
+        return match which.as_str() {
+            "train" => Ok(ReportCmd::VsGpu { train: true }),
+            "recog" => Ok(ReportCmd::VsGpu { train: false }),
+            other => {
+                Err(format!("--vs-gpu must be train or recog, got {other}"))
+            }
+        };
+    }
+    if let Some(spec) = f.take("occupancy") {
+        return Ok(ReportCmd::Occupancy(spec));
+    }
+    Err("report needs --table N, --vs-gpu train|recog or \
+         --occupancy all|app,app,…"
+        .to_string())
+}
+
+fn parse_train(f: &mut FlagSet) -> Result<TrainCmd, String> {
+    let every: usize = f.get("every", 1)?;
+    let resume: bool = f.get("resume", false)?;
+    let checkpoint = match f.take("checkpoint") {
+        Some(dir) => {
+            Some(CheckpointCmd { dir, every: every.max(1), resume })
+        }
+        None if resume => {
+            return Err("--resume needs --checkpoint DIR".to_string())
+        }
+        None => None,
+    };
+    Ok(TrainCmd {
+        app: f.get("app", "iris_class".to_string())?,
+        epochs: f.get("epochs", 5)?,
+        lr: f.get("lr", 1.0)?,
+        seed: f.get("seed", 0)?,
+        samples: f.get("samples", 512)?,
+        batch: f.get("batch", 1)?,
+        checkpoint,
+        engine: engine_opts(f)?,
+    })
+}
+
+fn serve_load(f: &mut FlagSet) -> Result<ServeLoad, String> {
+    Ok(ServeLoad {
+        max_batch: f.get("max-batch", apps::FWD_BATCH)?,
+        max_wait_us: f.get("max-wait-us", 200)?,
+        clients: f.get("clients", 4)?,
+        requests: f.get("requests", 256)?,
+        seed: f.get("seed", 0)?,
+    })
+}
+
+fn parse_serve(f: &mut FlagSet) -> Result<ServeCmd, String> {
+    if let Some(list) = f.take("apps") {
+        let apps_list: Vec<String> = list
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(str::to_string)
+            .collect();
+        if apps_list.is_empty() {
+            return Err("--apps needs a comma-separated app list".to_string());
+        }
+        if f.take("app").is_some() {
+            return Err("pass --app NAME or --apps A,B,…, not both"
+                .to_string());
+        }
+        if f.take("source").is_some() {
+            return Err("--source only applies to single-app serving \
+                        (--app NAME)"
+                .to_string());
+        }
+        let chips: usize = f.get("chips", 1)?;
+        if chips == 0 {
+            return Err("--chips must be at least 1".to_string());
+        }
+        let replicas: usize = f.get("replicas", 1)?;
+        if replicas == 0 {
+            return Err("--replicas must be at least 1".to_string());
+        }
+        return Ok(ServeCmd::Multi(ServeMultiCmd {
+            apps: apps_list,
+            chips,
+            replicas,
+            load: serve_load(f)?,
+            engine: engine_opts(f)?,
+        }));
+    }
+    for flag in ["chips", "replicas"] {
+        if f.take(flag).is_some() {
+            return Err(format!(
+                "--{flag} needs --apps A,B,… (multi-app serving)"
+            ));
+        }
+    }
+    let stdin = match f.get("source", "replay".to_string())?.as_str() {
+        "stdin" => true,
+        "replay" => false,
+        other => {
+            return Err(format!(
+                "--source must be stdin or replay, got {other}"
+            ))
+        }
+    };
+    Ok(ServeCmd::Single(ServeSingleCmd {
+        app: f.get("app", "iris_class".to_string())?,
+        stdin,
+        load: serve_load(f)?,
+        engine: engine_opts(f)?,
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(raw: &[&str]) -> Vec<String> {
+        raw.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn no_arguments_ask_for_usage() {
+        assert_eq!(parse(&[]).unwrap(), Command::Usage);
+    }
+
+    #[test]
+    fn unknown_commands_and_flags_are_rejected() {
+        let err = parse(&args(&["frobnicate"])).unwrap_err();
+        assert!(err.contains("unknown command frobnicate"), "{err}");
+        assert_eq!(parse(&args(&["chip"])).unwrap(), Command::Chip);
+        let err = parse(&args(&["chip", "--nope", "1"])).unwrap_err();
+        assert!(err.contains("unknown flag"), "{err}");
+        assert!(err.contains("--nope"), "{err}");
+        // a typo'd train flag no longer silently falls back to defaults
+        let err = parse(&args(&["train", "--epoch", "9"])).unwrap_err();
+        assert!(err.contains("--epoch"), "{err}");
+        // and a value without its --flag is malformed
+        let err = parse(&args(&["train", "epochs"])).unwrap_err();
+        assert!(err.contains("expected --flag"), "{err}");
+    }
+
+    #[test]
+    fn report_variants_parse_and_validate() {
+        let t = parse(&args(&["report", "--table", "3"])).unwrap();
+        assert_eq!(t, Command::Report(ReportCmd::Table(3)));
+        let err = parse(&args(&["report", "--table", "9"])).unwrap_err();
+        assert!(err.contains("unknown table 9"), "{err}");
+        let v = parse(&args(&["report", "--vs-gpu", "train"])).unwrap();
+        assert_eq!(v, Command::Report(ReportCmd::VsGpu { train: true }));
+        let v = parse(&args(&["report", "--vs-gpu", "recog"])).unwrap();
+        assert_eq!(v, Command::Report(ReportCmd::VsGpu { train: false }));
+        let err = parse(&args(&["report", "--vs-gpu", "x"])).unwrap_err();
+        assert!(err.contains("train or recog"), "{err}");
+        let o = parse(&args(&["report", "--occupancy", "all"])).unwrap();
+        assert_eq!(
+            o,
+            Command::Report(ReportCmd::Occupancy("all".to_string()))
+        );
+        let err = parse(&args(&["report"])).unwrap_err();
+        assert!(err.contains("report needs"), "{err}");
+    }
+
+    #[test]
+    fn train_applies_defaults_and_checkpoint_flags() {
+        let Command::Train(t) = parse(&args(&["train"])).unwrap() else {
+            panic!("expected a train command")
+        };
+        assert_eq!(t.app, "iris_class");
+        assert_eq!((t.epochs, t.samples, t.batch), (5, 512, 1));
+        assert_eq!(t.lr, 1.0);
+        assert_eq!(t.checkpoint, None);
+        assert_eq!(t.engine, EngineOpts::default());
+        let Command::Train(t) = parse(&args(&[
+            "train", "--app", "kdd_ae", "--batch", "16", "--checkpoint",
+            "/tmp/ck", "--every", "0", "--resume", "--backend", "native",
+            "--workers", "4",
+        ]))
+        .unwrap() else {
+            panic!("expected a train command")
+        };
+        assert_eq!(t.app, "kdd_ae");
+        assert_eq!(t.batch, 16);
+        assert_eq!(
+            t.checkpoint,
+            Some(CheckpointCmd {
+                dir: "/tmp/ck".to_string(),
+                every: 1, // floored
+                resume: true,
+            })
+        );
+        assert_eq!(
+            t.engine,
+            EngineOpts {
+                backend: Some("native".to_string()),
+                workers: Some(4),
+            }
+        );
+    }
+
+    #[test]
+    fn resume_needs_a_checkpoint_dir() {
+        let err = parse(&args(&["train", "--resume"])).unwrap_err();
+        assert!(err.contains("--resume needs --checkpoint"), "{err}");
+    }
+
+    #[test]
+    fn bad_values_name_the_flag() {
+        let err = parse(&args(&["train", "--epochs", "x"])).unwrap_err();
+        assert!(err.contains("bad value for --epochs: x"), "{err}");
+        let err = parse(&args(&["infer", "--workers", "-1"])).unwrap_err();
+        assert!(err.contains("bad value for --workers"), "{err}");
+    }
+
+    #[test]
+    fn serve_single_defaults_to_replay() {
+        let Command::Serve(ServeCmd::Single(s)) =
+            parse(&args(&["serve"])).unwrap()
+        else {
+            panic!("expected single-app serving")
+        };
+        assert_eq!(s.app, "iris_class");
+        assert!(!s.stdin);
+        assert_eq!(s.load.max_batch, apps::FWD_BATCH);
+        assert_eq!(
+            (s.load.max_wait_us, s.load.clients, s.load.requests),
+            (200, 4, 256)
+        );
+        let Command::Serve(ServeCmd::Single(s)) =
+            parse(&args(&["serve", "--source", "stdin"])).unwrap()
+        else {
+            panic!("expected single-app serving")
+        };
+        assert!(s.stdin);
+        let err =
+            parse(&args(&["serve", "--source", "carrier-pigeon"]))
+                .unwrap_err();
+        assert!(err.contains("stdin or replay"), "{err}");
+    }
+
+    #[test]
+    fn serve_multi_parses_the_fleet_shape() {
+        let Command::Serve(ServeCmd::Multi(m)) = parse(&args(&[
+            "serve", "--apps", "iris_ae, kdd_ae,", "--chips", "4",
+            "--replicas", "2", "--clients", "8",
+        ]))
+        .unwrap() else {
+            panic!("expected multi-app serving")
+        };
+        assert_eq!(m.apps, vec!["iris_ae", "kdd_ae"]);
+        assert_eq!((m.chips, m.replicas), (4, 2));
+        assert_eq!(m.load.clients, 8);
+        // one chip and one replica by default
+        let Command::Serve(ServeCmd::Multi(m)) =
+            parse(&args(&["serve", "--apps", "iris_ae"])).unwrap()
+        else {
+            panic!("expected multi-app serving")
+        };
+        assert_eq!((m.chips, m.replicas), (1, 1));
+    }
+
+    #[test]
+    fn fleet_flags_are_validated() {
+        let err = parse(&args(&["serve", "--chips", "2"])).unwrap_err();
+        assert!(err.contains("--chips needs --apps"), "{err}");
+        let err =
+            parse(&args(&["serve", "--app", "x", "--replicas", "2"]))
+                .unwrap_err();
+        assert!(err.contains("--replicas needs --apps"), "{err}");
+        let err = parse(&args(&[
+            "serve", "--apps", "a,b", "--chips", "0",
+        ]))
+        .unwrap_err();
+        assert!(err.contains("--chips must be at least 1"), "{err}");
+        let err = parse(&args(&[
+            "serve", "--apps", "a", "--app", "b",
+        ]))
+        .unwrap_err();
+        assert!(err.contains("not both"), "{err}");
+        let err = parse(&args(&[
+            "serve", "--apps", "a", "--source", "stdin",
+        ]))
+        .unwrap_err();
+        assert!(err.contains("single-app"), "{err}");
+        let err = parse(&args(&["serve", "--apps", ","])).unwrap_err();
+        assert!(err.contains("comma-separated"), "{err}");
+    }
+
+    #[test]
+    fn bare_flags_parse_as_boolean_switches() {
+        // --resume directly followed by another flag means `true`
+        let Command::Train(t) = parse(&args(&[
+            "train", "--resume", "--checkpoint", "/tmp/ck",
+        ]))
+        .unwrap() else {
+            panic!("expected a train command")
+        };
+        assert!(t.checkpoint.unwrap().resume);
+        // and the last occurrence of a repeated flag wins
+        let Command::Train(t) =
+            parse(&args(&["train", "--epochs", "2", "--epochs", "7"]))
+                .unwrap()
+        else {
+            panic!("expected a train command")
+        };
+        assert_eq!(t.epochs, 7);
+    }
+}

@@ -1,0 +1,584 @@
+//! Multi-chip cluster: one serving front end routing app requests
+//! across a fleet of 144-core chips.
+//!
+//! The paper's efficiency claims are **per chip**; serving recognition
+//! traffic from millions of users takes a fleet — the same jump the
+//! TPU paper (Jouppi et al., arXiv:1704.04760) makes from accelerator
+//! microarchitecture to in-datacenter serving, and the composition the
+//! streaming-multicore follow-up (arXiv:1606.04609) frames these chips
+//! for. This module is that front end:
+//!
+//! 1. **Placement** — apps land on chips by rendezvous hashing with
+//!    capacity-aware spillover ([`plan_placement`]): stable (the same
+//!    app set always places the same way), balanced (hash-spread), and
+//!    budget-respecting (a full chip spills the app to its
+//!    next-preferred chip). Each occupied chip runs its own
+//!    [`ChipScheduler`] — per-chip health/occupancy/latency accounting
+//!    is the chip layer's [`MultiServeReport`], surfaced per chip in
+//!    the [`ClusterReport`].
+//! 2. **Replication** — a hot app may ask for `n` replicas
+//!    ([`ClusterApp::replicated`]); it lands on `n` distinct chips and
+//!    the router picks the **least-loaded** replica per request
+//!    (in-flight request count, chip index as the tie-break), so one
+//!    app's throughput can exceed a single chip's.
+//! 3. **Routing** — [`ClusterClient::submit`] is the only hot-path
+//!    addition: pick a replica, bump its in-flight counter, delegate to
+//!    the chip's bounded ingress. The counter drops when the request's
+//!    [`Pending`] receipt settles, so backpressure and load tracking
+//!    ride the existing reply path.
+//! 4. **Accounting** — shutdown folds each chip's report plus its
+//!    routed-request share priced at the Table IV per-sample
+//!    recognition energy ([`crate::sim::serving_energy_j`]) into a
+//!    [`ClusterReport`].
+//!
+//! # Determinism contract
+//!
+//! A request's result is **bit-identical regardless of which chip
+//! served it**. Every replica serves the same `(network, params)`
+//! through the same [`Engine::infer`] path, which is bit-identical at
+//! any worker count, any batching, and any co-residency (PRs 2, 3, 5);
+//! routing chooses *where* a sample runs, never *what* it computes.
+//! `rust/tests/cluster_determinism.rs` pins results against a
+//! dedicated single-app [`Server`](crate::serve::Server) across fleet
+//! sizes {1, 2, 4} and client counts, plus placement stability and
+//! chip-full spillover.
+//!
+//! # Example
+//!
+//! ```
+//! use restream::cluster::{Cluster, ClusterApp, ClusterConfig};
+//! use restream::config::apps;
+//! use restream::coordinator::{init_conductances, Engine};
+//!
+//! let host = |name: &str| {
+//!     let net = apps::network(name).unwrap().clone();
+//!     let params = init_conductances(net.layers, 0);
+//!     ClusterApp::new(net, params)
+//! };
+//! let cluster = Cluster::start(
+//!     vec![host("iris_ae"), host("kdd_ae")],
+//!     ClusterConfig { chips: 2, ..ClusterConfig::default() },
+//!     |_chip| Ok(Engine::native()),
+//! )
+//! .unwrap();
+//! let out = cluster
+//!     .client("iris_ae")
+//!     .unwrap()
+//!     .call(vec![0.1, -0.2, 0.3, 0.0])
+//!     .unwrap();
+//! assert_eq!(out.out.len(), 4); // iris_ae reconstruction
+//! let report = cluster.shutdown();
+//! assert_eq!(report.total_requests(), 1);
+//! ```
+
+mod placement;
+mod report;
+
+pub use placement::{
+    plan_placement, preference, AppDemand, AppPlacement, Placement,
+};
+pub use report::{ClusterChipReport, ClusterReport};
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::chip::{
+    footprint, ChipApp, ChipConfig, ChipScheduler, MultiServeReport,
+};
+use crate::coordinator::Engine;
+use crate::serve::{Client, Pending, Response, ServeStats, Service};
+use crate::sim;
+
+/// One application hosted by a [`Cluster`]: the chip-level
+/// [`ChipApp`] plus how many chips should hold a serving replica.
+#[derive(Clone)]
+pub struct ClusterApp {
+    /// The served network and its parameters.
+    pub app: ChipApp,
+    /// Requested replica count (clamped to `1..=chips` at placement).
+    pub replicas: usize,
+}
+
+impl ClusterApp {
+    /// Host `net`/`params` with a single replica.
+    pub fn new(
+        net: crate::config::Network,
+        params: Vec<crate::runtime::ArrayF32>,
+    ) -> ClusterApp {
+        ClusterApp { app: ChipApp { net, params }, replicas: 1 }
+    }
+
+    /// Ask for `n` replicas (a hot app that should exceed one chip's
+    /// throughput).
+    pub fn replicated(mut self, n: usize) -> ClusterApp {
+        self.replicas = n;
+        self
+    }
+}
+
+/// Tuning knobs of a [`Cluster`].
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Fleet size (default 1 — a cluster of one chip behaves exactly
+    /// like a standalone [`ChipScheduler`]).
+    pub chips: usize,
+    /// Per-chip configuration, applied to every chip in the fleet.
+    pub chip: ChipConfig,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig { chips: 1, chip: ChipConfig::default() }
+    }
+}
+
+/// Shared per-chip load counters the router and every
+/// [`ClusterClient`] clone read and update.
+struct ClusterLoad {
+    /// Requests submitted to the chip and not yet settled (their
+    /// [`Pending`] receipt still outstanding).
+    in_flight: Vec<AtomicUsize>,
+    /// Requests ever routed to the chip.
+    routed: Vec<AtomicU64>,
+}
+
+impl ClusterLoad {
+    fn new(chips: usize) -> ClusterLoad {
+        ClusterLoad {
+            in_flight: (0..chips).map(|_| AtomicUsize::new(0)).collect(),
+            routed: (0..chips).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+}
+
+/// Drop-guard parked inside a routed request's [`Pending`] receipt:
+/// the chip's in-flight count drops exactly when the request settles
+/// (answered, failed, or abandoned).
+struct InFlightToken {
+    load: Arc<ClusterLoad>,
+    chip: usize,
+}
+
+impl Drop for InFlightToken {
+    fn drop(&mut self) {
+        self.load.in_flight[self.chip].fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// Routing handle for one app: picks the least-loaded replica per
+/// request and delegates to that chip's bounded ingress. Cheap to
+/// clone; clones share the load counters and the per-chip queues.
+#[derive(Clone)]
+pub struct ClusterClient {
+    app: String,
+    replicas: Vec<(usize, Client)>,
+    load: Arc<ClusterLoad>,
+}
+
+impl ClusterClient {
+    /// Route one sample to the least-loaded replica (in-flight count,
+    /// chip index as tie-break) and return its [`Pending`] receipt;
+    /// blocks while that chip's bounded ingress queue is full.
+    pub fn submit(&self, x: Vec<f32>) -> Result<Pending> {
+        let (chip, client) = self
+            .replicas
+            .iter()
+            .min_by_key(|(chip, _)| {
+                (self.load.in_flight[*chip].load(Ordering::Acquire), *chip)
+            })
+            .expect("a placed app has at least one replica");
+        self.load.in_flight[*chip].fetch_add(1, Ordering::AcqRel);
+        match client.submit(x) {
+            Ok(pending) => {
+                self.load.routed[*chip].fetch_add(1, Ordering::Relaxed);
+                Ok(pending.with_guard(Box::new(InFlightToken {
+                    load: Arc::clone(&self.load),
+                    chip: *chip,
+                })))
+            }
+            Err(e) => {
+                self.load.in_flight[*chip].fetch_sub(1, Ordering::AcqRel);
+                Err(e)
+            }
+        }
+    }
+
+    /// Submit and block for the response — one closed-loop request.
+    pub fn call(&self, x: Vec<f32>) -> Result<Response> {
+        self.submit(x)?.wait()
+    }
+
+    /// The app this handle routes for.
+    pub fn app(&self) -> &str {
+        &self.app
+    }
+
+    /// Chips holding a replica of this app, in preference order.
+    pub fn chips(&self) -> Vec<usize> {
+        self.replicas.iter().map(|(chip, _)| *chip).collect()
+    }
+
+    /// Requests accepted so far across every replica (feeds the live
+    /// [`Service::stats`]).
+    fn submitted(&self) -> usize {
+        self.replicas.iter().map(|(_, c)| c.submitted()).sum()
+    }
+}
+
+/// A running cluster: one [`ChipScheduler`] per occupied chip behind a
+/// placement-driven router. See the module docs for placement,
+/// replication and the determinism contract, and DESIGN.md "Cluster
+/// layer" for the diagram.
+pub struct Cluster {
+    schedulers: Vec<Option<ChipScheduler>>,
+    clients: Vec<ClusterClient>,
+    placement: Placement,
+    load: Arc<ClusterLoad>,
+    /// Per hosted app: modeled energy of one served request (J), used
+    /// to price each chip's routed share at shutdown.
+    energy_per_req: Vec<(String, f64)>,
+    n_chips: usize,
+}
+
+impl Cluster {
+    /// Plan the placement and start one [`ChipScheduler`] per occupied
+    /// chip. `engine` builds each occupied chip's engine (chips cannot
+    /// share one — every chip owns its worker pool), called once per
+    /// occupied chip in ascending chip order.
+    ///
+    /// Fails when the fleet or app list is empty, an app name repeats,
+    /// the chip configuration is invalid, any app cannot map onto the
+    /// chip at all, or an engine fails to build. With
+    /// [`ChipConfig::require_resident`] set, a placement that forced an
+    /// overflow (an app no chip had room for) fails at that chip's
+    /// start, exactly as a standalone scheduler would.
+    pub fn start<F>(
+        hosted: Vec<ClusterApp>,
+        cfg: ClusterConfig,
+        mut engine: F,
+    ) -> Result<Cluster>
+    where
+        F: FnMut(usize) -> Result<Engine>,
+    {
+        if hosted.is_empty() {
+            return Err(anyhow!("the cluster needs at least one app"));
+        }
+        for (i, a) in hosted.iter().enumerate() {
+            if hosted[..i].iter().any(|b| b.app.net.name == a.app.net.name) {
+                return Err(anyhow!(
+                    "app {} is hosted twice — each app needs a unique name",
+                    a.app.net.name
+                ));
+            }
+        }
+        cfg.chip.sys.validate().map_err(anyhow::Error::msg)?;
+        let mut demands = Vec::with_capacity(hosted.len());
+        let mut energy_per_req = Vec::with_capacity(hosted.len());
+        for a in &hosted {
+            let fp = footprint(&a.app.net, &cfg.chip.sys)
+                .map_err(anyhow::Error::msg)?;
+            energy_per_req.push((
+                a.app.net.name.to_string(),
+                sim::serving_energy_j(&a.app.net, &cfg.chip.sys, 1)
+                    .map_err(anyhow::Error::msg)?,
+            ));
+            demands.push(AppDemand {
+                app: a.app.net.name.to_string(),
+                cores: fp.cores,
+                replicas: a.replicas,
+            });
+        }
+        let placement =
+            plan_placement(&demands, cfg.chips, cfg.chip.sys.neural_cores)
+                .map_err(anyhow::Error::msg)?;
+        // Group hosted apps per chip (registration order within a chip).
+        let mut per_chip: Vec<Vec<ChipApp>> = vec![Vec::new(); cfg.chips];
+        for (i, a) in hosted.iter().enumerate() {
+            for &c in &placement.apps[i].chips {
+                per_chip[c].push(a.app.clone());
+            }
+        }
+        let mut schedulers: Vec<Option<ChipScheduler>> =
+            (0..cfg.chips).map(|_| None).collect();
+        for (c, apps) in per_chip.into_iter().enumerate() {
+            if apps.is_empty() {
+                continue;
+            }
+            schedulers[c] = Some(ChipScheduler::start(
+                engine(c)?,
+                apps,
+                cfg.chip.clone(),
+            )?);
+        }
+        let load = Arc::new(ClusterLoad::new(cfg.chips));
+        let mut clients = Vec::with_capacity(hosted.len());
+        for (i, a) in hosted.iter().enumerate() {
+            let name = a.app.net.name;
+            let mut replicas = Vec::new();
+            for &c in &placement.apps[i].chips {
+                let sched = schedulers[c]
+                    .as_ref()
+                    .expect("a placed chip has a scheduler");
+                replicas.push((c, sched.client(name)?));
+            }
+            clients.push(ClusterClient {
+                app: name.to_string(),
+                replicas,
+                load: Arc::clone(&load),
+            });
+        }
+        Ok(Cluster {
+            schedulers,
+            clients,
+            placement,
+            load,
+            energy_per_req,
+            n_chips: cfg.chips,
+        })
+    }
+
+    /// Names of the hosted apps, in registration order.
+    pub fn apps(&self) -> Vec<String> {
+        self.clients.iter().map(|c| c.app.clone()).collect()
+    }
+
+    /// Fleet size the cluster was started with.
+    pub fn chips(&self) -> usize {
+        self.n_chips
+    }
+
+    /// The placement the router runs under.
+    pub fn placement(&self) -> &Placement {
+        &self.placement
+    }
+
+    /// A routing handle for `app` (any number may exist; all share the
+    /// load counters and the per-chip bounded queues).
+    pub fn client(&self, app: &str) -> Result<ClusterClient> {
+        self.clients
+            .iter()
+            .find(|c| c.app == app)
+            .cloned()
+            .ok_or_else(|| anyhow!("app {app} is not hosted by this cluster"))
+    }
+
+    /// Requests currently in flight per chip (routed, not yet
+    /// settled) — the router's live health/load view.
+    pub fn in_flight(&self) -> Vec<usize> {
+        self.load
+            .in_flight
+            .iter()
+            .map(|n| n.load(Ordering::Acquire))
+            .collect()
+    }
+
+    /// Stop accepting requests and return the fleet-level
+    /// [`ClusterReport`]. Blocks until every outstanding
+    /// [`ClusterClient`] clone has been dropped and each chip's final
+    /// batches have been answered — the same contract as
+    /// [`ChipScheduler::shutdown`].
+    pub fn shutdown(self) -> ClusterReport {
+        let Cluster {
+            schedulers,
+            clients,
+            placement,
+            load,
+            energy_per_req,
+            n_chips,
+        } = self;
+        drop(clients);
+        let price = |report: &MultiServeReport| -> f64 {
+            report
+                .apps
+                .iter()
+                .map(|a| {
+                    energy_per_req
+                        .iter()
+                        .find(|(name, _)| *name == a.app)
+                        .map_or(0.0, |(_, j)| j * a.serve.requests as f64)
+                })
+                .sum()
+        };
+        let mut chips = Vec::new();
+        let mut wall_s = 0.0f64;
+        for (c, slot) in schedulers.into_iter().enumerate() {
+            let Some(sched) = slot else { continue };
+            let serve = sched.shutdown();
+            wall_s = wall_s.max(serve.wall_s);
+            chips.push(ClusterChipReport {
+                chip: c,
+                routed: load.routed[c].load(Ordering::Relaxed),
+                modeled_energy_j: price(&serve),
+                serve,
+            });
+        }
+        ClusterReport { n_chips, chips, placement: placement.apps, wall_s }
+    }
+}
+
+/// The unified serving surface (see [`crate::serve::Service`]): submit
+/// routes through the app's [`ClusterClient`], live stats sum replica
+/// acceptance, shutdown collapses the [`ClusterReport`] into the
+/// interface-level counters.
+impl Service for Cluster {
+    fn apps(&self) -> Vec<String> {
+        Cluster::apps(self)
+    }
+
+    fn submit(&self, app: &str, x: Vec<f32>) -> Result<Pending> {
+        self.clients
+            .iter()
+            .find(|c| c.app == app)
+            .ok_or_else(|| {
+                anyhow!("app {app} is not hosted by this cluster")
+            })?
+            .submit(x)
+    }
+
+    fn stats(&self) -> ServeStats {
+        ServeStats {
+            apps: self.clients.len(),
+            requests: self.clients.iter().map(ClusterClient::submitted).sum(),
+            ..ServeStats::default()
+        }
+    }
+
+    fn shutdown(self: Box<Self>) -> ServeStats {
+        Cluster::shutdown(*self).stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::apps;
+    use crate::coordinator::init_conductances;
+
+    fn host(name: &str, seed: u64) -> ClusterApp {
+        let net = apps::network(name).unwrap().clone();
+        let params = init_conductances(net.layers, seed);
+        ClusterApp::new(net, params)
+    }
+
+    fn native(_chip: usize) -> Result<Engine> {
+        Ok(Engine::native())
+    }
+
+    #[test]
+    fn routes_round_trips_across_a_two_chip_fleet() {
+        let cluster = Cluster::start(
+            vec![host("iris_ae", 3), host("kdd_ae", 3)],
+            ClusterConfig { chips: 2, ..ClusterConfig::default() },
+            native,
+        )
+        .unwrap();
+        assert_eq!(cluster.apps(), vec!["iris_ae", "kdd_ae"]);
+        assert_eq!(cluster.chips(), 2);
+        assert!(cluster.client("nope").is_err());
+        let iris = cluster.client("iris_ae").unwrap();
+        let kdd = cluster.client("kdd_ae").unwrap();
+        assert_eq!(iris.chips().len(), 1);
+        for _ in 0..3 {
+            assert_eq!(iris.call(vec![0.1, -0.2, 0.3, 0.0]).unwrap().out.len(), 4);
+            assert_eq!(kdd.call(vec![0.05; 41]).unwrap().out.len(), 41);
+        }
+        assert_eq!(cluster.in_flight().iter().sum::<usize>(), 0);
+        drop(iris);
+        drop(kdd);
+        let report = cluster.shutdown();
+        assert_eq!(report.n_chips, 2);
+        assert_eq!(report.total_requests(), 6);
+        assert_eq!(report.total_errors(), 0);
+        // every answered request was routed, and routed shares agree
+        let routed: u64 = report.chips.iter().map(|c| c.routed).sum();
+        assert_eq!(routed, 6);
+        assert!(report.total_energy_j() > 0.0);
+        assert!(report.summary().contains("aggregate: 6 requests"));
+    }
+
+    #[test]
+    fn a_replicated_app_spreads_over_the_fleet() {
+        let cluster = Cluster::start(
+            vec![host("iris_ae", 3).replicated(2)],
+            ClusterConfig { chips: 2, ..ClusterConfig::default() },
+            native,
+        )
+        .unwrap();
+        let client = cluster.client("iris_ae").unwrap();
+        assert_eq!(client.chips().len(), 2);
+        // Open-loop submits: nothing settles until we wait, so the
+        // in-flight counts force strict alternation between replicas.
+        let pendings: Vec<Pending> = (0..8)
+            .map(|i| client.submit(vec![i as f32 * 0.1, 0.0, 0.1, -0.1]))
+            .collect::<Result<_>>()
+            .unwrap();
+        assert_eq!(cluster.in_flight().iter().sum::<usize>(), 8);
+        for p in pendings {
+            p.wait().unwrap();
+        }
+        assert_eq!(cluster.in_flight(), vec![0, 0]);
+        drop(client);
+        let report = cluster.shutdown();
+        assert_eq!(report.total_requests(), 8);
+        let routed: Vec<u64> = report.chips.iter().map(|c| c.routed).collect();
+        assert_eq!(routed, vec![4, 4], "least-loaded routing must alternate");
+    }
+
+    #[test]
+    fn bad_fleets_and_app_sets_are_rejected() {
+        let err = Cluster::start(
+            Vec::new(),
+            ClusterConfig::default(),
+            native,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("at least one app"), "{err}");
+        let err = Cluster::start(
+            vec![host("iris_ae", 0), host("iris_ae", 1)],
+            ClusterConfig::default(),
+            native,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("hosted twice"), "{err}");
+        let err = Cluster::start(
+            vec![host("iris_ae", 0)],
+            ClusterConfig { chips: 0, ..ClusterConfig::default() },
+            native,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("at least one chip"), "{err}");
+    }
+
+    #[test]
+    fn engine_factory_failures_surface_at_start() {
+        let err = Cluster::start(
+            vec![host("iris_ae", 0)],
+            ClusterConfig { chips: 1, ..ClusterConfig::default() },
+            |_| Err(anyhow!("no engine for you")),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("no engine"), "{err}");
+    }
+
+    #[test]
+    fn serves_through_the_service_trait() {
+        let svc: Box<dyn Service> = Box::new(
+            Cluster::start(
+                vec![host("iris_ae", 3), host("kdd_ae", 3)],
+                ClusterConfig { chips: 2, ..ClusterConfig::default() },
+                native,
+            )
+            .unwrap(),
+        );
+        assert_eq!(svc.apps(), vec!["iris_ae", "kdd_ae"]);
+        assert!(svc.submit("nope", vec![0.0; 4]).is_err());
+        let r = svc.call("iris_ae", vec![0.1, -0.2, 0.3, 0.0]).unwrap();
+        assert_eq!(r.out.len(), 4);
+        let live = svc.stats();
+        assert_eq!((live.apps, live.requests), (2, 1));
+        let done = svc.shutdown();
+        assert_eq!((done.apps, done.requests, done.errors), (2, 1, 0));
+    }
+}

@@ -1,0 +1,242 @@
+//! App-to-chip placement: rendezvous (highest-random-weight) hashing
+//! with capacity-aware fallback.
+//!
+//! Placement must be **stable** — the same app set over the same fleet
+//! size always lands the same way, so a restarted router reproduces its
+//! routing and the determinism tests can pin it. Rendezvous hashing
+//! gives that for free: every `(app, chip)` pair gets a deterministic
+//! weight ([`crate::checkpoint::fnv64`] over the app name and the chip
+//! index — FNV-1a is stable across platforms and toolchains, unlike
+//! `DefaultHasher`), and an app prefers chips by descending weight. On
+//! top of the hash order, [`plan_placement`] is capacity-aware: a chip
+//! whose planned resident demand would exceed its core budget is
+//! skipped, so a full chip spills the app over to its next-preferred
+//! chip instead of overcommitting.
+//!
+//! Replication: an app asking for `replicas > 1` takes the first `n`
+//! chips of its preference order that have room — one
+//! [`ChipScheduler`](crate::chip::ChipScheduler) replica per chip —
+//! and the router load-balances between them at submit time.
+
+use crate::checkpoint::fnv64;
+
+/// One app's placement request: how many cores one replica needs
+/// (its serving [`footprint`](crate::chip::footprint)) and how many
+/// replicas it wants.
+#[derive(Clone, Debug)]
+pub struct AppDemand {
+    /// Application name (the hash key — placement depends on nothing
+    /// else about the app).
+    pub app: String,
+    /// Peak core demand of one serving replica.
+    pub cores: usize,
+    /// Requested replica count (clamped to `1..=chips`).
+    pub replicas: usize,
+}
+
+/// Where one app landed.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct AppPlacement {
+    /// Application name.
+    pub app: String,
+    /// Peak core demand of one replica.
+    pub cores: usize,
+    /// Chips hosting a replica, in the app's preference order (the
+    /// router's tie-break order). Never empty; may be shorter than the
+    /// requested replica count when the fleet lacks room.
+    pub chips: Vec<usize>,
+    /// True when no chip had room and the first replica was *forced*
+    /// onto the app's most-preferred chip anyway — the chip layer then
+    /// serves it by LRU swapping (or rejects it under
+    /// [`require_resident`](crate::chip::ChipConfig::require_resident)).
+    pub overflow: bool,
+}
+
+/// A full fleet placement, as [`plan_placement`] returns it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Placement {
+    /// Per-app placements, in registration order.
+    pub apps: Vec<AppPlacement>,
+    /// Planned resident core demand per chip (may exceed the budget
+    /// only on chips that took a forced overflow replica).
+    pub chip_cores_used: Vec<usize>,
+}
+
+impl Placement {
+    /// The placement of `app`, if it was planned.
+    pub fn of(&self, app: &str) -> Option<&AppPlacement> {
+        self.apps.iter().find(|p| p.app == app)
+    }
+}
+
+/// Rendezvous weight of placing `app` on `chip`.
+fn weight(app: &str, chip: usize) -> u64 {
+    let mut key = Vec::with_capacity(app.len() + 8);
+    key.extend_from_slice(app.as_bytes());
+    key.extend_from_slice(&(chip as u64).to_le_bytes());
+    fnv64(&key)
+}
+
+/// `app`'s chip preference order over a fleet of `chips`: descending
+/// rendezvous weight, chip index as the (vanishingly unlikely) final
+/// tie-break. Pure in its inputs — the stability anchor of the whole
+/// placement.
+pub fn preference(app: &str, chips: usize) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..chips).collect();
+    order.sort_by_key(|&c| (std::cmp::Reverse(weight(app, c)), c));
+    order
+}
+
+/// Plan the fleet placement for `demands` over `chips` chips of
+/// `chip_budget` neural cores each. Deterministic in its inputs (see
+/// the module docs); errors only on an empty fleet.
+///
+/// ```
+/// use restream::cluster::{plan_placement, AppDemand};
+///
+/// let demand = |app: &str, replicas| AppDemand {
+///     app: app.to_string(),
+///     cores: 2,
+///     replicas,
+/// };
+/// let p =
+///     plan_placement(&[demand("iris_ae", 1), demand("kdd_ae", 2)], 4, 144)
+///         .unwrap();
+/// assert_eq!(p.apps[0].chips.len(), 1);
+/// assert_eq!(p.apps[1].chips.len(), 2);
+/// // stable: planning again places identically
+/// let again =
+///     plan_placement(&[demand("iris_ae", 1), demand("kdd_ae", 2)], 4, 144)
+///         .unwrap();
+/// assert_eq!(p, again);
+/// ```
+pub fn plan_placement(
+    demands: &[AppDemand],
+    chips: usize,
+    chip_budget: usize,
+) -> Result<Placement, String> {
+    if chips == 0 {
+        return Err("the cluster needs at least one chip".to_string());
+    }
+    let mut used = vec![0usize; chips];
+    let mut apps = Vec::with_capacity(demands.len());
+    for d in demands {
+        let replicas = d.replicas.clamp(1, chips);
+        let pref = preference(&d.app, chips);
+        let mut placed = Vec::with_capacity(replicas);
+        for &c in &pref {
+            if placed.len() == replicas {
+                break;
+            }
+            if used[c] + d.cores <= chip_budget {
+                used[c] += d.cores;
+                placed.push(c);
+            }
+        }
+        let overflow = placed.is_empty();
+        if overflow {
+            // No chip has room: force the first replica onto the most
+            // preferred chip — the chip layer serves it via swapping.
+            used[pref[0]] += d.cores;
+            placed.push(pref[0]);
+        }
+        apps.push(AppPlacement {
+            app: d.app.clone(),
+            cores: d.cores,
+            chips: placed,
+            overflow,
+        });
+    }
+    Ok(Placement { apps, chip_cores_used: used })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demand(app: &str, cores: usize, replicas: usize) -> AppDemand {
+        AppDemand { app: app.to_string(), cores, replicas }
+    }
+
+    #[test]
+    fn preference_is_stable_and_a_permutation() {
+        for chips in [1usize, 2, 4, 7] {
+            for app in ["iris_ae", "kdd_ae", "mnist_class"] {
+                let p = preference(app, chips);
+                assert_eq!(p, preference(app, chips), "{app}/{chips}");
+                let mut sorted = p.clone();
+                sorted.sort_unstable();
+                assert_eq!(sorted, (0..chips).collect::<Vec<_>>());
+            }
+        }
+    }
+
+    #[test]
+    fn apps_spread_rather_than_pile_up() {
+        // Rendezvous hashing should not send every app to chip 0: over
+        // the registered app names and a 4-chip fleet, at least two
+        // distinct chips are someone's first choice.
+        let firsts: std::collections::BTreeSet<usize> =
+            ["iris_ae", "kdd_ae", "mnist_class", "iris_class", "isolet_class"]
+                .iter()
+                .map(|a| preference(a, 4)[0])
+                .collect();
+        assert!(firsts.len() >= 2, "all apps prefer chip {firsts:?}");
+    }
+
+    #[test]
+    fn replicas_land_on_distinct_chips() {
+        let p = plan_placement(&[demand("kdd_ae", 2, 3)], 4, 144).unwrap();
+        let placed = &p.apps[0];
+        assert_eq!(placed.chips.len(), 3);
+        assert!(!placed.overflow);
+        let distinct: std::collections::BTreeSet<_> =
+            placed.chips.iter().collect();
+        assert_eq!(distinct.len(), 3);
+        // replica order follows the preference order
+        let pref = preference("kdd_ae", 4);
+        assert_eq!(placed.chips, pref[..3].to_vec());
+    }
+
+    #[test]
+    fn replica_count_clamps_to_the_fleet() {
+        let p = plan_placement(&[demand("iris_ae", 2, 99)], 2, 144).unwrap();
+        assert_eq!(p.apps[0].chips.len(), 2);
+        let p = plan_placement(&[demand("iris_ae", 2, 0)], 2, 144).unwrap();
+        assert_eq!(p.apps[0].chips.len(), 1);
+    }
+
+    #[test]
+    fn full_chips_spill_to_the_next_preferred() {
+        // Two 2-core chips, three 2-core apps: the first two apps each
+        // fill a chip, the third fits nowhere and is forced (overflow)
+        // onto its preferred chip.
+        let demands =
+            [demand("a", 2, 1), demand("b", 2, 1), demand("c", 2, 1)];
+        let p = plan_placement(&demands, 2, 2).unwrap();
+        assert_eq!(p.apps[0].chips.len(), 1);
+        assert_eq!(p.apps[1].chips.len(), 1);
+        assert_ne!(
+            p.apps[0].chips[0], p.apps[1].chips[0],
+            "the second app must spill to the other chip"
+        );
+        assert!(!p.apps[0].overflow && !p.apps[1].overflow);
+        let c = &p.apps[2];
+        assert!(c.overflow);
+        assert_eq!(c.chips, vec![preference("c", 2)[0]]);
+        assert_eq!(p.chip_cores_used.iter().sum::<usize>(), 6);
+    }
+
+    #[test]
+    fn an_empty_fleet_is_rejected() {
+        let err = plan_placement(&[demand("a", 2, 1)], 0, 144).unwrap_err();
+        assert!(err.contains("at least one chip"), "{err}");
+    }
+
+    #[test]
+    fn lookup_finds_planned_apps() {
+        let p = plan_placement(&[demand("iris_ae", 2, 1)], 2, 144).unwrap();
+        assert!(p.of("iris_ae").is_some());
+        assert!(p.of("nope").is_none());
+    }
+}

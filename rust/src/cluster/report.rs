@@ -1,0 +1,203 @@
+//! Fleet-level serving metrics: per-chip shares of a cluster lifetime
+//! plus the placement they ran under, returned by
+//! [`Cluster::shutdown`](super::Cluster::shutdown) and printed by
+//! `restream serve --chips` / the `perf_cluster` bench.
+
+use crate::chip::MultiServeReport;
+use crate::serve::ServeStats;
+
+use super::placement::AppPlacement;
+
+/// One chip's share of a cluster lifetime.
+#[derive(Clone, Debug)]
+pub struct ClusterChipReport {
+    /// Chip index in the fleet.
+    pub chip: usize,
+    /// Requests the router sent to this chip.
+    pub routed: u64,
+    /// Modeled serving energy of the chip's answered traffic (J):
+    /// per-app request counts priced at the Table IV per-sample
+    /// recognition energy ([`crate::sim::serving_energy_j`]).
+    pub modeled_energy_j: f64,
+    /// The chip's own multi-tenant report (per-app latency splits,
+    /// occupancy, swaps) — exactly what a standalone
+    /// [`ChipScheduler`](crate::chip::ChipScheduler) returns.
+    pub serve: MultiServeReport,
+}
+
+/// Aggregate statistics of one [`Cluster`](super::Cluster) lifetime.
+#[derive(Clone, Debug, Default)]
+pub struct ClusterReport {
+    /// Fleet size the cluster was started with (occupied or not).
+    pub n_chips: usize,
+    /// Per-chip breakdown, ascending chip index; chips that hosted no
+    /// app are omitted.
+    pub chips: Vec<ClusterChipReport>,
+    /// The placement the router ran under, in app registration order.
+    pub placement: Vec<AppPlacement>,
+    /// Slowest chip's dispatch span (s) — the fleet-level wall the
+    /// aggregate throughput divides by.
+    pub wall_s: f64,
+}
+
+impl ClusterReport {
+    /// Requests answered across the fleet (successes plus errors).
+    pub fn total_requests(&self) -> usize {
+        self.chips.iter().map(|c| c.serve.total_requests()).sum()
+    }
+
+    /// Batches dispatched across the fleet.
+    pub fn total_batches(&self) -> usize {
+        self.chips.iter().map(|c| c.serve.total_batches()).sum()
+    }
+
+    /// Requests answered with an error across the fleet.
+    pub fn total_errors(&self) -> usize {
+        self.chips.iter().map(|c| c.serve.total_errors()).sum()
+    }
+
+    /// Modeled serving energy across the fleet (J).
+    pub fn total_energy_j(&self) -> f64 {
+        self.chips.iter().map(|c| c.modeled_energy_j).sum()
+    }
+
+    /// Aggregate throughput in requests per second over [`Self::wall_s`]
+    /// (0 before any request).
+    pub fn aggregate_rps(&self) -> f64 {
+        let requests = self.total_requests();
+        if requests == 0 {
+            0.0
+        } else {
+            requests as f64 / self.wall_s.max(1e-12)
+        }
+    }
+
+    /// Collapse into the interface-level [`ServeStats`] counters.
+    pub fn stats(&self) -> ServeStats {
+        ServeStats {
+            apps: self.placement.len(),
+            requests: self.total_requests(),
+            batches: self.total_batches(),
+            errors: self.total_errors(),
+            wall_s: self.wall_s,
+        }
+    }
+
+    /// Human-readable multi-line summary (what `restream serve --chips`
+    /// prints after the request streams end).
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "cluster: {} app(s) over {} chip(s) ({} occupied)\n",
+            self.placement.len(),
+            self.n_chips,
+            self.chips.len(),
+        );
+        for p in &self.placement {
+            s.push_str(&format!(
+                "  {:<14} {:>3} cores x{} replica(s) on chip(s) {:?}{}\n",
+                p.app,
+                p.cores,
+                p.chips.len(),
+                p.chips,
+                if p.overflow { "  [overflow: served via swapping]" } else { "" },
+            ));
+        }
+        for c in &self.chips {
+            s.push_str(&format!(
+                "  chip {:>2}: {:>6} routed, {:>5} batches ({} err), \
+                 occupancy {:.1}%, {} swaps, modeled {:.3} uJ\n",
+                c.chip,
+                c.routed,
+                c.serve.total_batches(),
+                c.serve.total_errors(),
+                c.serve.occupancy_pct,
+                c.serve.swaps,
+                c.modeled_energy_j * 1e6,
+            ));
+        }
+        s.push_str(&format!(
+            "aggregate: {} requests in {} batches over {:.3}s -> \
+             {:.0} req/s, modeled {:.3} uJ\n",
+            self.total_requests(),
+            self.total_batches(),
+            self.wall_s,
+            self.aggregate_rps(),
+            self.total_energy_j() * 1e6,
+        ));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chip::AppServeReport;
+    use crate::serve::ServeReport;
+
+    fn chip_report(chip: usize, requests: usize) -> ClusterChipReport {
+        ClusterChipReport {
+            chip,
+            routed: requests as u64,
+            modeled_energy_j: requests as f64 * 1e-7,
+            serve: MultiServeReport {
+                apps: vec![AppServeReport {
+                    app: format!("app{chip}"),
+                    cores: 2,
+                    resident: true,
+                    offset: Some(0),
+                    swaps_in: 0,
+                    reconfig_s: 0.0,
+                    serve: ServeReport {
+                        requests,
+                        batches: requests / 2,
+                        errors: 0,
+                        wall_s: 1.0,
+                        ..Default::default()
+                    },
+                }],
+                wall_s: 1.0,
+                chip_cores: 144,
+                occupancy_pct: 1.4,
+                swaps: 0,
+                evictions: 0,
+                reconfig_total_s: 0.0,
+            },
+        }
+    }
+
+    #[test]
+    fn aggregates_sum_over_chips() {
+        let r = ClusterReport {
+            n_chips: 4,
+            chips: vec![chip_report(0, 10), chip_report(2, 30)],
+            placement: vec![
+                AppPlacement {
+                    app: "app0".to_string(),
+                    cores: 2,
+                    chips: vec![0],
+                    overflow: false,
+                },
+                AppPlacement {
+                    app: "app2".to_string(),
+                    cores: 2,
+                    chips: vec![2],
+                    overflow: true,
+                },
+            ],
+            wall_s: 2.0,
+        };
+        assert_eq!(r.total_requests(), 40);
+        assert_eq!(r.total_batches(), 20);
+        assert_eq!(r.total_errors(), 0);
+        assert_eq!(r.aggregate_rps(), 20.0);
+        assert!((r.total_energy_j() - 40.0e-7).abs() < 1e-18);
+        let flat = r.stats();
+        assert_eq!((flat.apps, flat.requests), (2, 40));
+        assert_eq!(flat.wall_s, 2.0);
+        let s = r.summary();
+        assert!(s.contains("2 app(s) over 4 chip(s)"), "{s}");
+        assert!(s.contains("overflow"), "{s}");
+        // the empty report guards its ratios
+        assert_eq!(ClusterReport::default().aggregate_rps(), 0.0);
+    }
+}

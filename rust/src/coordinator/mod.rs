@@ -194,6 +194,87 @@ impl CheckpointOpts {
     }
 }
 
+/// Options of [`Engine::fit`], the single training entry point. Built
+/// with a small builder chain; the default is the paper's per-sample
+/// stochastic BP with no checkpoints:
+///
+/// ```
+/// use restream::coordinator::{CheckpointOpts, TrainOptions};
+///
+/// // per-sample BP (the default)
+/// let plain = TrainOptions::new();
+/// assert_eq!(plain.batch, 0);
+///
+/// // mini-batch 16, checkpointed every 2 epochs, DR pipeline
+/// let full = TrainOptions::new()
+///     .batch(16)
+///     .checkpoint(CheckpointOpts { every: 2, ..CheckpointOpts::new("/tmp/ck") })
+///     .dr();
+/// assert!(full.dr && full.checkpoint.is_some());
+/// ```
+#[derive(Clone, Debug, Default)]
+pub struct TrainOptions {
+    /// Mini-batch size per weight update; `0` or `1` runs the paper's
+    /// per-sample stochastic BP (the exact sequential path, bit for
+    /// bit — see [`Engine::fit`]).
+    pub batch: usize,
+    /// Checkpoint policy; `None` (the default) trains without
+    /// checkpoints.
+    pub checkpoint: Option<CheckpointOpts>,
+    /// Train as the layerwise DR pipeline (paper section II): each AE
+    /// stage trains on the previous stage's encoding, `epochs` counts
+    /// per stage, and the supervised `targets` argument is ignored
+    /// (the pipeline is unsupervised).
+    pub dr: bool,
+}
+
+impl TrainOptions {
+    /// Per-sample BP, no checkpoints, single-stage — the default.
+    pub fn new() -> TrainOptions {
+        TrainOptions::default()
+    }
+
+    /// Set the mini-batch size (see [`TrainOptions::batch`]).
+    pub fn batch(mut self, batch: usize) -> TrainOptions {
+        self.batch = batch;
+        self
+    }
+
+    /// Train under `opts`' checkpoint policy.
+    pub fn checkpoint(mut self, opts: CheckpointOpts) -> TrainOptions {
+        self.checkpoint = Some(opts);
+        self
+    }
+
+    /// Train as the layerwise DR pipeline (see [`TrainOptions::dr`]).
+    pub fn dr(mut self) -> TrainOptions {
+        self.dr = true;
+        self
+    }
+}
+
+/// What [`Engine::fit`] returns: the trained parameters plus one
+/// [`TrainReport`] per trained stage — a single report for classifier
+/// and plain-AE runs, one per entered AE stage for DR pipeline runs
+/// (so a resumed pipeline that skipped completed stages reports only
+/// the stages this call ran).
+#[derive(Clone, Debug)]
+pub struct TrainRun {
+    /// Trained conductance parameters. For DR runs: the encoder-stack
+    /// params, matching the `{app}_fwd_b64` artifact layout.
+    pub params: Vec<ArrayF32>,
+    /// Per-stage training reports, in stage order.
+    pub reports: Vec<TrainReport>,
+}
+
+impl TrainRun {
+    /// The last stage's report (`None` when a resumed/halted pipeline
+    /// ran no stage in this call).
+    pub fn last_report(&self) -> Option<&TrainReport> {
+        self.reports.last()
+    }
+}
+
 /// Package the current training position as a persistable [`TrainState`].
 fn snapshot(
     net: &Network,
@@ -410,9 +491,56 @@ impl Engine {
         self.backend.as_ref()
     }
 
+    /// Train under one [`TrainOptions`] policy — **the** training
+    /// entry point, collapsing what used to be five (`train`,
+    /// `train_with`, `train_checkpointed`, `train_dr`,
+    /// `train_dr_checkpointed`, all kept as thin deprecated wrappers).
+    ///
+    /// * `targets(i)` supplies the supervised target row for sample
+    ///   `i`; ignored when [`TrainOptions::dr`] is set (the DR
+    ///   pipeline is unsupervised — pass `|_| Vec::new()`).
+    /// * `epochs` counts whole-dataset passes; under `dr` it counts
+    ///   **per stage**.
+    /// * [`TrainOptions::batch`] selects per-sample BP (`<= 1`, the
+    ///   exact sequential path of the paper) or mini-batch gradient
+    ///   accumulation sharded over the worker pool — bit-identical at
+    ///   any worker count either way
+    ///   (`tests/train_determinism.rs`).
+    /// * [`TrainOptions::checkpoint`] trains under a checkpoint
+    ///   policy; resumed runs are bit-identical to uninterrupted ones
+    ///   (`tests/checkpoint_determinism.rs`).
+    ///
+    /// The wrappers delegate to the same two internal bodies as `fit`,
+    /// so old and new API cannot drift.
+    #[allow(clippy::too_many_arguments)]
+    pub fn fit(
+        &self,
+        net: &Network,
+        xs: &[Vec<f32>],
+        targets: impl Fn(usize) -> Vec<f32>,
+        epochs: usize,
+        lr: f32,
+        seed: u64,
+        opts: &TrainOptions,
+    ) -> Result<TrainRun> {
+        let batch = opts.batch.max(1);
+        let ckpt = opts.checkpoint.as_ref();
+        if opts.dr {
+            let (params, reports) = self
+                .train_dr_impl(net, xs, epochs, lr, seed, batch, ckpt)?;
+            Ok(TrainRun { params, reports })
+        } else {
+            let (params, report) = self.train_impl(
+                net, xs, &targets, epochs, lr, seed, batch, ckpt,
+            )?;
+            Ok(TrainRun { params, reports: vec![report] })
+        }
+    }
+
     /// Train a classifier or plain AE with per-sample stochastic BP.
     /// `targets(i)` supplies the target row for sample `i`. Equivalent
-    /// to [`Engine::train_with`] at mini-batch size 1.
+    /// to [`Engine::fit`] with default [`TrainOptions`].
+    #[deprecated(note = "use Engine::fit with TrainOptions")]
     pub fn train(
         &self,
         net: &Network,
@@ -422,8 +550,9 @@ impl Engine {
         lr: f32,
         seed: u64,
     ) -> Result<(Vec<ArrayF32>, TrainReport)> {
-        self.train_with(net, xs, targets, epochs, lr, seed,
-                        apps::TRAIN_BATCH)
+        self.train_impl(
+            net, xs, &targets, epochs, lr, seed, apps::TRAIN_BATCH, None,
+        )
     }
 
     /// Train with mini-batch gradient accumulation of `batch` samples
@@ -447,6 +576,7 @@ impl Engine {
     /// requires `batch` to be a multiple of the tile and the dataset
     /// size a multiple of `batch`; violations — and an unloadable
     /// gradient artifact — fail fast **before** the first epoch.
+    #[deprecated(note = "use Engine::fit with TrainOptions::new().batch(n)")]
     pub fn train_with(
         &self,
         net: &Network,
@@ -473,6 +603,9 @@ impl Engine {
     /// report spans the whole training history (resumed epochs
     /// included), exactly as the uninterrupted run would report it.
     #[allow(clippy::too_many_arguments)]
+    #[deprecated(
+        note = "use Engine::fit with TrainOptions::new().checkpoint(opts)"
+    )]
     pub fn train_checkpointed(
         &self,
         net: &Network,
@@ -987,7 +1120,8 @@ impl Engine {
     /// trained encoder and move on. Returns the encoder-stack params
     /// (matching the `{app}_fwd_b64` artifact layout) plus stage reports.
     /// `batch` selects each stage's mini-batch size exactly as in
-    /// [`Engine::train_with`] (1 = the sequential per-sample path).
+    /// [`Engine::fit`] (1 = the sequential per-sample path).
+    #[deprecated(note = "use Engine::fit with TrainOptions::new().dr()")]
     pub fn train_dr(
         &self,
         net: &Network,
@@ -1013,6 +1147,9 @@ impl Engine {
     /// encoder stack covers completed stages only; stage reports cover
     /// the stages this call entered.
     #[allow(clippy::too_many_arguments)]
+    #[deprecated(
+        note = "use Engine::fit with TrainOptions::new().dr().checkpoint(opts)"
+    )]
     pub fn train_dr_checkpointed(
         &self,
         net: &Network,
@@ -1483,7 +1620,12 @@ fn kmeans_tile(
     backend.kmeans_batch(graph, &x_arr, centres)
 }
 
+// These unit tests deliberately keep exercising the deprecated
+// train/train_with wrappers: they pin that the thin wrappers still
+// reach the shared internal bodies (`Engine::fit` equivalence is
+// pinned in tests/integration_train.rs).
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
 

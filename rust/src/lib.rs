@@ -22,7 +22,7 @@
 //!   way the mapper spreads each app over the chip's core mesh —
 //!   bit-identical to sequential execution at any worker count — and
 //!   training joins the pool through mini-batch gradient accumulation
-//!   ([`coordinator::Engine::train_with`]; `restream train --batch N`),
+//!   ([`coordinator::Engine::fit`]; `restream train --batch N`),
 //!   bit-identical at any worker count for a fixed batch size. On top
 //!   of the pool sits the serving front end ([`serve`]): a bounded
 //!   request queue plus a dynamic micro-batcher that coalesces
@@ -39,7 +39,18 @@
 //!   **bit-identically**, and the worker pool recovers a worker death
 //!   mid-epoch by reassigning the dead worker's shards — also
 //!   bit-identically ([`coordinator::pool`], "Worker-failure
-//!   recovery").
+//!   recovery"). Above the chip sits the fleet ([`cluster`]): one
+//!   serving front end routing app requests across many simulated
+//!   chips — rendezvous-hash placement with capacity-aware spillover,
+//!   cross-chip replication of hot apps with least-loaded routing, and
+//!   per-chip health/occupancy/energy accounting (`restream serve
+//!   --apps A,B --chips N`). All three serving granularities —
+//!   [`serve::Server`], [`chip::ChipScheduler`], [`cluster::Cluster`]
+//!   — answer one interface, [`serve::Service`], and every response is
+//!   bit-identical whichever chip of the fleet serves it. Training's
+//!   five historical entry points collapse behind one option set,
+//!   [`coordinator::TrainOptions`] ([`coordinator::Engine::fit`]), and
+//!   the binary's flags parse through the typed [`cli`] layer.
 //!
 //! See `DESIGN.md` for the system inventory, the backend-selection story
 //! and the experiment index, and `EXPERIMENTS.md` for paper-vs-measured
@@ -48,6 +59,8 @@
 pub mod benchutil;
 pub mod checkpoint;
 pub mod chip;
+pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod cores;

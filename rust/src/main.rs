@@ -1,6 +1,7 @@
 //! `restream` — CLI launcher for the ReStream chip simulator.
 //!
-//! Subcommands (hand-rolled parser; no clap in the offline registry):
+//! Subcommands (typed hand-rolled parser in `restream::cli`; no clap
+//! in the offline registry):
 //!
 //! ```text
 //! restream chip                          chip inventory + area budget
@@ -14,8 +15,9 @@
 //! restream anomaly [--epochs N]
 //! restream serve   --app NAME [--source stdin|replay] [--max-batch N]
 //!                  [--max-wait-us N] [--clients N] [--requests N]
-//! restream serve   --apps A,B,C [--max-batch N] [--max-wait-us N]
-//!                  [--clients N] [--requests N]
+//! restream serve   --apps A,B,C [--chips N] [--replicas N]
+//!                  [--max-batch N] [--max-wait-us N] [--clients N]
+//!                  [--requests N]
 //! ```
 //!
 //! `serve` runs the micro-batching request server (`restream::serve`,
@@ -27,7 +29,13 @@
 //! summary. `serve --apps` hosts every listed app as a resident of one
 //! simulated chip (`restream::chip`, DESIGN.md "Multi-tenant serving")
 //! and prints the `MultiServeReport` — per-app latency, occupancy,
-//! swaps and the modeled reconfiguration time charged.
+//! swaps and the modeled reconfiguration time charged. Adding
+//! `--chips N` (above 1) serves the same apps from a fleet of N chips
+//! behind one router (`restream::cluster`, DESIGN.md "Cluster layer"):
+//! rendezvous-hash placement, `--replicas R` serving replicas per app
+//! with least-loaded routing between them, and a `ClusterReport`
+//! summary of per-chip routed shares, occupancy and modeled energy.
+//! Responses are bit-identical whichever chip serves them.
 //!
 //! Every functional-math subcommand accepts `--backend native|pjrt`
 //! (default: `$RESTREAM_BACKEND` or `native`) and `--workers N`
@@ -45,11 +53,11 @@
 //! `pjrt` needs the crate built with `--features pjrt` plus
 //! `make artifacts`.
 
-use std::collections::HashMap;
 use std::process::ExitCode;
 
+use restream::cli::{self, Command, ReportCmd, ServeCmd};
 use restream::config::{apps, SystemConfig};
-use restream::coordinator::Engine;
+use restream::coordinator::{Engine, TrainOptions};
 use restream::serve::{ServeConfig, Server};
 use restream::{datasets, metrics, report};
 
@@ -64,77 +72,45 @@ fn main() -> ExitCode {
     }
 }
 
-/// Parse `--key value` pairs after the subcommand. A flag followed by
-/// another flag (or by nothing) is a bare boolean switch and parses as
-/// `true` — `--resume` and `--resume true` are equivalent.
-fn flags(args: &[String]) -> Result<HashMap<String, String>, String> {
-    let mut m = HashMap::new();
-    let mut it = args.iter().peekable();
-    while let Some(k) = it.next() {
-        let key = k
-            .strip_prefix("--")
-            .ok_or_else(|| format!("expected --flag, got {k}"))?;
-        let v = match it.peek() {
-            Some(next) if !next.starts_with("--") => {
-                it.next().unwrap().clone()
-            }
-            _ => "true".to_string(),
-        };
-        m.insert(key.to_string(), v);
-    }
-    Ok(m)
-}
-
-fn get<T: std::str::FromStr>(f: &HashMap<String, String>, key: &str,
-                             default: T) -> Result<T, String> {
-    match f.get(key) {
-        None => Ok(default),
-        Some(v) => v
-            .parse()
-            .map_err(|_| format!("bad value for --{key}: {v}")),
-    }
-}
-
 fn run(args: &[String]) -> anyhow::Result<()> {
     let sys = SystemConfig::default();
-    let Some(cmd) = args.first() else {
-        print_usage();
-        return Ok(());
-    };
-    let f = flags(&args[1..]).map_err(anyhow::Error::msg)?;
-    match cmd.as_str() {
-        "chip" => print!("{}", report::chip_summary(&sys)),
-        "report" => {
-            if let Some(t) = f.get("table") {
-                match t.as_str() {
-                    "2" => print!("{}", report::table2()),
-                    "3" => print!("{}", report::table3(&sys)),
-                    "4" => print!("{}", report::table4(&sys)),
-                    other => anyhow::bail!("unknown table {other}"),
-                }
-            } else if let Some(which) = f.get("vs-gpu") {
-                print!("{}", report::vs_gpu_table(&sys, which == "train"));
-            } else if let Some(spec) = f.get("occupancy") {
-                print!(
-                    "{}",
-                    report::occupancy_table(&sys, spec)
-                        .map_err(anyhow::Error::msg)?
-                );
-            } else {
-                anyhow::bail!(
-                    "report needs --table N, --vs-gpu train|recog or \
-                     --occupancy all|app,app,…"
-                );
+    let cmd = match cli::parse(args) {
+        Ok(cmd) => cmd,
+        Err(e) => {
+            if e.starts_with("unknown command") {
+                print_usage();
             }
+            anyhow::bail!(e);
         }
-        "train" => cmd_train(&f)?,
-        "infer" => cmd_infer(&f)?,
-        "cluster" => cmd_cluster(&f)?,
-        "anomaly" => cmd_anomaly(&f)?,
-        "serve" => cmd_serve(&f)?,
-        other => {
-            print_usage();
-            anyhow::bail!("unknown command {other}");
+    };
+    match cmd {
+        Command::Usage => print_usage(),
+        Command::Chip => print!("{}", report::chip_summary(&sys)),
+        Command::Report(ReportCmd::Table(2)) => print!("{}", report::table2()),
+        Command::Report(ReportCmd::Table(3)) => {
+            print!("{}", report::table3(&sys))
+        }
+        Command::Report(ReportCmd::Table(_)) => {
+            print!("{}", report::table4(&sys))
+        }
+        Command::Report(ReportCmd::VsGpu { train }) => {
+            print!("{}", report::vs_gpu_table(&sys, train))
+        }
+        Command::Report(ReportCmd::Occupancy(spec)) => print!(
+            "{}",
+            report::occupancy_table(&sys, &spec).map_err(anyhow::Error::msg)?
+        ),
+        Command::Train(t) => cmd_train(&t)?,
+        Command::Infer(i) => cmd_infer(&i)?,
+        Command::Kmeans(k) => cmd_kmeans(&k)?,
+        Command::Anomaly(a) => cmd_anomaly(&a)?,
+        Command::Serve(ServeCmd::Single(s)) => cmd_serve(&s)?,
+        Command::Serve(ServeCmd::Multi(m)) => {
+            if m.chips > 1 {
+                cmd_serve_cluster(&m)?
+            } else {
+                cmd_serve_chip(&m)?
+            }
         }
     }
     Ok(())
@@ -144,14 +120,14 @@ fn run(args: &[String]) -> anyhow::Result<()> {
 /// sharding batched operations over `--workers` pool threads (default:
 /// `$RESTREAM_WORKERS`, else 1). Results are bit-identical at any
 /// worker count — see DESIGN.md "Parallel execution".
-fn engine_for(f: &HashMap<String, String>) -> anyhow::Result<Engine> {
-    let engine = match f.get("backend") {
+fn engine_for(o: &cli::EngineOpts) -> anyhow::Result<Engine> {
+    let engine = match &o.backend {
         Some(name) => Engine::named(name),
         None => Engine::open_default(),
     }?;
-    let workers: usize =
-        get(f, "workers", restream::coordinator::default_workers())
-            .map_err(anyhow::Error::msg)?;
+    let workers = o
+        .workers
+        .unwrap_or_else(restream::coordinator::default_workers);
     Ok(engine.with_workers(workers))
 }
 
@@ -164,50 +140,38 @@ fn dataset_for(app: &str, n: usize, seed: u64) -> anyhow::Result<datasets::Datas
     })
 }
 
-fn cmd_train(f: &HashMap<String, String>) -> anyhow::Result<()> {
-    let app: String = get(f, "app", "iris_class".to_string())
-        .map_err(anyhow::Error::msg)?;
-    let epochs: usize = get(f, "epochs", 5).map_err(anyhow::Error::msg)?;
-    let lr: f32 = get(f, "lr", 1.0).map_err(anyhow::Error::msg)?;
-    let seed: u64 = get(f, "seed", 0).map_err(anyhow::Error::msg)?;
-    let n: usize = get(f, "samples", 512).map_err(anyhow::Error::msg)?;
-    // mini-batch size: 1 = the paper's per-sample stochastic BP;
-    // N > 1 = data-parallel gradient accumulation over the worker pool
-    // (bit-identical at any --workers value for a fixed N)
-    let batch: usize = get(f, "batch", 1).map_err(anyhow::Error::msg)?;
-    // checkpoint policy: --checkpoint DIR commits a verified snapshot
-    // every --every epochs; --resume restarts from the latest complete
-    // one (bit-identical to the uninterrupted run)
-    let every: usize = get(f, "every", 1).map_err(anyhow::Error::msg)?;
-    let resume: bool = get(f, "resume", false).map_err(anyhow::Error::msg)?;
-    let ckpt = match f.get("checkpoint") {
-        Some(dir) => Some(restream::coordinator::CheckpointOpts {
-            dir: dir.into(),
-            every: every.max(1),
-            resume,
-            stop_after: None,
-        }),
-        None if resume => {
-            anyhow::bail!("--resume needs --checkpoint DIR")
-        }
-        None => None,
-    };
-    let net = apps::network(&app)
-        .ok_or_else(|| anyhow::anyhow!("unknown app {app}"))?;
-    let engine = engine_for(f)?;
-    let ds = dataset_for(&app, n, seed)?;
-    let (train_ds, test_ds) = ds.split(0.8, seed);
+fn cmd_train(t: &cli::TrainCmd) -> anyhow::Result<()> {
+    let net = apps::network(&t.app)
+        .ok_or_else(|| anyhow::anyhow!("unknown app {}", t.app))?;
+    let engine = engine_for(&t.engine)?;
+    let ds = dataset_for(&t.app, t.samples, t.seed)?;
+    let (train_ds, test_ds) = ds.split(0.8, t.seed);
     let xs = train_ds.rows();
+    // one option set covers per-sample BP, mini-batching, checkpoints
+    // and staged dimensionality reduction (`Engine::fit`)
+    let mut opts = TrainOptions::new().batch(t.batch);
+    if let Some(c) = &t.checkpoint {
+        opts = opts.checkpoint(restream::coordinator::CheckpointOpts {
+            dir: c.dir.clone().into(),
+            every: c.every,
+            resume: c.resume,
+            stop_after: None,
+        });
+    }
 
     use restream::config::AppKind;
     match net.kind {
         AppKind::DimReduction => {
-            let (_, reports) = match &ckpt {
-                Some(opts) => engine.train_dr_checkpointed(
-                    net, &xs, epochs, lr, seed, batch, opts)?,
-                None => engine.train_dr(net, &xs, epochs, lr, seed, batch)?,
-            };
-            for (s, r) in reports.iter().enumerate() {
+            let run = engine.fit(
+                net,
+                &xs,
+                |_| Vec::new(), // DR derives stage targets itself
+                t.epochs,
+                t.lr,
+                t.seed,
+                &opts.dr(),
+            )?;
+            for (s, r) in run.reports.iter().enumerate() {
                 println!(
                     "stage {s}: {} epochs, final loss {:.5}, {:.2}s",
                     r.epochs,
@@ -219,28 +183,33 @@ fn cmd_train(f: &HashMap<String, String>) -> anyhow::Result<()> {
         }
         AppKind::Autoencoder => {
             let xs2 = xs.clone();
-            let targets = move |i: usize| xs2[i].clone();
-            let (_, r) = match &ckpt {
-                Some(opts) => engine.train_checkpointed(
-                    net, &xs, targets, epochs, lr, seed, batch, opts)?,
-                None => engine.train_with(
-                    net, &xs, targets, epochs, lr, seed, batch)?,
-            };
-            print_curve(&r);
-            print_train_parallel(&r);
+            let run = engine.fit(
+                net,
+                &xs,
+                move |i| xs2[i].clone(),
+                t.epochs,
+                t.lr,
+                t.seed,
+                &opts,
+            )?;
+            let r = run
+                .last_report()
+                .expect("a supervised fit yields one report");
+            print_curve(r);
+            print_train_parallel(r);
         }
         _ => {
             let outs = net.layers[net.layers.len() - 1];
             let targets = |i: usize| train_ds.target(i, outs);
-            let (params, r) = match &ckpt {
-                Some(opts) => engine.train_checkpointed(
-                    net, &xs, targets, epochs, lr, seed, batch, opts)?,
-                None => engine.train_with(
-                    net, &xs, targets, epochs, lr, seed, batch)?,
-            };
-            print_curve(&r);
-            print_train_parallel(&r);
-            let preds = engine.classify(net, &params, &test_ds.rows())?;
+            let run = engine
+                .fit(net, &xs, targets, t.epochs, t.lr, t.seed, &opts)?;
+            let r = run
+                .last_report()
+                .expect("a supervised fit yields one report");
+            print_curve(r);
+            print_train_parallel(r);
+            let preds =
+                engine.classify(net, &run.params, &test_ds.rows())?;
             // single-output nets are binary (class 0 vs rest)
             let truth: Vec<usize> = if outs == 1 {
                 test_ds.y.iter().map(|&y| y.min(1)).collect()
@@ -293,15 +262,12 @@ fn print_curve(r: &restream::coordinator::TrainReport) {
     );
 }
 
-fn cmd_infer(f: &HashMap<String, String>) -> anyhow::Result<()> {
-    let app: String = get(f, "app", "iris_class".to_string())
-        .map_err(anyhow::Error::msg)?;
-    let seed: u64 = get(f, "seed", 0).map_err(anyhow::Error::msg)?;
-    let net = apps::network(&app)
-        .ok_or_else(|| anyhow::anyhow!("unknown app {app}"))?;
-    let engine = engine_for(f)?;
-    let ds = dataset_for(&app, 256, seed)?;
-    let params = restream::coordinator::init_conductances(net.layers, seed);
+fn cmd_infer(i: &cli::InferCmd) -> anyhow::Result<()> {
+    let net = apps::network(&i.app)
+        .ok_or_else(|| anyhow::anyhow!("unknown app {}", i.app))?;
+    let engine = engine_for(&i.engine)?;
+    let ds = dataset_for(&i.app, 256, i.seed)?;
+    let params = restream::coordinator::init_conductances(net.layers, i.seed);
     let start = std::time::Instant::now();
     let outs = engine.infer(net, &params, &ds.rows())?;
     let dt = start.elapsed().as_secs_f64();
@@ -334,17 +300,14 @@ fn print_parallel_report(engine: &Engine) {
     }
 }
 
-fn cmd_cluster(f: &HashMap<String, String>) -> anyhow::Result<()> {
-    let app: String = get(f, "app", "mnist_kmeans".to_string())
-        .map_err(anyhow::Error::msg)?;
-    let epochs: usize = get(f, "epochs", 10).map_err(anyhow::Error::msg)?;
-    let seed: u64 = get(f, "seed", 0).map_err(anyhow::Error::msg)?;
-    let ka = apps::kmeans_app(&app)
-        .ok_or_else(|| anyhow::anyhow!("unknown clustering app {app}"))?;
-    let engine = engine_for(f)?;
+fn cmd_kmeans(k: &cli::KmeansCmd) -> anyhow::Result<()> {
+    let ka = apps::kmeans_app(&k.app)
+        .ok_or_else(|| anyhow::anyhow!("unknown clustering app {}", k.app))?;
+    let engine = engine_for(&k.engine)?;
     // cluster synthetic features of the right dimensionality
-    let ds = datasets::class_blobs(&app, ka.dims, ka.clusters, 512, 0.3, seed);
-    let (_, assign) = engine.kmeans(ka, &ds.rows(), epochs, seed)?;
+    let ds =
+        datasets::class_blobs(&k.app, ka.dims, ka.clusters, 512, 0.3, k.seed);
+    let (_, assign) = engine.kmeans(ka, &ds.rows(), k.epochs, k.seed)?;
     println!(
         "purity over {} samples, k={}: {:.3}",
         ds.len(),
@@ -355,18 +318,24 @@ fn cmd_cluster(f: &HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_anomaly(f: &HashMap<String, String>) -> anyhow::Result<()> {
-    let epochs: usize = get(f, "epochs", 3).map_err(anyhow::Error::msg)?;
-    let seed: u64 = get(f, "seed", 0).map_err(anyhow::Error::msg)?;
+fn cmd_anomaly(a: &cli::AnomalyCmd) -> anyhow::Result<()> {
     let net = apps::network("kdd_ae").unwrap();
-    let engine = engine_for(f)?;
-    let k = datasets::kdd(2000, 400, 400, seed);
+    let engine = engine_for(&a.engine)?;
+    let k = datasets::kdd(2000, 400, 400, a.seed);
     let xs = k.train.rows();
     let xs2 = xs.clone();
-    let (params, r) = engine.train(
-        net, &xs, move |i| xs2[i].clone(), epochs, 0.8, seed)?;
-    print_curve(&r);
-    let scores = engine.anomaly_scores(net, &params, &k.test.rows())?;
+    let run = engine.fit(
+        net,
+        &xs,
+        move |i| xs2[i].clone(),
+        a.epochs,
+        0.8,
+        a.seed,
+        &TrainOptions::new(),
+    )?;
+    let r = run.last_report().expect("a supervised fit yields one report");
+    print_curve(r);
+    let scores = engine.anomaly_scores(net, &run.params, &k.test.rows())?;
     let pts = metrics::roc_sweep(&scores, &k.test_attack, 200);
     println!(
         "AUC {:.3}; detection at 4% FPR: {:.1}% (paper: 96.6%)",
@@ -381,54 +350,42 @@ fn cmd_anomaly(f: &HashMap<String, String>) -> anyhow::Result<()> {
 /// requests stream in over stdin or a synthetic closed-loop replay,
 /// coalesce into tile-aligned batches, and execute on the pooled
 /// engine. Prints the aggregate `ServeReport` when the stream ends.
-fn cmd_serve(f: &HashMap<String, String>) -> anyhow::Result<()> {
-    if let Some(apps_list) = f.get("apps") {
-        return cmd_serve_multi(f, apps_list);
-    }
-    let app: String = get(f, "app", "iris_class".to_string())
-        .map_err(anyhow::Error::msg)?;
-    let max_batch: usize =
-        get(f, "max-batch", apps::FWD_BATCH).map_err(anyhow::Error::msg)?;
-    let max_wait_us: u64 =
-        get(f, "max-wait-us", 200).map_err(anyhow::Error::msg)?;
-    let clients: usize = get(f, "clients", 4).map_err(anyhow::Error::msg)?;
-    let requests: usize =
-        get(f, "requests", 256).map_err(anyhow::Error::msg)?;
-    let seed: u64 = get(f, "seed", 0).map_err(anyhow::Error::msg)?;
-    let source: String = get(f, "source", "replay".to_string())
-        .map_err(anyhow::Error::msg)?;
-    let net = apps::network(&app)
-        .ok_or_else(|| anyhow::anyhow!("unknown app {app}"))?
+fn cmd_serve(s: &cli::ServeSingleCmd) -> anyhow::Result<()> {
+    let net = apps::network(&s.app)
+        .ok_or_else(|| anyhow::anyhow!("unknown app {}", s.app))?
         .clone();
-    let engine = engine_for(f)?;
-    let params = restream::coordinator::init_conductances(net.layers, seed);
+    let engine = engine_for(&s.engine)?;
+    let params =
+        restream::coordinator::init_conductances(net.layers, s.load.seed);
     let dims = net.layers[0];
     let cfg = ServeConfig {
-        max_batch,
-        max_wait: std::time::Duration::from_micros(max_wait_us),
+        max_batch: s.load.max_batch,
+        max_wait: std::time::Duration::from_micros(s.load.max_wait_us),
         queue_capacity: None,
     };
     let banner = format!(
-        "serving {app} ({dims} dims): max batch {}, max wait {max_wait_us} us, \
+        "serving {} ({dims} dims): max batch {}, max wait {} us, \
          queue {} samples (4 kB input buffer), {} workers",
+        s.app,
         cfg.max_batch.max(1),
+        s.load.max_wait_us,
         restream::coordinator::stream::buffer_capacity(dims),
         engine.workers()
     );
-    if source == "stdin" {
+    if s.stdin {
         // stdout carries only `<id> <out…>` / `err <msg>` lines
         eprintln!("{banner}");
     } else {
         println!("{banner}");
     }
     let server = Server::start(engine, net, params, cfg);
-    match source.as_str() {
-        "stdin" => serve_stdin(&server)?,
-        "replay" => serve_replay(&server, clients, requests, seed)?,
-        other => anyhow::bail!("--source must be stdin or replay, got {other}"),
+    if s.stdin {
+        serve_stdin(&server)?;
+    } else {
+        serve_replay(&server, s.load.clients, s.load.requests, s.load.seed)?;
     }
     let report = server.shutdown();
-    if source == "stdin" {
+    if s.stdin {
         // keep stdout clean for the response lines
         eprint!("{}", report.summary());
     } else {
@@ -446,60 +403,45 @@ fn cmd_serve(f: &HashMap<String, String>) -> anyhow::Result<()> {
 /// threads per app, `--requests` each) and prints the
 /// `MultiServeReport`: per-app p50/p99, occupancy, swap count and the
 /// reconfiguration time charged.
-fn cmd_serve_multi(
-    f: &HashMap<String, String>,
-    apps_list: &str,
-) -> anyhow::Result<()> {
+fn cmd_serve_chip(m: &cli::ServeMultiCmd) -> anyhow::Result<()> {
     use restream::chip::{ChipApp, ChipConfig, ChipScheduler};
-    let max_batch: usize =
-        get(f, "max-batch", apps::FWD_BATCH).map_err(anyhow::Error::msg)?;
-    let max_wait_us: u64 =
-        get(f, "max-wait-us", 200).map_err(anyhow::Error::msg)?;
-    let clients: usize = get(f, "clients", 4).map_err(anyhow::Error::msg)?;
-    let requests: usize =
-        get(f, "requests", 256).map_err(anyhow::Error::msg)?;
-    let seed: u64 = get(f, "seed", 0).map_err(anyhow::Error::msg)?;
-    let names: Vec<&str> = apps_list
-        .split(',')
-        .map(str::trim)
-        .filter(|s| !s.is_empty())
-        .collect();
-    if names.is_empty() {
-        anyhow::bail!("--apps needs a comma-separated app list");
-    }
-    let mut hosted = Vec::with_capacity(names.len());
-    for name in &names {
+    let mut hosted = Vec::with_capacity(m.apps.len());
+    for name in &m.apps {
         let net = apps::network(name)
             .ok_or_else(|| anyhow::anyhow!("unknown app {name}"))?
             .clone();
         let params = restream::coordinator::init_conductances(
-            net.layers, seed,
+            net.layers,
+            m.load.seed,
         );
         hosted.push(ChipApp { net, params });
     }
-    let engine = engine_for(f)?;
+    let engine = engine_for(&m.engine)?;
     let workers = engine.workers();
     let cfg = ChipConfig {
-        max_batch,
-        max_wait: std::time::Duration::from_micros(max_wait_us),
+        max_batch: m.load.max_batch,
+        max_wait: std::time::Duration::from_micros(m.load.max_wait_us),
         ..ChipConfig::default()
     };
     println!(
         "multi-tenant serve: {} apps ({}), max batch {}, max wait \
-         {max_wait_us} us, {clients} clients/app x {requests} requests, \
-         {workers} workers",
-        names.len(),
-        names.join(","),
+         {} us, {} clients/app x {} requests, {workers} workers",
+        m.apps.len(),
+        m.apps.join(","),
         cfg.max_batch.max(1),
+        m.load.max_wait_us,
+        m.load.clients,
+        m.load.requests,
     );
     let chip = ChipScheduler::start(engine, hosted, cfg)?;
     let mut handles = Vec::new();
-    for (a, name) in names.iter().enumerate() {
-        for c in 0..clients.max(1) {
+    for (a, name) in m.apps.iter().enumerate() {
+        for c in 0..m.load.clients.max(1) {
             let client = chip.client(name)?;
             let dims = client.dims();
+            let requests = m.load.requests;
             let client_seed =
-                seed ^ ((a as u64) << 32) ^ ((c as u64) << 17);
+                m.load.seed ^ ((a as u64) << 32) ^ ((c as u64) << 17);
             handles.push(std::thread::spawn(
                 move || -> anyhow::Result<()> {
                     let mut rng =
@@ -516,6 +458,84 @@ fn cmd_serve_multi(
         h.join().expect("replay client thread panicked")?;
     }
     print!("{}", chip.shutdown().summary());
+    Ok(())
+}
+
+/// Fleet serving (`restream serve --apps a,b,c --chips N`; DESIGN.md
+/// "Cluster layer"): the listed apps place over N simulated chips by
+/// rendezvous hashing (each with `--replicas R` serving replicas,
+/// least-loaded routing between them) behind one `cluster::Cluster`
+/// router. Drives the same closed-loop replay as the single-chip path
+/// and prints the `ClusterReport`: placement, per-chip routed shares,
+/// occupancy and modeled serving energy. Responses are bit-identical
+/// whichever chip serves them.
+fn cmd_serve_cluster(m: &cli::ServeMultiCmd) -> anyhow::Result<()> {
+    use restream::chip::ChipConfig;
+    use restream::cluster::{Cluster, ClusterApp, ClusterConfig};
+    let mut hosted = Vec::with_capacity(m.apps.len());
+    let mut dims = Vec::with_capacity(m.apps.len());
+    for name in &m.apps {
+        let net = apps::network(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown app {name}"))?
+            .clone();
+        dims.push(net.layers[0]);
+        let params = restream::coordinator::init_conductances(
+            net.layers,
+            m.load.seed,
+        );
+        hosted.push(ClusterApp::new(net, params).replicated(m.replicas));
+    }
+    let cfg = ClusterConfig {
+        chips: m.chips,
+        chip: ChipConfig {
+            max_batch: m.load.max_batch,
+            max_wait: std::time::Duration::from_micros(m.load.max_wait_us),
+            ..ChipConfig::default()
+        },
+    };
+    let workers = m
+        .engine
+        .workers
+        .unwrap_or_else(restream::coordinator::default_workers);
+    println!(
+        "cluster serve: {} apps ({}) x{} replica(s) over {} chips, \
+         max batch {}, max wait {} us, {} clients/app x {} requests, \
+         {workers} workers/chip",
+        m.apps.len(),
+        m.apps.join(","),
+        m.replicas,
+        m.chips,
+        cfg.chip.max_batch.max(1),
+        m.load.max_wait_us,
+        m.load.clients,
+        m.load.requests,
+    );
+    let cluster =
+        Cluster::start(hosted, cfg, |_chip| engine_for(&m.engine))?;
+    let mut handles = Vec::new();
+    for (a, name) in m.apps.iter().enumerate() {
+        for c in 0..m.load.clients.max(1) {
+            let client = cluster.client(name)?;
+            let dims = dims[a];
+            let requests = m.load.requests;
+            let client_seed =
+                m.load.seed ^ ((a as u64) << 32) ^ ((c as u64) << 17);
+            handles.push(std::thread::spawn(
+                move || -> anyhow::Result<()> {
+                    let mut rng =
+                        restream::testing::Rng::seeded(client_seed);
+                    for _ in 0..requests {
+                        client.call(rng.vec_uniform(dims, -0.5, 0.5))?;
+                    }
+                    Ok(())
+                },
+            ));
+        }
+    }
+    for h in handles {
+        h.join().expect("replay client thread panicked")?;
+    }
+    print!("{}", cluster.shutdown().summary());
     Ok(())
 }
 
@@ -630,6 +650,11 @@ fn print_usage() {
          queues,\n\
          DRR dispatch, modeled reconfiguration swaps; closed-loop \
          replay)\n\
+         serve --apps A,B,C --chips N [--replicas R]: multi-chip \
+         cluster\n\
+         (rendezvous placement, replicated hot apps, least-loaded \
+         routing;\n\
+         responses bit-identical whichever chip serves them)\n\
          report --occupancy all|A,B,…: per-app core demand, offsets \
          and fit\n\
          see rust/src/main.rs docs and README.md for details"

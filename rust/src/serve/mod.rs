@@ -54,10 +54,12 @@
 
 mod batcher;
 mod report;
+mod service;
 
 pub use batcher::Batcher;
-pub(crate) use report::ServeStats;
+pub(crate) use report::StatsAccum;
 pub use report::{LatencyStats, RequestTiming, ServeReport};
+pub use service::{ServeStats, Service};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
@@ -126,6 +128,10 @@ pub struct Response {
 pub struct Pending {
     id: u64,
     rx: Receiver<Result<Response, String>>,
+    /// Opaque payload dropped when the receipt settles (waited on or
+    /// abandoned) — the cluster router parks its in-flight token here
+    /// so per-chip load decrements exactly when a request leaves.
+    guard: Option<Box<dyn std::any::Any + Send>>,
 }
 
 impl Pending {
@@ -134,9 +140,19 @@ impl Pending {
         self.id
     }
 
+    /// Attach a drop-guard to this receipt (see the `guard` field).
+    pub(crate) fn with_guard(
+        mut self,
+        guard: Box<dyn std::any::Any + Send>,
+    ) -> Pending {
+        self.guard = Some(guard);
+        self
+    }
+
     /// Block until the response arrives. Errors when the engine failed
     /// on this request's batch or the server shut down first.
     pub fn wait(self) -> Result<Response> {
+        let _settled = self.guard;
         match self.rx.recv() {
             Ok(Ok(response)) => Ok(response),
             Ok(Err(msg)) => Err(anyhow!("request {}: {msg}", self.id)),
@@ -191,7 +207,7 @@ impl Client {
         self.tx
             .send(Request { id, x, enqueued: Instant::now(), reply })
             .map_err(|_| anyhow!("server is shut down"))?;
-        Ok(Pending { id, rx })
+        Ok(Pending { id, rx, guard: None })
     }
 
     /// Submit and block for the response — one closed-loop request.
@@ -203,6 +219,13 @@ impl Client {
     pub fn dims(&self) -> usize {
         self.dims
     }
+
+    /// Requests accepted so far across every clone of this handle —
+    /// the only counter observable while the dispatcher still runs
+    /// (feeds the live [`Service::stats`]).
+    pub(crate) fn submitted(&self) -> usize {
+        self.next_id.load(Ordering::Relaxed) as usize
+    }
 }
 
 /// A running micro-batching server: one dispatcher thread that owns the
@@ -210,6 +233,7 @@ impl Client {
 /// clones. See the module docs for the pipeline and determinism
 /// contract, and DESIGN.md "Serving layer" for the full lifecycle.
 pub struct Server {
+    app: String,
     client: Client,
     handle: thread::JoinHandle<ServeReport>,
 }
@@ -226,6 +250,7 @@ impl Server {
         cfg: ServeConfig,
     ) -> Server {
         let dims = net.layers[0];
+        let app = net.name.to_string();
         let capacity = cfg
             .queue_capacity
             .unwrap_or_else(|| stream::buffer_capacity(dims))
@@ -236,7 +261,13 @@ impl Server {
             .name("restream-serve".to_string())
             .spawn(move || serve_loop(engine, net, params, batcher))
             .expect("spawning serve dispatcher thread");
-        Server { client, handle }
+        Server { app, client, handle }
+    }
+
+    /// Name of the served network (the one app [`Service::apps`]
+    /// reports).
+    pub fn app(&self) -> &str {
+        &self.app
     }
 
     /// A new submission handle (any number may exist; all share the
@@ -249,7 +280,7 @@ impl Server {
     /// Blocks until every outstanding [`Client`] clone has been dropped
     /// and the final (possibly partial) batch has been answered.
     pub fn shutdown(self) -> ServeReport {
-        let Server { client, handle } = self;
+        let Server { app: _, client, handle } = self;
         drop(client);
         handle.join().expect("serve dispatcher thread panicked")
     }
@@ -282,7 +313,7 @@ pub(crate) fn answer_batch(
     batch: Vec<(Request, Instant)>,
     dispatch: Instant,
     done: Instant,
-    stats: &mut ServeStats,
+    stats: &mut StatsAccum,
 ) {
     stats.record_batch(dispatch, done);
     match result {
@@ -323,7 +354,7 @@ fn serve_loop(
     params: Vec<ArrayF32>,
     batcher: Batcher<Request>,
 ) -> ServeReport {
-    let mut stats = ServeStats::default();
+    let mut stats = StatsAccum::default();
     while let Some(mut batch) = batcher.next_batch() {
         let dispatch = Instant::now();
         let xs = take_batch_inputs(&mut batch);

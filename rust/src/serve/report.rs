@@ -63,9 +63,11 @@ impl LatencyStats {
 /// state behind a [`ServeReport`]. The single-app dispatcher
 /// (`serve_loop`) keeps one; the multi-tenant chip scheduler
 /// (`crate::chip`) keeps one **per resident app**, which is what makes
-/// per-app latency splits fall out of shared dispatch for free.
+/// per-app latency splits fall out of shared dispatch for free. (Not
+/// to be confused with the public [`ServeStats`](super::ServeStats)
+/// summary every [`Service`](super::Service) implementation answers.)
 #[derive(Debug, Default)]
-pub(crate) struct ServeStats {
+pub(crate) struct StatsAccum {
     queue_us: Vec<f64>,
     batch_us: Vec<f64>,
     compute_us: Vec<f64>,
@@ -76,7 +78,7 @@ pub(crate) struct ServeStats {
     span: Option<(Instant, Instant)>,
 }
 
-impl ServeStats {
+impl StatsAccum {
     /// Note one dispatched batch (span bookkeeping + batch count).
     pub(crate) fn record_batch(&mut self, dispatch: Instant, done: Instant) {
         let start = self.span.map_or(dispatch, |(start, _)| start);
@@ -158,6 +160,18 @@ impl ServeReport {
         }
     }
 
+    /// Collapse into the interface-level [`ServeStats`](super::ServeStats)
+    /// counters (one app: the server's own).
+    pub fn stats(&self) -> super::ServeStats {
+        super::ServeStats {
+            apps: 1,
+            requests: self.requests,
+            batches: self.batches,
+            errors: self.errors,
+            wall_s: self.wall_s,
+        }
+    }
+
     /// Human-readable multi-line summary (what `restream serve`
     /// prints after the request stream ends).
     pub fn summary(&self) -> String {
@@ -221,7 +235,7 @@ mod tests {
 
     #[test]
     fn stats_accumulate_into_a_report() {
-        let mut stats = ServeStats::default();
+        let mut stats = StatsAccum::default();
         let t0 = Instant::now();
         stats.record_batch(t0, t0);
         stats.record_timing(RequestTiming {
@@ -242,7 +256,7 @@ mod tests {
         assert_eq!(r.total.max_us, 12.0);
         assert_eq!(r.queue.mean_us, 2.0);
         // an untouched accumulator freezes into the empty report
-        let empty = ServeStats::default().finish();
+        let empty = StatsAccum::default().finish();
         assert_eq!(empty.requests, 0);
         assert_eq!(empty.wall_s, 0.0);
     }

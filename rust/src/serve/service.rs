@@ -1,0 +1,196 @@
+//! One serving surface: the [`Service`] trait every serving front end
+//! implements — the single-app [`Server`], the multi-tenant
+//! [`ChipScheduler`](crate::chip::ChipScheduler), and the multi-chip
+//! [`Cluster`](crate::cluster::Cluster).
+//!
+//! Before this trait the three fronts exposed three near-duplicate
+//! submit/report shapes ([`ServeReport`] vs
+//! [`MultiServeReport`](crate::chip::MultiServeReport) share their
+//! accumulator but had no common interface). Clients, determinism
+//! tests, and benches now drive *any* front through the same four
+//! calls: [`Service::apps`], [`Service::submit`] (or the closed-loop
+//! [`Service::call`]), [`Service::stats`], [`Service::shutdown`].
+//!
+//! The detailed per-front reports (latency percentiles, residency,
+//! per-chip placement) remain available through each front's inherent
+//! `shutdown` — the trait's [`ServeStats`] is the honest common
+//! denominator: exact percentiles cannot be merged across apps or
+//! chips, so the interface-level summary carries counts and wall time
+//! only.
+
+use anyhow::Result;
+
+use super::{Pending, Response, Server};
+
+/// Interface-level serving counters: the summary every [`Service`]
+/// implementation can answer exactly, regardless of how many apps or
+/// chips sit behind it. (Latency percentiles deliberately stay out:
+/// they do not merge exactly across dispatch streams — read them from
+/// the per-front reports instead.)
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ServeStats {
+    /// Apps this front serves.
+    pub apps: usize,
+    /// Requests answered (successes plus errors). Before shutdown this
+    /// counts requests *accepted* so far (see [`Service::stats`]).
+    pub requests: usize,
+    /// Batches dispatched to an engine (0 until shutdown).
+    pub batches: usize,
+    /// Requests answered with an error (0 until shutdown).
+    pub errors: usize,
+    /// First dispatch → last completion, in seconds, across every
+    /// dispatch stream behind the front (0 until shutdown).
+    pub wall_s: f64,
+}
+
+impl ServeStats {
+    /// Aggregate throughput in requests per second over
+    /// [`Self::wall_s`] (0 before any request or when wall is unknown).
+    pub fn throughput_rps(&self) -> f64 {
+        if self.requests == 0 || self.wall_s <= 0.0 {
+            0.0
+        } else {
+            self.requests as f64 / self.wall_s
+        }
+    }
+
+    /// One-line human-readable summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} app(s): {} requests in {} batches ({} errors) \
+             over {:.3}s -> {:.0} req/s",
+            self.apps,
+            self.requests,
+            self.batches,
+            self.errors,
+            self.wall_s,
+            self.throughput_rps(),
+        )
+    }
+}
+
+/// The one serving surface (see the module docs). Implemented by
+/// [`Server`], [`ChipScheduler`](crate::chip::ChipScheduler) and
+/// [`Cluster`](crate::cluster::Cluster); write clients against
+/// `&dyn Service` and they work on all three.
+///
+/// # Determinism contract
+///
+/// Every implementation answers a request bit-identically to a
+/// dedicated single-app [`Server`] over the same `(network, params)` —
+/// regardless of batching, co-residency, or which chip served it
+/// (pinned by `rust/tests/serving_determinism.rs` and
+/// `rust/tests/cluster_determinism.rs`).
+pub trait Service: Send + Sync {
+    /// Names of the apps this front serves, in registration order.
+    fn apps(&self) -> Vec<String>;
+
+    /// Enqueue one sample for `app` and return a [`Pending`] receipt;
+    /// blocks while the app's bounded ingress queue is full, errors
+    /// when `app` is not served or `x` has the wrong width.
+    fn submit(&self, app: &str, x: Vec<f32>) -> Result<Pending>;
+
+    /// Submit and block for the response — one closed-loop request.
+    fn call(&self, app: &str, x: Vec<f32>) -> Result<Response> {
+        self.submit(app, x)?.wait()
+    }
+
+    /// Live counters. Only request *acceptance* is observable while
+    /// the dispatch streams run, so `requests` counts submissions so
+    /// far and `batches`/`errors`/`wall_s` read 0; the post-shutdown
+    /// numbers come from [`Service::shutdown`] or the front's inherent
+    /// report.
+    fn stats(&self) -> ServeStats;
+
+    /// Drain outstanding requests, stop, and return the final
+    /// counters. The detailed per-front report (latency splits,
+    /// residency, placement) is available through the front's
+    /// *inherent* `shutdown` instead.
+    fn shutdown(self: Box<Self>) -> ServeStats;
+}
+
+impl Service for Server {
+    fn apps(&self) -> Vec<String> {
+        vec![self.app().to_string()]
+    }
+
+    fn submit(&self, app: &str, x: Vec<f32>) -> Result<Pending> {
+        if app != self.app() {
+            return Err(anyhow::anyhow!(
+                "app {app:?} is not served here (serving {:?})",
+                self.app()
+            ));
+        }
+        self.client().submit(x)
+    }
+
+    fn stats(&self) -> ServeStats {
+        ServeStats {
+            apps: 1,
+            requests: self.client().submitted(),
+            ..ServeStats::default()
+        }
+    }
+
+    fn shutdown(self: Box<Self>) -> ServeStats {
+        Server::shutdown(*self).stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ServeConfig;
+    use super::*;
+    use crate::config::apps;
+    use crate::coordinator::{init_conductances, Engine};
+
+    fn iris_service() -> Box<dyn Service> {
+        let net = apps::network("iris_ae").unwrap().clone();
+        let params = init_conductances(net.layers, 3);
+        Box::new(Server::start(
+            Engine::native(),
+            net,
+            params,
+            ServeConfig::default(),
+        ))
+    }
+
+    #[test]
+    fn server_round_trips_through_the_trait() {
+        let svc = iris_service();
+        assert_eq!(svc.apps(), vec!["iris_ae".to_string()]);
+        let out = svc.call("iris_ae", vec![0.1, 0.2, -0.1, 0.0]).unwrap();
+        assert_eq!(out.out.len(), 4);
+        let live = svc.stats();
+        assert_eq!((live.apps, live.requests), (1, 1));
+        assert_eq!(live.batches, 0, "batches are unknown before shutdown");
+        let done = svc.shutdown();
+        assert_eq!(done.requests, 1);
+        assert_eq!(done.batches, 1);
+        assert_eq!(done.errors, 0);
+        assert!(done.wall_s >= 0.0);
+    }
+
+    #[test]
+    fn unknown_app_is_rejected() {
+        let svc = iris_service();
+        let err = svc.submit("mnist_class", vec![0.0; 4]).unwrap_err();
+        assert!(err.to_string().contains("not served here"), "{err}");
+        assert_eq!(svc.shutdown().requests, 0);
+    }
+
+    #[test]
+    fn stats_ratios_and_summary() {
+        let s = ServeStats::default();
+        assert_eq!(s.throughput_rps(), 0.0);
+        let s = ServeStats {
+            apps: 2,
+            requests: 12,
+            batches: 4,
+            errors: 1,
+            wall_s: 2.0,
+        };
+        assert_eq!(s.throughput_rps(), 6.0);
+        assert!(s.summary().contains("12 requests in 4 batches"));
+    }
+}

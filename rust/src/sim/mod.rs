@@ -230,6 +230,17 @@ pub fn recognition_cost(net: &Network, sys: &SystemConfig)
     Ok(CostRow::from_account(net.name, map.cores_used(), &acc))
 }
 
+/// Modeled energy (J) of answering `requests` single-sample recognition
+/// requests of `net` on one chip: the per-sample Table IV recognition
+/// energy ([`recognition_cost`]) times the request count. The cluster
+/// router (`crate::cluster`) prices each chip's share of routed traffic
+/// with this — per-chip accounting for the fleet falls out of the same
+/// energy model the paper's per-chip claims rest on.
+pub fn serving_energy_j(net: &Network, sys: &SystemConfig, requests: usize)
+    -> Result<f64, String> {
+    Ok(recognition_cost(net, sys)?.total_j * requests as f64)
+}
+
 /// Clustering-core cost rows (training = assignment + amortised centre
 /// update over `epoch_samples`; recognition = one assignment).
 pub fn kmeans_cost(app: &apps::App, sys: &SystemConfig, train: bool,
@@ -420,6 +431,18 @@ mod tests {
         assert!(mnist.time_s > 0.2e-6 && mnist.time_s < 5e-6,
                 "mnist {}", mnist.time_s);
         assert!(km.time_s > 0.05e-6 && km.time_s < 1e-6, "km {}", km.time_s);
+    }
+
+    #[test]
+    fn serving_energy_scales_with_requests() {
+        let one = serving_energy_j(net("mnist_class"), &sys(), 1).unwrap();
+        let many = serving_energy_j(net("mnist_class"), &sys(), 1000).unwrap();
+        let per_sample = recognition_cost(net("mnist_class"), &sys())
+            .unwrap()
+            .total_j;
+        assert_eq!(one, per_sample);
+        assert!((many - 1000.0 * one).abs() < 1e-12 * many.max(1.0));
+        assert_eq!(serving_energy_j(net("iris_ae"), &sys(), 0).unwrap(), 0.0);
     }
 
     #[test]

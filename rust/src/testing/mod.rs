@@ -68,6 +68,51 @@ pub fn with_env<T>(
     f()
 }
 
+/// Drive `xs` through `svc`'s app `app` from `clients` concurrent
+/// closed-loop threads and return the responses **in `xs` order**.
+///
+/// Thread `c` owns the contiguous slice `xs[c*chunk..]` (the last
+/// thread takes the remainder), so the result only depends on the
+/// inputs — never on thread scheduling. This is the shared harness of
+/// the determinism tests: every [`Service`](crate::serve::Service)
+/// implementation (dedicated server, multi-tenant chip, multi-chip
+/// cluster) must produce bit-identical outputs through it.
+///
+/// Panics on any submit/serve error — determinism tests never expect
+/// one.
+pub fn drive_service(
+    svc: &dyn crate::serve::Service,
+    app: &str,
+    xs: &[Vec<f32>],
+    clients: usize,
+) -> Vec<Vec<f32>> {
+    let clients = clients.clamp(1, xs.len().max(1));
+    let chunk = xs.len().div_ceil(clients);
+    let mut out: Vec<Option<Vec<f32>>> = vec![None; xs.len()];
+    std::thread::scope(|scope| {
+        let mut slots = out.as_mut_slice();
+        let mut inputs = xs;
+        while !inputs.is_empty() {
+            let take = chunk.min(inputs.len());
+            let (my_in, rest_in) = inputs.split_at(take);
+            let (my_out, rest_out) = slots.split_at_mut(take);
+            inputs = rest_in;
+            slots = rest_out;
+            scope.spawn(move || {
+                for (slot, x) in my_out.iter_mut().zip(my_in) {
+                    let r = svc
+                        .call(app, x.clone())
+                        .expect("determinism drivers never expect errors");
+                    *slot = Some(r.out);
+                }
+            });
+        }
+    });
+    out.into_iter()
+        .map(|slot| slot.expect("every request was answered"))
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -115,6 +160,29 @@ mod tests {
             std::env::var(key).is_err(),
             "panicking scope must roll back"
         );
+    }
+
+    #[test]
+    fn drive_service_is_input_order_deterministic() {
+        use crate::config::apps;
+        use crate::coordinator::{init_conductances, Engine};
+        use crate::serve::{ServeConfig, Server};
+        let net = apps::network("iris_ae").unwrap().clone();
+        let params = init_conductances(net.layers, 11);
+        let server = Server::start(
+            Engine::native(),
+            net,
+            params,
+            ServeConfig::default(),
+        );
+        let mut rng = Rng::seeded(9);
+        let xs: Vec<Vec<f32>> =
+            (0..10).map(|_| rng.vec_uniform(4, -0.5, 0.5)).collect();
+        let one = drive_service(&server, "iris_ae", &xs, 1);
+        let four = drive_service(&server, "iris_ae", &xs, 4);
+        assert_eq!(one.len(), 10);
+        assert_eq!(one, four, "outputs must depend on inputs alone");
+        server.shutdown();
     }
 
     #[test]

@@ -2,6 +2,11 @@
 //! a **typed** [`CheckpointError`] — never a panic, never a partially
 //! mutated engine. After any failed resume the same engine trains
 //! normally and bit-identically to a fresh one.
+//!
+//! Deliberately exercises the deprecated `train_*` wrappers: these
+//! tests pin that the thin wrappers still reach the shared internal
+//! bodies behind `Engine::fit`.
+#![allow(deprecated)]
 
 use std::path::PathBuf;
 

@@ -1,0 +1,270 @@
+//! Cluster determinism: routing must be a pure *where* decision.
+//! Every app served from a multi-chip `Cluster` returns
+//! **bit-identical** outputs to a dedicated single-app `Server` over
+//! the same network and parameters — no matter how many chips the
+//! fleet has, how many replicas the app runs, how many clients race
+//! the router, or whether placement forced an overflow onto a full
+//! chip.
+//!
+//! Pinned per the acceptance criteria across fleet sizes {1, 2, 4} ×
+//! clients {1, 4} on three co-hosted apps (each replicated fleet-wide,
+//! so least-loaded routing genuinely picks between chips), plus the
+//! unified `serve::Service` surface across all three serving
+//! granularities, placement stability across identical clusters, and
+//! chip-full spillover.
+
+use std::time::Duration;
+
+use restream::chip::{ChipApp, ChipConfig, ChipScheduler};
+use restream::cluster::{
+    plan_placement, AppDemand, Cluster, ClusterApp, ClusterConfig,
+};
+use restream::config::{apps, Network, SystemConfig};
+use restream::coordinator::{init_conductances, Engine};
+use restream::runtime::ArrayF32;
+use restream::serve::{ServeConfig, Server, Service};
+use restream::testing::{drive_service, Rng};
+
+const APPS: [&str; 3] = ["iris_ae", "iris_class", "kdd_ae"];
+const SAMPLES: usize = 32;
+
+struct Fixture {
+    net: Network,
+    params: Vec<ArrayF32>,
+    xs: Vec<Vec<f32>>,
+    /// What a dedicated single-app `Server` answers for each sample.
+    expect: Vec<Vec<f32>>,
+}
+
+fn fixture(app: &str) -> Fixture {
+    let net = apps::network(app).unwrap().clone();
+    let params = init_conductances(net.layers, 7);
+    let mut rng = Rng::seeded(0xC41F ^ net.layers[0] as u64);
+    let xs: Vec<Vec<f32>> = (0..SAMPLES)
+        .map(|_| rng.vec_uniform(net.layers[0], -0.5, 0.5))
+        .collect();
+    let server = Server::start(
+        Engine::native(),
+        net.clone(),
+        params.clone(),
+        ServeConfig::default(),
+    );
+    let expect = drive_service(&server, app, &xs, 1);
+    server.shutdown();
+    Fixture { net, params, xs, expect }
+}
+
+fn hosted(fixtures: &[Fixture], replicas: usize) -> Vec<ClusterApp> {
+    fixtures
+        .iter()
+        .map(|f| {
+            ClusterApp::new(f.net.clone(), f.params.clone())
+                .replicated(replicas)
+        })
+        .collect()
+}
+
+fn chip_cfg() -> ChipConfig {
+    ChipConfig {
+        max_wait: Duration::from_millis(2),
+        ..ChipConfig::default()
+    }
+}
+
+#[test]
+fn every_fleet_size_matches_the_dedicated_server() {
+    let fixtures: Vec<Fixture> = APPS.iter().map(|a| fixture(a)).collect();
+    for &chips in &[1usize, 2, 4] {
+        for &clients in &[1usize, 4] {
+            // Replicate every app fleet-wide so the least-loaded
+            // router genuinely chooses between chips on every submit.
+            let cluster = Cluster::start(
+                hosted(&fixtures, chips),
+                ClusterConfig { chips, chip: chip_cfg() },
+                |_chip| Ok(Engine::native()),
+            )
+            .unwrap();
+            for (a, f) in fixtures.iter().enumerate() {
+                let outs = drive_service(&cluster, APPS[a], &f.xs, clients);
+                for (i, out) in outs.iter().enumerate() {
+                    assert_eq!(
+                        &f.expect[i], out,
+                        "{}: sample {i} diverged at chips={chips}, \
+                         clients={clients}",
+                        APPS[a]
+                    );
+                }
+            }
+            let report = cluster.shutdown();
+            assert_eq!(report.n_chips, chips);
+            assert_eq!(report.total_requests(), 3 * SAMPLES);
+            assert_eq!(report.total_errors(), 0);
+            let routed: u64 = report.chips.iter().map(|c| c.routed).sum();
+            assert_eq!(routed as usize, 3 * SAMPLES);
+            assert!(report.total_energy_j() > 0.0);
+            for p in &report.placement {
+                assert_eq!(
+                    p.chips.len(),
+                    chips,
+                    "{} must replicate fleet-wide",
+                    p.app
+                );
+                assert!(!p.overflow);
+            }
+        }
+    }
+}
+
+#[test]
+fn all_three_service_granularities_answer_identically() {
+    // One interface, three implementations: a dedicated server, a
+    // shared multi-tenant chip, and a two-chip cluster must be
+    // indistinguishable through `serve::Service` — bit for bit.
+    let fixtures: Vec<Fixture> = APPS.iter().map(|a| fixture(a)).collect();
+    let chip_apps: Vec<ChipApp> = fixtures
+        .iter()
+        .map(|f| ChipApp { net: f.net.clone(), params: f.params.clone() })
+        .collect();
+    let services: Vec<(&str, Box<dyn Service>)> = vec![
+        (
+            "chip",
+            Box::new(
+                ChipScheduler::start(
+                    Engine::native(),
+                    chip_apps,
+                    chip_cfg(),
+                )
+                .unwrap(),
+            ),
+        ),
+        (
+            "cluster",
+            Box::new(
+                Cluster::start(
+                    hosted(&fixtures, 2),
+                    ClusterConfig { chips: 2, chip: chip_cfg() },
+                    |_chip| Ok(Engine::native()),
+                )
+                .unwrap(),
+            ),
+        ),
+    ];
+    for (kind, svc) in services {
+        assert_eq!(svc.apps(), APPS.to_vec(), "{kind}");
+        for clients in [1usize, 4] {
+            for (a, f) in fixtures.iter().enumerate() {
+                let outs =
+                    drive_service(svc.as_ref(), APPS[a], &f.xs, clients);
+                assert_eq!(
+                    f.expect, outs,
+                    "{kind}: {} diverged at clients={clients}",
+                    APPS[a]
+                );
+            }
+        }
+        let stats = svc.shutdown();
+        assert_eq!(stats.apps, APPS.len(), "{kind}");
+        assert_eq!(stats.requests, 2 * 3 * SAMPLES, "{kind}");
+        assert_eq!(stats.errors, 0, "{kind}");
+    }
+    // The dedicated server is the reference the fixtures were built
+    // from; pin that it answers through the trait surface too.
+    let f = &fixtures[0];
+    let server: Box<dyn Service> = Box::new(Server::start(
+        Engine::native(),
+        f.net.clone(),
+        f.params.clone(),
+        ServeConfig::default(),
+    ));
+    assert_eq!(server.apps(), vec![APPS[0].to_string()]);
+    assert_eq!(drive_service(server.as_ref(), APPS[0], &f.xs, 4), f.expect);
+    let stats = server.shutdown();
+    assert_eq!((stats.apps, stats.requests), (1, SAMPLES));
+}
+
+#[test]
+fn placement_is_stable_across_identical_clusters() {
+    let fixtures: Vec<Fixture> =
+        APPS.iter().take(2).map(|a| fixture(a)).collect();
+    let start = || {
+        Cluster::start(
+            hosted(&fixtures, 1),
+            ClusterConfig { chips: 4, chip: chip_cfg() },
+            |_chip| Ok(Engine::native()),
+        )
+        .unwrap()
+    };
+    let first = start();
+    let second = start();
+    // A restarted router reproduces its placement exactly — the
+    // routing-stability half of the determinism contract.
+    assert_eq!(first.placement(), second.placement());
+    // And the pure planner agrees with what the live clusters ran.
+    let demands: Vec<AppDemand> = first
+        .placement()
+        .apps
+        .iter()
+        .map(|p| AppDemand {
+            app: p.app.clone(),
+            cores: p.cores,
+            replicas: p.chips.len(),
+        })
+        .collect();
+    let planned = plan_placement(
+        &demands,
+        4,
+        SystemConfig::default().neural_cores,
+    )
+    .unwrap();
+    assert_eq!(&planned, first.placement());
+    assert_eq!(first.shutdown().total_requests(), 0);
+    assert_eq!(second.shutdown().total_requests(), 0);
+}
+
+#[test]
+fn full_chips_spill_over_and_still_serve_identically() {
+    // Two 2-core chips, three 2-core apps: the third app fits on no
+    // chip and is forced (overflow) onto its preferred one, where the
+    // chip layer serves it via LRU swapping. Admission spillover must
+    // not change a single bit of any answer.
+    let fixtures: Vec<Fixture> = APPS.iter().map(|a| fixture(a)).collect();
+    let cluster = Cluster::start(
+        hosted(&fixtures, 1),
+        ClusterConfig {
+            chips: 2,
+            chip: ChipConfig {
+                sys: SystemConfig {
+                    neural_cores: 2,
+                    ..Default::default()
+                },
+                max_wait: Duration::ZERO,
+                ..ChipConfig::default()
+            },
+        },
+        |_chip| Ok(Engine::native()),
+    )
+    .unwrap();
+    let overflowed: Vec<String> = cluster
+        .placement()
+        .apps
+        .iter()
+        .filter(|p| p.overflow)
+        .map(|p| p.app.clone())
+        .collect();
+    assert_eq!(
+        overflowed.len(),
+        1,
+        "exactly one app must spill: {overflowed:?}"
+    );
+    for (a, f) in fixtures.iter().enumerate() {
+        let outs = drive_service(&cluster, APPS[a], &f.xs, 2);
+        assert_eq!(f.expect, outs, "{} diverged under spillover", APPS[a]);
+    }
+    let report = cluster.shutdown();
+    assert_eq!(report.total_requests(), 3 * SAMPLES);
+    assert_eq!(report.total_errors(), 0);
+    // The overcommitted chip really swapped (two apps share 2 cores).
+    let swaps: usize = report.chips.iter().map(|c| c.serve.swaps).sum();
+    assert!(swaps >= 1, "spillover schedule never swapped");
+    assert!(report.summary().contains("overflow"));
+}

@@ -10,6 +10,11 @@
 //! for tests by the crate's self dev-dependency): the next sharded
 //! operation kills the worker that picks up the given shard index
 //! mid-computation.
+//!
+//! Deliberately exercises the deprecated `train_*` wrappers: these
+//! tests pin that the thin wrappers still reach the shared internal
+//! bodies behind `Engine::fit`.
+#![allow(deprecated)]
 
 use restream::config::apps;
 use restream::coordinator::Engine;

@@ -3,9 +3,15 @@
 //! the box on the default (native) backend. Setting
 //! `RESTREAM_BACKEND=pjrt` re-runs the same pipelines through the
 //! artifact path (requires `--features pjrt` + `make artifacts`).
+//!
+//! Deliberately keeps exercising the deprecated `train`/`train_with`
+//! wrappers next to `Engine::fit`: these tests pin that the thin
+//! wrappers still reach the shared internal bodies (see
+//! `fit_is_bit_identical_to_the_deprecated_wrappers`).
+#![allow(deprecated)]
 
 use restream::config::apps;
-use restream::coordinator::Engine;
+use restream::coordinator::{Engine, TrainOptions};
 use restream::{datasets, metrics};
 
 fn engine() -> Engine {
@@ -135,6 +141,61 @@ fn iris_minibatch_training_converges_and_classifies() {
     let preds = e.classify(net, &params, &test.rows()).unwrap();
     let truth: Vec<usize> = test.y.iter().map(|&y| y.min(1)).collect();
     assert!(metrics::accuracy(&preds, &truth) > 0.9);
+}
+
+#[test]
+fn fit_is_bit_identical_to_the_deprecated_wrappers() {
+    // The API collapse must be free: `Engine::fit` with the matching
+    // `TrainOptions` reproduces each historical entry point bit for
+    // bit, because both call the same internal body.
+    let e = engine();
+    let net = apps::network("iris_class").unwrap();
+    let ds = datasets::iris(0);
+    let xs = ds.rows();
+    // per-sample stochastic BP (train ≡ fit with defaults)
+    let (p_old, r_old) = e
+        .train(net, &xs, |i| ds.target(i, 1), 3, 1.0, 9)
+        .unwrap();
+    let run = e
+        .fit(net, &xs, |i| ds.target(i, 1), 3, 1.0, 9,
+             &TrainOptions::new())
+        .unwrap();
+    assert_eq!(run.reports.len(), 1);
+    assert_eq!(r_old.loss_curve, run.last_report().unwrap().loss_curve);
+    for (a, b) in p_old.iter().zip(&run.params) {
+        assert_eq!(a.data, b.data);
+    }
+    // mini-batch accumulation (train_with ≡ fit with .batch(n))
+    let (p_old, r_old) = e
+        .train_with(net, &xs, |i| ds.target(i, 1), 3, 0.5, 9, 8)
+        .unwrap();
+    let run = e
+        .fit(net, &xs, |i| ds.target(i, 1), 3, 0.5, 9,
+             &TrainOptions::new().batch(8))
+        .unwrap();
+    assert_eq!(run.last_report().unwrap().batch, 8);
+    assert_eq!(r_old.loss_curve, run.last_report().unwrap().loss_curve);
+    for (a, b) in p_old.iter().zip(&run.params) {
+        assert_eq!(a.data, b.data);
+    }
+    // staged dimensionality reduction (train_dr ≡ fit with .dr())
+    let dr = apps::network("mnist_dr").unwrap();
+    let mut rng = restream::testing::Rng::seeded(17);
+    let xs_dr: Vec<Vec<f32>> = (0..12)
+        .map(|_| rng.vec_uniform(dr.layers[0], -0.5, 0.5))
+        .collect();
+    let (p_old, r_old) = e.train_dr(dr, &xs_dr, 1, 0.5, 9, 4).unwrap();
+    let run = e
+        .fit(dr, &xs_dr, |_| Vec::new(), 1, 0.5, 9,
+             &TrainOptions::new().batch(4).dr())
+        .unwrap();
+    assert_eq!(r_old.len(), run.reports.len());
+    for (a, b) in r_old.iter().zip(&run.reports) {
+        assert_eq!(a.loss_curve, b.loss_curve);
+    }
+    for (a, b) in p_old.iter().zip(&run.params) {
+        assert_eq!(a.data, b.data);
+    }
 }
 
 #[test]

@@ -7,7 +7,10 @@
 //! bit-identical at any worker count (`coordinator::pool`).
 //!
 //! Pinned across clients ∈ {1, 4, 16} × max-batch ∈ {1, 64} per the
-//! acceptance criteria, on a cheap app and a mid-sized one.
+//! acceptance criteria, on a cheap app and a mid-sized one. The
+//! client fan-out runs through `testing::drive_service`, the shared
+//! harness every `serve::Service` implementation (dedicated server,
+//! multi-tenant chip, multi-chip cluster) is pinned with.
 
 use std::time::Duration;
 
@@ -15,7 +18,7 @@ use restream::config::{apps, Network};
 use restream::coordinator::{init_conductances, Engine};
 use restream::runtime::ArrayF32;
 use restream::serve::{ServeConfig, Server};
-use restream::testing::Rng;
+use restream::testing::{drive_service, Rng};
 
 /// The reference: each sample evaluated alone (batch of one) on the
 /// sequential 1-worker engine.
@@ -62,31 +65,13 @@ fn concurrent_requests_match_single_sample_sequential() {
                     params.clone(),
                     cfg,
                 );
-                let per = xs.len() / clients;
-                let handles: Vec<_> = (0..clients)
-                    .map(|c| {
-                        let client = server.client();
-                        let lo = c * per;
-                        let hi =
-                            if c + 1 == clients { xs.len() } else { lo + per };
-                        let mine: Vec<(usize, Vec<f32>)> = (lo..hi)
-                            .map(|i| (i, xs[i].clone()))
-                            .collect();
-                        std::thread::spawn(move || {
-                            mine.into_iter()
-                                .map(|(i, x)| (i, client.call(x).unwrap().out))
-                                .collect::<Vec<(usize, Vec<f32>)>>()
-                        })
-                    })
-                    .collect();
-                for handle in handles {
-                    for (i, out) in handle.join().unwrap() {
-                        assert_eq!(
-                            expect[i], out,
-                            "{app}: sample {i} diverged at clients={clients}, \
-                             max_batch={max_batch}"
-                        );
-                    }
+                let outs = drive_service(&server, app, &xs, clients);
+                for (i, out) in outs.iter().enumerate() {
+                    assert_eq!(
+                        &expect[i], out,
+                        "{app}: sample {i} diverged at clients={clients}, \
+                         max_batch={max_batch}"
+                    );
                 }
                 let report = server.shutdown();
                 assert_eq!(report.requests, xs.len(), "{app}");

@@ -9,6 +9,11 @@
 //!   {1, 2, 4, 7}: shard boundaries are fixed by the mini-batch size
 //!   (never the pool), and gradient partials reduce left-to-right on
 //!   one thread (see `coordinator::pool` for the contract).
+//!
+//! Deliberately exercises the deprecated `train`/`train_with` wrappers:
+//! these goldens pin that the thin wrappers still reach the shared
+//! internal bodies behind `Engine::fit`.
+#![allow(deprecated)]
 
 use restream::config::apps;
 use restream::coordinator::Engine;
