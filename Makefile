@@ -4,8 +4,8 @@
 ARTIFACTS ?= artifacts
 
 .PHONY: build test bench bench-ckpt bench-cluster bench-multiapp \
-	bench-parallel bench-serving bench-train clippy doc fmt artifacts \
-	pytest cargotest-pjrt
+	bench-parallel bench-pipeline bench-serving bench-train clippy doc \
+	fmt artifacts pytest cargotest-pjrt
 
 build:
 	cargo build --release
@@ -21,6 +21,11 @@ bench:
 bench-parallel:
 	BENCH_PARALLEL_OUT=$(abspath BENCH_parallel.json) \
 		cargo bench --bench perf_parallel
+
+# Layer-pipelined streaming vs sequential/data-parallel execution.
+bench-pipeline:
+	BENCH_PIPELINE_OUT=$(abspath BENCH_pipeline.json) \
+		cargo bench --bench perf_pipeline
 
 # Serving throughput/latency sweep (clients x batching window).
 bench-serving:

@@ -1,0 +1,196 @@
+//! §Perf: layer-pipelined streaming vs the sequential and
+//! data-parallel engines.
+//!
+//! Measures batched-recognition throughput (samples/s) on three
+//! streaming apps under four execution configurations — sequential
+//! (data-parallel, 1 worker), data-parallel over 4 workers, layer
+//! pipeline over one core-group chain, and the hybrid
+//! pipeline-of-replicas — prints the per-stage occupancy/stall table
+//! of the pipelined runs, and writes the machine-readable comparison
+//! to `BENCH_pipeline.json` — relative to the bench's working
+//! directory, which under `cargo bench` is the crate root `rust/`;
+//! override with `$BENCH_PIPELINE_OUT` (CI and `make bench-pipeline`
+//! pin it to the repo root). CI's `bench-smoke` job runs this at
+//! reduced scale and gates on the best per-app pipeline-vs-sequential
+//! speedup staying ≥ 1.2.
+//!
+//! Scale knobs: `$PERF_PIPELINE_SAMPLES` (default 1024) and
+//! `$PERF_PIPELINE_REPEATS` (default 3; wall times are best-of-N to
+//! shave scheduler noise).
+//!
+//! Determinism note: every configuration computes bit-identical
+//! outputs (`tests/pipeline_determinism.rs` pins this); the bench only
+//! measures how fast the fixed computation streams.
+
+use restream::benchutil::{best_wall, env_usize, section};
+use restream::config::apps;
+use restream::coordinator::{init_conductances, Engine, ExecMode};
+use restream::testing::Rng;
+
+/// The streaming apps under test; deep uneven stacks (mnist_class),
+/// deep wide stacks (isolet_class) and a shallow balanced one
+/// (kdd_ae), so the stage-imbalance spread is visible in one report.
+const APPS: [&str; 3] = ["mnist_class", "isolet_class", "kdd_ae"];
+
+struct RunResult {
+    app: String,
+    mode: String,
+    workers: usize,
+    stages: usize,
+    wall_s: f64,
+    samples_per_s: f64,
+}
+
+fn record(
+    results: &mut Vec<RunResult>,
+    app: &str,
+    mode: &str,
+    workers: usize,
+    stages: usize,
+    wall_s: f64,
+    samples: usize,
+) {
+    let samples_per_s = samples as f64 / wall_s.max(1e-12);
+    println!(
+        "bench pipeline/{app}/{mode}/w{workers}/s{stages} \
+         {:>10.2} ms  {:>10.0} samples/s",
+        wall_s * 1e3,
+        samples_per_s
+    );
+    results.push(RunResult {
+        app: app.to_string(),
+        mode: mode.to_string(),
+        workers,
+        stages,
+        wall_s,
+        samples_per_s,
+    });
+}
+
+/// Per-app speedup of the 1-worker pipeline over the 1-worker
+/// sequential engine — the number the CI gate watches.
+fn pipeline_speedups(results: &[RunResult]) -> Vec<(String, f64)> {
+    APPS.iter()
+        .filter_map(|&app| {
+            let at = |mode: &str| {
+                results
+                    .iter()
+                    .find(|r| r.app == app && r.mode == mode && r.workers == 1)
+                    .map(|r| r.samples_per_s)
+            };
+            match (at("seq"), at("pipeline")) {
+                (Some(s), Some(p)) if s > 0.0 => {
+                    Some((app.to_string(), p / s))
+                }
+                _ => None,
+            }
+        })
+        .collect()
+}
+
+fn json_report(
+    results: &[RunResult],
+    speedups: &[(String, f64)],
+    best: f64,
+    samples: usize,
+    repeats: usize,
+) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str(&format!(
+        "  \"bench\": \"perf_pipeline\",\n  \"samples\": {samples},\n  \
+         \"repeats\": {repeats},\n"
+    ));
+    s.push_str("  \"results\": [\n");
+    for (i, r) in results.iter().enumerate() {
+        let sep = if i + 1 < results.len() { "," } else { "" };
+        s.push_str(&format!(
+            "    {{\"app\": \"{}\", \"mode\": \"{}\", \"workers\": {}, \
+             \"stages\": {}, \"wall_s\": {:.6}, \
+             \"samples_per_s\": {:.2}}}{sep}\n",
+            r.app, r.mode, r.workers, r.stages, r.wall_s, r.samples_per_s
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str("  \"speedup_pipeline_vs_seq\": {\n");
+    for (i, (app, speedup)) in speedups.iter().enumerate() {
+        let sep = if i + 1 < speedups.len() { "," } else { "" };
+        s.push_str(&format!("    \"{app}\": {speedup:.4}{sep}\n"));
+    }
+    s.push_str("  },\n");
+    s.push_str(&format!("  \"best_pipeline_speedup\": {best:.4}\n"));
+    s.push_str("}\n");
+    s
+}
+
+fn main() -> anyhow::Result<()> {
+    let samples = env_usize("PERF_PIPELINE_SAMPLES", 1024).max(1);
+    let repeats = env_usize("PERF_PIPELINE_REPEATS", 3).max(1);
+    let mut results: Vec<RunResult> = Vec::new();
+    println!(
+        "perf_pipeline: {samples} samples, best of {repeats}, apps {APPS:?}"
+    );
+
+    for app in APPS {
+        let net = apps::network(app).unwrap();
+        let n_layers = net.layers.len() - 1;
+        let params = init_conductances(net.layers, 0);
+        let mut rng = Rng::seeded(0x9156 ^ net.layers[0] as u64);
+        let xs: Vec<Vec<f32>> = (0..samples)
+            .map(|_| rng.vec_uniform(net.layers[0], -0.5, 0.5))
+            .collect();
+        section(&format!(
+            "{app}: {} layers, one pipeline stage per layer",
+            n_layers
+        ));
+        // (label, exec mode, workers); stage count is one per layer,
+        // the deepest pipeline the app admits.
+        let configs: [(&str, ExecMode, usize); 4] = [
+            ("seq", ExecMode::DataParallel, 1),
+            ("dp", ExecMode::DataParallel, 4),
+            ("pipeline", ExecMode::Pipelined, 1),
+            ("hybrid", ExecMode::Hybrid, 4),
+        ];
+        for (label, exec, workers) in configs {
+            let engine = Engine::native()
+                .with_workers(workers)
+                .with_exec(exec)
+                .with_pipeline_stages(n_layers);
+            let wall = best_wall(repeats, || {
+                engine.infer(net, &params, &xs).unwrap();
+            });
+            record(
+                &mut results,
+                app,
+                label,
+                workers,
+                if exec == ExecMode::DataParallel { 0 } else { n_layers },
+                wall,
+                samples,
+            );
+            if label == "pipeline" {
+                if let Some(rep) = engine.last_pipeline_report() {
+                    for line in rep.summary().lines().skip(1) {
+                        println!("    {}", line.trim_start());
+                    }
+                }
+            }
+        }
+    }
+
+    let speedups = pipeline_speedups(&results);
+    let best = speedups.iter().map(|(_, s)| *s).fold(0.0f64, f64::max);
+    section("summary");
+    for (app, speedup) in &speedups {
+        println!("pipeline vs sequential, {app}: {speedup:.2}x");
+    }
+    println!("best pipeline speedup: {best:.2}x");
+    let out_path = std::env::var("BENCH_PIPELINE_OUT")
+        .unwrap_or_else(|_| "BENCH_pipeline.json".to_string());
+    std::fs::write(
+        &out_path,
+        json_report(&results, &speedups, best, samples, repeats),
+    )?;
+    println!("wrote {out_path}");
+    Ok(())
+}

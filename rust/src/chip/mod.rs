@@ -663,6 +663,72 @@ mod tests {
     }
 
     #[test]
+    fn zero_wait_unit_queues_still_serve_every_tenant() {
+        // Tightest per-app configuration: no straggler window and a
+        // one-sample ingress queue, so the batcher/ready-FIFO path
+        // runs under constant backpressure for both tenants.
+        let cfg = ChipConfig {
+            max_wait: Duration::ZERO,
+            queue_capacity: Some(1),
+            ..ChipConfig::default()
+        };
+        let chip = ChipScheduler::start(
+            Engine::native(),
+            vec![host("iris_ae", 1), host("kdd_ae", 1)],
+            cfg,
+        )
+        .unwrap();
+        let iris = chip.client("iris_ae").unwrap();
+        let kdd = chip.client("kdd_ae").unwrap();
+        for i in 0..6 {
+            let r = iris.call(vec![0.05 * i as f32; 4]).unwrap();
+            assert_eq!(r.out.len(), 4);
+            let r = kdd.call(vec![0.01; 41]).unwrap();
+            assert_eq!(r.out.len(), 41);
+        }
+        drop(iris);
+        drop(kdd);
+        let report = chip.shutdown();
+        assert_eq!(report.total_requests(), 12);
+        assert_eq!(report.total_errors(), 0);
+    }
+
+    #[test]
+    fn shutdown_answers_requests_still_queued_in_the_ready_fifos() {
+        // Queue a burst and shut down immediately: the batchers flush
+        // their partial batches on disconnect, the dispatcher drains
+        // every ready FIFO before reporting, and each receipt settles
+        // with a response — never the typed "shut down before
+        // replying" error a silent drop would produce. The generous
+        // max_wait guarantees the burst is still queued at shutdown.
+        let cfg = ChipConfig {
+            max_wait: Duration::from_secs(5),
+            ..ChipConfig::default()
+        };
+        let chip = ChipScheduler::start(
+            Engine::native(),
+            vec![host("iris_ae", 2), host("kdd_ae", 2)],
+            cfg,
+        )
+        .unwrap();
+        let iris = chip.client("iris_ae").unwrap();
+        let kdd = chip.client("kdd_ae").unwrap();
+        let mut pendings = Vec::new();
+        for _ in 0..5 {
+            pendings.push(iris.submit(vec![0.1, -0.1, 0.2, 0.0]).unwrap());
+            pendings.push(kdd.submit(vec![0.02; 41]).unwrap());
+        }
+        drop(iris);
+        drop(kdd);
+        let report = chip.shutdown();
+        assert_eq!(report.total_requests(), 10);
+        assert_eq!(report.total_errors(), 0);
+        for pending in pendings {
+            pending.wait().expect("queued request was dropped");
+        }
+    }
+
+    #[test]
     fn duplicate_and_empty_app_sets_are_rejected() {
         let err = ChipScheduler::start(
             Engine::native(),

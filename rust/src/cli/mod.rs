@@ -16,6 +16,7 @@
 use std::collections::HashMap;
 
 use crate::config::apps;
+use crate::coordinator::ExecMode;
 
 /// One parsed `restream` invocation.
 #[derive(Clone, Debug, PartialEq)]
@@ -56,14 +57,21 @@ pub enum ReportCmd {
 }
 
 /// Backend/worker-pool selection shared by every functional-math
-/// subcommand (`--backend native|pjrt`, `--workers N`). `None` defers
-/// to the environment (`$RESTREAM_BACKEND` / `$RESTREAM_WORKERS`).
+/// subcommand (`--backend native|pjrt`, `--workers N`, `--exec
+/// parallel|pipeline|hybrid`, `--stages N`). `None` defers to the
+/// environment (`$RESTREAM_BACKEND` / `$RESTREAM_WORKERS`) or the
+/// engine default (data-parallel, one stage per layer).
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct EngineOpts {
     /// `--backend`, if given.
     pub backend: Option<String>,
     /// `--workers`, if given.
     pub workers: Option<usize>,
+    /// `--exec`, if given: how batched forwards execute.
+    pub exec: Option<ExecMode>,
+    /// `--stages`, if given: pipeline stage count for `--exec
+    /// pipeline|hybrid` (clamped to the app's layer count).
+    pub stages: Option<usize>,
 }
 
 /// `restream train` options.
@@ -301,7 +309,12 @@ pub fn parse(args: &[String]) -> Result<Command, String> {
 }
 
 fn engine_opts(f: &mut FlagSet) -> Result<EngineOpts, String> {
-    Ok(EngineOpts { backend: f.take("backend"), workers: f.opt("workers")? })
+    Ok(EngineOpts {
+        backend: f.take("backend"),
+        workers: f.opt("workers")?,
+        exec: f.opt("exec")?,
+        stages: f.opt("stages")?,
+    })
 }
 
 fn parse_report(f: &mut FlagSet) -> Result<ReportCmd, String> {
@@ -509,8 +522,37 @@ mod tests {
             EngineOpts {
                 backend: Some("native".to_string()),
                 workers: Some(4),
+                ..EngineOpts::default()
             }
         );
+    }
+
+    #[test]
+    fn exec_mode_flags_parse_everywhere() {
+        let Command::Train(t) = parse(&args(&[
+            "train", "--exec", "pipeline", "--stages", "3",
+        ]))
+        .unwrap() else {
+            panic!("expected a train command")
+        };
+        assert_eq!(t.engine.exec, Some(ExecMode::Pipelined));
+        assert_eq!(t.engine.stages, Some(3));
+        let Command::Infer(i) =
+            parse(&args(&["infer", "--exec", "hybrid"])).unwrap()
+        else {
+            panic!("expected an infer command")
+        };
+        assert_eq!(i.engine.exec, Some(ExecMode::Hybrid));
+        assert_eq!(i.engine.stages, None);
+        let Command::Serve(ServeCmd::Single(s)) =
+            parse(&args(&["serve", "--exec", "parallel"])).unwrap()
+        else {
+            panic!("expected single-app serving")
+        };
+        assert_eq!(s.engine.exec, Some(ExecMode::DataParallel));
+        let err =
+            parse(&args(&["train", "--exec", "warp"])).unwrap_err();
+        assert!(err.contains("bad value for --exec: warp"), "{err}");
     }
 
     #[test]

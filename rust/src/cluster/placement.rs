@@ -231,6 +231,79 @@ mod tests {
     fn an_empty_fleet_is_rejected() {
         let err = plan_placement(&[demand("a", 2, 1)], 0, 144).unwrap_err();
         assert!(err.contains("at least one chip"), "{err}");
+        // an empty demand list over a real fleet is fine: nothing to
+        // place, every chip idle
+        let p = plan_placement(&[], 3, 144).unwrap();
+        assert!(p.apps.is_empty());
+        assert_eq!(p.chip_cores_used, vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn an_app_larger_than_every_chip_is_forced_with_overflow() {
+        // 200 cores will not fit a 144-core chip even empty: the app
+        // is forced onto its most-preferred chip (marked overflow, the
+        // chip layer swap-serves it) and the planned use records the
+        // overcommit instead of hiding it.
+        let p = plan_placement(&[demand("huge", 200, 2)], 3, 144).unwrap();
+        let placed = &p.apps[0];
+        assert!(placed.overflow);
+        assert_eq!(placed.chips, vec![preference("huge", 3)[0]]);
+        assert_eq!(p.chip_cores_used[placed.chips[0]], 200);
+        // the other chips stay untouched
+        let others: usize = (0..3)
+            .filter(|c| *c != placed.chips[0])
+            .map(|c| p.chip_cores_used[c])
+            .sum();
+        assert_eq!(others, 0);
+    }
+
+    #[test]
+    fn a_completely_full_fleet_forces_overflow() {
+        // Two chips exactly filled by the first two apps: the third
+        // finds no room anywhere and must be a forced single-replica
+        // overflow on its preferred chip, even though it asked for
+        // replicas on both.
+        let demands = [
+            demand("fill_a", 144, 1),
+            demand("fill_b", 144, 1),
+            demand("late", 2, 2),
+        ];
+        let p = plan_placement(&demands, 2, 144).unwrap();
+        assert!(!p.apps[0].overflow && !p.apps[1].overflow);
+        let late = &p.apps[2];
+        assert!(late.overflow);
+        assert_eq!(late.chips, vec![preference("late", 2)[0]]);
+        // the forced replica overcommits exactly one chip
+        assert_eq!(p.chip_cores_used[late.chips[0]], 146);
+    }
+
+    #[test]
+    fn preference_matches_the_pinned_fnv64_goldens() {
+        // Byte-stability contract: the rendezvous weight is
+        // fnv64(app-name bytes ‖ chip index as u64 little-endian),
+        // FNV-1a 64. These orders were computed by an independent
+        // Python implementation of that exact key layout; any change
+        // to the hash, the key bytes or the tie-break reorders a live
+        // fleet's placement on upgrade and must show up here.
+        assert_eq!(preference("iris_ae", 4), vec![2, 3, 0, 1]);
+        assert_eq!(preference("kdd_ae", 4), vec![0, 1, 2, 3]);
+        assert_eq!(preference("mnist_class", 4), vec![2, 3, 0, 1]);
+        assert_eq!(preference("iris_ae", 8), vec![6, 7, 4, 5, 2, 3, 0, 1]);
+        assert_eq!(preference("kdd_ae", 8), vec![0, 1, 6, 7, 4, 5, 2, 3]);
+        assert_eq!(
+            preference("mnist_class", 8),
+            vec![7, 4, 5, 2, 3, 0, 1, 6]
+        );
+        // and the raw weight keys themselves, pinned at the fnv64 level
+        let key = |app: &str, chip: u64| {
+            let mut k = app.as_bytes().to_vec();
+            k.extend_from_slice(&chip.to_le_bytes());
+            fnv64(&k)
+        };
+        assert_eq!(key("iris_ae", 0), 0x25ea_965b_7322_bdf1);
+        assert_eq!(key("iris_ae", 3), 0x44e5_5d64_7e12_0812);
+        assert_eq!(key("kdd_ae", 1), 0xcebb_9c34_846e_6a9c);
+        assert_eq!(key("mnist_class", 2), 0x9202_5445_ae10_c5df);
     }
 
     #[test]

@@ -48,10 +48,12 @@
 //! [`Engine::infer`] calls over the same pool.
 
 pub mod params;
+pub mod pipeline;
 pub mod pool;
 pub mod stream;
 
 pub use params::init_conductances;
+pub use pipeline::{ExecMode, PipelineReport, StageReport};
 pub use pool::{
     default_workers, ExecReport, ShardPlan, ShardTiming, WorkerPool,
 };
@@ -226,6 +228,12 @@ pub struct TrainOptions {
     /// per stage, and the supervised `targets` argument is ignored
     /// (the pipeline is unsupervised).
     pub dr: bool,
+    /// Execution mode of the DR pipeline's inter-stage re-encode
+    /// passes; `None` (the default) inherits the engine's
+    /// [`Engine::exec`] mode. Ignored by non-DR runs — their training
+    /// loop has no batched forward. Results are bit-identical under
+    /// every mode (`tests/pipeline_determinism.rs`).
+    pub exec: Option<ExecMode>,
 }
 
 impl TrainOptions {
@@ -249,6 +257,13 @@ impl TrainOptions {
     /// Train as the layerwise DR pipeline (see [`TrainOptions::dr`]).
     pub fn dr(mut self) -> TrainOptions {
         self.dr = true;
+        self
+    }
+
+    /// Run the DR re-encode passes under `exec` (see
+    /// [`TrainOptions::exec`]).
+    pub fn exec(mut self, exec: ExecMode) -> TrainOptions {
+        self.exec = Some(exec);
         self
     }
 }
@@ -345,8 +360,17 @@ pub struct Engine {
     backend: Box<dyn Backend>,
     /// Fixed worker pool the batched operations shard over.
     pool: WorkerPool,
+    /// How batched forwards execute (see [`ExecMode`]); training's
+    /// gradient phase always shards data-parallel, but the DR
+    /// pipeline's inter-stage re-encodes follow this mode.
+    exec: ExecMode,
+    /// Stage count for the pipelined exec modes; `None` = one stage
+    /// per layer (clamped to `1..=n_layers` per app at run time).
+    pipeline_stages: Option<usize>,
     /// Per-shard stats of the most recent sharded operation.
     last_report: Mutex<Option<ExecReport>>,
+    /// Per-stage stats of the most recent pipelined forward.
+    last_pipeline: Mutex<Option<PipelineReport>>,
     /// Memoised `mapper::shard_hint` per app name (the hint is a
     /// deterministic function of the network and the default chip).
     shard_hints: Mutex<std::collections::HashMap<String, usize>>,
@@ -362,7 +386,10 @@ impl Engine {
         Engine {
             backend,
             pool: WorkerPool::new(1),
+            exec: ExecMode::DataParallel,
+            pipeline_stages: None,
             last_report: Mutex::new(None),
+            last_pipeline: Mutex::new(None),
             shard_hints: Mutex::new(std::collections::HashMap::new()),
         }
     }
@@ -383,6 +410,28 @@ impl Engine {
         self.pool.workers()
     }
 
+    /// Select how batched forwards execute (see [`ExecMode`]). The
+    /// data-parallel default keeps the PR 2 sharded path; the
+    /// pipelined modes stream through layer stages — bit-identical
+    /// results either way (`tests/pipeline_determinism.rs`).
+    pub fn with_exec(mut self, exec: ExecMode) -> Self {
+        self.exec = exec;
+        self
+    }
+
+    /// Fix the stage count of the pipelined exec modes (`0` restores
+    /// the default: one stage per layer). Clamped to `1..=n_layers`
+    /// per app at run time.
+    pub fn with_pipeline_stages(mut self, stages: usize) -> Self {
+        self.pipeline_stages = (stages > 0).then_some(stages);
+        self
+    }
+
+    /// The execution mode batched forwards use.
+    pub fn exec(&self) -> ExecMode {
+        self.exec
+    }
+
     /// Per-shard timing of the most recent sharded operation
     /// ([`ExecReport`] — the data-parallel sibling of [`TrainReport`]),
     /// or `None` before the first one.
@@ -395,6 +444,22 @@ impl Engine {
 
     fn record(&self, report: ExecReport) {
         *self.last_report.lock().unwrap_or_else(|e| e.into_inner()) =
+            Some(report);
+    }
+
+    /// Per-stage occupancy/stall stats of the most recent pipelined
+    /// forward ([`PipelineReport`] — the pipeline sibling of
+    /// [`Engine::last_parallel_report`]), or `None` before the first
+    /// one (the data-parallel mode never writes it).
+    pub fn last_pipeline_report(&self) -> Option<PipelineReport> {
+        self.last_pipeline
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .clone()
+    }
+
+    fn record_pipeline(&self, report: PipelineReport) {
+        *self.last_pipeline.lock().unwrap_or_else(|e| e.into_inner()) =
             Some(report);
     }
 
@@ -526,8 +591,10 @@ impl Engine {
         let batch = opts.batch.max(1);
         let ckpt = opts.checkpoint.as_ref();
         if opts.dr {
-            let (params, reports) = self
-                .train_dr_impl(net, xs, epochs, lr, seed, batch, ckpt)?;
+            let exec = opts.exec.unwrap_or(self.exec);
+            let (params, reports) = self.train_dr_impl(
+                net, xs, epochs, lr, seed, batch, exec, ckpt,
+            )?;
             Ok(TrainRun { params, reports })
         } else {
             let (params, report) = self.train_impl(
@@ -1131,8 +1198,9 @@ impl Engine {
         seed: u64,
         batch: usize,
     ) -> Result<(Vec<ArrayF32>, Vec<TrainReport>)> {
-        self.train_dr_impl(net, xs, epochs_per_stage, lr, seed, batch,
-                           None)
+        self.train_dr_impl(
+            net, xs, epochs_per_stage, lr, seed, batch, self.exec, None,
+        )
     }
 
     /// [`Engine::train_dr`] under a checkpoint policy — the DR sibling
@@ -1161,7 +1229,8 @@ impl Engine {
         opts: &CheckpointOpts,
     ) -> Result<(Vec<ArrayF32>, Vec<TrainReport>)> {
         self.train_dr_impl(
-            net, xs, epochs_per_stage, lr, seed, batch, Some(opts),
+            net, xs, epochs_per_stage, lr, seed, batch, self.exec,
+            Some(opts),
         )
     }
 
@@ -1176,6 +1245,7 @@ impl Engine {
         lr: f32,
         seed: u64,
         batch: usize,
+        exec: ExecMode,
         opts: Option<&CheckpointOpts>,
     ) -> Result<(Vec<ArrayF32>, Vec<TrainReport>)> {
         if net.kind != AppKind::DimReduction {
@@ -1225,10 +1295,13 @@ impl Engine {
         // uninterrupted pipeline performed stage by stage.
         let mut current: Vec<Vec<f32>> = xs.to_vec();
         for pair in encoder_params.chunks(2) {
-            current = current
-                .iter()
-                .map(|x| params::encode_layer(x, &pair[0], &pair[1]))
-                .collect();
+            current = self.reencode(
+                exec,
+                &format!("dr_reencode/{}", net.name),
+                &current,
+                &pair[0],
+                &pair[1],
+            )?;
         }
         let mut restored =
             resumed.map(|s| (TrainCursor::from_state(&s), s.params));
@@ -1321,13 +1394,67 @@ impl Engine {
             // keep the encoder half; re-encode through it (bit-compatible
             // ideal-crossbar math) for the next stage
             let (gp, gn) = (&trained[0], &trained[1]);
-            current = current
-                .iter()
-                .map(|x| params::encode_layer(x, gp, gn))
-                .collect();
+            current = self.reencode(
+                exec,
+                &format!("dr_reencode/{}_stage{s}", net.name),
+                &current,
+                gp,
+                gn,
+            )?;
             encoder_params.extend_from_slice(&trained[..2]);
         }
         Ok((encoder_params, reports))
+    }
+
+    /// One DR inter-stage re-encode pass: every sample through a
+    /// trained encoder layer. The pipelined exec modes stream it
+    /// through a single-stage pipeline — bit-identical to the
+    /// per-sample [`params::encode_layer`] math (the forward is
+    /// row-independent; pinned by `tests/pipeline_determinism.rs`).
+    fn reencode(
+        &self,
+        exec: ExecMode,
+        op: &str,
+        xs: &[Vec<f32>],
+        gp: &ArrayF32,
+        gn: &ArrayF32,
+    ) -> Result<Vec<Vec<f32>>> {
+        if exec == ExecMode::DataParallel {
+            return Ok(xs
+                .iter()
+                .map(|x| params::encode_layer(x, gp, gn))
+                .collect());
+        }
+        let pair = [gp.clone(), gn.clone()];
+        let dims = xs.first().map_or(0, Vec::len);
+        let (out, report) = if exec == ExecMode::Pipelined {
+            pipeline::forward_pipelined(
+                self.backend.as_ref(),
+                op.to_string(),
+                FwdMode::Final,
+                &pair,
+                xs,
+                dims,
+                0,
+                1,
+                apps::FWD_BATCH,
+            )?
+        } else {
+            pipeline::forward_hybrid(
+                self.backend.as_ref(),
+                op.to_string(),
+                FwdMode::Final,
+                &pair,
+                xs,
+                dims,
+                0,
+                1,
+                apps::FWD_BATCH,
+                self.workers(),
+            )?
+        };
+        self.record_pipeline(report);
+        Ok(out)
     }
 
     /// Batched recognition through the net's forward graph, sharded
@@ -1357,11 +1484,15 @@ impl Engine {
         self.batched_forward(net, mode, params, xs, idx)
     }
 
-    /// Sharded batched forward: contiguous tile-aligned shards run on
-    /// the worker pool, each executing the same tile loop the
+    /// Batched forward, dispatched on the engine's [`ExecMode`].
+    ///
+    /// Data-parallel (the default): contiguous tile-aligned shards run
+    /// on the worker pool, each executing the same tile loop the
     /// sequential engine ran ([`forward_range`]); shard outputs
-    /// concatenate left-to-right, so results are bit-identical to the
-    /// sequential path at any worker count.
+    /// concatenate left-to-right. Pipelined/hybrid: the same tile
+    /// chunks stream through layer stages
+    /// ([`pipeline::forward_pipelined`]). All paths are bit-identical
+    /// to the sequential loop at any worker/stage count.
     fn batched_forward(
         &self,
         net: &Network,
@@ -1371,27 +1502,41 @@ impl Engine {
         output_idx: usize,
     ) -> Result<Vec<Vec<f32>>> {
         let graph = net.fwd_artifact();
-        let plan = self.shard_plan(net, xs.len());
         // One global row width for every shard (as the sequential loop
         // had), so ragged inputs cannot make shards disagree.
         let dims = xs.first().map_or(0, Vec::len);
         let backend = self.backend.as_ref();
-        let (shard_outs, _) = self.run_sharded(
-            format!("forward_batch/{graph}"),
-            &plan,
-            |_, (lo, hi)| {
-                forward_range(
-                    backend,
-                    &graph,
-                    mode,
-                    params,
-                    &xs[lo..hi],
-                    dims,
-                    output_idx,
-                    plan.tile,
-                )
-            },
-        );
+        let op = format!("forward_batch/{graph}");
+        if self.exec != ExecMode::DataParallel {
+            let stages =
+                self.pipeline_stages.unwrap_or(params.len() / 2).max(1);
+            let (out, report) = if self.exec == ExecMode::Pipelined {
+                pipeline::forward_pipelined(
+                    backend, op, mode, params, xs, dims, output_idx,
+                    stages, apps::FWD_BATCH,
+                )?
+            } else {
+                pipeline::forward_hybrid(
+                    backend, op, mode, params, xs, dims, output_idx,
+                    stages, apps::FWD_BATCH, self.workers(),
+                )?
+            };
+            self.record_pipeline(report);
+            return Ok(out);
+        }
+        let plan = self.shard_plan(net, xs.len());
+        let (shard_outs, _) = self.run_sharded(op, &plan, |_, (lo, hi)| {
+            forward_range(
+                backend,
+                &graph,
+                mode,
+                params,
+                &xs[lo..hi],
+                dims,
+                output_idx,
+                plan.tile,
+            )
+        });
         let mut out = Vec::with_capacity(xs.len());
         for rows in shard_outs {
             out.extend(rows?);

@@ -1,0 +1,686 @@
+//! Layer-pipelined streaming execution: the second parallelism axis.
+//!
+//! The data-parallel pool ([`super::pool`]) replicates the whole
+//! network and splits the *batch*; this module instead splits the
+//! *network* — layer `l` (or a group of layers when one underfills a
+//! stage) runs as a dedicated pipeline stage, and samples stream
+//! through the stages like parts down an assembly line. This is the
+//! execution shape of the follow-up streaming-multicore paper
+//! (arXiv:1606.04609): each core group holds its layer's weights
+//! resident and works on a different chunk of the sample stream at the
+//! same time. `mapper::plan_pipeline` gives every stage its core group
+//! on the mesh, and `sim::pipeline_cost` prices the stage-boundary
+//! activations crossing the NoC.
+//!
+//! # Backpressure
+//!
+//! Stages are connected by **bounded** `sync_channel`s sized from the
+//! chip's 4 kB input buffer ([`stream::buffer_capacity`] for the
+//! boundary's activation width, in whole chunks) — the same sizing the
+//! serving queue uses. A slow stage therefore stalls its producer
+//! (blocking send) instead of buffering unboundedly, exactly like the
+//! DMA backpressure on the modeled input buffer; the stall shows up as
+//! [`StageReport::stall_s`].
+//!
+//! # Determinism contract
+//!
+//! Pipelined results are **bit-identical** to the sequential and
+//! data-parallel paths, by construction:
+//!
+//! * chunk boundaries are fixed by `(n_items, tile)` — the identical
+//!   tile loop the sequential `forward_range` runs, padding included —
+//!   and stage boundaries by `(n_layers, stages)`
+//!   ([`mapper::stage_layer_bounds`]), never by timing;
+//! * inter-stage queues are FIFO with one producer and one consumer,
+//!   so chunks pass every stage in input order;
+//! * each stage applies the same input clip / bias append / crossbar
+//!   forward ([`Backend::forward`]) the fused batched forward applies,
+//!   layer by layer, and the forward math is row-independent, so a
+//!   chunk's real rows never see its padding rows.
+//!
+//! Threads only decide *when* a stage runs a chunk, never *what* it
+//! computes. `tests/pipeline_determinism.rs` pins this across every
+//! registered app, worker count and stage count through
+//! [`testing::ExecModeHarness`](crate::testing::ExecModeHarness).
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::time::Instant;
+
+use anyhow::{anyhow, ensure, Result};
+
+use super::pool::ShardPlan;
+use super::stream;
+use crate::config::hwspec as hw;
+use crate::mapper;
+use crate::runtime::{clip_input, with_bias, ArrayF32, Backend, FwdMode};
+
+/// How the engine executes a batched forward pass.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Replicate the network, split the batch into contiguous shards
+    /// over the worker pool (the PR 2 path; the default).
+    #[default]
+    DataParallel,
+    /// Split the network into layer stages and stream sample chunks
+    /// through them over bounded queues.
+    Pipelined,
+    /// Both axes: one pipeline replica per worker, each streaming its
+    /// contiguous shard of the batch.
+    Hybrid,
+}
+
+impl std::str::FromStr for ExecMode {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<ExecMode, String> {
+        match s {
+            "parallel" | "data-parallel" | "dp" => Ok(ExecMode::DataParallel),
+            "pipeline" | "pipelined" => Ok(ExecMode::Pipelined),
+            "hybrid" => Ok(ExecMode::Hybrid),
+            other => Err(format!(
+                "unknown exec mode '{other}' (parallel|pipeline|hybrid)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for ExecMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            ExecMode::DataParallel => "data-parallel",
+            ExecMode::Pipelined => "pipeline",
+            ExecMode::Hybrid => "hybrid",
+        })
+    }
+}
+
+/// Occupancy/stall accounting of one pipeline stage (summed over
+/// replicas under [`ExecMode::Hybrid`]).
+#[derive(Clone, Debug, Default)]
+pub struct StageReport {
+    /// Stage index in stream order.
+    pub stage: usize,
+    /// Network layer range `[lo, hi)` the stage owns.
+    pub layers: (usize, usize),
+    /// Chunks the stage processed.
+    pub chunks: usize,
+    /// Time spent computing (s).
+    pub busy_s: f64,
+    /// Time blocked sending into a full downstream queue (s) — the
+    /// backpressure stall.
+    pub stall_s: f64,
+    /// Time blocked waiting for an upstream chunk (s).
+    pub idle_s: f64,
+}
+
+impl StageReport {
+    /// Fraction of the stage's active time spent computing (0 when the
+    /// stage never ran).
+    pub fn occupancy(&self) -> f64 {
+        let total = self.busy_s + self.stall_s + self.idle_s;
+        if total <= 0.0 {
+            0.0
+        } else {
+            self.busy_s / total
+        }
+    }
+}
+
+/// Per-stage stats of the most recent pipelined forward — the
+/// pipeline sibling of [`ExecReport`](super::ExecReport), surfaced
+/// through [`Engine::last_pipeline_report`](super::Engine::last_pipeline_report).
+#[derive(Clone, Debug, Default)]
+pub struct PipelineReport {
+    /// Operation label, e.g. `forward_batch/mnist_class_fwd_b64`.
+    pub op: String,
+    /// Per-stage occupancy/stall accounting, in stream order.
+    pub stages: Vec<StageReport>,
+    /// Pipeline replicas that ran (1 for [`ExecMode::Pipelined`], the
+    /// shard count for [`ExecMode::Hybrid`]).
+    pub replicas: usize,
+    /// End-to-end wall-clock of the pipelined phase (s).
+    pub wall_s: f64,
+    /// Samples streamed through.
+    pub samples: usize,
+}
+
+impl PipelineReport {
+    /// Samples per second over [`Self::wall_s`] (0 when unknown).
+    pub fn throughput(&self) -> f64 {
+        if self.samples == 0 || self.wall_s <= 0.0 {
+            0.0
+        } else {
+            self.samples as f64 / self.wall_s
+        }
+    }
+
+    /// Multi-line human-readable summary (one line per stage).
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "pipeline {}: {} stage(s) x {} replica(s), {} samples in \
+             {:.3}s ({:.0} samples/s)",
+            self.op,
+            self.stages.len(),
+            self.replicas,
+            self.samples,
+            self.wall_s,
+            self.throughput(),
+        );
+        for st in &self.stages {
+            s.push_str(&format!(
+                "\n  stage {} (layers {}..{}): {} chunk(s), \
+                 busy {:.2}ms, stall {:.2}ms, idle {:.2}ms \
+                 ({:.0}% occupied)",
+                st.stage,
+                st.layers.0,
+                st.layers.1,
+                st.chunks,
+                st.busy_s * 1e3,
+                st.stall_s * 1e3,
+                st.idle_s * 1e3,
+                st.occupancy() * 100.0,
+            ));
+        }
+        s
+    }
+}
+
+/// One sample chunk travelling down the pipeline: the activations of
+/// `rows` real samples (the rest of the tile is padding), plus the
+/// bottleneck code once the owning stage has captured it.
+struct ChunkMsg {
+    rows: usize,
+    h: ArrayF32,
+    code: Option<ArrayF32>,
+}
+
+/// Where a stage's chunks come from: the first stage builds them from
+/// the input slice, every later stage receives them from upstream.
+enum StageFeed<'a> {
+    Source { xs: &'a [Vec<f32>], dims: usize, tile: usize },
+    Channel(Receiver<ChunkMsg>),
+}
+
+/// Busy/stall/idle accumulators of one stage run.
+#[derive(Default)]
+struct StageAccum {
+    chunks: usize,
+    busy_s: f64,
+    stall_s: f64,
+    idle_s: f64,
+}
+
+/// One stage's loop: acquire a chunk (build or receive), run the owned
+/// layers over it, pass it on (or, at the final stage, strip padding
+/// into output rows). Returns the timing accumulators plus the final
+/// stage's collected rows (empty elsewhere). A failed send means the
+/// downstream stage stopped (its own error will surface) — clean stop.
+#[allow(clippy::too_many_arguments)]
+fn run_stage(
+    backend: &dyn Backend,
+    params: &[ArrayF32],
+    layers: (usize, usize),
+    mode: FwdMode,
+    code_idx: usize,
+    mut feed: StageFeed<'_>,
+    next: Option<SyncSender<ChunkMsg>>,
+    collect: Option<usize>,
+) -> Result<(StageAccum, Vec<Vec<f32>>)> {
+    let mut acc = StageAccum::default();
+    let mut out = Vec::new();
+    let mut pos = 0usize;
+    loop {
+        // Acquire the next chunk. Building one from the source slice is
+        // compute (busy); waiting on the upstream queue is idle.
+        let mut msg = match &mut feed {
+            StageFeed::Source { xs, dims, tile } => {
+                if pos >= xs.len() {
+                    break;
+                }
+                let t = Instant::now();
+                let chunk = &xs[pos..(pos + *tile).min(xs.len())];
+                pos += chunk.len();
+                // The identical tile the sequential loop builds
+                // (`forward_range`): zero-padded to a full tile, input
+                // clip applied once, up front.
+                let mut data = Vec::with_capacity(*tile * *dims);
+                for x in chunk {
+                    data.extend_from_slice(x);
+                }
+                data.resize(*tile * *dims, 0.0);
+                let x_arr = ArrayF32::matrix(*tile, *dims, data)
+                    .map_err(|e| anyhow!(e))?;
+                acc.busy_s += t.elapsed().as_secs_f64();
+                ChunkMsg {
+                    rows: chunk.len(),
+                    h: clip_input(&x_arr),
+                    code: None,
+                }
+            }
+            StageFeed::Channel(rx) => {
+                let t = Instant::now();
+                match rx.recv() {
+                    Ok(msg) => {
+                        acc.idle_s += t.elapsed().as_secs_f64();
+                        msg
+                    }
+                    Err(_) => break, // upstream done (or failed)
+                }
+            }
+        };
+        // Run the owned layers — the same bias append + crossbar
+        // forward the fused `forward_batch` composes.
+        let t = Instant::now();
+        for l in layers.0..layers.1 {
+            let (gp, gn) = (&params[2 * l], &params[2 * l + 1]);
+            ensure!(
+                gp.shape[0] == msg.h.shape[1] + 1,
+                "layer {l}: crossbar has {} rows but gets {} inputs + bias",
+                gp.shape[0],
+                msg.h.shape[1]
+            );
+            let a = with_bias(&msg.h);
+            let (y, _) = backend.forward(&a, gp, gn, hw::OUT_BITS)?;
+            msg.h = y;
+            if mode == FwdMode::ReconAndCode && l == code_idx {
+                msg.code = Some(msg.h.clone());
+            }
+        }
+        acc.busy_s += t.elapsed().as_secs_f64();
+        acc.chunks += 1;
+        match &next {
+            Some(tx) => {
+                let t = Instant::now();
+                if tx.send(msg).is_err() {
+                    break;
+                }
+                acc.stall_s += t.elapsed().as_secs_f64();
+            }
+            None => {
+                let output_idx =
+                    collect.expect("final stage collects an output");
+                let y = if output_idx == 0 {
+                    msg.h
+                } else {
+                    msg.code.ok_or_else(|| {
+                        anyhow!("missing output {output_idx}")
+                    })?
+                };
+                for i in 0..msg.rows {
+                    out.push(y.row_slice(i).to_vec());
+                }
+            }
+        }
+    }
+    Ok((acc, out))
+}
+
+/// Stream `xs` through a `stages`-deep layer pipeline. Bit-identical
+/// to the sequential tile loop (see the module docs); `tile` must be
+/// the same tile the data-parallel plan uses
+/// ([`apps::FWD_BATCH`](crate::config::apps::FWD_BATCH) in practice)
+/// for the chunk boundaries to line up.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn forward_pipelined(
+    backend: &dyn Backend,
+    op: String,
+    mode: FwdMode,
+    params: &[ArrayF32],
+    xs: &[Vec<f32>],
+    dims: usize,
+    output_idx: usize,
+    stages: usize,
+    tile: usize,
+) -> Result<(Vec<Vec<f32>>, PipelineReport)> {
+    ensure!(
+        !params.is_empty() && params.len() % 2 == 0,
+        "crossbar params come in (gp, gn) pairs, got {}",
+        params.len()
+    );
+    ensure!(
+        output_idx == 0 || (mode == FwdMode::ReconAndCode && output_idx == 1),
+        "missing output {output_idx}"
+    );
+    ensure!(tile > 0, "tile must be positive");
+    let n_layers = params.len() / 2;
+    let stages = stages.clamp(1, n_layers);
+    let code_idx =
+        if n_layers > 1 { n_layers / 2 - 1 } else { n_layers - 1 };
+    let bounds: Vec<(usize, usize)> = (0..stages)
+        .map(|s| mapper::stage_layer_bounds(n_layers, stages, s))
+        .collect();
+    let t0 = Instant::now();
+    if xs.is_empty() {
+        return Ok((
+            Vec::new(),
+            PipelineReport { op, replicas: 1, ..PipelineReport::default() },
+        ));
+    }
+    // Bounded inter-stage queues: the 4 kB input-buffer sizing for the
+    // boundary's activation width, in whole chunks — a full queue
+    // blocks the producer's send (backpressure).
+    let mut feeds: Vec<StageFeed<'_>> = Vec::with_capacity(stages);
+    let mut nexts: Vec<Option<SyncSender<ChunkMsg>>> =
+        Vec::with_capacity(stages);
+    feeds.push(StageFeed::Source { xs, dims, tile });
+    for s in 0..stages - 1 {
+        let boundary_width = params[2 * (bounds[s].1 - 1)].shape[1];
+        let cap =
+            stream::buffer_capacity(boundary_width).div_ceil(tile).max(1);
+        let (tx, rx) = sync_channel(cap);
+        nexts.push(Some(tx));
+        feeds.push(StageFeed::Channel(rx));
+    }
+    nexts.push(None);
+    let results: Vec<Result<(StageAccum, Vec<Vec<f32>>)>> =
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = feeds
+                .into_iter()
+                .zip(nexts)
+                .enumerate()
+                .map(|(s, (feed, tx))| {
+                    let layers = bounds[s];
+                    let collect =
+                        (s + 1 == stages).then_some(output_idx);
+                    scope.spawn(move || {
+                        run_stage(
+                            backend, params, layers, mode, code_idx, feed,
+                            tx, collect,
+                        )
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("pipeline stage thread panicked"))
+                .collect()
+        });
+    let mut out = Vec::new();
+    let mut stage_reports = Vec::with_capacity(stages);
+    for (s, result) in results.into_iter().enumerate() {
+        let (acc, rows) = result?;
+        stage_reports.push(StageReport {
+            stage: s,
+            layers: bounds[s],
+            chunks: acc.chunks,
+            busy_s: acc.busy_s,
+            stall_s: acc.stall_s,
+            idle_s: acc.idle_s,
+        });
+        if s + 1 == stages {
+            out = rows;
+        }
+    }
+    ensure!(
+        out.len() == xs.len(),
+        "pipeline returned {} rows for {} samples",
+        out.len(),
+        xs.len()
+    );
+    Ok((
+        out,
+        PipelineReport {
+            op,
+            stages: stage_reports,
+            replicas: 1,
+            wall_s: t0.elapsed().as_secs_f64(),
+            samples: xs.len(),
+        },
+    ))
+}
+
+/// Hybrid execution: one pipeline replica per worker, each streaming a
+/// contiguous tile-aligned shard of `xs` ([`ShardPlan::contiguous`] —
+/// the data-parallel shard rule, so every shard's chunks are exactly
+/// the chunks the sequential loop would build over that range).
+/// Replica outputs concatenate in shard order; stage timings sum
+/// across replicas.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn forward_hybrid(
+    backend: &dyn Backend,
+    op: String,
+    mode: FwdMode,
+    params: &[ArrayF32],
+    xs: &[Vec<f32>],
+    dims: usize,
+    output_idx: usize,
+    stages: usize,
+    tile: usize,
+    replicas: usize,
+) -> Result<(Vec<Vec<f32>>, PipelineReport)> {
+    let plan = ShardPlan::contiguous(xs.len(), tile, replicas.max(1));
+    if plan.shards() <= 1 {
+        return forward_pipelined(
+            backend, op, mode, params, xs, dims, output_idx, stages, tile,
+        );
+    }
+    let t0 = Instant::now();
+    let results: Vec<Result<(Vec<Vec<f32>>, PipelineReport)>> =
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = plan
+                .bounds
+                .iter()
+                .map(|&(lo, hi)| {
+                    let op = op.clone();
+                    scope.spawn(move || {
+                        forward_pipelined(
+                            backend,
+                            op,
+                            mode,
+                            params,
+                            &xs[lo..hi],
+                            dims,
+                            output_idx,
+                            stages,
+                            tile,
+                        )
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("pipeline replica thread panicked"))
+                .collect()
+        });
+    let mut out = Vec::with_capacity(xs.len());
+    let mut stage_reports: Vec<StageReport> = Vec::new();
+    let mut replica_count = 0usize;
+    for result in results {
+        let (rows, report) = result?;
+        out.extend(rows);
+        replica_count += 1;
+        for st in report.stages {
+            match stage_reports.iter_mut().find(|r| r.stage == st.stage) {
+                Some(total) => {
+                    total.chunks += st.chunks;
+                    total.busy_s += st.busy_s;
+                    total.stall_s += st.stall_s;
+                    total.idle_s += st.idle_s;
+                }
+                None => stage_reports.push(st),
+            }
+        }
+    }
+    Ok((
+        out,
+        PipelineReport {
+            op,
+            stages: stage_reports,
+            replicas: replica_count,
+            wall_s: t0.elapsed().as_secs_f64(),
+            samples: xs.len(),
+        },
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::apps;
+    use crate::coordinator::{init_conductances, Engine};
+    use crate::runtime::NativeBackend;
+    use crate::testing::Rng;
+
+    fn samples(n: usize, dims: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::seeded(seed);
+        (0..n).map(|_| rng.vec_uniform(dims, -0.7, 0.7)).collect()
+    }
+
+    #[test]
+    fn exec_mode_parses_and_displays() {
+        for (txt, mode) in [
+            ("parallel", ExecMode::DataParallel),
+            ("data-parallel", ExecMode::DataParallel),
+            ("dp", ExecMode::DataParallel),
+            ("pipeline", ExecMode::Pipelined),
+            ("pipelined", ExecMode::Pipelined),
+            ("hybrid", ExecMode::Hybrid),
+        ] {
+            assert_eq!(txt.parse::<ExecMode>().unwrap(), mode);
+        }
+        assert_eq!(ExecMode::default(), ExecMode::DataParallel);
+        let err = "warp".parse::<ExecMode>().unwrap_err();
+        assert!(err.contains("unknown exec mode 'warp'"), "{err}");
+        assert_eq!(ExecMode::Pipelined.to_string(), "pipeline");
+    }
+
+    #[test]
+    fn pipelined_forward_matches_the_sequential_engine() {
+        // Chunked + staged streaming must reproduce the fused batched
+        // forward bit for bit, at every stage depth, with a ragged
+        // tail tile in play (70 = 64 + 6).
+        let net = apps::network("mnist_class").unwrap();
+        let params = init_conductances(net.layers, 5);
+        let xs = samples(70, net.layers[0], 40);
+        let engine = Engine::native();
+        let want = engine.infer(net, &params, &xs).unwrap();
+        let n_layers = net.layers.len() - 1;
+        for stages in 1..=n_layers + 1 {
+            let (got, report) = forward_pipelined(
+                &NativeBackend,
+                "test".to_string(),
+                FwdMode::Final,
+                &params,
+                &xs,
+                net.layers[0],
+                0,
+                stages,
+                apps::FWD_BATCH,
+            )
+            .unwrap();
+            assert_eq!(got, want, "stages={stages}");
+            assert_eq!(report.samples, 70);
+            assert_eq!(report.stages.len(), stages.min(n_layers));
+            assert!(report
+                .stages
+                .iter()
+                .all(|s| s.chunks == 2), "every stage sees every chunk");
+        }
+    }
+
+    #[test]
+    fn code_capture_rides_the_pipeline() {
+        // The AE bottleneck is captured mid-pipeline and must travel to
+        // the final stage intact, for both outputs.
+        let net = apps::network("kdd_ae").unwrap();
+        let params = init_conductances(net.layers, 9);
+        let xs = samples(10, net.layers[0], 41);
+        let engine = Engine::native();
+        for output_idx in [0usize, 1] {
+            let want = if output_idx == 0 {
+                engine.reconstruct(net, &params, &xs).unwrap()
+            } else {
+                engine.encode(net, &params, &xs).unwrap()
+            };
+            let (got, _) = forward_pipelined(
+                &NativeBackend,
+                "test".to_string(),
+                FwdMode::ReconAndCode,
+                &params,
+                &xs,
+                net.layers[0],
+                output_idx,
+                2,
+                apps::FWD_BATCH,
+            )
+            .unwrap();
+            assert_eq!(got, want, "output {output_idx}");
+        }
+    }
+
+    #[test]
+    fn hybrid_replicas_concatenate_in_shard_order() {
+        let net = apps::network("iris_class").unwrap();
+        let params = init_conductances(net.layers, 2);
+        let xs = samples(200, net.layers[0], 17);
+        let engine = Engine::native();
+        let want = engine.infer(net, &params, &xs).unwrap();
+        let (got, report) = forward_hybrid(
+            &NativeBackend,
+            "test".to_string(),
+            FwdMode::Final,
+            &params,
+            &xs,
+            net.layers[0],
+            0,
+            2,
+            apps::FWD_BATCH,
+            3,
+        )
+        .unwrap();
+        assert_eq!(got, want);
+        assert_eq!(report.replicas, 3);
+        assert_eq!(report.samples, 200);
+    }
+
+    #[test]
+    fn degenerate_inputs_are_handled() {
+        let net = apps::network("iris_ae").unwrap();
+        let params = init_conductances(net.layers, 1);
+        // empty stream: no rows, no stages run
+        let (out, report) = forward_pipelined(
+            &NativeBackend,
+            "empty".to_string(),
+            FwdMode::ReconAndCode,
+            &params,
+            &[],
+            4,
+            0,
+            2,
+            apps::FWD_BATCH,
+        )
+        .unwrap();
+        assert!(out.is_empty());
+        assert_eq!(report.samples, 0);
+        // an odd parameter list cannot form (gp, gn) pairs
+        let mut odd = params.clone();
+        odd.pop();
+        let err = forward_pipelined(
+            &NativeBackend,
+            "odd".to_string(),
+            FwdMode::Final,
+            &odd,
+            &samples(3, 4, 7),
+            4,
+            0,
+            1,
+            apps::FWD_BATCH,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("(gp, gn) pairs"), "{err}");
+        // a Final-mode pipeline has no second output to collect
+        let err = forward_pipelined(
+            &NativeBackend,
+            "noout".to_string(),
+            FwdMode::Final,
+            &params,
+            &samples(3, 4, 7),
+            4,
+            1,
+            1,
+            apps::FWD_BATCH,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("missing output 1"), "{err}");
+    }
+}

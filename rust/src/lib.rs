@@ -23,7 +23,14 @@
 //!   bit-identical to sequential execution at any worker count — and
 //!   training joins the pool through mini-batch gradient accumulation
 //!   ([`coordinator::Engine::fit`]; `restream train --batch N`),
-//!   bit-identical at any worker count for a fixed batch size. On top
+//!   bit-identical at any worker count for a fixed batch size. The
+//!   batched forward also runs **layer-pipelined**
+//!   ([`coordinator::ExecMode`]; `--exec pipeline|hybrid [--stages N]`):
+//!   layer groups on disjoint core groups with samples streaming
+//!   between them over bounded in-order queues, per-hop NoC cost
+//!   modeled by `sim::pipeline_cost`, per-stage occupancy reported —
+//!   and still bit-identical to the sequential engine in every mode
+//!   ([`testing::ExecModeHarness`]). On top
 //!   of the pool sits the serving front end ([`serve`]): a bounded
 //!   request queue plus a dynamic micro-batcher that coalesces
 //!   independent single-sample requests into tile-aligned batches

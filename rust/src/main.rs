@@ -41,7 +41,12 @@
 //! (default: `$RESTREAM_BACKEND` or `native`) and `--workers N`
 //! (default: `$RESTREAM_WORKERS` or 1) — the worker-pool size the
 //! batched operations shard over; results are bit-identical at any
-//! worker count. `train --batch N` selects the mini-batch size: 1
+//! worker count. `--exec parallel|pipeline|hybrid` picks the
+//! execution mode of the batched forward passes: data-parallel
+//! sharding (default), layer-pipelined streaming over `--stages N`
+//! core groups, or pipelined shard replicas — outputs are
+//! bit-identical in every mode (DESIGN.md "Pipelined execution"),
+//! and the pipelined modes print per-stage occupancy/stall. `train --batch N` selects the mini-batch size: 1
 //! (default) is the paper's per-sample stochastic BP, N > 1 runs
 //! data-parallel gradient accumulation over the pool with one weight
 //! update per mini-batch — also bit-identical at any `--workers` for a
@@ -128,7 +133,14 @@ fn engine_for(o: &cli::EngineOpts) -> anyhow::Result<Engine> {
     let workers = o
         .workers
         .unwrap_or_else(restream::coordinator::default_workers);
-    Ok(engine.with_workers(workers))
+    let mut engine = engine.with_workers(workers);
+    if let Some(exec) = o.exec {
+        engine = engine.with_exec(exec);
+    }
+    if let Some(stages) = o.stages {
+        engine = engine.with_pipeline_stages(stages);
+    }
+    Ok(engine)
 }
 
 fn dataset_for(app: &str, n: usize, seed: u64) -> anyhow::Result<datasets::Dataset> {
@@ -222,6 +234,9 @@ fn cmd_train(t: &cli::TrainCmd) -> anyhow::Result<()> {
             );
         }
     }
+    // DR re-encodes and post-train classification follow `--exec`;
+    // surface the per-stage occupancy of the last pipelined pass
+    print_pipeline_report(&engine);
     Ok(())
 }
 
@@ -279,6 +294,7 @@ fn cmd_infer(i: &cli::InferCmd) -> anyhow::Result<()> {
         outs.len() as f64 / dt
     );
     print_parallel_report(&engine);
+    print_pipeline_report(&engine);
     Ok(())
 }
 
@@ -297,6 +313,14 @@ fn print_parallel_report(engine: &Engine) {
             rep.busy_s(),
             rep.wall_s
         );
+    }
+}
+
+/// Per-stage occupancy/stall of the last layer-pipelined operation
+/// (`--exec pipeline|hybrid`; DESIGN.md "Pipelined execution").
+fn print_pipeline_report(engine: &Engine) {
+    if let Some(rep) = engine.last_pipeline_report() {
+        println!("{}", rep.summary());
     }
 }
 
@@ -636,6 +660,11 @@ fn print_usage() {
          [--flags]\n\
          math subcommands take --backend native|pjrt (default native)\n\
          and --workers N (worker-pool size, default $RESTREAM_WORKERS or 1)\n\
+         and --exec parallel|pipeline|hybrid [--stages N] (execution \
+         mode:\n\
+         data-parallel sharding, layer-pipelined streaming over N \
+         stages,\n\
+         or both; bit-identical outputs in every mode)\n\
          train: --batch N (mini-batch size; 1 = per-sample stochastic BP,\n\
          N > 1 = data-parallel gradient accumulation, bit-identical at\n\
          any --workers)\n\

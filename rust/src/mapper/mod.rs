@@ -19,6 +19,7 @@
 mod placement;
 
 pub use placement::{place, place_at, Placement};
+pub(crate) use placement::row_segment;
 
 use crate::config::hwspec as hw;
 use crate::config::{AppKind, Network, SystemConfig};
@@ -240,6 +241,134 @@ pub fn shard_hint(net: &Network, sys: &SystemConfig) -> usize {
         .unwrap_or(1)
 }
 
+/// Placement of one pipeline stage: the contiguous layer group
+/// `[layers.0, layers.1)` mapped as its own [`StageMap`] at a fixed
+/// core offset in the mesh.
+#[derive(Clone, Debug)]
+pub struct PipelineStagePlan {
+    /// Stage index in stream order.
+    pub stage: usize,
+    /// Network layer range `[lo, hi)` this stage owns.
+    pub layers: (usize, usize),
+    /// The stage's core mapping (row/column splits, phases).
+    pub map: StageMap,
+    /// First mesh core id of the stage's core group (row-major,
+    /// [`SystemConfig::core_xy`](crate::config::SystemConfig::core_xy)
+    /// resolves coordinates).
+    pub core_offset: usize,
+}
+
+impl PipelineStagePlan {
+    /// Cores the stage occupies.
+    pub fn cores_used(&self) -> usize {
+        self.map.cores_used()
+    }
+}
+
+/// Placement of a whole layer pipeline: every stage resident on its own
+/// core group so samples stream through without reconfiguration —
+/// the execution shape of the follow-up streaming-multicore paper
+/// (arXiv:1606.04609). When the stages together overflow the mesh,
+/// later stages wrap to core 0 and `resident` turns false: the chip
+/// would time-share those core groups (reconfiguration swaps), but the
+/// stream semantics — and therefore the results — are unchanged.
+#[derive(Clone, Debug)]
+pub struct PipelinePlan {
+    /// Application name.
+    pub app: String,
+    /// Per-stage placements, in stream order.
+    pub stages: Vec<PipelineStagePlan>,
+    /// Sum of per-stage core demands.
+    pub total_cores: usize,
+    /// True when every stage holds its cores simultaneously.
+    pub resident: bool,
+}
+
+impl PipelinePlan {
+    /// Number of pipeline stages.
+    pub fn n_stages(&self) -> usize {
+        self.stages.len()
+    }
+}
+
+/// Contiguous layer range of stage `s` when `n_layers` layers split
+/// into `stages` groups, earlier stages taking the remainder — the
+/// same segmentation rule as [`ShardPlan::contiguous`]
+/// (`crate::coordinator::ShardPlan`), which is what keeps the stage
+/// boundaries a pure function of `(n_layers, stages)`.
+pub fn stage_layer_bounds(
+    n_layers: usize,
+    stages: usize,
+    s: usize,
+) -> (usize, usize) {
+    let stages = stages.clamp(1, n_layers.max(1));
+    let mut lo = 0;
+    for i in 0..s {
+        lo += segment(n_layers, stages, i);
+    }
+    (lo, lo + segment(n_layers, stages, s))
+}
+
+/// Place a layer pipeline: split the net's layers into `stages`
+/// contiguous groups (clamped to `1..=n_layers`; a group absorbs
+/// several layers when one layer underfills a stage), map each group as
+/// its own [`StageMap`], and hand every stage a dedicated core group at
+/// cumulative offsets. Errors when any single layer exceeds the core
+/// budget (truly unmappable) and for clustering workloads, which have
+/// no layer pipeline.
+pub fn plan_pipeline(
+    net: &Network,
+    sys: &SystemConfig,
+    stages: usize,
+) -> Result<PipelinePlan, String> {
+    if net.kind == AppKind::Kmeans {
+        return Err("k-means maps to the clustering core".into());
+    }
+    let shapes = net.layer_shapes();
+    let n_layers = shapes.len();
+    let stages = stages.clamp(1, n_layers.max(1));
+    let budget = sys.neural_cores;
+    let mut plans = Vec::with_capacity(stages);
+    let mut offset = 0usize;
+    let mut total_cores = 0usize;
+    let mut resident = true;
+    for s in 0..stages {
+        let (lo, hi) = stage_layer_bounds(n_layers, stages, s);
+        let mut layers = Vec::with_capacity(hi - lo);
+        for l in lo..hi {
+            let (n_in, n_out) = shapes[l];
+            layers.push(map_layer(l - lo, n_in, n_out)?);
+        }
+        let phases = StageMap::split_phases(&layers, budget)?;
+        let map = StageMap {
+            name: format!("{}_pipe{}", net.name, s),
+            layers,
+            phases,
+        };
+        let cores = map.cores_used();
+        if offset + cores > budget {
+            // This stage cannot sit next to its predecessors: wrap to
+            // core 0 and mark the pipeline time-shared.
+            resident = false;
+            offset = 0;
+        }
+        plans.push(PipelineStagePlan {
+            stage: s,
+            layers: (lo, hi),
+            map,
+            core_offset: offset,
+        });
+        offset += cores;
+        total_cores += cores;
+    }
+    Ok(PipelinePlan {
+        app: net.name.to_string(),
+        stages: plans,
+        total_cores,
+        resident,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -348,6 +477,53 @@ mod tests {
         // many-way — the pool scales with the placement
         assert_eq!(shard_hint(apps::network("kdd_ae").unwrap(), &sys), 2);
         assert!(shard_hint(apps::network("mnist_class").unwrap(), &sys) > 10);
+    }
+
+    #[test]
+    fn pipeline_plans_cover_layers_with_disjoint_core_groups() {
+        let sys = SystemConfig::default();
+        for net in apps::NETWORKS {
+            let n_layers = net.layers.len() - 1;
+            for stages in [1, 2, n_layers, n_layers + 3] {
+                let p = plan_pipeline(net, &sys, stages).unwrap();
+                assert!(p.n_stages() >= 1 && p.n_stages() <= n_layers);
+                // stages own the layers contiguously, in stream order
+                let mut next = 0;
+                for st in &p.stages {
+                    assert_eq!(st.layers.0, next, "{} s{}", net.name, st.stage);
+                    assert!(st.layers.1 > st.layers.0, "{}", net.name);
+                    next = st.layers.1;
+                }
+                assert_eq!(next, n_layers, "{}", net.name);
+                assert_eq!(
+                    p.total_cores,
+                    p.stages.iter().map(|s| s.cores_used()).sum::<usize>()
+                );
+                if p.resident {
+                    // resident pipelines hold disjoint core ranges
+                    let mut spans: Vec<(usize, usize)> = p
+                        .stages
+                        .iter()
+                        .map(|s| {
+                            (s.core_offset, s.core_offset + s.cores_used())
+                        })
+                        .collect();
+                    spans.sort_unstable();
+                    for w in spans.windows(2) {
+                        assert!(w[0].1 <= w[1].0, "{} overlaps", net.name);
+                    }
+                    assert!(spans.last().unwrap().1 <= sys.neural_cores);
+                }
+            }
+        }
+        // the deep ISOLET stack cannot hold every stage resident at once
+        let isolet = apps::network("isolet_class").unwrap();
+        let full = plan_pipeline(isolet, &sys, isolet.layers.len() - 1);
+        assert!(!full.unwrap().resident);
+        // stage boundaries are the even-segmentation rule, verbatim
+        assert_eq!(stage_layer_bounds(5, 2, 0), (0, 3));
+        assert_eq!(stage_layer_bounds(5, 2, 1), (3, 5));
+        assert_eq!(stage_layer_bounds(2, 9, 1), (1, 2));
     }
 
     #[test]

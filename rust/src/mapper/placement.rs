@@ -25,7 +25,10 @@ pub struct Placement {
 }
 
 /// Row segment (input indices, bias excluded) a row-split sees.
-fn row_segment(n_in: usize, row_splits: usize, rs: usize) -> (usize, usize) {
+/// Crate-visible so `sim::pipeline_cost` derives the stage-boundary
+/// transfers with the exact segmentation the in-stage placement uses.
+pub(crate) fn row_segment(n_in: usize, row_splits: usize, rs: usize)
+    -> (usize, usize) {
     // Mirrors mapper::segment on n_in+1 rows; the bias row is pinned to
     // the last split, so data rows divide as evenly as possible.
     let total = n_in + 1;

@@ -27,5 +27,6 @@ mod pjrt;
 pub use array::ArrayF32;
 pub use backend::{Backend, FwdMode, GradBatch, KmeansStep, NativeBackend};
 pub use meta::Meta;
+pub(crate) use native::{clip_input, with_bias};
 #[cfg(feature = "pjrt")]
 pub use pjrt::{Executable, PjrtBackend, Runtime};

@@ -26,7 +26,10 @@ fn rank2(a: &ArrayF32, what: &str) -> Result<(usize, usize)> {
 }
 
 /// Clip a batch of samples to the op-amp rails (`jnp.clip` twin).
-fn clip_input(x: &ArrayF32) -> ArrayF32 {
+/// Crate-visible so the layer-pipelined driver
+/// (`coordinator::pipeline`) applies the identical input conditioning
+/// at its first stage.
+pub(crate) fn clip_input(x: &ArrayF32) -> ArrayF32 {
     ArrayF32 {
         shape: x.shape.clone(),
         data: x
@@ -39,7 +42,9 @@ fn clip_input(x: &ArrayF32) -> ArrayF32 {
 
 /// Append the bias column: one input pinned at the positive rail
 /// (`model._with_bias` twin). `h` is `(batch, w)`; returns `(batch, w+1)`.
-fn with_bias(h: &ArrayF32) -> ArrayF32 {
+/// Crate-visible so the layer-pipelined driver composes per-layer
+/// forwards bit-identically to [`forward_batch`].
+pub(crate) fn with_bias(h: &ArrayF32) -> ArrayF32 {
     let (batch, w) = (h.shape[0], h.shape[1]);
     let mut data = Vec::with_capacity(batch * (w + 1));
     for b in 0..batch {

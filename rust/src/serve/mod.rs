@@ -463,6 +463,91 @@ mod tests {
     }
 
     #[test]
+    fn zero_wait_with_unit_queue_serves_every_request() {
+        // The tightest legal configuration: never wait for stragglers
+        // and an ingress queue one sample deep, so every submit rides
+        // the full-queue backpressure path. All requests must still be
+        // answered, in order.
+        let server = iris_server(ServeConfig {
+            max_wait: Duration::ZERO,
+            queue_capacity: Some(1),
+            ..ServeConfig::default()
+        });
+        let client = server.client();
+        let pendings: Vec<Pending> = (0..12)
+            .map(|i| {
+                client
+                    .submit(vec![0.01 * i as f32, 0.0, 0.1, -0.1])
+                    .unwrap()
+            })
+            .collect();
+        for (i, pending) in pendings.into_iter().enumerate() {
+            assert_eq!(pending.wait().unwrap().id, i as u64);
+        }
+        drop(client);
+        let report = server.shutdown();
+        assert_eq!(report.requests, 12);
+        assert_eq!(report.errors, 0);
+    }
+
+    #[test]
+    fn empty_request_is_rejected_at_submit() {
+        // A zero-dim sample must be refused before it reaches the
+        // queue — same typed path as any other width mismatch.
+        let server = iris_server(ServeConfig::default());
+        let client = server.client();
+        let err = client.submit(Vec::new()).unwrap_err();
+        assert!(err.to_string().contains("0 dims"), "{err}");
+        drop(client);
+        assert_eq!(server.shutdown().requests, 0);
+    }
+
+    #[test]
+    fn shutdown_answers_every_queued_request() {
+        // Requests still queued when the last client hangs up must be
+        // answered, never dropped: the batcher flushes its partial
+        // batch on disconnect and shutdown joins the dispatcher. The
+        // generous max_wait guarantees the burst is still queued when
+        // shutdown starts.
+        let server = iris_server(ServeConfig {
+            max_wait: Duration::from_secs(5),
+            ..ServeConfig::default()
+        });
+        let client = server.client();
+        let pendings: Vec<Pending> = (0..7)
+            .map(|_| client.submit(vec![0.2, -0.1, 0.0, 0.3]).unwrap())
+            .collect();
+        drop(client);
+        let report = server.shutdown();
+        assert_eq!(report.requests, 7);
+        assert_eq!(report.errors, 0);
+        for pending in pendings {
+            // replies were buffered before shutdown returned; the
+            // typed "shut down before replying" error here would mean
+            // a request was silently dropped
+            pending.wait().expect("queued request was dropped");
+        }
+    }
+
+    #[test]
+    fn a_dead_dispatcher_is_a_typed_error_not_a_hang() {
+        // Drop the receiving end with a request still queued: the
+        // receipt settles with the typed shutdown error (anything
+        // else would hang the caller forever), and later submits
+        // fail fast with their own typed error.
+        let (client, rx) = Client::channel(4, 4);
+        let pending = client.submit(vec![0.0; 4]).unwrap();
+        drop(rx);
+        let err = pending.wait().unwrap_err();
+        assert!(
+            err.to_string().contains("shut down before replying"),
+            "{err}"
+        );
+        let err = client.submit(vec![0.0; 4]).unwrap_err();
+        assert!(err.to_string().contains("server is shut down"), "{err}");
+    }
+
+    #[test]
     fn broken_params_surface_as_request_errors() {
         let net = apps::network("iris_ae").unwrap().clone();
         let mut params = init_conductances(net.layers, 3);

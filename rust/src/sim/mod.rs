@@ -19,13 +19,14 @@
 //! (one training item passes every stage each iteration). The clustering
 //! rows use the digital core's cycle model instead.
 
+use crate::config::hwspec as hw;
 use crate::config::{apps, AppKind, Network, SystemConfig};
 use crate::cores::risc::ConfigWork;
 use crate::cores::{ClusterCore, RiscCore, Step};
-use crate::mapper::{self, place, LayerMap, StageMap};
+use crate::mapper::{self, place, place_at, LayerMap, StageMap};
 use crate::memory::DmaEngine;
 use crate::noc::switch::SwitchConfig;
-use crate::noc::{Schedule, Transfer};
+use crate::noc::{Schedule, Transfer, Xy};
 use crate::power::{self, neural_core, EnergyAccount};
 
 /// One row of Table III / Table IV.
@@ -352,6 +353,161 @@ pub fn reconfig_cost_of(stage: &StageMap, sys: &SystemConfig)
     }
 }
 
+/// Modeled cost of running `net`'s forward pass as a layer pipeline
+/// ([`mapper::plan_pipeline`]) — the timing twin of
+/// `coordinator::pipeline`.
+///
+/// Per stage: the forward-only cost of its resident layer group
+/// (compute steps + intra-stage combiner traffic, as
+/// [`recognition_cost`] prices them). Per stage *boundary*: the
+/// producing layer's final outputs (combiner outputs when it was
+/// row-split) crossing the mesh to the next stage's layer-0 consumer
+/// cores at their planned offsets — each consumer receives exactly its
+/// row segment, scheduled over the statically time-multiplexed NoC
+/// ([`Schedule`]) like every other transfer in the model.
+#[derive(Clone, Debug)]
+pub struct PipelineCost {
+    pub app: String,
+    /// Sum of per-stage core demands.
+    pub cores: usize,
+    /// True when every stage holds its core group simultaneously
+    /// (non-resident pipelines time-share; see
+    /// [`mapper::PipelinePlan::resident`]).
+    pub resident: bool,
+    /// Per-stage forward compute time (s), in stream order.
+    pub stage_time_s: Vec<f64>,
+    /// Per-boundary NoC transfer time (s); entry `i` prices the
+    /// stage `i` → `i+1` activation hop.
+    pub hop_time_s: Vec<f64>,
+    /// NoC energy of all stage-boundary hops (J).
+    pub hop_energy_j: f64,
+}
+
+impl PipelineCost {
+    /// Steady-state pipeline interval (s): the slowest stage plus its
+    /// outgoing hop — once the pipe is full, one sample completes per
+    /// interval, so throughput = 1 / interval.
+    pub fn interval_s(&self) -> f64 {
+        (0..self.stage_time_s.len())
+            .map(|s| {
+                self.stage_time_s[s]
+                    + self.hop_time_s.get(s).copied().unwrap_or(0.0)
+            })
+            .fold(0.0, f64::max)
+    }
+
+    /// Fill latency (s): one sample's end-to-end path through every
+    /// stage and boundary hop.
+    pub fn latency_s(&self) -> f64 {
+        self.stage_time_s.iter().sum::<f64>()
+            + self.hop_time_s.iter().sum::<f64>()
+    }
+}
+
+/// Stage-boundary transfers: the producing layer's final outputs to the
+/// consuming layer's non-combiner cores, each receiving its row
+/// segment — the inter-layer rule of [`place_at`], applied across the
+/// stage boundary. Zero-hop pairs (a non-resident stage wrapping onto
+/// its producer's stops) are local handoffs, not mesh traffic.
+fn boundary_transfers(
+    prod: &LayerMap,
+    prod_coords: &[Xy],
+    cons: &LayerMap,
+    cons_coords: &[Xy],
+) -> Vec<Transfer> {
+    let mut out = Vec::new();
+    for (s, sl) in cons.slices.iter().enumerate() {
+        if sl.is_combiner {
+            continue;
+        }
+        let (seg_lo, seg_hi) =
+            mapper::row_segment(cons.n_in, cons.row_splits, sl.row_split);
+        for (ps, p) in prod.slices.iter().enumerate() {
+            let is_final = if prod.row_splits > 1 {
+                p.is_combiner
+            } else {
+                !p.is_combiner
+            };
+            if !is_final {
+                continue;
+            }
+            let lo = p.neurons.0.max(seg_lo);
+            let hi = p.neurons.1.min(seg_hi);
+            if lo >= hi || prod_coords[ps] == cons_coords[s] {
+                continue;
+            }
+            out.push(Transfer {
+                src: prod_coords[ps],
+                dst: cons_coords[s],
+                bits: (hi - lo) as u64 * hw::OUT_BITS as u64,
+            });
+        }
+    }
+    out
+}
+
+/// Price `net`'s forward pass as a `stages`-deep layer pipeline (see
+/// [`PipelineCost`]). `stages` is clamped to `1..=n_layers` exactly as
+/// the execution plan clamps it.
+pub fn pipeline_cost(net: &Network, sys: &SystemConfig, stages: usize)
+    -> Result<PipelineCost, String> {
+    let plan = mapper::plan_pipeline(net, sys, stages)?;
+    let dma = DmaEngine::default();
+    let placements: Vec<mapper::Placement> = plan
+        .stages
+        .iter()
+        .map(|st| place_at(&st.map, sys, st.core_offset))
+        .collect();
+    let mut stage_time_s = Vec::with_capacity(plan.n_stages());
+    for (st, placement) in plan.stages.iter().zip(&placements) {
+        let mut acc = EnergyAccount::new();
+        for (li, layer) in st.map.layers.iter().enumerate() {
+            // A later stage's layer 0 is fed by the boundary hop, not
+            // the memory port its standalone placement assumes.
+            if st.stage == 0 || li > 0 {
+                let ts = transfers_into_layer(
+                    &placement.fwd_transfers, &placement.coords, li);
+                noc_step(&mut acc, &ts, sys, &dma);
+            }
+            layer_step(&mut acc, layer, false, Step::Forward);
+            if layer.row_splits > 1 {
+                layer_step(&mut acc, layer, true, Step::Forward);
+            }
+        }
+        stage_time_s.push(acc.time_s);
+    }
+    let mut hop_time_s = Vec::new();
+    let mut hop_energy_j = 0.0;
+    for w in plan.stages.windows(2) {
+        let (prod_st, cons_st) = (&w[0], &w[1]);
+        let prod = prod_st.map.layers.last().expect("stage owns layers");
+        let prod_li = prod_st.map.layers.len() - 1;
+        let cons = &cons_st.map.layers[0];
+        let ts = boundary_transfers(
+            prod,
+            &placements[prod_st.stage].coords[prod_li],
+            cons,
+            &placements[cons_st.stage].coords[0],
+        );
+        if ts.is_empty() {
+            hop_time_s.push(0.0);
+            continue;
+        }
+        let sched = Schedule::build(&ts, sys.link_bits);
+        debug_assert!(sched.validate().is_ok());
+        hop_time_s.push(sched.time_s(sys.cycle_s()));
+        hop_energy_j += sched.energy_j(power::noc::ENERGY_PER_BIT_HOP_J);
+    }
+    Ok(PipelineCost {
+        app: net.name.to_string(),
+        cores: plan.total_cores,
+        resident: plan.resident,
+        stage_time_s,
+        hop_time_s,
+        hop_energy_j,
+    })
+}
+
 /// All Table III rows in paper order.
 pub fn table3(sys: &SystemConfig) -> Vec<CostRow> {
     let mut rows = Vec::new();
@@ -474,6 +630,37 @@ mod tests {
         // kdd rows: 42-row encoder + 16-row decoder crossbars
         assert_eq!(kdd.weight_rows, 42 + 16);
         assert_eq!(kdd.routers, kdd.cores + 1);
+    }
+
+    #[test]
+    fn pipeline_cost_splits_the_forward_pass() {
+        let s = sys();
+        let m = net("mnist_class");
+        let whole = recognition_cost(m, &s).unwrap();
+        let pipe = pipeline_cost(m, &s, 4).unwrap();
+        assert_eq!(pipe.stage_time_s.len(), 4);
+        assert_eq!(pipe.hop_time_s.len(), 3);
+        assert!(pipe.resident);
+        assert!(pipe.hop_energy_j > 0.0);
+        // steady state: one result per interval, and the interval (the
+        // slowest stage + its hop) beats the whole-pass latency — the
+        // throughput the pipeline buys
+        assert!(pipe.interval_s() > 0.0);
+        assert!(pipe.interval_s() < whole.time_s,
+                "interval {} whole {}", pipe.interval_s(), whole.time_s);
+        // but a single sample still pays every stage and hop
+        assert!(pipe.latency_s() > pipe.interval_s());
+        // the degenerate one-stage pipeline has no hops and runs the
+        // whole forward pass per interval
+        let one = pipeline_cost(m, &s, 1).unwrap();
+        assert!(one.hop_time_s.is_empty());
+        assert_eq!(one.hop_energy_j, 0.0);
+        assert!(one.interval_s() > pipe.interval_s());
+        // non-resident pipelines still price (time-shared core groups)
+        let iso = net("isolet_class");
+        let deep = pipeline_cost(iso, &s, iso.layers.len() - 1).unwrap();
+        assert!(!deep.resident);
+        assert!(deep.latency_s() > 0.0);
     }
 
     #[test]

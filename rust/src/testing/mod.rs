@@ -78,6 +78,17 @@ pub fn with_env<T>(
 /// implementation (dedicated server, multi-tenant chip, multi-chip
 /// cluster) must produce bit-identical outputs through it.
 ///
+/// Beyond the outputs, the drive asserts the front's accounting
+/// invariants, so every determinism suite using this harness gets
+/// them for free:
+///
+/// * **conservation** — the live [`ServeStats`](crate::serve::ServeStats)
+///   request counter grew by exactly the answered responses plus the
+///   errors (requests in = responses out + errors; a closed-loop drive
+///   with every call answered admits no other balance);
+/// * **latency ordering** — over the drive's own response timings,
+///   p50 ≤ p99 ≤ max.
+///
 /// Panics on any submit/serve error — determinism tests never expect
 /// one.
 pub fn drive_service(
@@ -88,7 +99,8 @@ pub fn drive_service(
 ) -> Vec<Vec<f32>> {
     let clients = clients.clamp(1, xs.len().max(1));
     let chunk = xs.len().div_ceil(clients);
-    let mut out: Vec<Option<Vec<f32>>> = vec![None; xs.len()];
+    let before = svc.stats();
+    let mut out: Vec<Option<(Vec<f32>, f64)>> = vec![None; xs.len()];
     std::thread::scope(|scope| {
         let mut slots = out.as_mut_slice();
         let mut inputs = xs;
@@ -103,14 +115,150 @@ pub fn drive_service(
                     let r = svc
                         .call(app, x.clone())
                         .expect("determinism drivers never expect errors");
-                    *slot = Some(r.out);
+                    *slot = Some((r.out, r.timing.total_us()));
                 }
             });
         }
     });
-    out.into_iter()
-        .map(|slot| slot.expect("every request was answered"))
-        .collect()
+    let after = svc.stats();
+    assert_eq!(
+        after.requests - before.requests,
+        xs.len() + (after.errors - before.errors),
+        "requests in must balance responses out + errors"
+    );
+    let mut totals = Vec::with_capacity(xs.len());
+    let outs: Vec<Vec<f32>> = out
+        .into_iter()
+        .map(|slot| {
+            let (row, total_us) =
+                slot.expect("every request was answered");
+            totals.push(total_us);
+            row
+        })
+        .collect();
+    let lat = crate::serve::LatencyStats::from_us(&totals);
+    assert!(
+        lat.p50_us <= lat.p99_us && lat.p99_us <= lat.max_us,
+        "latency order statistics inverted: p50 {} p99 {} max {}",
+        lat.p50_us,
+        lat.p99_us,
+        lat.max_us
+    );
+    outs
+}
+
+/// Cross-mode equivalence harness: drives the same inputs through
+/// every [`ExecMode`](crate::coordinator::ExecMode) × worker count ×
+/// stage count and asserts every run is **bitwise identical** to the
+/// sequential reference engine. `tests/pipeline_determinism.rs` runs
+/// it over every registered app; new backends and exec modes get
+/// equivalence coverage by constructing one of these.
+pub struct ExecModeHarness {
+    /// Worker-pool sizes to sweep (data-parallel shard counts;
+    /// hybrid replica counts).
+    pub workers: Vec<usize>,
+    /// Stage counts to sweep for the pipelined modes (the engine
+    /// clamps each to the app's layer count).
+    pub stages: Vec<usize>,
+}
+
+impl Default for ExecModeHarness {
+    /// The acceptance sweep: workers {1, 2, 4}, stage counts {2, 4}.
+    fn default() -> ExecModeHarness {
+        ExecModeHarness { workers: vec![1, 2, 4], stages: vec![2, 4] }
+    }
+}
+
+impl ExecModeHarness {
+    /// The default sweep (see [`ExecModeHarness::default`]).
+    pub fn new() -> ExecModeHarness {
+        ExecModeHarness::default()
+    }
+
+    /// One configured run; panics with the full configuration on any
+    /// engine error, and checks the pipelined modes actually recorded
+    /// their per-stage report.
+    fn run(
+        net: &crate::config::Network,
+        params: &[crate::runtime::ArrayF32],
+        xs: &[Vec<f32>],
+        mode: crate::coordinator::ExecMode,
+        workers: usize,
+        stages: usize,
+        encode: bool,
+    ) -> Vec<Vec<f32>> {
+        use crate::coordinator::{Engine, ExecMode};
+        let engine = Engine::native()
+            .with_workers(workers)
+            .with_exec(mode)
+            .with_pipeline_stages(stages);
+        let ctx = format!(
+            "{} {mode} workers={workers} stages={stages} encode={encode}",
+            net.name
+        );
+        let out = if encode {
+            engine.encode(net, params, xs)
+        } else {
+            engine.infer(net, params, xs)
+        }
+        .unwrap_or_else(|e| panic!("{ctx}: {e}"));
+        if mode != ExecMode::DataParallel && !xs.is_empty() {
+            let report = engine
+                .last_pipeline_report()
+                .unwrap_or_else(|| panic!("{ctx}: no pipeline report"));
+            assert_eq!(report.samples, xs.len(), "{ctx}");
+            assert!(!report.stages.is_empty(), "{ctx}");
+        }
+        out
+    }
+
+    /// Assert every exec mode × worker count × stage count reproduces
+    /// the sequential reference bit for bit, over `net`'s forward
+    /// output — and, for autoencoders, over the bottleneck code too
+    /// (the code output rides the pipeline mid-stage).
+    pub fn assert_bit_identical(
+        &self,
+        net: &crate::config::Network,
+        params: &[crate::runtime::ArrayF32],
+        xs: &[Vec<f32>],
+    ) {
+        use crate::config::AppKind;
+        use crate::coordinator::ExecMode;
+        let encodes: &[bool] = if net.kind == AppKind::Autoencoder {
+            &[false, true]
+        } else {
+            &[false]
+        };
+        for &encode in encodes {
+            let reference = Self::run(
+                net, params, xs, ExecMode::DataParallel, 1, 0, encode,
+            );
+            for &w in &self.workers {
+                let dp = Self::run(
+                    net, params, xs, ExecMode::DataParallel, w, 0, encode,
+                );
+                assert_eq!(
+                    dp, reference,
+                    "{} data-parallel workers={w} encode={encode} \
+                     diverged from sequential",
+                    net.name
+                );
+                for &s in &self.stages {
+                    for mode in [ExecMode::Pipelined, ExecMode::Hybrid] {
+                        let got = Self::run(
+                            net, params, xs, mode, w, s, encode,
+                        );
+                        assert_eq!(
+                            got, reference,
+                            "{} {mode} workers={w} stages={s} \
+                             encode={encode} diverged from sequential",
+                            net.name
+                        );
+                    }
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,109 @@
+//! Cross-mode equivalence: the layer-pipelined engine must be a pure
+//! scheduling change. Pipeline ≡ data-parallel ≡ sequential,
+//! **bitwise**, on every registered application (the DR encoder
+//! stacks and the deep mnist_class included), across workers
+//! {1, 2, 4} and multiple stage counts — all through the reusable
+//! [`ExecModeHarness`](restream::testing::ExecModeHarness), so future
+//! backends and exec modes inherit the same coverage.
+//!
+//! Why this holds by construction: chunk boundaries are a pure
+//! function of `(n_samples, tile)`, stage boundaries of
+//! `(n_layers, stages)`, inter-stage queues are in-order FIFOs, and
+//! the per-stage math is the exact clip/bias/crossbar composition of
+//! the fused forward (see `coordinator::pipeline` and DESIGN.md
+//! "Pipelined execution").
+
+use restream::config::apps;
+use restream::coordinator::{
+    init_conductances, Engine, ExecMode, TrainOptions,
+};
+use restream::testing::{ExecModeHarness, Rng};
+
+fn rows(rng: &mut Rng, n: usize, dims: usize) -> Vec<Vec<f32>> {
+    (0..n).map(|_| rng.vec_uniform(dims, -0.5, 0.5)).collect()
+}
+
+#[test]
+fn every_app_is_bit_identical_across_exec_modes() {
+    let harness = ExecModeHarness::new();
+    assert_eq!(harness.workers, vec![1, 2, 4]);
+    assert!(harness.stages.len() >= 2, "acceptance: >= 2 stage counts");
+    for net in apps::NETWORKS {
+        // enough samples to cross a tile boundary; fewer for the big
+        // ISOLET stacks to keep debug-mode test time sane
+        let n = if net.layers[0] > 500 { 33 } else { 130 };
+        let mut rng = Rng::seeded(0xC0DE ^ net.layers[0] as u64);
+        let xs = rows(&mut rng, n, net.layers[0]);
+        let params = init_conductances(net.layers, 7);
+        harness.assert_bit_identical(net, &params, &xs);
+    }
+}
+
+#[test]
+fn custom_sweeps_cover_degenerate_stage_counts() {
+    // 1 stage (the whole net on one stage) and more stages than layers
+    // (clamped) must behave exactly like the defaults.
+    let harness = ExecModeHarness {
+        workers: vec![1, 3],
+        stages: vec![1, 9],
+    };
+    let net = apps::network("mnist_class").unwrap();
+    let mut rng = Rng::seeded(31);
+    let xs = rows(&mut rng, 70, net.layers[0]);
+    let params = init_conductances(net.layers, 3);
+    harness.assert_bit_identical(net, &params, &xs);
+}
+
+#[test]
+fn dr_training_is_bit_identical_across_exec_modes() {
+    // The DR pipeline's inter-stage re-encodes follow the exec mode;
+    // trained encoder stacks must not care.
+    let net = apps::network("mnist_dr").unwrap();
+    let mut rng = Rng::seeded(77);
+    let xs = rows(&mut rng, 12, net.layers[0]);
+    let fit = |exec: ExecMode, workers: usize| {
+        let engine = Engine::native().with_workers(workers);
+        let opts = TrainOptions::new().dr().exec(exec);
+        engine
+            .fit(net, &xs, |_| Vec::new(), 1, 0.05, 5, &opts)
+            .unwrap()
+    };
+    let reference = fit(ExecMode::DataParallel, 1);
+    for exec in [ExecMode::Pipelined, ExecMode::Hybrid] {
+        for workers in [1, 2, 4] {
+            let run = fit(exec, workers);
+            assert_eq!(
+                run.params.len(),
+                reference.params.len(),
+                "{exec} workers={workers}"
+            );
+            for (a, b) in run.params.iter().zip(&reference.params) {
+                assert_eq!(a.data, b.data, "{exec} workers={workers}");
+            }
+        }
+    }
+}
+
+#[test]
+fn pipeline_reports_expose_per_stage_occupancy() {
+    let net = apps::network("mnist_class").unwrap();
+    let mut rng = Rng::seeded(3);
+    let xs = rows(&mut rng, 70, net.layers[0]);
+    let params = init_conductances(net.layers, 7);
+    let engine = Engine::native()
+        .with_exec(ExecMode::Pipelined)
+        .with_pipeline_stages(4);
+    engine.infer(net, &params, &xs).unwrap();
+    let report = engine.last_pipeline_report().expect("report recorded");
+    assert_eq!(report.stages.len(), 4);
+    assert_eq!(report.samples, 70);
+    assert_eq!(report.replicas, 1);
+    // 70 samples = 2 chunks of the 64-sample tile, through every stage
+    assert!(report.stages.iter().all(|s| s.chunks == 2));
+    for s in &report.stages {
+        let occ = s.occupancy();
+        assert!((0.0..=1.0).contains(&occ), "occupancy {occ}");
+    }
+    assert!(report.throughput() > 0.0);
+    assert!(report.summary().contains("stage 0"));
+}
