@@ -5,7 +5,7 @@ ARTIFACTS ?= artifacts
 
 .PHONY: build test bench bench-ckpt bench-cluster bench-multiapp \
 	bench-parallel bench-pipeline bench-serving bench-train clippy doc \
-	fmt artifacts pytest cargotest-pjrt
+	fmt lint artifacts pytest cargotest-pjrt
 
 build:
 	cargo build --release
@@ -53,6 +53,12 @@ bench-ckpt:
 		cargo bench --bench perf_ckpt
 
 clippy:
+	cargo clippy --all-targets -- -D warnings
+
+# Determinism/concurrency contract: restream-lint (rules D1-P1, see
+# DESIGN.md) plus clippy. This is the same pair the CI lint job runs.
+lint:
+	cargo run --release -p restream-lint
 	cargo clippy --all-targets -- -D warnings
 
 doc:

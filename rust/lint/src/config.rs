@@ -1,0 +1,117 @@
+//! The tagged-module map: which rules apply to which source paths.
+//!
+//! Paths are workspace-root-relative prefixes (`rust/src/...`), so the
+//! map reads like the DESIGN.md table that documents it. A file picks
+//! up every rule whose prefix list matches; C2 (SAFETY comments) is
+//! unconditional.
+
+use crate::rules::Rule;
+
+/// Determinism-tagged modules (rules D1, D2): everything on the path
+/// from input bytes to result bytes. The serving/chip front ends are
+/// deliberately *not* here — their wall-clock reads (batching windows,
+/// latency splits) are the product, not a hazard — and neither is
+/// `metrics`, the sanctioned report-side home of `Stopwatch`.
+pub const DETERMINISM: &[&str] = &[
+    "rust/src/coordinator/",
+    "rust/src/runtime/",
+    "rust/src/mapper/",
+    "rust/src/checkpoint/",
+    "rust/src/nn/",
+    "rust/src/kmeans/",
+    "rust/src/cluster/",
+    "rust/src/chip/residency.rs",
+    "rust/lint/src/",
+];
+
+/// Kernel files (rule D3): float accumulation loops whose order is the
+/// bit-identity contract. `.sum()` is banned here because its
+/// reduction order is an implementation detail of the iterator chain;
+/// the canonical spelling is `fold(0.0, |acc, x| acc + x)`.
+pub const KERNEL: &[&str] = &[
+    "rust/src/runtime/native.rs",
+    "rust/src/nn/",
+    "rust/src/kmeans/",
+    "rust/src/crossbar/",
+    "rust/src/coordinator/",
+];
+
+/// Lock-order-audited modules (rule C1): everything that takes a
+/// `Mutex` on a request or training path.
+pub const LOCK_ORDER: &[&str] = &[
+    "rust/src/coordinator/",
+    "rust/src/serve/",
+    "rust/src/chip/",
+];
+
+/// Request-path modules (rule P1): code that answers external
+/// requests must return typed errors, never panic. The lint's own
+/// source holds itself to the same bar.
+pub const REQUEST_PATH: &[&str] = &[
+    "rust/src/serve/",
+    "rust/src/cluster/",
+    "rust/src/chip/",
+    "rust/lint/src/",
+];
+
+fn matches(rel: &str, prefixes: &[&str]) -> bool {
+    prefixes.iter().any(|p| rel.starts_with(p))
+}
+
+/// The rule set for one workspace-root-relative file path.
+pub fn rules_for(rel: &str) -> Vec<Rule> {
+    let mut rules = Vec::new();
+    if matches(rel, DETERMINISM) {
+        rules.push(Rule::D1);
+        rules.push(Rule::D2);
+    }
+    if matches(rel, KERNEL) {
+        rules.push(Rule::D3);
+    }
+    if matches(rel, LOCK_ORDER) {
+        rules.push(Rule::C1);
+    }
+    rules.push(Rule::C2);
+    if matches(rel, REQUEST_PATH) {
+        rules.push(Rule::P1);
+    }
+    rules
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coordinator_gets_the_determinism_rules() {
+        let r = rules_for("rust/src/coordinator/mod.rs");
+        assert!(r.contains(&Rule::D1));
+        assert!(r.contains(&Rule::D2));
+        assert!(r.contains(&Rule::D3));
+        assert!(r.contains(&Rule::C1));
+        assert!(!r.contains(&Rule::P1));
+    }
+
+    #[test]
+    fn serve_is_request_path_not_kernel() {
+        let r = rules_for("rust/src/serve/mod.rs");
+        assert!(r.contains(&Rule::P1));
+        assert!(r.contains(&Rule::C1));
+        assert!(!r.contains(&Rule::D2));
+        assert!(!r.contains(&Rule::D3));
+    }
+
+    #[test]
+    fn everything_gets_c2() {
+        assert!(rules_for("rust/src/cli/mod.rs").contains(&Rule::C2));
+        assert!(rules_for("rust/src/metrics/mod.rs").contains(&Rule::C2));
+    }
+
+    #[test]
+    fn the_lint_lints_itself() {
+        let r = rules_for("rust/lint/src/rules.rs");
+        assert!(r.contains(&Rule::D1));
+        assert!(r.contains(&Rule::D2));
+        assert!(r.contains(&Rule::P1));
+    }
+}

@@ -1,0 +1,429 @@
+//! A minimal Rust lexer: token stream + comment stream, no AST.
+//!
+//! The rules in [`crate::rules`] are token-pattern matchers, so all
+//! the lexer owes them is (a) never mistaking string/comment *content*
+//! for code, and (b) stable line numbers. It handles the constructs
+//! that would otherwise break that promise: nested block comments, raw
+//! and byte strings, char literals vs. lifetimes, and longest-match
+//! multi-char operators. Everything else is a plain token.
+
+/// What kind of token a [`Tok`] is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword.
+    Ident,
+    /// Numeric literal (suffix included, e.g. `0.0f32`).
+    Number,
+    /// String literal of any flavour (quotes included).
+    Str,
+    /// Char literal (quotes included).
+    Char,
+    /// Lifetime (`'a`), leading quote included.
+    Lifetime,
+    /// Operator or delimiter, longest-match (`::`, `..=`, `{`, …).
+    Punct,
+}
+
+/// One lexed token.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    /// 1-based line the token starts on.
+    pub line: u32,
+}
+
+/// One comment (line or block). Contiguous `//` lines stay separate
+/// here; rule C2 merges them into blocks itself.
+#[derive(Clone, Debug)]
+pub struct Comment {
+    /// 1-based line the comment starts on.
+    pub line_start: u32,
+    /// 1-based line the comment ends on (block comments may span).
+    pub line_end: u32,
+    /// Comment text without the `//` / `/*` markers.
+    pub text: String,
+    /// True when no code token precedes the comment on its first line.
+    pub own_line: bool,
+}
+
+/// The lexer's full output for one file.
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub comments: Vec<Comment>,
+}
+
+const PUNCT3: [&str; 4] = ["..=", "<<=", ">>=", "..."];
+const PUNCT2: [&str; 19] = [
+    "::", "->", "=>", "==", "!=", "<=", ">=", "&&", "||", "+=", "-=",
+    "*=", "/=", "%=", "^=", "&=", "|=", "<<", ">>",
+];
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Lex `src`. Never fails: malformed input degrades to junk tokens,
+/// which at worst means a missed finding, never a crash.
+pub fn lex(src: &str) -> Lexed {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut toks = Vec::new();
+    let mut comments = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    let mut code_on_line = false;
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            code_on_line = false;
+            i += 1;
+            continue;
+        }
+        if c == b' ' || c == b'\t' || c == b'\r' {
+            i += 1;
+            continue;
+        }
+        // Line comment.
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            let mut j = i + 2;
+            while j < n && b[j] != b'\n' {
+                j += 1;
+            }
+            comments.push(Comment {
+                line_start: line,
+                line_end: line,
+                text: src[i + 2..j].to_string(),
+                own_line: !code_on_line,
+            });
+            i = j;
+            continue;
+        }
+        // Block comment (nesting per the Rust reference).
+        if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let start_line = line;
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if b[j] == b'/' && j + 1 < n && b[j + 1] == b'*' {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == b'*' && j + 1 < n && b[j + 1] == b'/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    if b[j] == b'\n' {
+                        line += 1;
+                    }
+                    j += 1;
+                }
+            }
+            let inner_end = if depth == 0 { j - 2 } else { j };
+            comments.push(Comment {
+                line_start: start_line,
+                line_end: line,
+                text: src[i + 2..inner_end].to_string(),
+                own_line: !code_on_line,
+            });
+            i = j;
+            continue;
+        }
+        code_on_line = true;
+        // Raw / byte-raw strings: r"…", r#"…"#, br"…", b r is not a
+        // thing; `r#ident` (raw identifier) falls through to Ident.
+        if c == b'r' || c == b'b' {
+            let mut k = i;
+            if b[k] == b'b' {
+                k += 1;
+            }
+            let is_raw = k < n && b[k] == b'r';
+            if is_raw {
+                k += 1;
+            }
+            let mut hashes = 0usize;
+            while k < n && b[k] == b'#' {
+                hashes += 1;
+                k += 1;
+            }
+            let raw_str = is_raw && k < n && b[k] == b'"';
+            let byte_str =
+                c == b'b' && !is_raw && hashes == 0 && k < n && b[k] == b'"';
+            if raw_str {
+                // Scan for `"` followed by `hashes` hashes.
+                let mut j = k + 1;
+                let start_line = line;
+                loop {
+                    if j >= n {
+                        break;
+                    }
+                    if b[j] == b'\n' {
+                        line += 1;
+                    }
+                    if b[j] == b'"' {
+                        let mut h = 0usize;
+                        while j + 1 + h < n && h < hashes && b[j + 1 + h] == b'#'
+                        {
+                            h += 1;
+                        }
+                        if h == hashes {
+                            j += 1 + hashes;
+                            break;
+                        }
+                    }
+                    j += 1;
+                }
+                toks.push(Tok {
+                    kind: TokKind::Str,
+                    text: src[i..j.min(n)].to_string(),
+                    line: start_line,
+                });
+                i = j.min(n);
+                continue;
+            }
+            if byte_str {
+                // Fall through to the plain-string scanner below with
+                // the `b` prefix consumed as part of the token.
+                let (j, nl) = scan_string(b, k);
+                toks.push(Tok {
+                    kind: TokKind::Str,
+                    text: src[i..j].to_string(),
+                    line,
+                });
+                line += nl;
+                i = j;
+                continue;
+            }
+            // Not a string: plain identifier starting with r/b.
+        }
+        if c == b'"' {
+            let (j, nl) = scan_string(b, i);
+            toks.push(Tok {
+                kind: TokKind::Str,
+                text: src[i..j].to_string(),
+                line,
+            });
+            line += nl;
+            i = j;
+            continue;
+        }
+        if c == b'\'' {
+            // Lifetime vs char literal. `'a'` is a char, `'a` (no
+            // closing quote right after the ident char) is a lifetime.
+            if i + 1 < n && b[i + 1] == b'\\' {
+                // Escaped char literal: skip `\x`, then scan to `'`.
+                let mut j = i + 3;
+                while j < n && b[j] != b'\'' {
+                    j += 1;
+                }
+                toks.push(Tok {
+                    kind: TokKind::Char,
+                    text: src[i..(j + 1).min(n)].to_string(),
+                    line,
+                });
+                i = (j + 1).min(n);
+                continue;
+            }
+            if i + 1 < n
+                && is_ident_byte(b[i + 1])
+                && !(i + 2 < n && b[i + 2] == b'\'')
+            {
+                let mut j = i + 1;
+                while j < n && is_ident_byte(b[j]) {
+                    j += 1;
+                }
+                toks.push(Tok {
+                    kind: TokKind::Lifetime,
+                    text: src[i..j].to_string(),
+                    line,
+                });
+                i = j;
+                continue;
+            }
+            let mut j = i + 1;
+            while j < n && b[j] != b'\'' {
+                j += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Char,
+                text: src[i..(j + 1).min(n)].to_string(),
+                line,
+            });
+            i = (j + 1).min(n);
+            continue;
+        }
+        if c.is_ascii_alphabetic() || c == b'_' {
+            let mut j = i;
+            while j < n && is_ident_byte(b[j]) {
+                j += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Ident,
+                text: src[i..j].to_string(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut j = i + 1;
+            while j < n {
+                let d = b[j];
+                if is_ident_byte(d) {
+                    j += 1;
+                } else if d == b'.'
+                    && j + 1 < n
+                    && b[j + 1].is_ascii_digit()
+                {
+                    j += 1;
+                } else {
+                    break;
+                }
+            }
+            toks.push(Tok {
+                kind: TokKind::Number,
+                text: src[i..j].to_string(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        if c >= 0x80 {
+            // Non-ASCII outside strings/comments (only ever seen in
+            // malformed input): skip the byte, never slice mid-char.
+            i += 1;
+            continue;
+        }
+        // Punct, longest match first.
+        let rest = &src[i..];
+        let mut matched = false;
+        for p in PUNCT3 {
+            if rest.starts_with(p) {
+                toks.push(Tok {
+                    kind: TokKind::Punct,
+                    text: p.to_string(),
+                    line,
+                });
+                i += 3;
+                matched = true;
+                break;
+            }
+        }
+        if matched {
+            continue;
+        }
+        for p in PUNCT2 {
+            if rest.starts_with(p) {
+                toks.push(Tok {
+                    kind: TokKind::Punct,
+                    text: p.to_string(),
+                    line,
+                });
+                i += 2;
+                matched = true;
+                break;
+            }
+        }
+        if matched {
+            continue;
+        }
+        toks.push(Tok {
+            kind: TokKind::Punct,
+            text: src[i..i + 1].to_string(),
+            line,
+        });
+        i += 1;
+    }
+    Lexed { toks, comments }
+}
+
+/// Scan a plain `"…"` string starting at the opening quote; returns
+/// (index past the closing quote, newlines crossed).
+fn scan_string(b: &[u8], open: usize) -> (usize, u32) {
+    let n = b.len();
+    let mut j = open + 1;
+    let mut nl = 0u32;
+    while j < n {
+        match b[j] {
+            b'\\' => j += 2,
+            b'"' => return (j + 1, nl),
+            b'\n' => {
+                nl += 1;
+                j += 1;
+            }
+            _ => j += 1,
+        }
+    }
+    (n, nl)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        lex(src).toks.into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn strings_and_comments_are_not_code() {
+        let l = lex("let x = \"a.unwrap()\"; // .unwrap() here too\n");
+        assert!(l.toks.iter().all(|t| t.text != "unwrap"));
+        assert_eq!(l.comments.len(), 1);
+        assert!(!l.comments[0].own_line);
+    }
+
+    #[test]
+    fn nested_block_comments_close_correctly() {
+        let l = lex("/* outer /* inner */ still */ let y = 1;");
+        assert_eq!(l.comments.len(), 1);
+        assert_eq!(
+            l.toks.iter().map(|t| t.text.as_str()).collect::<Vec<_>>(),
+            vec!["let", "y", "=", "1", ";"]
+        );
+    }
+
+    #[test]
+    fn raw_strings_swallow_quotes_and_hashes() {
+        let l = lex("let s = r#\"he said \"hi\" // not a comment\"#;");
+        assert_eq!(l.comments.len(), 0);
+        assert_eq!(l.toks.len(), 5); // let s = <str> ;
+        assert_eq!(l.toks[3].kind, TokKind::Str);
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let l = lex("fn f<'a>(x: &'a str) { let c = 'x'; let d = '\\n'; }");
+        let lifes: Vec<_> = l
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Lifetime)
+            .collect();
+        let chars: Vec<_> =
+            l.toks.iter().filter(|t| t.kind == TokKind::Char).collect();
+        assert_eq!(lifes.len(), 2);
+        assert_eq!(chars.len(), 2);
+    }
+
+    #[test]
+    fn longest_match_operators() {
+        assert_eq!(texts("a..=b"), vec!["a", "..=", "b"]);
+        assert_eq!(texts("a::b"), vec!["a", "::", "b"]);
+        assert_eq!(texts("0..10"), vec!["0", "..", "10"]);
+        assert_eq!(texts("x.0"), vec!["x", ".", "0"]);
+    }
+
+    #[test]
+    fn number_suffixes_stay_one_token() {
+        assert_eq!(texts("0.0f32 + 1_000usize"),
+                   vec!["0.0f32", "+", "1_000usize"]);
+    }
+
+    #[test]
+    fn line_numbers_survive_multiline_constructs() {
+        let l = lex("/* a\nb */\nlet x = 1;\n\"s\ntr\"\nfinal");
+        let last = &l.toks[l.toks.len() - 1];
+        assert_eq!(last.text, "final");
+        assert_eq!(last.line, 6);
+    }
+}

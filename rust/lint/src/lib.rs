@@ -1,0 +1,18 @@
+//! `restream-lint`: the determinism/concurrency contract of the
+//! `restream` tree, enforced as a static-analysis pass.
+//!
+//! The crate is dependency-free by design (offline builds): instead of
+//! `syn` it ships a minimal lexer ([`lexer`]) and runs token-pattern
+//! rules ([`rules`]) over a tagged-module map ([`config`]). The
+//! binary walks `rust/src` plus this crate's own source, prints
+//! `file:line: RULE message` for every finding, and exits nonzero if
+//! there are any.
+//!
+//! See DESIGN.md, "Determinism contract & static enforcement", for
+//! what each rule guards and why.
+
+pub mod config;
+pub mod lexer;
+pub mod rules;
+
+pub use rules::{lock_cycles, scan_file, FileScan, Finding, LockEdge, Rule};

@@ -1,0 +1,96 @@
+//! The `restream-lint` binary: walk the tree, run the rules, report.
+//!
+//! Scans `rust/src/**/*.rs` and the lint's own `rust/lint/src` (the
+//! enforcer holds itself to the contract), prints findings as
+//! `file:line: RULE message` sorted by location, and exits 1 when
+//! there are findings, 2 on I/O errors.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use restream_lint::{config, lock_cycles, scan_file, Finding, LockEdge};
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(0) => ExitCode::SUCCESS,
+        Ok(_) => ExitCode::FAILURE,
+        Err(e) => {
+            eprintln!("restream-lint: {e}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn run() -> Result<usize, String> {
+    // CARGO_MANIFEST_DIR is <workspace>/rust/lint; the compile-time
+    // `env!` keeps the binary runnable from any working directory.
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let root = manifest
+        .parent()
+        .and_then(Path::parent)
+        .ok_or("cannot locate the workspace root")?;
+    let mut files = Vec::new();
+    collect_rs(&root.join("rust").join("src"), &mut files)?;
+    collect_rs(&root.join("rust").join("lint").join("src"), &mut files)?;
+    files.sort();
+
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut edges: Vec<LockEdge> = Vec::new();
+    let mut scanned = 0usize;
+    for path in &files {
+        let rel = path
+            .strip_prefix(root)
+            .map_err(|e| format!("{}: {e}", path.display()))?
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = fs::read_to_string(path)
+            .map_err(|e| format!("{rel}: {e}"))?;
+        let rules = config::rules_for(&rel);
+        let scan = scan_file(&rel, &src, &rules);
+        findings.extend(scan.findings);
+        edges.extend(scan.lock_edges);
+        scanned += 1;
+    }
+    findings.extend(lock_cycles(&edges));
+
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule, a.message.as_str())
+            .cmp(&(b.file.as_str(), b.line, b.rule, b.message.as_str()))
+    });
+    for f in &findings {
+        println!("{}:{}: {} {}", f.file, f.line, f.rule, f.message);
+    }
+    if findings.is_empty() {
+        println!(
+            "restream-lint: clean ({scanned} files, {} lock edges)",
+            edges.len()
+        );
+    } else {
+        eprintln!(
+            "restream-lint: {} finding(s) across {scanned} files",
+            findings.len()
+        );
+    }
+    Ok(findings.len())
+}
+
+/// Recursively collect `.rs` files, sorted traversal for stable output.
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let rd = fs::read_dir(dir)
+        .map_err(|e| format!("{}: {e}", dir.display()))?;
+    let mut entries: Vec<PathBuf> = Vec::new();
+    for entry in rd {
+        let entry = entry.map_err(|e| format!("{}: {e}", dir.display()))?;
+        entries.push(entry.path());
+    }
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().map(|x| x == "rs").unwrap_or(false) {
+            out.push(path);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,997 @@
+//! The determinism/concurrency rules, as token-pattern matchers over
+//! [`crate::lexer`] output.
+//!
+//! Every rule has a stable ID and an escape hatch: a comment of the
+//! form `// lint: allow(P1) — reason` (with the applicable rule ID)
+//! suppresses findings of that rule on its own line (trailing
+//! comment) or on the next token-bearing line (own-line comment). An
+//! allow without a reason, or naming an unknown rule, is itself a
+//! finding (`A0`) and suppresses nothing — the justification *is*
+//! the point.
+//!
+//! `#[cfg(test)]` items are skipped wholesale: the rules police
+//! shipping code, not test asserts.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::lexer::{lex, Comment, Tok, TokKind};
+
+/// A rule ID. See DESIGN.md "Determinism contract & static
+/// enforcement" for the rationale behind each.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rule {
+    /// No `HashMap`/`HashSet` iteration in determinism-tagged modules.
+    D1,
+    /// No wall-clock / environment reads in determinism-tagged
+    /// modules (report timing goes through `metrics::Stopwatch`).
+    D2,
+    /// Float accumulations in kernel files use the canonical
+    /// left-to-right fold; no `.sum()`, no exotic fold inits, no
+    /// reversed reduction ranges.
+    D3,
+    /// No cycles in the lock-acquisition-order graph.
+    C1,
+    /// `unsafe` requires an adjacent `// SAFETY:` comment block.
+    C2,
+    /// No `unwrap()`/`expect()`/`panic!` in request-path modules.
+    P1,
+}
+
+impl Rule {
+    /// The stable ID printed in findings and used in allow comments.
+    pub fn id(&self) -> &'static str {
+        match self {
+            Rule::D1 => "D1",
+            Rule::D2 => "D2",
+            Rule::D3 => "D3",
+            Rule::C1 => "C1",
+            Rule::C2 => "C2",
+            Rule::P1 => "P1",
+        }
+    }
+
+    /// Parse an ID as written in an allow comment.
+    pub fn parse(s: &str) -> Option<Rule> {
+        match s {
+            "D1" => Some(Rule::D1),
+            "D2" => Some(Rule::D2),
+            "D3" => Some(Rule::D3),
+            "C1" => Some(Rule::C1),
+            "C2" => Some(Rule::C2),
+            "P1" => Some(Rule::P1),
+            _ => None,
+        }
+    }
+}
+
+/// One reported violation.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// Workspace-root-relative path.
+    pub file: String,
+    /// 1-based line.
+    pub line: u32,
+    /// Rule ID (`D1`…`P1`, or `A0` for a malformed allow comment).
+    pub rule: &'static str,
+    pub message: String,
+}
+
+/// One acquired-while-holding observation: a `.lock()` on `acquired`
+/// reached while a guard on `held` is live. Rule C1 runs cycle
+/// detection over the whole tree's edges ([`lock_cycles`]).
+#[derive(Clone, Debug)]
+pub struct LockEdge {
+    pub held: String,
+    pub acquired: String,
+    pub file: String,
+    pub line: u32,
+}
+
+/// Per-file scan result.
+pub struct FileScan {
+    pub findings: Vec<Finding>,
+    pub lock_edges: Vec<LockEdge>,
+}
+
+/// A pre-suppression finding: (line, rule, message).
+type Raw = (u32, Rule, String);
+
+/// Scan one file under the given rules. `file` is the label findings
+/// carry (workspace-root-relative path in the binary; fixtures use
+/// their own names).
+pub fn scan_file(file: &str, src: &str, rules: &[Rule]) -> FileScan {
+    let lexed = lex(src);
+    let ranges = skip_ranges(&lexed.toks);
+    let toks: Vec<Tok> = lexed
+        .toks
+        .iter()
+        .filter(|t| !ranges.iter().any(|(a, b)| *a <= t.line && t.line <= *b))
+        .cloned()
+        .collect();
+    let (allows, mut findings) = allow_map(file, &toks, &lexed.comments);
+    let mut raw: Vec<Raw> = Vec::new();
+    if rules.contains(&Rule::D1) {
+        rule_d1(&toks, &mut raw);
+    }
+    if rules.contains(&Rule::D2) {
+        rule_d2(&toks, &mut raw);
+    }
+    if rules.contains(&Rule::D3) {
+        rule_d3(&toks, &mut raw);
+    }
+    if rules.contains(&Rule::C2) {
+        rule_c2(&toks, &lexed.comments, &mut raw);
+    }
+    if rules.contains(&Rule::P1) {
+        rule_p1(&toks, &mut raw);
+    }
+    for (line, rule, message) in raw {
+        let suppressed = allows
+            .get(rule.id())
+            .map(|lines| lines.contains(&line))
+            .unwrap_or(false);
+        if !suppressed {
+            findings.push(Finding {
+                file: file.to_string(),
+                line,
+                rule: rule.id(),
+                message,
+            });
+        }
+    }
+    let lock_edges = if rules.contains(&Rule::C1) {
+        c1_edges(file, &toks)
+    } else {
+        Vec::new()
+    };
+    FileScan { findings, lock_edges }
+}
+
+/// Line ranges covered by `#[cfg(test)]` items (attribute line through
+/// the item's closing brace or semicolon).
+fn skip_ranges(toks: &[Tok]) -> Vec<(u32, u32)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        let is_cfg_test = i + 6 < toks.len()
+            && toks[i].text == "#"
+            && toks[i + 1].text == "["
+            && toks[i + 2].text == "cfg"
+            && toks[i + 3].text == "("
+            && toks[i + 4].text == "test"
+            && toks[i + 5].text == ")"
+            && toks[i + 6].text == "]";
+        if !is_cfg_test {
+            i += 1;
+            continue;
+        }
+        let start_line = toks[i].line;
+        let mut j = i + 7;
+        // Skip any further attributes between the cfg and the item.
+        while j < toks.len() && toks[j].text == "#" {
+            let mut depth = 0i32;
+            j += 1;
+            while j < toks.len() {
+                if toks[j].text == "[" {
+                    depth += 1;
+                } else if toks[j].text == "]" {
+                    depth -= 1;
+                    if depth == 0 {
+                        j += 1;
+                        break;
+                    }
+                }
+                j += 1;
+            }
+        }
+        // Skip the item itself: to a top-level `;` or matching `}`.
+        let mut depth = 0i32;
+        while j < toks.len() {
+            let t = &toks[j].text;
+            if t == "{" {
+                depth += 1;
+            } else if t == "}" {
+                depth -= 1;
+                if depth == 0 {
+                    j += 1;
+                    break;
+                }
+            } else if t == ";" && depth == 0 {
+                j += 1;
+                break;
+            }
+            j += 1;
+        }
+        let end_line = if j > 0 && j - 1 < toks.len() {
+            toks[j - 1].line
+        } else {
+            start_line
+        };
+        out.push((start_line, end_line));
+        i = j;
+    }
+    out
+}
+
+/// Parse allow comments into rule → covered-lines, and report
+/// malformed ones (`A0`). `toks` must already be test-filtered so an
+/// own-line allow covers the next *linted* line.
+fn allow_map(
+    file: &str,
+    toks: &[Tok],
+    comments: &[Comment],
+) -> (BTreeMap<&'static str, BTreeSet<u32>>, Vec<Finding>) {
+    let mut allows: BTreeMap<&'static str, BTreeSet<u32>> = BTreeMap::new();
+    let mut bad = Vec::new();
+    let tok_lines: BTreeSet<u32> = toks.iter().map(|t| t.line).collect();
+    for c in comments {
+        let text = c.text.as_str();
+        let Some(at) = text.find("lint:") else {
+            continue;
+        };
+        let after = text[at + 5..].trim_start();
+        let Some(args) = after.strip_prefix("allow(") else {
+            continue;
+        };
+        let Some(close) = args.find(')') else {
+            bad.push(Finding {
+                file: file.to_string(),
+                line: c.line_start,
+                rule: "A0",
+                message: "unclosed `lint: allow(` comment".to_string(),
+            });
+            continue;
+        };
+        let mut rules = Vec::new();
+        let mut ok = true;
+        for part in args[..close].split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            match Rule::parse(part) {
+                Some(r) => rules.push(r),
+                None => {
+                    bad.push(Finding {
+                        file: file.to_string(),
+                        line: c.line_start,
+                        rule: "A0",
+                        message: format!(
+                            "allow names unknown rule '{part}'"
+                        ),
+                    });
+                    ok = false;
+                }
+            }
+        }
+        let reason = args[close + 1..]
+            .trim_start_matches(|ch: char| {
+                ch.is_whitespace()
+                    || ch == '—'
+                    || ch == '–'
+                    || ch == '-'
+                    || ch == ':'
+                    || ch == ','
+            })
+            .trim();
+        if reason.is_empty() {
+            bad.push(Finding {
+                file: file.to_string(),
+                line: c.line_start,
+                rule: "A0",
+                message: "allow without a reason — the justification \
+                          is the point"
+                    .to_string(),
+            });
+            ok = false;
+        }
+        if !ok {
+            continue;
+        }
+        let covered: Vec<u32> = if c.own_line {
+            // Covers exactly the next token-bearing line.
+            tok_lines
+                .iter()
+                .find(|l| **l > c.line_end)
+                .map(|l| vec![*l])
+                .unwrap_or_default()
+        } else {
+            (c.line_start..=c.line_end).collect()
+        };
+        for r in rules {
+            let entry = allows.entry(r.id()).or_default();
+            for l in &covered {
+                entry.insert(*l);
+            }
+        }
+    }
+    (allows, bad)
+}
+
+const ITER_METHODS: [&str; 8] = [
+    "iter", "iter_mut", "keys", "values", "values_mut", "into_iter",
+    "drain", "retain",
+];
+
+/// D1: iteration over a `HashMap`/`HashSet`-typed binding or field.
+/// Detection is name-based: any `let` binding or `name: Type` decl
+/// whose statement segment mentions `HashMap`/`HashSet` marks `name`,
+/// then `.iter()`-family calls and `for … in name` on marked names
+/// are flagged.
+fn rule_d1(toks: &[Tok], out: &mut Vec<Raw>) {
+    let mut hashvars: BTreeSet<&str> = BTreeSet::new();
+    for i in 0..toks.len() {
+        if toks[i].kind != TokKind::Ident
+            || (toks[i].text != "HashMap" && toks[i].text != "HashSet")
+        {
+            continue;
+        }
+        // Walk back to the start of the statement segment.
+        let mut seg: Vec<&Tok> = Vec::new();
+        let mut j = i;
+        while j > 0 {
+            j -= 1;
+            let t = toks[j].text.as_str();
+            if t == ";" || t == "{" || t == "}" || t == "(" || t == "," {
+                break;
+            }
+            seg.push(&toks[j]);
+            if seg.len() > 40 {
+                break;
+            }
+        }
+        seg.reverse();
+        let mut name: Option<&str> = None;
+        for (s, tok) in seg.iter().enumerate() {
+            if tok.text == "let" {
+                let mut t2 = s + 1;
+                if t2 < seg.len() && seg[t2].text == "mut" {
+                    t2 += 1;
+                }
+                if t2 < seg.len() && seg[t2].kind == TokKind::Ident {
+                    name = Some(seg[t2].text.as_str());
+                }
+                break;
+            }
+        }
+        if name.is_none()
+            && seg.len() >= 2
+            && seg[0].kind == TokKind::Ident
+            && seg[1].text == ":"
+        {
+            name = Some(seg[0].text.as_str());
+        }
+        if let Some(nm) = name {
+            hashvars.insert(nm);
+        }
+    }
+    for i in 0..toks.len() {
+        if toks[i].kind == TokKind::Ident
+            && hashvars.contains(toks[i].text.as_str())
+            && i + 2 < toks.len()
+            && toks[i + 1].text == "."
+            && ITER_METHODS.contains(&toks[i + 2].text.as_str())
+        {
+            out.push((
+                toks[i + 2].line,
+                Rule::D1,
+                format!(
+                    "`{}.{}` iterates a Hash collection in a \
+                     determinism-tagged module; use BTreeMap/BTreeSet \
+                     or sort first",
+                    toks[i].text, toks[i + 2].text
+                ),
+            ));
+        }
+        if toks[i].kind == TokKind::Ident && toks[i].text == "for" {
+            let mut j = i + 1;
+            while j < toks.len()
+                && toks[j].text != "in"
+                && toks[j].text != "{"
+            {
+                j += 1;
+            }
+            if j >= toks.len() || toks[j].text != "in" {
+                continue;
+            }
+            let mut expr: Vec<&Tok> = Vec::new();
+            j += 1;
+            while j < toks.len() && toks[j].text != "{" {
+                expr.push(&toks[j]);
+                j += 1;
+                if expr.len() > 6 {
+                    break;
+                }
+            }
+            let core: Vec<&&Tok> = expr
+                .iter()
+                .filter(|t| t.text != "&" && t.text != "mut")
+                .collect();
+            if core.len() == 1
+                && core[0].kind == TokKind::Ident
+                && hashvars.contains(core[0].text.as_str())
+            {
+                out.push((
+                    core[0].line,
+                    Rule::D1,
+                    format!(
+                        "`for … in {}` iterates a Hash collection in a \
+                         determinism-tagged module; use \
+                         BTreeMap/BTreeSet or sort first",
+                        core[0].text
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+const ENV_FNS: [&str; 6] =
+    ["var", "vars", "var_os", "args", "args_os", "temp_dir"];
+
+/// D2: wall-clock or environment reads. `env!` (compile-time) does
+/// not match — the matcher requires `env::<fn>`.
+fn rule_d2(toks: &[Tok], out: &mut Vec<Raw>) {
+    for i in 0..toks.len() {
+        if toks[i].kind != TokKind::Ident {
+            continue;
+        }
+        let t = toks[i].text.as_str();
+        if t == "Instant"
+            && i + 2 < toks.len()
+            && toks[i + 1].text == "::"
+            && toks[i + 2].text == "now"
+        {
+            out.push((
+                toks[i].line,
+                Rule::D2,
+                "`Instant::now` in a determinism-tagged module; time \
+                 report code with metrics::Stopwatch or annotate why \
+                 this read cannot affect results"
+                    .to_string(),
+            ));
+        }
+        if t == "SystemTime" {
+            out.push((
+                toks[i].line,
+                Rule::D2,
+                "`SystemTime` in a determinism-tagged module"
+                    .to_string(),
+            ));
+        }
+        if t == "env"
+            && i + 2 < toks.len()
+            && toks[i + 1].text == "::"
+            && ENV_FNS.contains(&toks[i + 2].text.as_str())
+        {
+            out.push((
+                toks[i].line,
+                Rule::D2,
+                format!(
+                    "environment read `env::{}` in a \
+                     determinism-tagged module",
+                    toks[i + 2].text
+                ),
+            ));
+        }
+    }
+}
+
+/// Is this token a zero literal (`0`, `0.0`, optionally suffixed)?
+fn is_zero_literal(tok: &Tok) -> bool {
+    if tok.kind != TokKind::Number {
+        return false;
+    }
+    let t: String = tok.text.chars().filter(|c| *c != '_').collect();
+    let suffix = if let Some(s) = t.strip_prefix("0.0") {
+        s
+    } else if let Some(s) = t.strip_prefix('0') {
+        s
+    } else {
+        return false;
+    };
+    suffix.is_empty()
+        || matches!(
+            suffix,
+            "f32" | "f64" | "i8" | "i16" | "i32" | "i64" | "i128"
+                | "isize" | "u8" | "u16" | "u32" | "u64" | "u128"
+                | "usize"
+        )
+}
+
+/// D3: float-accumulation shape in kernel files. Flags `.sum(`,
+/// `.sum::<`, `.fold(` whose init is not a zero literal, and `for`
+/// headers containing `.rev()`.
+fn rule_d3(toks: &[Tok], out: &mut Vec<Raw>) {
+    for i in 0..toks.len() {
+        if toks[i].text == "." && i + 2 < toks.len() {
+            let name = toks[i + 1].text.as_str();
+            let after = toks[i + 2].text.as_str();
+            if name == "sum" && (after == "(" || after == "::") {
+                out.push((
+                    toks[i + 1].line,
+                    Rule::D3,
+                    "`.sum()` reassociates at the iterator's whim; \
+                     spell the reduction as the canonical \
+                     `fold(0.0, |acc, x| acc + x)`"
+                        .to_string(),
+                ));
+            }
+            if name == "fold" && after == "(" {
+                let mut arg: Vec<&Tok> = Vec::new();
+                let mut j = i + 3;
+                let mut depth = 0i32;
+                while j < toks.len() {
+                    let t = toks[j].text.as_str();
+                    if t == "(" || t == "[" || t == "{" {
+                        depth += 1;
+                    } else if t == ")" || t == "]" || t == "}" {
+                        if depth == 0 {
+                            break;
+                        }
+                        depth -= 1;
+                    } else if t == "," && depth == 0 {
+                        break;
+                    }
+                    arg.push(&toks[j]);
+                    j += 1;
+                }
+                let canonical =
+                    arg.len() == 1 && is_zero_literal(arg[0]);
+                if !canonical {
+                    out.push((
+                        toks[i + 1].line,
+                        Rule::D3,
+                        "`.fold` with a non-zero init in a kernel \
+                         file; the canonical reduction starts from a \
+                         literal zero"
+                            .to_string(),
+                    ));
+                }
+            }
+        }
+        if toks[i].kind == TokKind::Ident && toks[i].text == "for" {
+            let mut hdr: Vec<&Tok> = Vec::new();
+            let mut j = i + 1;
+            while j < toks.len() && toks[j].text != "{" {
+                hdr.push(&toks[j]);
+                j += 1;
+                if hdr.len() > 30 {
+                    break;
+                }
+            }
+            for h in 0..hdr.len().saturating_sub(2) {
+                if hdr[h].text == "."
+                    && hdr[h + 1].text == "rev"
+                    && hdr[h + 2].text == "("
+                {
+                    out.push((
+                        hdr[h + 1].line,
+                        Rule::D3,
+                        "reversed range in a kernel loop; if this is \
+                         a deliberate non-reduction walk (e.g. the \
+                         backprop layer order), annotate it"
+                            .to_string(),
+                    ));
+                }
+            }
+        }
+    }
+}
+
+/// The post-`.lock()` method chain that still counts as "just the
+/// guard": error adapters, nothing that consumes or forwards it.
+const GUARD_ADAPTERS: [&str; 3] = ["unwrap", "expect", "unwrap_or_else"];
+
+/// A live lock guard during the C1 scan.
+struct Held {
+    name: String,
+    /// Guard-let (lives to end of scope) vs statement temporary.
+    scope: bool,
+    depth: i32,
+}
+
+/// C1 per-file pass: collect acquired-while-holding edges. A
+/// `let g = x.lock()<adapters>;` holds `x` until its scope closes; any
+/// other `.lock()` holds only within its statement (a `;` or a closing
+/// brace releases it — tail expressions have no semicolon).
+fn c1_edges(file: &str, toks: &[Tok]) -> Vec<LockEdge> {
+    let mut edges = Vec::new();
+    let mut held: Vec<Held> = Vec::new();
+    let mut depth = 0i32;
+    let mut i = 0usize;
+    while i < toks.len() {
+        let t = toks[i].text.as_str();
+        match t {
+            "{" => depth += 1,
+            "}" => {
+                depth -= 1;
+                held.retain(|h| h.scope && h.depth <= depth);
+            }
+            ";" => held.retain(|h| h.scope),
+            _ => {}
+        }
+        let is_lock = t == "lock"
+            && i > 0
+            && toks[i - 1].text == "."
+            && i + 1 < toks.len()
+            && toks[i + 1].text == "(";
+        if is_lock {
+            let recv = lock_receiver(toks, i);
+            for h in &held {
+                edges.push(LockEdge {
+                    held: h.name.clone(),
+                    acquired: recv.clone(),
+                    file: file.to_string(),
+                    line: toks[i].line,
+                });
+            }
+            let scope = is_guard_let(toks, i);
+            held.push(Held { name: recv, scope, depth });
+        }
+        i += 1;
+    }
+    edges
+}
+
+/// The lock's receiver name: last plain identifier before the `.lock`,
+/// walking back over `self`/`.`/`::` chains.
+fn lock_receiver(toks: &[Tok], lock_idx: usize) -> String {
+    let mut j = lock_idx.saturating_sub(1);
+    loop {
+        if j == 0 {
+            break;
+        }
+        j -= 1;
+        let t = toks[j].text.as_str();
+        if toks[j].kind == TokKind::Ident && t != "self" {
+            return t.to_string();
+        }
+        if t == "." || t == "::" || t == "self" {
+            continue;
+        }
+        break;
+    }
+    "<lock>".to_string()
+}
+
+/// Does this `.lock()` bind a scope-long guard? True when the
+/// statement starts with `let` and everything after the lock call, up
+/// to the `;`, is an adapter chain (`.unwrap()`, `.expect(…)`,
+/// `.unwrap_or_else(…)`, `?`).
+fn is_guard_let(toks: &[Tok], lock_idx: usize) -> bool {
+    // Find the statement start.
+    let mut start = lock_idx;
+    let mut j = lock_idx;
+    while j > 0 {
+        j -= 1;
+        let t = toks[j].text.as_str();
+        if t == ";" || t == "{" || t == "}" {
+            break;
+        }
+        start = j;
+    }
+    if toks[start].text != "let" {
+        return false;
+    }
+    // Skip the lock's own argument parens.
+    let mut j = lock_idx + 1;
+    if j < toks.len() && toks[j].text == "(" {
+        let mut depth = 1i32;
+        j += 1;
+        while j < toks.len() && depth > 0 {
+            match toks[j].text.as_str() {
+                "(" => depth += 1,
+                ")" => depth -= 1,
+                _ => {}
+            }
+            j += 1;
+        }
+    }
+    // Adapter-only chain to the semicolon.
+    while j < toks.len() && toks[j].text != ";" {
+        if toks[j].text == "?" {
+            j += 1;
+            continue;
+        }
+        if toks[j].text == "."
+            && j + 1 < toks.len()
+            && GUARD_ADAPTERS.contains(&toks[j + 1].text.as_str())
+        {
+            j += 2;
+            if j < toks.len() && toks[j].text == "(" {
+                let mut depth = 1i32;
+                j += 1;
+                while j < toks.len() && depth > 0 {
+                    match toks[j].text.as_str() {
+                        "(" => depth += 1,
+                        ")" => depth -= 1,
+                        _ => {}
+                    }
+                    j += 1;
+                }
+            }
+            continue;
+        }
+        return false;
+    }
+    true
+}
+
+/// C1 global pass: cycle detection on the acquired-while-holding
+/// graph from every scanned file's [`LockEdge`]s.
+pub fn lock_cycles(edges: &[LockEdge]) -> Vec<Finding> {
+    let mut adj: BTreeMap<&str, BTreeSet<&str>> = BTreeMap::new();
+    for e in edges {
+        adj.entry(e.held.as_str())
+            .or_default()
+            .insert(e.acquired.as_str());
+    }
+    let mut nodes: BTreeSet<&str> = BTreeSet::new();
+    for (&a, bs) in &adj {
+        nodes.insert(a);
+        for &b in bs.iter() {
+            nodes.insert(b);
+        }
+    }
+    let mut findings = Vec::new();
+    // DFS three-colour cycle detection, deterministic order.
+    let mut color: BTreeMap<&str, u8> =
+        nodes.iter().map(|n| (*n, 0u8)).collect();
+    let mut stack: Vec<&str> = Vec::new();
+    for &n in &nodes {
+        if color.get(n) == Some(&0) {
+            dfs(n, &adj, &mut color, &mut stack, edges, &mut findings);
+        }
+    }
+    findings
+}
+
+fn dfs<'a>(
+    v: &'a str,
+    adj: &BTreeMap<&'a str, BTreeSet<&'a str>>,
+    color: &mut BTreeMap<&'a str, u8>,
+    stack: &mut Vec<&'a str>,
+    edges: &[LockEdge],
+    findings: &mut Vec<Finding>,
+) {
+    color.insert(v, 1);
+    stack.push(v);
+    if let Some(next) = adj.get(v) {
+        for &w in next {
+            match color.get(w) {
+                Some(&1) => {
+                    // Grey: the stack from w to here is a cycle.
+                    let from = stack
+                        .iter()
+                        .position(|x| *x == w)
+                        .unwrap_or(0);
+                    let mut path: Vec<&str> =
+                        stack[from..].to_vec();
+                    path.push(w);
+                    let site = edges
+                        .iter()
+                        .find(|e| e.held == v && e.acquired == w);
+                    let (file, line) = match site {
+                        Some(e) => (e.file.clone(), e.line),
+                        None => ("<unknown>".to_string(), 0),
+                    };
+                    findings.push(Finding {
+                        file,
+                        line,
+                        rule: "C1",
+                        message: format!(
+                            "lock-order cycle: {} (fix by acquiring \
+                             these locks in one global order)",
+                            path.join(" -> ")
+                        ),
+                    });
+                }
+                Some(&0) => {
+                    dfs(w, adj, color, stack, edges, findings);
+                }
+                _ => {}
+            }
+        }
+    }
+    stack.pop();
+    color.insert(v, 2);
+}
+
+/// C2: every `unsafe` needs a contiguous `// SAFETY:` comment block
+/// ending directly above it (or a trailing one on the same line).
+fn rule_c2(toks: &[Tok], comments: &[Comment], out: &mut Vec<Raw>) {
+    // Merge contiguous comment lines into blocks so a long SAFETY
+    // block counts as adjacent via its *last* line.
+    let mut blocks: Vec<(u32, u32, bool)> = Vec::new();
+    for c in comments {
+        let has = c.text.contains("SAFETY:");
+        match blocks.last_mut() {
+            Some(b) if c.line_start <= b.1 + 1 => {
+                b.1 = b.1.max(c.line_end);
+                b.2 = b.2 || has;
+            }
+            _ => blocks.push((c.line_start, c.line_end, has)),
+        }
+    }
+    for t in toks {
+        if t.kind == TokKind::Ident && t.text == "unsafe" {
+            let ln = t.line;
+            let ok = blocks.iter().any(|(s, e, has)| {
+                *has && *e + 2 >= ln && *s <= ln
+            });
+            if !ok {
+                out.push((
+                    ln,
+                    Rule::C2,
+                    "`unsafe` without an adjacent `// SAFETY:` \
+                     comment explaining why the obligations hold"
+                        .to_string(),
+                ));
+            }
+        }
+    }
+}
+
+/// P1: `.unwrap()`, `.expect(…)`, `panic!` in request-path code.
+/// `unwrap_or_else` and friends don't match — only the panicking
+/// forms.
+fn rule_p1(toks: &[Tok], out: &mut Vec<Raw>) {
+    for i in 0..toks.len() {
+        if toks[i].text == "."
+            && i + 2 < toks.len()
+            && (toks[i + 1].text == "unwrap"
+                || toks[i + 1].text == "expect")
+            && toks[i + 2].text == "("
+        {
+            out.push((
+                toks[i + 1].line,
+                Rule::P1,
+                format!(
+                    "`.{}()` in a request-path module; return a typed \
+                     error instead",
+                    toks[i + 1].text
+                ),
+            ));
+        }
+        if toks[i].kind == TokKind::Ident
+            && toks[i].text == "panic"
+            && i + 1 < toks.len()
+            && toks[i + 1].text == "!"
+        {
+            out.push((
+                toks[i].line,
+                Rule::P1,
+                "`panic!` in a request-path module; return a typed \
+                 error instead"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ALL: [Rule; 6] =
+        [Rule::D1, Rule::D2, Rule::D3, Rule::C1, Rule::C2, Rule::P1];
+
+    fn lines_of(scan: &FileScan, rule: &str) -> Vec<u32> {
+        scan.findings
+            .iter()
+            .filter(|f| f.rule == rule)
+            .map(|f| f.line)
+            .collect()
+    }
+
+    #[test]
+    fn cfg_test_items_are_skipped() {
+        let src = "fn a() { x.unwrap(); }\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                       fn b() { y.unwrap(); z.unwrap(); }\n\
+                   }\n";
+        let scan = scan_file("t.rs", src, &ALL);
+        assert_eq!(lines_of(&scan, "P1"), vec![1]);
+    }
+
+    #[test]
+    fn trailing_allow_covers_only_its_line() {
+        let src = "fn a() {\n\
+                   x.unwrap(); // lint: allow(P1) — guarded above\n\
+                   y.unwrap();\n\
+                   }\n";
+        let scan = scan_file("t.rs", src, &ALL);
+        assert_eq!(lines_of(&scan, "P1"), vec![3]);
+    }
+
+    #[test]
+    fn allow_without_reason_is_a_finding_and_suppresses_nothing() {
+        let src = "fn a() {\n\
+                   // lint: allow(P1)\n\
+                   x.unwrap();\n\
+                   }\n";
+        let scan = scan_file("t.rs", src, &ALL);
+        assert_eq!(lines_of(&scan, "P1"), vec![3]);
+        assert_eq!(lines_of(&scan, "A0"), vec![2]);
+    }
+
+    #[test]
+    fn unknown_rule_in_allow_is_a_finding() {
+        let src = "// lint: allow(Z9) — no such rule\nfn a() {}\n";
+        let scan = scan_file("t.rs", src, &ALL);
+        assert_eq!(lines_of(&scan, "A0"), vec![1]);
+    }
+
+    #[test]
+    fn zero_literals() {
+        let z = |s: &str| {
+            is_zero_literal(&Tok {
+                kind: TokKind::Number,
+                text: s.to_string(),
+                line: 1,
+            })
+        };
+        assert!(z("0"));
+        assert!(z("0.0"));
+        assert!(z("0.0f32"));
+        assert!(z("0f64"));
+        assert!(z("0usize"));
+        assert!(z("0.0_f64"));
+        assert!(!z("0.5"));
+        assert!(!z("1"));
+        assert!(!z("00"));
+    }
+
+    #[test]
+    fn guard_let_vs_statement_temporary() {
+        // Guard-let: the lock is held across the next statement.
+        let src = "fn a(&self) {\n\
+                   let g = self.alpha.lock().unwrap();\n\
+                   self.beta.lock().unwrap().push(1);\n\
+                   }\n";
+        let scan = scan_file("t.rs", src, &[Rule::C1]);
+        assert_eq!(scan.lock_edges.len(), 1);
+        assert_eq!(scan.lock_edges[0].held, "alpha");
+        assert_eq!(scan.lock_edges[0].acquired, "beta");
+        // Statement temporary: released at the `;`, no edge.
+        let src = "fn a(&self) {\n\
+                   self.alpha.lock().unwrap().push(1);\n\
+                   self.beta.lock().unwrap().push(2);\n\
+                   }\n";
+        let scan = scan_file("t.rs", src, &[Rule::C1]);
+        assert!(scan.lock_edges.is_empty());
+    }
+
+    #[test]
+    fn tail_expression_guard_is_released_by_the_brace() {
+        // Regression: a `.lock()` in a tail expression (no `;`) must
+        // not leak into the next function.
+        let src = "fn a(&self) -> usize {\n\
+                   self.alpha.lock().unwrap().len()\n\
+                   }\n\
+                   fn b(&self) {\n\
+                   self.alpha.lock().unwrap().clear();\n\
+                   }\n";
+        let scan = scan_file("t.rs", src, &[Rule::C1]);
+        assert!(scan.lock_edges.is_empty());
+    }
+
+    #[test]
+    fn lock_cycles_found_and_ordered_pairs_pass() {
+        let edge = |a: &str, b: &str| LockEdge {
+            held: a.to_string(),
+            acquired: b.to_string(),
+            file: "t.rs".to_string(),
+            line: 1,
+        };
+        let cyclic = [edge("a", "b"), edge("b", "a")];
+        let finds = lock_cycles(&cyclic);
+        assert_eq!(finds.len(), 1);
+        assert!(finds[0].message.contains("a -> b -> a")
+            || finds[0].message.contains("b -> a -> b"));
+        let acyclic = [edge("a", "b"), edge("b", "c"), edge("a", "c")];
+        assert!(lock_cycles(&acyclic).is_empty());
+    }
+}

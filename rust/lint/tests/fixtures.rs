@@ -1,0 +1,145 @@
+//! Fixture-backed self-test: one passing and one violating snippet
+//! per rule, plus the allow-comment contract. These are the same
+//! entry points the binary uses, so a rule that rots here rots
+//! visibly.
+
+use restream_lint::{lock_cycles, scan_file, FileScan, Rule};
+
+fn scan(name: &str, src: &str, rule: Rule) -> FileScan {
+    scan_file(name, src, &[rule])
+}
+
+fn count(scan: &FileScan, rule: &str) -> usize {
+    scan.findings.iter().filter(|f| f.rule == rule).count()
+}
+
+#[test]
+fn d1_hash_iteration() {
+    let pass = scan(
+        "d1_pass.rs",
+        include_str!("fixtures/d1_pass.rs"),
+        Rule::D1,
+    );
+    assert_eq!(count(&pass, "D1"), 0, "{:?}", pass.findings);
+    let fail = scan(
+        "d1_fail.rs",
+        include_str!("fixtures/d1_fail.rs"),
+        Rule::D1,
+    );
+    assert_eq!(count(&fail, "D1"), 1, "{:?}", fail.findings);
+    assert_eq!(fail.findings[0].line, 9);
+    assert!(fail.findings[0].message.contains("counts"));
+}
+
+#[test]
+fn d2_wall_clock_and_env() {
+    let pass = scan(
+        "d2_pass.rs",
+        include_str!("fixtures/d2_pass.rs"),
+        Rule::D2,
+    );
+    assert_eq!(count(&pass, "D2"), 0, "{:?}", pass.findings);
+    let fail = scan(
+        "d2_fail.rs",
+        include_str!("fixtures/d2_fail.rs"),
+        Rule::D2,
+    );
+    // Instant::now on line 4, env::var on line 5.
+    assert_eq!(count(&fail, "D2"), 2, "{:?}", fail.findings);
+    let lines: Vec<u32> = fail.findings.iter().map(|f| f.line).collect();
+    assert_eq!(lines, vec![4, 5]);
+}
+
+#[test]
+fn d3_accumulation_shape() {
+    let pass = scan(
+        "d3_pass.rs",
+        include_str!("fixtures/d3_pass.rs"),
+        Rule::D3,
+    );
+    assert_eq!(count(&pass, "D3"), 0, "{:?}", pass.findings);
+    let fail = scan(
+        "d3_fail.rs",
+        include_str!("fixtures/d3_fail.rs"),
+        Rule::D3,
+    );
+    // `.sum()`, `fold(1.0, …)`, and the `.rev()` loop header.
+    assert_eq!(count(&fail, "D3"), 3, "{:?}", fail.findings);
+}
+
+#[test]
+fn c1_lock_order_cycle() {
+    let pass = scan(
+        "c1_pass.rs",
+        include_str!("fixtures/c1_pass.rs"),
+        Rule::C1,
+    );
+    assert!(lock_cycles(&pass.lock_edges).is_empty());
+    let fail = scan(
+        "c1_fail.rs",
+        include_str!("fixtures/c1_fail.rs"),
+        Rule::C1,
+    );
+    let cycles = lock_cycles(&fail.lock_edges);
+    assert_eq!(cycles.len(), 1, "{cycles:?}");
+    assert!(cycles[0].message.contains("alpha"));
+    assert!(cycles[0].message.contains("beta"));
+}
+
+#[test]
+fn c2_safety_comment() {
+    let pass = scan(
+        "c2_pass.rs",
+        include_str!("fixtures/c2_pass.rs"),
+        Rule::C2,
+    );
+    assert_eq!(count(&pass, "C2"), 0, "{:?}", pass.findings);
+    let fail = scan(
+        "c2_fail.rs",
+        include_str!("fixtures/c2_fail.rs"),
+        Rule::C2,
+    );
+    assert_eq!(count(&fail, "C2"), 1, "{:?}", fail.findings);
+}
+
+#[test]
+fn p1_request_path_panics() {
+    let pass = scan(
+        "p1_pass.rs",
+        include_str!("fixtures/p1_pass.rs"),
+        Rule::P1,
+    );
+    assert_eq!(count(&pass, "P1"), 0, "{:?}", pass.findings);
+    let fail = scan(
+        "p1_fail.rs",
+        include_str!("fixtures/p1_fail.rs"),
+        Rule::P1,
+    );
+    // Exactly the shipping-code unwrap; the cfg(test) expect is
+    // skipped.
+    assert_eq!(count(&fail, "P1"), 1, "{:?}", fail.findings);
+    assert_eq!(fail.findings[0].line, 2);
+}
+
+#[test]
+fn allow_comment_suppresses_exactly_one_finding() {
+    let scan = scan(
+        "allow_suppresses_one.rs",
+        include_str!("fixtures/allow_suppresses_one.rs"),
+        Rule::P1,
+    );
+    assert_eq!(count(&scan, "P1"), 1, "{:?}", scan.findings);
+    assert_eq!(scan.findings[0].line, 4);
+    assert_eq!(count(&scan, "A0"), 0);
+}
+
+#[test]
+fn malformed_allow_is_reported_and_suppresses_nothing() {
+    let scan = scan(
+        "allow_malformed.rs",
+        include_str!("fixtures/allow_malformed.rs"),
+        Rule::P1,
+    );
+    assert_eq!(count(&scan, "A0"), 1, "{:?}", scan.findings);
+    assert_eq!(count(&scan, "P1"), 1, "{:?}", scan.findings);
+}

@@ -1,0 +1,4 @@
+fn take(a: Option<u32>) -> u32 {
+    // lint: allow(P1)
+    a.unwrap()
+}

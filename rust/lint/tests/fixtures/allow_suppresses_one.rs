@@ -1,0 +1,6 @@
+fn take(a: Option<u32>, b: Option<u32>) -> (u32, u32) {
+    // lint: allow(P1) — the caller checked is_some() on both args
+    let x = a.unwrap();
+    let y = b.unwrap();
+    (x, y)
+}

@@ -1,0 +1,11 @@
+fn push_both(&self, x: u32) {
+    let a = self.alpha.lock().unwrap();
+    let b = self.beta.lock().unwrap();
+    b.push(a.len() as u32 + x);
+}
+
+fn drain_both(&self) -> u32 {
+    let b = self.beta.lock().unwrap();
+    let a = self.alpha.lock().unwrap();
+    a.len() as u32 + b.len() as u32
+}

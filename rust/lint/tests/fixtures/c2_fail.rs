@@ -1,0 +1,4 @@
+fn peek(p: *const u8) -> u8 {
+    // Reads the byte behind the pointer.
+    unsafe { *p }
+}

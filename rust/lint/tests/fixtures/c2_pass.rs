@@ -1,0 +1,5 @@
+fn peek(p: *const u8) -> u8 {
+    // SAFETY: the caller guarantees `p` points to a live, aligned
+    // byte for the duration of the call.
+    unsafe { *p }
+}

@@ -1,0 +1,13 @@
+use std::collections::HashMap;
+
+fn tally(xs: &[(String, u32)]) -> Vec<(String, u32)> {
+    let mut counts: HashMap<String, u32> = HashMap::new();
+    for (k, v) in xs {
+        *counts.entry(k.clone()).or_insert(0) += v;
+    }
+    let mut out = Vec::new();
+    for kv in &counts {
+        out.push((kv.0.clone(), *kv.1));
+    }
+    out
+}

@@ -1,0 +1,7 @@
+use std::time::Instant;
+
+fn stamp() -> f64 {
+    let t0 = Instant::now();
+    let seed = std::env::var("SEED").unwrap_or_default();
+    t0.elapsed().as_secs_f64() + seed.len() as f64
+}

@@ -1,0 +1,4 @@
+fn stamp(step: u64) -> u64 {
+    // Logical time: derived from the step counter, not the wall clock.
+    step.wrapping_mul(2654435761)
+}

@@ -1,0 +1,15 @@
+fn total(xs: &[f32]) -> f32 {
+    xs.iter().sum()
+}
+
+fn shifted(xs: &[f32]) -> f32 {
+    xs.iter().fold(1.0f32, |acc, x| acc + x)
+}
+
+fn backwards(xs: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for i in (0..xs.len()).rev() {
+        acc += xs[i];
+    }
+    acc
+}

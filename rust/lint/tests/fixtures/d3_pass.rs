@@ -1,0 +1,10 @@
+fn total(xs: &[f32]) -> f32 {
+    xs.iter().fold(0.0f32, |acc, x| acc + x)
+}
+
+fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter()
+        .zip(b.iter())
+        .map(|(x, y)| x * y)
+        .fold(0.0f64, |acc, p| acc + p)
+}

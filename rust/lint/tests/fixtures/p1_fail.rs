@@ -1,0 +1,12 @@
+fn first(v: &[u32]) -> u32 {
+    *v.first().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwraps_in_tests_are_fine() {
+        let x: Option<u32> = Some(1);
+        x.expect("tests may assert");
+    }
+}

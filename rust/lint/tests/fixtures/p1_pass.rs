@@ -1,0 +1,5 @@
+fn first(v: &[u32]) -> Result<u32, String> {
+    v.first()
+        .copied()
+        .ok_or_else(|| "empty batch in request".to_string())
+}

@@ -80,6 +80,10 @@
 //! assert_eq!(report.total_requests(), 1);
 //! ```
 
+// Rule P1's compiler-side shadow: the request path answers with typed
+// errors, never panics. Tests keep their unwraps (the cfg_attr gate).
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::dbg_macro))]
+
 mod report;
 mod residency;
 
@@ -255,6 +259,8 @@ impl Drr {
             self.deficit[i] += self.quantum;
             let need = queues[i].front().map_or(0, Vec::len);
             if self.deficit[i] >= need {
+                // lint: allow(P1) — guarded three lines up: this arm
+                // is reached only when `queues[i]` is non-empty.
                 let batch = queues[i].pop_front().expect("non-empty queue");
                 self.deficit[i] -= need;
                 if queues[i].is_empty() {
@@ -329,6 +335,9 @@ impl ChipScheduler {
                     }
                     ready_tx.close_one();
                 })
+                // lint: allow(P1) — thread spawn fails only on OS
+                // resource exhaustion at scheduler start, before any
+                // request exists to answer with a typed error.
                 .expect("spawning chip batcher thread");
             clients.push((app.net.name.to_string(), client));
             batchers.push(handle);
@@ -341,6 +350,8 @@ impl ChipScheduler {
                 dispatch_loop(engine, hosted, footprints, ready, quantum,
                               budget)
             })
+            // lint: allow(P1) — same start-time spawn failure as the
+            // batcher threads above; no request path exists yet.
             .expect("spawning chip dispatcher thread");
         Ok(ChipScheduler { clients, batchers, dispatcher })
     }
@@ -371,8 +382,11 @@ impl ChipScheduler {
         let ChipScheduler { clients, batchers, dispatcher } = self;
         drop(clients);
         for handle in batchers {
+            // lint: allow(P1) — a batcher panic is already a bug; the
+            // only honest continuation of shutdown is to propagate it.
             handle.join().expect("chip batcher thread panicked");
         }
+        // lint: allow(P1) — propagating a dispatcher panic, as above.
         dispatcher.join().expect("chip dispatcher thread panicked")
     }
 }

@@ -135,15 +135,22 @@ pub fn plan_slots(footprints: &[AppFootprint], sys: &SystemConfig)
     // honest if the mapper's placement rule ever changes).
     let offsets = greedy_admission(&cores, sys.neural_cores);
     let mut slots = Vec::with_capacity(footprints.len());
-    let mut taken: std::collections::HashSet<(usize, usize)> =
-        std::collections::HashSet::new();
+    let mut taken: std::collections::BTreeSet<(usize, usize)> =
+        std::collections::BTreeSet::new();
     for (fp, slot) in footprints.iter().zip(&offsets) {
+        // lint: allow(P1) — the guard above returned an error unless
+        // the whole set fits, and greedy_admission admits every app
+        // whose demand fits; an unfilled slot here is a plain bug in
+        // greedy_admission, not a request-path condition.
         let offset = slot.expect("the whole set fits the chip");
         let placement = place_at(&fp.stage, sys, offset);
         // A multi-phase stage legitimately reuses its own stops across
         // phases (the chip reconfigures between them) — dedupe within
-        // the app before checking across apps.
-        let mine: std::collections::HashSet<(usize, usize)> =
+        // the app before checking across apps. BTreeSet, not HashSet:
+        // the iteration below reports the first conflict, and the
+        // error message must name the same stop on every run (lint
+        // rule D1).
+        let mine: std::collections::BTreeSet<(usize, usize)> =
             placement.coords.iter().flatten().copied().collect();
         for xy in mine {
             if !taken.insert(xy) {
@@ -236,6 +243,10 @@ impl Residency {
             let victim = self
                 .lru
                 .pop_front()
+                // lint: allow(P1) — an empty LRU with unmet demand
+                // means one app alone exceeds the budget, which both
+                // entry points reject before a Residency exists; this
+                // is an internal invariant, not a request error.
                 .expect("app exceeds the chip alone — rejected at start");
             self.resident[victim] = false;
             self.used -= self.demand[victim];
@@ -324,6 +335,38 @@ mod tests {
         assert!(err.contains("needs 4 neural cores"), "{err}");
         assert!(err.contains("chip has 2"), "{err}");
         assert!(err.contains("kdd_ae=2"), "{err}");
+    }
+
+    #[test]
+    fn overlap_error_names_the_smallest_stop_on_every_run() {
+        // Two residents forced onto the same offset (by lying about
+        // their core demand) collide on every mesh stop; the audit
+        // iterates a BTreeSet, so each run must report the *same*,
+        // smallest reused stop — with a HashSet the reported stop (and
+        // thus the error text) varied run to run.
+        let sys = SystemConfig::default();
+        let mut a = footprint(apps::network("iris_ae").unwrap(), &sys)
+            .unwrap();
+        a.cores = 0;
+        let mut b = a.clone();
+        b.app = "iris_ae_twin".to_string();
+        let expected_stop = place_at(&a.stage, &sys, 0)
+            .coords
+            .iter()
+            .flatten()
+            .copied()
+            .min()
+            .unwrap();
+        let msgs: Vec<String> = (0..8)
+            .map(|_| {
+                plan_slots(&[a.clone(), b.clone()], &sys).unwrap_err()
+            })
+            .collect();
+        for m in &msgs {
+            assert_eq!(m, &msgs[0]);
+            assert!(m.contains("iris_ae_twin"), "{m}");
+            assert!(m.contains(&format!("{expected_stop:?}")), "{m}");
+        }
     }
 
     #[test]

@@ -71,6 +71,10 @@
 //! assert_eq!(report.total_requests(), 1);
 //! ```
 
+// Rule P1's compiler-side shadow: the request path answers with typed
+// errors, never panics. Tests keep their unwraps (the cfg_attr gate).
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::dbg_macro))]
+
 mod placement;
 mod report;
 
@@ -188,6 +192,9 @@ impl ClusterClient {
             .min_by_key(|(chip, _)| {
                 (self.load.in_flight[*chip].load(Ordering::Acquire), *chip)
             })
+            // lint: allow(P1) — plan_placement rejects apps it cannot
+            // place, and start() built one client per placed replica,
+            // so `replicas` is structurally non-empty here.
             .expect("a placed app has at least one replica");
         self.load.in_flight[*chip].fetch_add(1, Ordering::AcqRel);
         match client.submit(x) {
@@ -320,6 +327,9 @@ impl Cluster {
             for &c in &placement.apps[i].chips {
                 let sched = schedulers[c]
                     .as_ref()
+                    // lint: allow(P1) — the loop above constructed a
+                    // scheduler for exactly the occupied chips, and
+                    // `placement.apps` only names occupied chips.
                     .expect("a placed chip has a scheduler");
                 replicas.push((c, sched.client(name)?));
             }

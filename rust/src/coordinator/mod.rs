@@ -60,13 +60,13 @@ pub use pool::{
 
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
-use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
 use crate::checkpoint::{self, CheckpointError, TrainState};
 use crate::config::{apps, AppKind, Network, SystemConfig};
 use crate::mapper;
+use crate::metrics::Stopwatch;
 use crate::runtime::{ArrayF32, Backend, FwdMode, KmeansStep, NativeBackend};
 use crate::testing::Rng;
 
@@ -373,7 +373,7 @@ pub struct Engine {
     last_pipeline: Mutex<Option<PipelineReport>>,
     /// Memoised `mapper::shard_hint` per app name (the hint is a
     /// deterministic function of the network and the default chip).
-    shard_hints: Mutex<std::collections::HashMap<String, usize>>,
+    shard_hints: Mutex<std::collections::BTreeMap<String, usize>>,
 }
 
 impl Engine {
@@ -390,7 +390,7 @@ impl Engine {
             pipeline_stages: None,
             last_report: Mutex::new(None),
             last_pipeline: Mutex::new(None),
-            shard_hints: Mutex::new(std::collections::HashMap::new()),
+            shard_hints: Mutex::new(std::collections::BTreeMap::new()),
         }
     }
 
@@ -493,11 +493,11 @@ impl Engine {
         plan: &ShardPlan,
         f: impl Fn(usize, (usize, usize)) -> T + Sync,
     ) -> (Vec<T>, ExecReport) {
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let timed = self.pool.run(plan.shards(), |s| {
-            let t = Instant::now();
+            let t = Stopwatch::start();
             let out = f(s, plan.bounds[s]);
-            (out, t.elapsed().as_secs_f64())
+            (out, t.elapsed_s())
         });
         let mut shards = Vec::with_capacity(plan.shards());
         let mut outs = Vec::with_capacity(plan.shards());
@@ -512,7 +512,7 @@ impl Engine {
         let report = ExecReport {
             op,
             workers: self.pool.workers(),
-            wall_s: t0.elapsed().as_secs_f64(),
+            wall_s: t0.elapsed_s(),
             shards,
             recovered_shards: self.pool.recovered_last_run(),
         };
@@ -546,6 +546,10 @@ impl Engine {
     /// Backend from `$RESTREAM_BACKEND` (default: `native`) and
     /// worker-pool size from `$RESTREAM_WORKERS` (default: 1).
     pub fn open_default() -> Result<Self> {
+        // lint: allow(D2) — $RESTREAM_BACKEND is an explicit config
+        // knob read once at construction; it selects which backend
+        // runs, never what it computes (tests/backend_parity.rs pins
+        // the backends bit-identical).
         let name = std::env::var("RESTREAM_BACKEND")
             .unwrap_or_else(|_| "native".to_string());
         Ok(Self::named(&name)?.with_workers(default_workers()))
@@ -855,7 +859,7 @@ impl Engine {
         cursor: &mut TrainCursor,
         hook: &mut EpochHook<'_>,
     ) -> Result<(Vec<ArrayF32>, TrainReport)> {
-        let start = std::time::Instant::now();
+        let start = Stopwatch::start();
         let batch = batch.max(1);
         if cursor.order.len() != xs.len() {
             return Err(anyhow!(
@@ -883,7 +887,7 @@ impl Engine {
         report.epochs = cursor.epochs_done;
         report.samples_seen = cursor.samples_seen;
         report.loss_curve = cursor.loss_curve.clone();
-        report.wall_s = start.elapsed().as_secs_f64();
+        report.wall_s = start.elapsed_s();
         Ok((params, report))
     }
 
@@ -950,7 +954,9 @@ impl Engine {
                             lr,
                         )?;
                         params = next;
-                        epoch_loss += losses.iter().sum::<f32>();
+                        epoch_loss += losses
+                            .iter()
+                            .fold(0.0f32, |acc, l| acc + l);
                         buf_i.clear();
                     }
                     Ok(())
@@ -1149,7 +1155,7 @@ impl Engine {
         let mut loss_sum = 0.0f32;
         for gb in shard_outs {
             let gb = gb?;
-            loss_sum += gb.losses.iter().sum::<f32>();
+            loss_sum += gb.losses.iter().fold(0.0f32, |acc, l| acc + l);
             if total.is_empty() {
                 total = gb.grads;
             } else {
@@ -1163,14 +1169,14 @@ impl Engine {
         if total.is_empty() {
             return Err(anyhow!("empty mini-batch"));
         }
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         *params = backend.apply_grads(
             grad_graph,
             std::mem::take(params),
             &total,
             lr,
         )?;
-        report.apply_wall_s += t0.elapsed().as_secs_f64();
+        report.apply_wall_s += t0.elapsed_s();
         report.grad_wall_s += exec.wall_s;
         report.recovered_shards += exec.recovered_shards.len();
         for s in &exec.shards {
@@ -1693,7 +1699,7 @@ impl Engine {
                                 let ac = a.clamp(-0.5, 0.5);
                                 (ac - b).abs() as f64
                             })
-                            .sum()
+                            .fold(0.0f64, |acc, d| acc + d)
                     })
                     .collect()
             },

@@ -44,7 +44,6 @@
 //! [`testing::ExecModeHarness`](crate::testing::ExecModeHarness).
 
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::time::Instant;
 
 use anyhow::{anyhow, ensure, Result};
 
@@ -52,6 +51,7 @@ use super::pool::ShardPlan;
 use super::stream;
 use crate::config::hwspec as hw;
 use crate::mapper;
+use crate::metrics::Stopwatch;
 use crate::runtime::{clip_input, with_bias, ArrayF32, Backend, FwdMode};
 
 /// How the engine executes a batched forward pass.
@@ -237,7 +237,7 @@ fn run_stage(
                 if pos >= xs.len() {
                     break;
                 }
-                let t = Instant::now();
+                let t = Stopwatch::start();
                 let chunk = &xs[pos..(pos + *tile).min(xs.len())];
                 pos += chunk.len();
                 // The identical tile the sequential loop builds
@@ -250,7 +250,7 @@ fn run_stage(
                 data.resize(*tile * *dims, 0.0);
                 let x_arr = ArrayF32::matrix(*tile, *dims, data)
                     .map_err(|e| anyhow!(e))?;
-                acc.busy_s += t.elapsed().as_secs_f64();
+                acc.busy_s += t.elapsed_s();
                 ChunkMsg {
                     rows: chunk.len(),
                     h: clip_input(&x_arr),
@@ -258,10 +258,10 @@ fn run_stage(
                 }
             }
             StageFeed::Channel(rx) => {
-                let t = Instant::now();
+                let t = Stopwatch::start();
                 match rx.recv() {
                     Ok(msg) => {
-                        acc.idle_s += t.elapsed().as_secs_f64();
+                        acc.idle_s += t.elapsed_s();
                         msg
                     }
                     Err(_) => break, // upstream done (or failed)
@@ -270,7 +270,7 @@ fn run_stage(
         };
         // Run the owned layers — the same bias append + crossbar
         // forward the fused `forward_batch` composes.
-        let t = Instant::now();
+        let t = Stopwatch::start();
         for l in layers.0..layers.1 {
             let (gp, gn) = (&params[2 * l], &params[2 * l + 1]);
             ensure!(
@@ -286,15 +286,15 @@ fn run_stage(
                 msg.code = Some(msg.h.clone());
             }
         }
-        acc.busy_s += t.elapsed().as_secs_f64();
+        acc.busy_s += t.elapsed_s();
         acc.chunks += 1;
         match &next {
             Some(tx) => {
-                let t = Instant::now();
+                let t = Stopwatch::start();
                 if tx.send(msg).is_err() {
                     break;
                 }
-                acc.stall_s += t.elapsed().as_secs_f64();
+                acc.stall_s += t.elapsed_s();
             }
             None => {
                 let output_idx =
@@ -349,7 +349,7 @@ pub(crate) fn forward_pipelined(
     let bounds: Vec<(usize, usize)> = (0..stages)
         .map(|s| mapper::stage_layer_bounds(n_layers, stages, s))
         .collect();
-    let t0 = Instant::now();
+    let t0 = Stopwatch::start();
     if xs.is_empty() {
         return Ok((
             Vec::new(),
@@ -423,7 +423,7 @@ pub(crate) fn forward_pipelined(
             op,
             stages: stage_reports,
             replicas: 1,
-            wall_s: t0.elapsed().as_secs_f64(),
+            wall_s: t0.elapsed_s(),
             samples: xs.len(),
         },
     ))
@@ -454,7 +454,7 @@ pub(crate) fn forward_hybrid(
             backend, op, mode, params, xs, dims, output_idx, stages, tile,
         );
     }
-    let t0 = Instant::now();
+    let t0 = Stopwatch::start();
     let results: Vec<Result<(Vec<Vec<f32>>, PipelineReport)>> =
         std::thread::scope(|scope| {
             let handles: Vec<_> = plan
@@ -507,7 +507,7 @@ pub(crate) fn forward_hybrid(
             op,
             stages: stage_reports,
             replicas: replica_count,
-            wall_s: t0.elapsed().as_secs_f64(),
+            wall_s: t0.elapsed_s(),
             samples: xs.len(),
         },
     ))

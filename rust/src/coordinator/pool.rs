@@ -74,6 +74,11 @@ use std::thread;
 /// Worker-pool size from `$RESTREAM_WORKERS` (default: 1, sequential).
 /// Unparseable or zero values fall back to 1.
 pub fn default_workers() -> usize {
+    // lint: allow(D2) — $RESTREAM_WORKERS is an explicit config knob
+    // read only by this entry-point helper (library construction via
+    // `Engine::new` never reads the environment); the worker count it
+    // picks cannot change results — bit-identity at any pool size is
+    // the PR 2 contract, pinned by tests/parallel_determinism.rs.
     std::env::var("RESTREAM_WORKERS")
         .ok()
         .and_then(|v| v.trim().parse::<usize>().ok())
@@ -159,7 +164,10 @@ impl ExecReport {
     /// Sum of per-shard busy time (s) — compare with `wall_s` to read
     /// the effective parallelism.
     pub fn busy_s(&self) -> f64 {
-        self.shards.iter().map(|s| s.wall_s).sum()
+        self.shards
+            .iter()
+            .map(|s| s.wall_s)
+            .fold(0.0f64, |acc, w| acc + w)
     }
 }
 
@@ -348,15 +356,20 @@ impl WorkerPool {
             }
         };
         let run_ref: &(dyn Fn(usize) + Sync) = &run_one;
-        // SAFETY: the only thing the lifetime erasure permits is the
-        // worker threads calling `run_one` (and through it `f` and
-        // the locals it borrows) while this stack frame is alive.
-        // The frame cannot be left before every submitted job has
-        // executed: every job — including reassigned ones — sends
-        // exactly one ack on `done_tx` (`Done` after running its
-        // catch_unwind-wrapped payload, `Died` without running it),
-        // and the loop below blocks until it has collected `jobs`
-        // `Done` acks, resubmitting on every `Died`.
+        // SAFETY: the transmute erases only the *lifetime* of the
+        // `&(dyn Fn(usize) + Sync)` reference — pointee type, `Sync`
+        // bound, and vtable are unchanged — so the sole obligation is
+        // that no worker thread can still hold the reference once this
+        // stack frame (which owns `run_one`, `f`, and the locals they
+        // borrow) is left. That holds because the frame cannot be left
+        // before every submitted job has executed: every job —
+        // including reassigned ones — sends exactly one ack on
+        // `done_tx` (`Done` after running its catch_unwind-wrapped
+        // payload, `Died` without running it), and the loop below
+        // blocks until it has collected `jobs` `Done` acks,
+        // resubmitting on every `Died`. After the last ack, no queued
+        // job referencing `run_static` remains. (Lint rule C2 pins
+        // this annotation to the unsafe block.)
         let run_static = unsafe {
             std::mem::transmute::<
                 &(dyn Fn(usize) + Sync),

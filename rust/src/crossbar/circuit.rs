@@ -152,7 +152,7 @@ impl CircuitCrossbar {
                         let gm = self.g[i * c + j] / self.params.r_on;
                         (vr[i * c + j] - vc[i * c + j]) * gm
                     })
-                    .sum()
+                    .fold(0.0f64, |acc, cur| acc + cur)
             })
             .collect();
         SolveResult { col_currents, iters }

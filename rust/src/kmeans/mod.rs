@@ -30,7 +30,10 @@ impl KMeans {
     /// Manhattan distance from sample `s` to centre `c`.
     pub fn distance(&self, s: &[f32], c: usize) -> f32 {
         let cc = &self.centres[c * self.dims..(c + 1) * self.dims];
-        s.iter().zip(cc).map(|(a, b)| (a - b).abs()).sum()
+        s.iter()
+            .zip(cc)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, |acc, d| acc + d)
     }
 
     /// Assign one sample (the clustering core's per-sample operation).
@@ -163,7 +166,7 @@ impl KMeans {
                 self.distance(&x[i * self.dims..(i + 1) * self.dims], assign[i])
                     as f64
             })
-            .sum()
+            .fold(0.0f64, |acc, d| acc + d)
     }
 }
 

@@ -2,6 +2,35 @@
 //! anomaly experiment (Figs 18–20), clustering purity (k-means quality),
 //! and small statistics helpers used by the benches and the serving
 //! layer's latency accounting ([`mean`], [`percentile`]).
+//!
+//! This module is deliberately *outside* the determinism-tagged set
+//! (see `rust/lint`): everything here is report-side arithmetic whose
+//! output never feeds back into training or serving results, so it is
+//! also where the one sanctioned wall-clock doorway, [`Stopwatch`],
+//! lives.
+
+use std::time::Instant;
+
+/// Wall-clock stopwatch for report timing (shard wall times, queue
+/// waits, per-stage occupancy). Determinism-tagged modules must not
+/// call `Instant::now` directly (lint rule D2) — timing there flows
+/// through this type so every wall-clock read is auditable as
+/// report-only: a `Stopwatch` yields seconds for reports and nothing
+/// else, and no result math may depend on it.
+#[derive(Clone, Copy, Debug)]
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    /// Start timing now.
+    pub fn start() -> Stopwatch {
+        Stopwatch(Instant::now())
+    }
+
+    /// Seconds elapsed since [`Stopwatch::start`].
+    pub fn elapsed_s(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
 
 /// Classification accuracy from predictions and labels.
 pub fn accuracy(pred: &[usize], truth: &[usize]) -> f64 {
@@ -269,5 +298,14 @@ mod tests {
     fn histogram_bins_and_edges() {
         let h = histogram(&[0.0, 0.49, 0.5, 0.99, 1.0], 0.0, 1.0, 2);
         assert_eq!(h, vec![2, 3]);
+    }
+
+    #[test]
+    fn stopwatch_is_monotonic_nonnegative() {
+        let t = Stopwatch::start();
+        let a = t.elapsed_s();
+        let b = t.elapsed_s();
+        assert!(a >= 0.0);
+        assert!(b >= a);
     }
 }

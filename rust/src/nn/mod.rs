@@ -192,8 +192,10 @@ impl Mlp {
             .iter()
             .zip(&y)
             .map(|(&ti, &yi)| (ti - yi) * (ti - yi))
-            .sum::<f32>()
+            .fold(0.0f32, |acc, e| acc + e)
             / t.len() as f32;
+        // lint: allow(D3) — backprop layer walk (output-to-input), not
+        // a float reduction; it mirrors native.rs's grad loop.
         for l in (0..n_layers).rev() {
             let n_in = self.layers[l] + 1;
             let n_out = self.layers[l + 1];

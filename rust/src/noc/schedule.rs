@@ -10,7 +10,7 @@
 //! so the SRAM switch images can be programmed once at configuration
 //! time.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use super::{route, Link, Xy};
 
@@ -42,8 +42,10 @@ impl Scheduled {
 #[derive(Clone, Debug, Default)]
 pub struct Schedule {
     pub entries: Vec<Scheduled>,
-    /// Busy intervals per link, kept sorted by start slot.
-    busy: HashMap<Link, Vec<(u64, u64)>>,
+    /// Busy intervals per link, kept sorted by start slot. BTreeMap,
+    /// not HashMap: `validate` iterates it, and which offending link a
+    /// failed audit names must not vary run to run (lint rule D1).
+    busy: BTreeMap<Link, Vec<(u64, u64)>>,
 }
 
 impl Schedule {

@@ -140,7 +140,11 @@ pub(crate) fn kmeans_pass(
         let mut best_d = f32::INFINITY;
         for c in 0..k {
             let cc = &centres.data[c * dims..(c + 1) * dims];
-            let dist: f32 = s.iter().zip(cc).map(|(a, b)| (a - b).abs()).sum();
+            let dist = s
+                .iter()
+                .zip(cc)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, |acc, d| acc + d);
             if dist < best_d {
                 best_d = dist;
                 best = c;
@@ -237,8 +241,11 @@ pub(crate) fn train_step(
         .iter()
         .zip(&y.data)
         .map(|(&ti, &yi)| (ti - yi) * (ti - yi))
-        .sum::<f32>()
+        .fold(0.0f32, |acc, e| acc + e)
         / t.data.len() as f32;
+    // lint: allow(D3) — the backprop layer walk runs output-to-input
+    // by definition; it is not a float reduction (each iteration
+    // writes its own layer's accumulator).
     for l in (0..n_layers).rev() {
         let rows = acts[l].shape[1];
         let n_out = dps[l].shape[1];
@@ -327,6 +334,9 @@ pub(crate) fn grad_batch(
     let mut grads: Vec<ArrayF32> = (0..n_layers)
         .map(|l| ArrayF32::zeros(params[2 * l].shape.clone()))
         .collect();
+    // lint: allow(D3) — backprop layer walk (output-to-input), not a
+    // float reduction; per-layer accumulators are written in a fixed
+    // order.
     for l in (0..n_layers).rev() {
         let rows = acts[l].shape[1];
         let n_out = dps[l].shape[1];

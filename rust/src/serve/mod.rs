@@ -52,6 +52,10 @@
 //! assert_eq!(report.requests, 1);
 //! ```
 
+// Rule P1's compiler-side shadow: the request path answers with typed
+// errors, never panics. Tests keep their unwraps (the cfg_attr gate).
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::dbg_macro))]
+
 mod batcher;
 mod report;
 mod service;
@@ -260,6 +264,9 @@ impl Server {
         let handle = thread::Builder::new()
             .name("restream-serve".to_string())
             .spawn(move || serve_loop(engine, net, params, batcher))
+            // lint: allow(P1) — thread spawn fails only on OS resource
+            // exhaustion at server start, before any request exists to
+            // answer with a typed error.
             .expect("spawning serve dispatcher thread");
         Server { app, client, handle }
     }
@@ -282,6 +289,8 @@ impl Server {
     pub fn shutdown(self) -> ServeReport {
         let Server { app: _, client, handle } = self;
         drop(client);
+        // lint: allow(P1) — a dispatcher panic is already a bug; the
+        // only honest continuation of shutdown is to propagate it.
         handle.join().expect("serve dispatcher thread panicked")
     }
 }
