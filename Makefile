@@ -4,8 +4,8 @@
 ARTIFACTS ?= artifacts
 
 .PHONY: build test bench bench-ckpt bench-cluster bench-multiapp \
-	bench-parallel bench-pipeline bench-serving bench-train clippy doc \
-	fmt lint artifacts pytest cargotest-pjrt
+	bench-parallel bench-pipeline bench-serving bench-telemetry \
+	bench-train clippy doc fmt lint artifacts pytest cargotest-pjrt
 
 build:
 	cargo build --release
@@ -31,6 +31,11 @@ bench-pipeline:
 bench-serving:
 	BENCH_SERVING_OUT=$(abspath BENCH_serving.json) \
 		cargo bench --bench perf_serving
+
+# Telemetry overhead: traced vs untraced serving throughput.
+bench-telemetry:
+	BENCH_TELEMETRY_OUT=$(abspath BENCH_telemetry.json) \
+		cargo bench --bench perf_telemetry
 
 # Multi-tenant serving: resident-set sweep vs dedicated servers.
 bench-multiapp:

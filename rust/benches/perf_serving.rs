@@ -62,7 +62,7 @@ fn run_config(
     let cfg = ServeConfig {
         max_batch,
         max_wait: Duration::from_micros(max_wait_us),
-        queue_capacity: None,
+        ..ServeConfig::default()
     };
     let server =
         Server::start(Engine::native(), net.clone(), params.to_vec(), cfg);

@@ -1,0 +1,173 @@
+//! §Perf: telemetry overhead of the tracing/metrics layer.
+//!
+//! Runs the same closed-loop serving replay as `perf_serving` twice —
+//! once with tracing disabled (the `TraceSink` no-op path) and once
+//! with a live `Tracer` recording one span per request into the ring
+//! buffer — and reports the throughput delta as `overhead_pct`.
+//! CI's `bench-smoke` job fails when the overhead exceeds 5%
+//! (EXPERIMENTS.md §perf_telemetry): tracing is supposed to be a
+//! cheap observer, and this bench is the regression fence that keeps
+//! it one.
+//!
+//! Each arm is measured `$PERF_TELEMETRY_REPEATS` times (default 3),
+//! interleaved so thermal/scheduler drift hits both arms equally, and
+//! the best run per arm is compared — overhead is a property of the
+//! code, not of the noisiest run. Results land in
+//! `BENCH_telemetry.json` (override with `$BENCH_TELEMETRY_OUT`).
+//!
+//! Scale knobs: `$PERF_TELEMETRY_REQUESTS` (per client, default 256),
+//! `$PERF_TELEMETRY_APP` (default `mnist_class`).
+//!
+//! Determinism note: the traced and untraced arms compute bit-identical
+//! per-request results (`tests/telemetry_determinism.rs` pins this);
+//! only throughput may differ, and this bench bounds by how much.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use restream::benchutil::{env_usize, section};
+use restream::config::{apps, Network};
+use restream::coordinator::{init_conductances, Engine};
+use restream::runtime::ArrayF32;
+use restream::serve::{ServeConfig, Server};
+use restream::telemetry::{Registry, Tracer, DEFAULT_TRACE_CAPACITY};
+use restream::testing::Rng;
+
+const CLIENTS: usize = 4;
+const MAX_WAIT_US: u64 = 200;
+
+/// One closed-loop run: start a server (traced or not), hammer it from
+/// `CLIENTS` threads (`requests` each), and return throughput in
+/// requests/s.
+fn run_once(
+    net: &Network,
+    params: &[ArrayF32],
+    pool: &[Vec<f32>],
+    requests: usize,
+    trace: Option<Arc<Tracer>>,
+) -> f64 {
+    let cfg = ServeConfig {
+        max_wait: Duration::from_micros(MAX_WAIT_US),
+        trace,
+        ..ServeConfig::default()
+    };
+    let server =
+        Server::start(Engine::native(), net.clone(), params.to_vec(), cfg);
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let client = server.client();
+            let rows: Vec<Vec<f32>> = (0..requests)
+                .map(|r| pool[(c * 131 + r) % pool.len()].clone())
+                .collect();
+            std::thread::spawn(move || {
+                for x in rows {
+                    client.call(x).expect("serve request failed");
+                }
+            })
+        })
+        .collect();
+    for handle in handles {
+        handle.join().expect("load-generator client panicked");
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    server.shutdown();
+    (CLIENTS * requests) as f64 / wall_s.max(1e-12)
+}
+
+struct Summary {
+    app: String,
+    requests: usize,
+    repeats: usize,
+    rps_off: f64,
+    rps_on: f64,
+    overhead_pct: f64,
+    spans: u64,
+    dropped: u64,
+}
+
+fn json_report(s: &Summary) -> String {
+    format!(
+        "{{\n  \"bench\": \"perf_telemetry\",\n  \"app\": \"{}\",\n  \
+         \"requests_per_client\": {},\n  \"clients\": {CLIENTS},\n  \
+         \"repeats\": {},\n  \"trace_capacity\": {DEFAULT_TRACE_CAPACITY},\n  \
+         \"rps_untraced\": {:.2},\n  \"rps_traced\": {:.2},\n  \
+         \"spans_last_traced_run\": {},\n  \
+         \"spans_dropped_last_traced_run\": {},\n  \
+         \"overhead_pct\": {:.3}\n}}\n",
+        s.app,
+        s.requests,
+        s.repeats,
+        s.rps_off,
+        s.rps_on,
+        s.spans,
+        s.dropped,
+        s.overhead_pct
+    )
+}
+
+fn main() -> anyhow::Result<()> {
+    let requests = env_usize("PERF_TELEMETRY_REQUESTS", 256).max(1);
+    let repeats = env_usize("PERF_TELEMETRY_REPEATS", 3).max(1);
+    let app = std::env::var("PERF_TELEMETRY_APP")
+        .unwrap_or_else(|_| "mnist_class".to_string());
+    let net = apps::network(&app)
+        .ok_or_else(|| anyhow::anyhow!("unknown app {app}"))?;
+    let params = init_conductances(net.layers, 0);
+    let mut rng = Rng::seeded(0x7E1E);
+    let pool: Vec<Vec<f32>> = (0..256)
+        .map(|_| rng.vec_uniform(net.layers[0], -0.5, 0.5))
+        .collect();
+    println!(
+        "perf_telemetry: {app}, {CLIENTS} clients x {requests} requests, \
+         best of {repeats} interleaved repeats per arm"
+    );
+
+    section("interleaved arms: tracing off vs on");
+    let mut rps_off = 0.0f64;
+    let mut rps_on = 0.0f64;
+    let mut spans = 0u64;
+    let mut dropped = 0u64;
+    for rep in 0..repeats {
+        let off = run_once(net, &params, &pool, requests, None);
+        let reg = Registry::new();
+        let tracer = Tracer::new(DEFAULT_TRACE_CAPACITY, &reg);
+        let on =
+            run_once(net, &params, &pool, requests, Some(tracer.clone()));
+        spans = tracer.spans();
+        dropped = tracer.dropped();
+        println!(
+            "bench telemetry/rep{rep}  off {off:>9.0} req/s  \
+             on {on:>9.0} req/s"
+        );
+        rps_off = rps_off.max(off);
+        rps_on = rps_on.max(on);
+    }
+
+    section("summary");
+    let overhead_pct = (rps_off - rps_on) / rps_off.max(1e-12) * 100.0;
+    println!(
+        "best untraced {rps_off:.0} req/s, best traced {rps_on:.0} req/s \
+         -> overhead {overhead_pct:.2}% (gate: <= 5%)"
+    );
+    println!(
+        "last traced run recorded {spans} span(s), {dropped} dropped \
+         from the ring"
+    );
+
+    let out_path = std::env::var("BENCH_TELEMETRY_OUT")
+        .unwrap_or_else(|_| "BENCH_telemetry.json".to_string());
+    let summary = Summary {
+        app,
+        requests,
+        repeats,
+        rps_off,
+        rps_on,
+        overhead_pct,
+        spans,
+        dropped,
+    };
+    std::fs::write(&out_path, json_report(&summary))?;
+    println!("wrote {out_path}");
+    Ok(())
+}

@@ -12,6 +12,9 @@ use crate::rules::Rule;
 /// deliberately *not* here — their wall-clock reads (batching windows,
 /// latency splits) are the product, not a hazard — and neither is
 /// `metrics`, the sanctioned report-side home of `Stopwatch`.
+/// `telemetry` *is* here: its snapshots must serialise identically for
+/// identical state (D1), and its only clock is the `metrics::Stopwatch`
+/// doorway (D2), so the lint holds it to both.
 pub const DETERMINISM: &[&str] = &[
     "rust/src/coordinator/",
     "rust/src/runtime/",
@@ -21,6 +24,7 @@ pub const DETERMINISM: &[&str] = &[
     "rust/src/kmeans/",
     "rust/src/cluster/",
     "rust/src/chip/residency.rs",
+    "rust/src/telemetry/",
     "rust/lint/src/",
 ];
 
@@ -105,6 +109,15 @@ mod tests {
     fn everything_gets_c2() {
         assert!(rules_for("rust/src/cli/mod.rs").contains(&Rule::C2));
         assert!(rules_for("rust/src/metrics/mod.rs").contains(&Rule::C2));
+    }
+
+    #[test]
+    fn telemetry_is_determinism_tagged_but_not_kernel() {
+        let r = rules_for("rust/src/telemetry/registry.rs");
+        assert!(r.contains(&Rule::D1));
+        assert!(r.contains(&Rule::D2));
+        assert!(!r.contains(&Rule::D3));
+        assert!(!r.contains(&Rule::P1));
     }
 
     #[test]

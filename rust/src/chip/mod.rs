@@ -107,6 +107,7 @@ use crate::serve::{
     answer_batch, take_batch_inputs, Batcher, Client, Pending, Request,
     ServeStats, Service, StatsAccum,
 };
+use crate::telemetry::TraceSink;
 
 use residency::Residency;
 
@@ -145,6 +146,10 @@ pub struct ChipConfig {
     /// combined peak core demand exceeds the chip ([`plan_residency`])
     /// instead of serving the overflow via swapping.
     pub require_resident: bool,
+    /// Request tracer shared by every hosted app, as
+    /// [`ServeConfig::trace`](crate::serve::ServeConfig::trace).
+    /// `None` (the default) disables tracing.
+    pub trace: Option<Arc<crate::telemetry::Tracer>>,
 }
 
 impl Default for ChipConfig {
@@ -156,6 +161,7 @@ impl Default for ChipConfig {
             queue_capacity: None,
             quantum: apps::FWD_BATCH,
             require_resident: false,
+            trace: None,
         }
     }
 }
@@ -324,7 +330,8 @@ impl ChipScheduler {
                 .queue_capacity
                 .unwrap_or_else(|| stream::buffer_capacity(dims))
                 .max(1);
-            let (client, rx) = Client::channel(dims, capacity);
+            let (client, rx) =
+                Client::channel_traced(dims, capacity, cfg.trace.clone());
             let batcher = Batcher::new(rx, cfg.max_batch, cfg.max_wait);
             let ready_tx = Arc::clone(&ready);
             let handle = thread::Builder::new()
@@ -344,11 +351,15 @@ impl ChipScheduler {
         }
         let quantum = cfg.quantum;
         let budget = cfg.sys.neural_cores;
+        let sinks: Vec<TraceSink> = hosted
+            .iter()
+            .map(|a| TraceSink::for_app(cfg.trace.clone(), a.net.name))
+            .collect();
         let dispatcher = thread::Builder::new()
             .name("restream-chip-dispatch".to_string())
             .spawn(move || {
                 dispatch_loop(engine, hosted, footprints, ready, quantum,
-                              budget)
+                              budget, sinks)
             })
             // lint: allow(P1) — same start-time spawn failure as the
             // batcher threads above; no request path exists yet.
@@ -433,6 +444,7 @@ fn dispatch_loop(
     ready: Arc<ReadyQueues>,
     quantum: usize,
     budget: usize,
+    sinks: Vec<TraceSink>,
 ) -> MultiServeReport {
     let n = hosted.len();
     let mut drr = Drr::new(n, quantum);
@@ -488,7 +500,8 @@ fn dispatch_loop(
         let done = Instant::now();
         let start = span.map_or(dispatch, |(start, _)| start);
         span = Some((start, done));
-        answer_batch(result, batch, dispatch, done, &mut stats[i]);
+        answer_batch(result, batch, dispatch, done, &mut stats[i],
+                     &sinks[i]);
     }
     let offsets = residency.offsets();
     let apps: Vec<AppServeReport> = (0..n)

@@ -87,6 +87,47 @@ impl MultiServeReport {
         }
     }
 
+    /// Serialise under the shared report schema
+    /// ([`crate::telemetry::REPORT_SCHEMA`], kind `"multi_serve"`);
+    /// every per-app entry embeds its full [`ServeReport`] object.
+    pub fn to_json(&self) -> crate::telemetry::json::Json {
+        use crate::telemetry::json::Json;
+        let apps: Vec<Json> = self
+            .apps
+            .iter()
+            .map(|a| {
+                Json::obj()
+                    .with("app", Json::Str(a.app.clone()))
+                    .with("cores", Json::Int(a.cores as i64))
+                    .with("resident", Json::Bool(a.resident))
+                    .with(
+                        "offset",
+                        match a.offset {
+                            Some(o) => Json::Int(o as i64),
+                            None => Json::Null,
+                        },
+                    )
+                    .with("swaps_in", Json::Int(a.swaps_in as i64))
+                    .with("reconfig_s", Json::Num(a.reconfig_s))
+                    .with("serve", a.serve.to_json())
+            })
+            .collect();
+        Json::obj()
+            .with(
+                "schema",
+                Json::Str(crate::telemetry::REPORT_SCHEMA.to_string()),
+            )
+            .with("kind", Json::Str("multi_serve".to_string()))
+            .with("wall_s", Json::Num(self.wall_s))
+            .with("chip_cores", Json::Int(self.chip_cores as i64))
+            .with("occupancy_pct", Json::Num(self.occupancy_pct))
+            .with("swaps", Json::Int(self.swaps as i64))
+            .with("evictions", Json::Int(self.evictions as i64))
+            .with("reconfig_total_s", Json::Num(self.reconfig_total_s))
+            .with("aggregate_rps", Json::Num(self.aggregate_rps()))
+            .with("apps", Json::Arr(apps))
+    }
+
     /// Human-readable multi-line summary (what `restream serve --apps`
     /// prints after the request streams end).
     pub fn summary(&self) -> String {
@@ -176,5 +217,24 @@ mod tests {
         // the empty report guards its ratios
         let empty = MultiServeReport::default();
         assert_eq!(empty.aggregate_rps(), 0.0);
+
+        // and the report round-trips through the shared schema
+        use crate::telemetry::json;
+        let text = r.to_json().to_string();
+        let doc = json::parse(&text).expect("valid json");
+        assert_eq!(doc.to_string(), text);
+        assert_eq!(
+            doc.get("kind").and_then(json::Json::as_str),
+            Some("multi_serve")
+        );
+        let apps = doc.get("apps").expect("apps").items();
+        assert_eq!(apps.len(), 2);
+        assert_eq!(
+            apps[1]
+                .get("serve")
+                .and_then(|s| s.get("requests"))
+                .and_then(json::Json::as_i64),
+            Some(30)
+        );
     }
 }

@@ -54,6 +54,37 @@ pub enum ReportCmd {
     },
     /// `--occupancy all|A,B,…`: the multi-tenant occupancy table.
     Occupancy(String),
+    /// `--metrics [--json]`: the process-wide telemetry registry
+    /// snapshot (text table, or one canonical JSON document).
+    Metrics {
+        /// True for JSON output, false for the text table.
+        json: bool,
+    },
+}
+
+/// Observability knobs shared by the long-running subcommands
+/// (`train` and every `serve` mode).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TelemetryOpts {
+    /// `--trace-out FILE`, if given: record request-scoped spans and
+    /// write chrome `trace_event` JSON at shutdown.
+    pub trace_out: Option<String>,
+    /// `--metrics-out FILE`, if given: append one metrics-snapshot
+    /// JSON line per period while the run is live.
+    pub metrics_out: Option<String>,
+    /// `--metrics-every-ms N` (default 500): snapshot period for
+    /// `--metrics-out`.
+    pub metrics_every_ms: u64,
+}
+
+impl Default for TelemetryOpts {
+    fn default() -> Self {
+        TelemetryOpts {
+            trace_out: None,
+            metrics_out: None,
+            metrics_every_ms: 500,
+        }
+    }
 }
 
 /// Backend/worker-pool selection shared by every functional-math
@@ -94,6 +125,8 @@ pub struct TrainCmd {
     pub checkpoint: Option<CheckpointCmd>,
     /// Backend/worker selection.
     pub engine: EngineOpts,
+    /// Trace/metrics export knobs.
+    pub telemetry: TelemetryOpts,
 }
 
 /// The checkpoint policy of a `restream train --checkpoint` run.
@@ -180,6 +213,8 @@ pub struct ServeSingleCmd {
     pub load: ServeLoad,
     /// Backend/worker selection.
     pub engine: EngineOpts,
+    /// Trace/metrics export knobs.
+    pub telemetry: TelemetryOpts,
 }
 
 /// Multi-app serving options (one chip, or a cluster of them).
@@ -197,6 +232,8 @@ pub struct ServeMultiCmd {
     pub load: ServeLoad,
     /// Backend/worker selection (each chip builds its own engine).
     pub engine: EngineOpts,
+    /// Trace/metrics export knobs.
+    pub telemetry: TelemetryOpts,
 }
 
 /// The `--key value` pairs of one subcommand, consumed flag by flag so
@@ -259,6 +296,19 @@ impl FlagSet {
         }
     }
 
+    /// Flags present that are not in `known`, sorted and
+    /// `--`-prefixed — nothing is consumed.
+    fn unknown_among(&self, known: &[&str]) -> Vec<String> {
+        let mut left: Vec<String> = self
+            .flags
+            .keys()
+            .filter(|k| !known.contains(&k.as_str()))
+            .map(|k| format!("--{k}"))
+            .collect();
+        left.sort();
+        left
+    }
+
     /// Error on any flag the subcommand did not consume.
     fn finish(self) -> Result<(), String> {
         if self.flags.is_empty() {
@@ -317,7 +367,43 @@ fn engine_opts(f: &mut FlagSet) -> Result<EngineOpts, String> {
     })
 }
 
+fn telemetry_opts(f: &mut FlagSet) -> Result<TelemetryOpts, String> {
+    let opts = TelemetryOpts {
+        trace_out: f.take("trace-out"),
+        metrics_out: f.take("metrics-out"),
+        metrics_every_ms: f.get("metrics-every-ms", 500)?,
+    };
+    if opts.metrics_every_ms == 0 {
+        return Err("--metrics-every-ms must be at least 1".to_string());
+    }
+    Ok(opts)
+}
+
+/// Flags `restream report` understands, sorted — rejected typos list
+/// this menu verbatim.
+const REPORT_FLAGS: &[&str] =
+    &["json", "metrics", "occupancy", "table", "vs-gpu"];
+
 fn parse_report(f: &mut FlagSet) -> Result<ReportCmd, String> {
+    // Reject anything outside the report menu up front, so a typo gets
+    // the full sorted flag list instead of the generic leftover error.
+    let unknown = f.unknown_among(REPORT_FLAGS);
+    if !unknown.is_empty() {
+        let known: Vec<String> =
+            REPORT_FLAGS.iter().map(|k| format!("--{k}")).collect();
+        return Err(format!(
+            "unknown report flag(s): {}; known report flags: {}",
+            unknown.join(" "),
+            known.join(" ")
+        ));
+    }
+    let json: bool = f.get("json", false)?;
+    if f.get("metrics", false)? {
+        return Ok(ReportCmd::Metrics { json });
+    }
+    if json {
+        return Err("--json needs --metrics".to_string());
+    }
     // Precedence mirrors the old parser: --table, then --vs-gpu, then
     // --occupancy.
     if let Some(t) = f.take("table") {
@@ -340,8 +426,8 @@ fn parse_report(f: &mut FlagSet) -> Result<ReportCmd, String> {
     if let Some(spec) = f.take("occupancy") {
         return Ok(ReportCmd::Occupancy(spec));
     }
-    Err("report needs --table N, --vs-gpu train|recog or \
-         --occupancy all|app,app,…"
+    Err("report needs --table N, --vs-gpu train|recog, \
+         --occupancy all|app,app,… or --metrics [--json]"
         .to_string())
 }
 
@@ -366,6 +452,7 @@ fn parse_train(f: &mut FlagSet) -> Result<TrainCmd, String> {
         batch: f.get("batch", 1)?,
         checkpoint,
         engine: engine_opts(f)?,
+        telemetry: telemetry_opts(f)?,
     })
 }
 
@@ -413,6 +500,7 @@ fn parse_serve(f: &mut FlagSet) -> Result<ServeCmd, String> {
             replicas,
             load: serve_load(f)?,
             engine: engine_opts(f)?,
+            telemetry: telemetry_opts(f)?,
         }));
     }
     for flag in ["chips", "replicas"] {
@@ -436,6 +524,7 @@ fn parse_serve(f: &mut FlagSet) -> Result<ServeCmd, String> {
         stdin,
         load: serve_load(f)?,
         engine: engine_opts(f)?,
+        telemetry: telemetry_opts(f)?,
     }))
 }
 
@@ -487,6 +576,71 @@ mod tests {
         );
         let err = parse(&args(&["report"])).unwrap_err();
         assert!(err.contains("report needs"), "{err}");
+    }
+
+    #[test]
+    fn report_metrics_parses_and_unknown_flags_list_the_menu() {
+        let m = parse(&args(&["report", "--metrics"])).unwrap();
+        assert_eq!(m, Command::Report(ReportCmd::Metrics { json: false }));
+        let m =
+            parse(&args(&["report", "--metrics", "--json"])).unwrap();
+        assert_eq!(m, Command::Report(ReportCmd::Metrics { json: true }));
+        let err = parse(&args(&["report", "--json"])).unwrap_err();
+        assert!(err.contains("--json needs --metrics"), "{err}");
+        // a typo gets the full sorted report-flag menu
+        let err =
+            parse(&args(&["report", "--metric", "--tabel", "2"]))
+                .unwrap_err();
+        assert!(
+            err.contains("unknown report flag(s): --metric --tabel"),
+            "{err}"
+        );
+        assert!(
+            err.contains(
+                "known report flags: --json --metrics --occupancy \
+                 --table --vs-gpu"
+            ),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn telemetry_flags_parse_on_train_and_serve() {
+        let Command::Train(t) = parse(&args(&[
+            "train", "--trace-out", "/tmp/t.json", "--metrics-out",
+            "/tmp/m.jsonl", "--metrics-every-ms", "100",
+        ]))
+        .unwrap() else {
+            panic!("expected a train command")
+        };
+        assert_eq!(
+            t.telemetry,
+            TelemetryOpts {
+                trace_out: Some("/tmp/t.json".to_string()),
+                metrics_out: Some("/tmp/m.jsonl".to_string()),
+                metrics_every_ms: 100,
+            }
+        );
+        let Command::Serve(ServeCmd::Single(s)) =
+            parse(&args(&["serve", "--trace-out", "trace.json"]))
+                .unwrap()
+        else {
+            panic!("expected single-app serving")
+        };
+        assert_eq!(s.telemetry.trace_out, Some("trace.json".to_string()));
+        assert_eq!(s.telemetry.metrics_every_ms, 500);
+        let Command::Serve(ServeCmd::Multi(m)) = parse(&args(&[
+            "serve", "--apps", "iris_ae", "--metrics-out", "m.jsonl",
+        ]))
+        .unwrap() else {
+            panic!("expected multi-app serving")
+        };
+        assert_eq!(m.telemetry.metrics_out, Some("m.jsonl".to_string()));
+        let err = parse(&args(&[
+            "serve", "--metrics-out", "m", "--metrics-every-ms", "0",
+        ]))
+        .unwrap_err();
+        assert!(err.contains("--metrics-every-ms"), "{err}");
     }
 
     #[test]

@@ -94,6 +94,7 @@ use crate::chip::{
 use crate::coordinator::Engine;
 use crate::serve::{Client, Pending, Response, ServeStats, Service};
 use crate::sim;
+use crate::telemetry::TraceSink;
 
 /// One application hosted by a [`Cluster`]: the chip-level
 /// [`ChipApp`] plus how many chips should hold a serving replica.
@@ -179,6 +180,7 @@ pub struct ClusterClient {
     app: String,
     replicas: Vec<(usize, Client)>,
     load: Arc<ClusterLoad>,
+    sink: TraceSink,
 }
 
 impl ClusterClient {
@@ -200,6 +202,7 @@ impl ClusterClient {
         match client.submit(x) {
             Ok(pending) => {
                 self.load.routed[*chip].fetch_add(1, Ordering::Relaxed);
+                self.sink.route(pending.trace_id(), *chip);
                 Ok(pending.with_guard(Box::new(InFlightToken {
                     load: Arc::clone(&self.load),
                     chip: *chip,
@@ -337,6 +340,7 @@ impl Cluster {
                 app: name.to_string(),
                 replicas,
                 load: Arc::clone(&load),
+                sink: TraceSink::for_app(cfg.chip.trace.clone(), name),
             });
         }
         Ok(Cluster {

@@ -83,6 +83,56 @@ impl ClusterReport {
         }
     }
 
+    /// Serialise under the shared report schema
+    /// ([`crate::telemetry::REPORT_SCHEMA`], kind `"cluster"`); every
+    /// per-chip entry embeds its full
+    /// [`MultiServeReport`](crate::chip::MultiServeReport) object.
+    pub fn to_json(&self) -> crate::telemetry::json::Json {
+        use crate::telemetry::json::Json;
+        let chips: Vec<Json> = self
+            .chips
+            .iter()
+            .map(|c| {
+                Json::obj()
+                    .with("chip", Json::Int(c.chip as i64))
+                    .with("routed", Json::Int(c.routed as i64))
+                    .with("modeled_energy_j", Json::Num(c.modeled_energy_j))
+                    .with("serve", c.serve.to_json())
+            })
+            .collect();
+        let placement: Vec<Json> = self
+            .placement
+            .iter()
+            .map(|p| {
+                Json::obj()
+                    .with("app", Json::Str(p.app.clone()))
+                    .with("cores", Json::Int(p.cores as i64))
+                    .with(
+                        "chips",
+                        Json::Arr(
+                            p.chips
+                                .iter()
+                                .map(|&c| Json::Int(c as i64))
+                                .collect(),
+                        ),
+                    )
+                    .with("overflow", Json::Bool(p.overflow))
+            })
+            .collect();
+        Json::obj()
+            .with(
+                "schema",
+                Json::Str(crate::telemetry::REPORT_SCHEMA.to_string()),
+            )
+            .with("kind", Json::Str("cluster".to_string()))
+            .with("n_chips", Json::Int(self.n_chips as i64))
+            .with("wall_s", Json::Num(self.wall_s))
+            .with("aggregate_rps", Json::Num(self.aggregate_rps()))
+            .with("total_energy_j", Json::Num(self.total_energy_j()))
+            .with("placement", Json::Arr(placement))
+            .with("chips", Json::Arr(chips))
+    }
+
     /// Human-readable multi-line summary (what `restream serve --chips`
     /// prints after the request streams end).
     pub fn summary(&self) -> String {
@@ -199,5 +249,28 @@ mod tests {
         assert!(s.contains("overflow"), "{s}");
         // the empty report guards its ratios
         assert_eq!(ClusterReport::default().aggregate_rps(), 0.0);
+
+        // and the report round-trips through the shared schema
+        use crate::telemetry::json;
+        let text = r.to_json().to_string();
+        let doc = json::parse(&text).expect("valid json");
+        assert_eq!(doc.to_string(), text);
+        assert_eq!(
+            doc.get("kind").and_then(json::Json::as_str),
+            Some("cluster")
+        );
+        let placement = doc.get("placement").expect("placement").items();
+        assert_eq!(
+            placement[1].get("overflow"),
+            Some(&json::Json::Bool(true))
+        );
+        let chips = doc.get("chips").expect("chips").items();
+        assert_eq!(
+            chips[1]
+                .get("serve")
+                .and_then(|s| s.get("kind"))
+                .and_then(json::Json::as_str),
+            Some("multi_serve")
+        );
     }
 }

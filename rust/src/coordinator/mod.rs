@@ -101,6 +101,51 @@ pub struct TrainReport {
     pub recovered_shards: usize,
 }
 
+impl TrainReport {
+    /// Serialise under the shared report schema
+    /// ([`crate::telemetry::REPORT_SCHEMA`], kind `"train"`). The full
+    /// loss curve and per-shard busy times ride along, so a parsed
+    /// report carries everything `summary` prints.
+    pub fn to_json(&self) -> crate::telemetry::json::Json {
+        use crate::telemetry::json::Json;
+        Json::obj()
+            .with(
+                "schema",
+                Json::Str(crate::telemetry::REPORT_SCHEMA.to_string()),
+            )
+            .with("kind", Json::Str("train".to_string()))
+            .with("epochs", Json::Int(self.epochs as i64))
+            .with("samples_seen", Json::Int(self.samples_seen as i64))
+            .with("batch", Json::Int(self.batch as i64))
+            .with("workers", Json::Int(self.workers as i64))
+            .with("wall_s", Json::Num(self.wall_s))
+            .with("grad_wall_s", Json::Num(self.grad_wall_s))
+            .with("apply_wall_s", Json::Num(self.apply_wall_s))
+            .with(
+                "recovered_shards",
+                Json::Int(self.recovered_shards as i64),
+            )
+            .with(
+                "loss_curve",
+                Json::Arr(
+                    self.loss_curve
+                        .iter()
+                        .map(|&l| Json::Num(f64::from(l)))
+                        .collect(),
+                ),
+            )
+            .with(
+                "shard_busy_s",
+                Json::Arr(
+                    self.shard_busy_s
+                        .iter()
+                        .map(|&s| Json::Num(s))
+                        .collect(),
+                ),
+            )
+    }
+}
+
 /// Position of a training run at an epoch boundary: everything the
 /// epoch loops carry from one epoch to the next. Persisted inside a
 /// [`TrainState`] checkpoint and restored by the `*_checkpointed`
@@ -1791,6 +1836,35 @@ mod tests {
             let err = Engine::named("pjrt").unwrap_err();
             assert!(err.to_string().contains("pjrt"), "{err}");
         }
+    }
+
+    #[test]
+    fn train_report_round_trips_through_json() {
+        use crate::telemetry::json;
+        let r = TrainReport {
+            loss_curve: vec![0.5, 0.25],
+            epochs: 2,
+            samples_seen: 300,
+            wall_s: 1.5,
+            batch: 32,
+            workers: 4,
+            grad_wall_s: 1.0,
+            apply_wall_s: 0.2,
+            shard_busy_s: vec![0.5, 0.5],
+            recovered_shards: 0,
+        };
+        let text = r.to_json().to_string();
+        let doc = json::parse(&text).expect("valid json");
+        assert_eq!(doc.to_string(), text);
+        assert_eq!(
+            doc.get("kind").and_then(json::Json::as_str),
+            Some("train")
+        );
+        assert_eq!(
+            doc.get("epochs").and_then(json::Json::as_i64),
+            Some(2)
+        );
+        assert_eq!(doc.get("loss_curve").expect("curve").items().len(), 2);
     }
 
     #[test]

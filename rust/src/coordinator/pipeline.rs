@@ -154,6 +154,39 @@ impl PipelineReport {
         }
     }
 
+    /// Serialise under the shared report schema
+    /// ([`crate::telemetry::REPORT_SCHEMA`], kind `"pipeline"`).
+    pub fn to_json(&self) -> crate::telemetry::json::Json {
+        use crate::telemetry::json::Json;
+        let stages: Vec<Json> = self
+            .stages
+            .iter()
+            .map(|st| {
+                Json::obj()
+                    .with("stage", Json::Int(st.stage as i64))
+                    .with("layer_lo", Json::Int(st.layers.0 as i64))
+                    .with("layer_hi", Json::Int(st.layers.1 as i64))
+                    .with("chunks", Json::Int(st.chunks as i64))
+                    .with("busy_s", Json::Num(st.busy_s))
+                    .with("stall_s", Json::Num(st.stall_s))
+                    .with("idle_s", Json::Num(st.idle_s))
+                    .with("occupancy", Json::Num(st.occupancy()))
+            })
+            .collect();
+        Json::obj()
+            .with(
+                "schema",
+                Json::Str(crate::telemetry::REPORT_SCHEMA.to_string()),
+            )
+            .with("kind", Json::Str("pipeline".to_string()))
+            .with("op", Json::Str(self.op.clone()))
+            .with("replicas", Json::Int(self.replicas as i64))
+            .with("samples", Json::Int(self.samples as i64))
+            .with("wall_s", Json::Num(self.wall_s))
+            .with("throughput_sps", Json::Num(self.throughput()))
+            .with("stages", Json::Arr(stages))
+    }
+
     /// Multi-line human-readable summary (one line per stage).
     pub fn summary(&self) -> String {
         let mut s = format!(
@@ -542,6 +575,41 @@ mod tests {
         let err = "warp".parse::<ExecMode>().unwrap_err();
         assert!(err.contains("unknown exec mode 'warp'"), "{err}");
         assert_eq!(ExecMode::Pipelined.to_string(), "pipeline");
+    }
+
+    #[test]
+    fn pipeline_report_round_trips_through_json() {
+        use crate::telemetry::json;
+        let r = PipelineReport {
+            op: "forward_batch/test".to_string(),
+            stages: vec![StageReport {
+                stage: 0,
+                layers: (0, 2),
+                chunks: 3,
+                busy_s: 0.06,
+                stall_s: 0.02,
+                idle_s: 0.02,
+            }],
+            replicas: 1,
+            wall_s: 0.1,
+            samples: 192,
+        };
+        let text = r.to_json().to_string();
+        let doc = json::parse(&text).expect("valid json");
+        assert_eq!(doc.to_string(), text);
+        assert_eq!(
+            doc.get("kind").and_then(json::Json::as_str),
+            Some("pipeline")
+        );
+        let stages = doc.get("stages").expect("stages").items();
+        assert_eq!(
+            stages[0].get("occupancy").and_then(json::Json::as_f64),
+            Some(0.6)
+        );
+        assert_eq!(
+            doc.get("throughput_sps").and_then(json::Json::as_f64),
+            Some(1920.0)
+        );
     }
 
     #[test]

@@ -169,6 +169,43 @@ impl ExecReport {
             .map(|s| s.wall_s)
             .fold(0.0f64, |acc, w| acc + w)
     }
+
+    /// Serialise under the shared report schema
+    /// ([`crate::telemetry::REPORT_SCHEMA`], kind `"exec"`).
+    pub fn to_json(&self) -> crate::telemetry::json::Json {
+        use crate::telemetry::json::Json;
+        let shards: Vec<Json> = self
+            .shards
+            .iter()
+            .map(|s| {
+                Json::obj()
+                    .with("shard", Json::Int(s.shard as i64))
+                    .with("lo", Json::Int(s.range.0 as i64))
+                    .with("hi", Json::Int(s.range.1 as i64))
+                    .with("wall_s", Json::Num(s.wall_s))
+            })
+            .collect();
+        Json::obj()
+            .with(
+                "schema",
+                Json::Str(crate::telemetry::REPORT_SCHEMA.to_string()),
+            )
+            .with("kind", Json::Str("exec".to_string()))
+            .with("op", Json::Str(self.op.clone()))
+            .with("workers", Json::Int(self.workers as i64))
+            .with("wall_s", Json::Num(self.wall_s))
+            .with("busy_s", Json::Num(self.busy_s()))
+            .with(
+                "recovered_shards",
+                Json::Arr(
+                    self.recovered_shards
+                        .iter()
+                        .map(|&s| Json::Int(s as i64))
+                        .collect(),
+                ),
+            )
+            .with("shards", Json::Arr(shards))
+    }
 }
 
 /// What a job tells its worker thread after running: keep serving the
@@ -486,6 +523,38 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn exec_report_round_trips_through_json() {
+        use crate::telemetry::json;
+        let r = ExecReport {
+            op: "forward_batch/test".to_string(),
+            workers: 4,
+            wall_s: 0.25,
+            shards: vec![
+                ShardTiming { shard: 0, range: (0, 64), wall_s: 0.1 },
+                ShardTiming { shard: 1, range: (64, 128), wall_s: 0.2 },
+            ],
+            recovered_shards: vec![1],
+        };
+        let text = r.to_json().to_string();
+        let doc = json::parse(&text).expect("valid json");
+        assert_eq!(doc.to_string(), text);
+        assert_eq!(
+            doc.get("kind").and_then(json::Json::as_str),
+            Some("exec")
+        );
+        assert_eq!(
+            doc.get("busy_s").and_then(json::Json::as_f64),
+            Some(r.busy_s())
+        );
+        let shards = doc.get("shards").expect("shards").items();
+        assert_eq!(shards.len(), 2);
+        assert_eq!(
+            shards[1].get("hi").and_then(json::Json::as_i64),
+            Some(128)
+        );
     }
 
     #[test]

@@ -57,7 +57,12 @@
 //!   bit-identical whichever chip of the fleet serves it. Training's
 //!   five historical entry points collapse behind one option set,
 //!   [`coordinator::TrainOptions`] ([`coordinator::Engine::fit`]), and
-//!   the binary's flags parse through the typed [`cli`] layer.
+//!   the binary's flags parse through the typed [`cli`] layer. The
+//!   whole stack is observable through [`telemetry`]: a process-wide
+//!   metrics registry fed by every report path, request-scoped tracing
+//!   (`--trace-out` exports chrome `trace_event` JSON), per-report
+//!   `to_json()` under one schema, and a periodic snapshot writer —
+//!   all bitwise-invisible to the numeric outputs.
 //!
 //! See `DESIGN.md` for the system inventory, the backend-selection story
 //! and the experiment index, and `EXPERIMENTS.md` for paper-vs-measured
@@ -86,4 +91,5 @@ pub mod report;
 pub mod runtime;
 pub mod serve;
 pub mod sim;
+pub mod telemetry;
 pub mod testing;

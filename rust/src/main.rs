@@ -8,6 +8,7 @@
 //! restream report --table 2|3|4         regenerate a paper table
 //! restream report --vs-gpu train|recog  Figs 22-25 series
 //! restream report --occupancy all|A,B,…  multi-tenant occupancy table
+//! restream report --metrics [--json]    telemetry registry snapshot
 //! restream train   --app NAME [--epochs N] [--lr F] [--seed N]
 //!                  [--batch N] [--checkpoint DIR [--every N] [--resume]]
 //! restream infer   --app NAME [--seed N]
@@ -19,6 +20,15 @@
 //!                  [--max-batch N] [--max-wait-us N] [--clients N]
 //!                  [--requests N]
 //! ```
+//!
+//! `train` and every `serve` mode additionally take the observability
+//! flags `--trace-out FILE` (record request/phase spans, write chrome
+//! `trace_event` JSON at shutdown — open in `chrome://tracing` or
+//! Perfetto), `--metrics-out FILE` and `--metrics-every-ms N` (append
+//! one metrics-snapshot JSON line per period). Tracing never alters
+//! results: outputs are bitwise-identical with it on or off
+//! (`rust/tests/telemetry_determinism.rs`). `report --metrics` prints
+//! the process-wide registry (`--json` for one canonical document).
 //!
 //! `serve` runs the micro-batching request server (`restream::serve`,
 //! DESIGN.md "Serving layer"): `--source stdin` reads one
@@ -58,12 +68,18 @@
 //! `pjrt` needs the crate built with `--features pjrt` plus
 //! `make artifacts`.
 
+use std::path::PathBuf;
 use std::process::ExitCode;
+use std::sync::Arc;
+use std::time::Duration;
 
 use restream::cli::{self, Command, ReportCmd, ServeCmd};
 use restream::config::{apps, SystemConfig};
 use restream::coordinator::{Engine, TrainOptions};
 use restream::serve::{ServeConfig, Server};
+use restream::telemetry::{
+    self, SnapshotWriter, Tracer, DEFAULT_TRACE_CAPACITY,
+};
 use restream::{datasets, metrics, report};
 
 fn main() -> ExitCode {
@@ -105,6 +121,14 @@ fn run(args: &[String]) -> anyhow::Result<()> {
             "{}",
             report::occupancy_table(&sys, &spec).map_err(anyhow::Error::msg)?
         ),
+        Command::Report(ReportCmd::Metrics { json }) => {
+            let snap = telemetry::global().snapshot();
+            if json {
+                println!("{}", snap.to_json());
+            } else {
+                print!("{}", snap.summary());
+            }
+        }
         Command::Train(t) => cmd_train(&t)?,
         Command::Infer(i) => cmd_infer(&i)?,
         Command::Kmeans(k) => cmd_kmeans(&k)?,
@@ -119,6 +143,65 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         }
     }
     Ok(())
+}
+
+/// Live telemetry of one run: the optional request tracer
+/// (`--trace-out`) and the optional periodic metrics-snapshot writer
+/// (`--metrics-out`). Built before the run starts; [`Telemetry::finish`]
+/// writes the chrome trace and the final snapshot line after the
+/// report printed.
+struct Telemetry {
+    tracer: Option<Arc<Tracer>>,
+    trace_out: Option<PathBuf>,
+    writer: Option<SnapshotWriter>,
+}
+
+fn telemetry_start(o: &cli::TelemetryOpts) -> anyhow::Result<Telemetry> {
+    let tracer = o
+        .trace_out
+        .as_ref()
+        .map(|_| Tracer::new(DEFAULT_TRACE_CAPACITY, telemetry::global()));
+    let writer = match &o.metrics_out {
+        Some(path) => Some(SnapshotWriter::spawn(
+            std::path::Path::new(path),
+            Duration::from_millis(o.metrics_every_ms),
+            telemetry::global(),
+        )?),
+        None => None,
+    };
+    Ok(Telemetry {
+        tracer,
+        trace_out: o.trace_out.clone().map(PathBuf::from),
+        writer,
+    })
+}
+
+impl Telemetry {
+    /// Handle to thread into `ServeConfig`/`ChipConfig` (`None` when
+    /// `--trace-out` was not given — tracing then costs nothing).
+    fn tracer(&self) -> Option<Arc<Tracer>> {
+        self.tracer.clone()
+    }
+
+    /// Write the chrome trace and stop the snapshot writer. Prints one
+    /// stderr line per export so stdout stays the report's.
+    fn finish(self) -> anyhow::Result<()> {
+        if let (Some(t), Some(path)) = (&self.tracer, &self.trace_out) {
+            t.write_chrome(path)?;
+            eprintln!(
+                "trace: {} span(s) recorded ({} dropped) -> {}",
+                t.spans(),
+                t.dropped(),
+                path.display()
+            );
+        }
+        if let Some(w) = self.writer {
+            let path = w.path().to_path_buf();
+            w.finish();
+            eprintln!("metrics: snapshots -> {}", path.display());
+        }
+        Ok(())
+    }
 }
 
 /// Engine over the backend picked by `--backend` (or the environment),
@@ -155,6 +238,7 @@ fn dataset_for(app: &str, n: usize, seed: u64) -> anyhow::Result<datasets::Datas
 fn cmd_train(t: &cli::TrainCmd) -> anyhow::Result<()> {
     let net = apps::network(&t.app)
         .ok_or_else(|| anyhow::anyhow!("unknown app {}", t.app))?;
+    let tel = telemetry_start(&t.telemetry)?;
     let engine = engine_for(&t.engine)?;
     let ds = dataset_for(&t.app, t.samples, t.seed)?;
     let (train_ds, test_ds) = ds.split(0.8, t.seed);
@@ -183,6 +267,7 @@ fn cmd_train(t: &cli::TrainCmd) -> anyhow::Result<()> {
                 t.seed,
                 &opts.dr(),
             )?;
+            let mut off_us = 0.0;
             for (s, r) in run.reports.iter().enumerate() {
                 println!(
                     "stage {s}: {} epochs, final loss {:.5}, {:.2}s",
@@ -191,6 +276,14 @@ fn cmd_train(t: &cli::TrainCmd) -> anyhow::Result<()> {
                     r.wall_s
                 );
                 print_train_parallel(r);
+                telemetry::global().record_train(r);
+                record_train_phases(
+                    &tel,
+                    &format!("train/{}/stage{s}", t.app),
+                    r,
+                    off_us,
+                );
+                off_us += r.wall_s * 1e6;
             }
         }
         AppKind::Autoencoder => {
@@ -209,6 +302,8 @@ fn cmd_train(t: &cli::TrainCmd) -> anyhow::Result<()> {
                 .expect("a supervised fit yields one report");
             print_curve(r);
             print_train_parallel(r);
+            telemetry::global().record_train(r);
+            record_train_phases(&tel, &format!("train/{}", t.app), r, 0.0);
         }
         _ => {
             let outs = net.layers[net.layers.len() - 1];
@@ -220,6 +315,8 @@ fn cmd_train(t: &cli::TrainCmd) -> anyhow::Result<()> {
                 .expect("a supervised fit yields one report");
             print_curve(r);
             print_train_parallel(r);
+            telemetry::global().record_train(r);
+            record_train_phases(&tel, &format!("train/{}", t.app), r, 0.0);
             let preds =
                 engine.classify(net, &run.params, &test_ds.rows())?;
             // single-output nets are binary (class 0 vs rest)
@@ -237,7 +334,36 @@ fn cmd_train(t: &cli::TrainCmd) -> anyhow::Result<()> {
     // DR re-encodes and post-train classification follow `--exec`;
     // surface the per-stage occupancy of the last pipelined pass
     print_pipeline_report(&engine);
+    if let Some(rep) = engine.last_parallel_report() {
+        telemetry::global().record_exec(&rep);
+    }
+    if let Some(rep) = engine.last_pipeline_report() {
+        telemetry::global().record_pipeline(&rep);
+    }
+    tel.finish()?;
     Ok(())
+}
+
+/// Coarse trace spans of one training report: the whole fit, plus the
+/// gradient/apply split when mini-batching ran. Timestamps are offsets
+/// into the run (`off_us` = where this stage started), so the chrome
+/// view lays DR stages end to end.
+fn record_train_phases(
+    tel: &Telemetry,
+    name: &str,
+    r: &restream::coordinator::TrainReport,
+    off_us: f64,
+) {
+    let Some(tracer) = &tel.tracer else { return };
+    tracer.phase(name, off_us, r.wall_s * 1e6);
+    if r.batch > 1 {
+        tracer.phase(&format!("{name}/grad"), off_us, r.grad_wall_s * 1e6);
+        tracer.phase(
+            &format!("{name}/apply"),
+            off_us + r.grad_wall_s * 1e6,
+            r.apply_wall_s * 1e6,
+        );
+    }
 }
 
 /// Per-shard stats of a data-parallel training run (only informative
@@ -382,10 +508,12 @@ fn cmd_serve(s: &cli::ServeSingleCmd) -> anyhow::Result<()> {
     let params =
         restream::coordinator::init_conductances(net.layers, s.load.seed);
     let dims = net.layers[0];
+    let tel = telemetry_start(&s.telemetry)?;
     let cfg = ServeConfig {
         max_batch: s.load.max_batch,
         max_wait: std::time::Duration::from_micros(s.load.max_wait_us),
         queue_capacity: None,
+        trace: tel.tracer(),
     };
     let banner = format!(
         "serving {} ({dims} dims): max batch {}, max wait {} us, \
@@ -415,6 +543,8 @@ fn cmd_serve(s: &cli::ServeSingleCmd) -> anyhow::Result<()> {
     } else {
         print!("{}", report.summary());
     }
+    telemetry::global().record_serve(&s.app, &report);
+    tel.finish()?;
     Ok(())
 }
 
@@ -442,9 +572,11 @@ fn cmd_serve_chip(m: &cli::ServeMultiCmd) -> anyhow::Result<()> {
     }
     let engine = engine_for(&m.engine)?;
     let workers = engine.workers();
+    let tel = telemetry_start(&m.telemetry)?;
     let cfg = ChipConfig {
         max_batch: m.load.max_batch,
         max_wait: std::time::Duration::from_micros(m.load.max_wait_us),
+        trace: tel.tracer(),
         ..ChipConfig::default()
     };
     println!(
@@ -481,7 +613,10 @@ fn cmd_serve_chip(m: &cli::ServeMultiCmd) -> anyhow::Result<()> {
     for h in handles {
         h.join().expect("replay client thread panicked")?;
     }
-    print!("{}", chip.shutdown().summary());
+    let report = chip.shutdown();
+    print!("{}", report.summary());
+    telemetry::global().record_multi(&report);
+    tel.finish()?;
     Ok(())
 }
 
@@ -509,11 +644,13 @@ fn cmd_serve_cluster(m: &cli::ServeMultiCmd) -> anyhow::Result<()> {
         );
         hosted.push(ClusterApp::new(net, params).replicated(m.replicas));
     }
+    let tel = telemetry_start(&m.telemetry)?;
     let cfg = ClusterConfig {
         chips: m.chips,
         chip: ChipConfig {
             max_batch: m.load.max_batch,
             max_wait: std::time::Duration::from_micros(m.load.max_wait_us),
+            trace: tel.tracer(),
             ..ChipConfig::default()
         },
     };
@@ -559,7 +696,10 @@ fn cmd_serve_cluster(m: &cli::ServeMultiCmd) -> anyhow::Result<()> {
     for h in handles {
         h.join().expect("replay client thread panicked")?;
     }
-    print!("{}", cluster.shutdown().summary());
+    let report = cluster.shutdown();
+    print!("{}", report.summary());
+    telemetry::global().record_cluster(&report);
+    tel.finish()?;
     Ok(())
 }
 
@@ -686,6 +826,13 @@ fn print_usage() {
          responses bit-identical whichever chip serves them)\n\
          report --occupancy all|A,B,…: per-app core demand, offsets \
          and fit\n\
+         report --metrics [--json]: process-wide telemetry registry \
+         snapshot\n\
+         train/serve: --trace-out FILE (chrome trace_event JSON of \
+         request\n\
+         spans; bit-identical results with tracing on or off), \
+         --metrics-out\n\
+         FILE [--metrics-every-ms N] (periodic metrics-snapshot JSONL)\n\
          see rust/src/main.rs docs and README.md for details"
     );
 }

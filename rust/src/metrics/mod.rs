@@ -1,7 +1,9 @@
 //! Evaluation metrics: classification accuracy, ROC sweeps for the
 //! anomaly experiment (Figs 18–20), clustering purity (k-means quality),
 //! and small statistics helpers used by the benches and the serving
-//! layer's latency accounting ([`mean`], [`percentile`]).
+//! layer's latency accounting ([`mean`], [`percentile`], and the
+//! bounded-memory [`histogram_quantile`] behind
+//! [`crate::telemetry`]'s registry histograms).
 //!
 //! This module is deliberately *outside* the determinism-tagged set
 //! (see `rust/lint`): everything here is report-side arithmetic whose
@@ -188,6 +190,48 @@ pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
     sorted[lo] + (sorted[hi] - sorted[lo]) * (rank - lo as f64)
 }
 
+/// Percentile of a **fixed-bucket histogram** — the bounded-memory
+/// sibling of [`percentile`], used by
+/// [`crate::telemetry::HistogramSnapshot`] so long-running serves stop
+/// accumulating unbounded per-request latency `Vec`s.
+///
+/// `bounds` are ascending bucket upper bounds; `buckets` has one count
+/// per bound plus a final overflow slot. `min`/`max` are the exact
+/// observed extremes (tracked alongside the buckets), `q` is in
+/// percent. The rank is located in its bucket and linearly
+/// interpolated across the bucket's width, then clamped to
+/// `[min, max]` — so the result is monotone in `q`, exact at `q=100`,
+/// and exact for single-sample series.
+pub fn histogram_quantile(
+    bounds: &[f64],
+    buckets: &[u64],
+    min: f64,
+    max: f64,
+    q: f64,
+) -> f64 {
+    let count: u64 = buckets.iter().sum();
+    if count == 0 {
+        return 0.0;
+    }
+    let rank = (q / 100.0).clamp(0.0, 1.0) * (count - 1) as f64;
+    let mut below = 0u64;
+    for (i, &n) in buckets.iter().enumerate() {
+        if n == 0 {
+            continue;
+        }
+        // rank falls in this bucket when below <= rank < below + n
+        if rank < (below + n) as f64 || below + n == count {
+            let lo = if i == 0 { 0.0 } else { bounds[i - 1] };
+            let hi = bounds.get(i).copied().unwrap_or(max);
+            let frac =
+                (((rank - below as f64) + 1.0) / n as f64).clamp(0.0, 1.0);
+            return (lo + (hi - lo) * frac).clamp(min, max);
+        }
+        below += n;
+    }
+    max
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -292,6 +336,32 @@ mod tests {
             assert_eq!(percentile_sorted(&[3.25], q), 3.25, "q = {q}");
         }
         assert_eq!(mean(&[3.25]), 3.25);
+    }
+
+    #[test]
+    fn histogram_quantile_tracks_percentile_shape() {
+        // bounds 10/100/1000 with an overflow slot
+        let bounds = [10.0, 100.0, 1000.0];
+        // empty histogram answers 0
+        assert_eq!(histogram_quantile(&bounds, &[0, 0, 0, 0],
+                                      0.0, 0.0, 50.0), 0.0);
+        // single sample is exact at every q
+        for q in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(histogram_quantile(&bounds, &[0, 1, 0, 0],
+                                          42.0, 42.0, q), 42.0);
+        }
+        // q=100 is the exact max even past the last bound
+        assert_eq!(histogram_quantile(&bounds, &[0, 0, 0, 3],
+                                      2000.0, 9000.0, 100.0), 9000.0);
+        // monotone in q, always inside [min, max]
+        let buckets = [2u64, 5, 2, 1];
+        let mut prev = f64::NEG_INFINITY;
+        for q in [0.0, 10.0, 50.0, 90.0, 99.0, 100.0] {
+            let v = histogram_quantile(&bounds, &buckets, 1.0, 5000.0, q);
+            assert!(v >= prev, "q={q}: {v} < {prev}");
+            assert!((1.0..=5000.0).contains(&v), "q={q}: {v}");
+            prev = v;
+        }
     }
 
     #[test]

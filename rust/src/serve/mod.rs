@@ -25,6 +25,13 @@
 //!    latency split; aggregate statistics come out of
 //!    [`Server::shutdown`] as a [`ServeReport`].
 //!
+//! With a [`crate::telemetry::Tracer`] in [`ServeConfig::trace`],
+//! [`Client::submit`] additionally mints a trace id that rides the
+//! request to the reply path, where one span per request (and one per
+//! dispatched batch) is recorded — purely observational, so results
+//! are bitwise-identical with tracing on or off
+//! (`rust/tests/telemetry_determinism.rs` pins this).
+//!
 //! # Determinism contract
 //!
 //! A request's result is **bit-identical regardless of which batch it
@@ -76,6 +83,7 @@ use anyhow::{anyhow, Result};
 use crate::config::{apps, Network};
 use crate::coordinator::{stream, Engine};
 use crate::runtime::ArrayF32;
+use crate::telemetry::{TraceSink, Tracer};
 
 /// Tuning knobs of a [`Server`].
 #[derive(Clone, Debug)]
@@ -92,6 +100,9 @@ pub struct ServeConfig {
     /// from the chip's 4 kB input buffer via
     /// [`stream::buffer_capacity`] for the app's input width.
     pub queue_capacity: Option<usize>,
+    /// Request tracer. `None` (the default) disables tracing — the
+    /// reply path then records nothing and reads no clock.
+    pub trace: Option<Arc<Tracer>>,
 }
 
 impl Default for ServeConfig {
@@ -100,6 +111,7 @@ impl Default for ServeConfig {
             max_batch: apps::FWD_BATCH,
             max_wait: Duration::from_micros(200),
             queue_capacity: None,
+            trace: None,
         }
     }
 }
@@ -114,6 +126,8 @@ pub(crate) struct Request {
     pub(crate) x: Vec<f32>,
     pub(crate) enqueued: Instant,
     pub(crate) reply: SyncSender<Result<Response, String>>,
+    /// Trace id minted at submit (`None` while tracing is off).
+    pub(crate) trace_id: Option<u64>,
 }
 
 /// One served result.
@@ -136,12 +150,21 @@ pub struct Pending {
     /// abandoned) — the cluster router parks its in-flight token here
     /// so per-chip load decrements exactly when a request leaves.
     guard: Option<Box<dyn std::any::Any + Send>>,
+    /// Trace id the request carries (`None` while tracing is off).
+    trace_id: Option<u64>,
 }
 
 impl Pending {
     /// Id the server will answer under.
     pub fn id(&self) -> u64 {
         self.id
+    }
+
+    /// Trace id minted at submit, when tracing is on — lets the
+    /// cluster router tag its routing events with the same id the
+    /// request span will carry.
+    pub fn trace_id(&self) -> Option<u64> {
+        self.trace_id
     }
 
     /// Attach a drop-guard to this receipt (see the `guard` field).
@@ -179,6 +202,7 @@ pub struct Client {
     tx: SyncSender<Request>,
     dims: usize,
     next_id: Arc<AtomicU64>,
+    trace: Option<Arc<Tracer>>,
 }
 
 impl Client {
@@ -190,9 +214,23 @@ impl Client {
         dims: usize,
         capacity: usize,
     ) -> (Client, Receiver<Request>) {
+        Client::channel_traced(dims, capacity, None)
+    }
+
+    /// [`Client::channel`] with a tracer: every submit then mints a
+    /// trace id that rides the request to the reply path.
+    pub(crate) fn channel_traced(
+        dims: usize,
+        capacity: usize,
+        trace: Option<Arc<Tracer>>,
+    ) -> (Client, Receiver<Request>) {
         let (tx, rx) = sync_channel(capacity.max(1));
-        let client =
-            Client { tx, dims, next_id: Arc::new(AtomicU64::new(0)) };
+        let client = Client {
+            tx,
+            dims,
+            next_id: Arc::new(AtomicU64::new(0)),
+            trace,
+        };
         (client, rx)
     }
 
@@ -207,11 +245,18 @@ impl Client {
             ));
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let trace_id = self.trace.as_ref().map(|t| t.mint());
         let (reply, rx) = sync_channel(1);
         self.tx
-            .send(Request { id, x, enqueued: Instant::now(), reply })
+            .send(Request {
+                id,
+                x,
+                enqueued: Instant::now(),
+                reply,
+                trace_id,
+            })
             .map_err(|_| anyhow!("server is shut down"))?;
-        Ok(Pending { id, rx, guard: None })
+        Ok(Pending { id, rx, guard: None, trace_id })
     }
 
     /// Submit and block for the response — one closed-loop request.
@@ -259,11 +304,13 @@ impl Server {
             .queue_capacity
             .unwrap_or_else(|| stream::buffer_capacity(dims))
             .max(1);
-        let (client, rx) = Client::channel(dims, capacity);
+        let sink = TraceSink::for_app(cfg.trace.clone(), &app);
+        let (client, rx) =
+            Client::channel_traced(dims, capacity, cfg.trace.clone());
         let batcher = Batcher::new(rx, cfg.max_batch, cfg.max_wait);
         let handle = thread::Builder::new()
             .name("restream-serve".to_string())
-            .spawn(move || serve_loop(engine, net, params, batcher))
+            .spawn(move || serve_loop(engine, net, params, batcher, sink))
             // lint: allow(P1) — thread spawn fails only on OS resource
             // exhaustion at server start, before any request exists to
             // answer with a typed error.
@@ -323,8 +370,10 @@ pub(crate) fn answer_batch(
     dispatch: Instant,
     done: Instant,
     stats: &mut StatsAccum,
+    sink: &TraceSink,
 ) {
     stats.record_batch(dispatch, done);
+    sink.batch(batch.len(), us_between(dispatch, done));
     match result {
         Ok(rows) => {
             for ((request, dequeued), out) in batch.into_iter().zip(rows) {
@@ -334,6 +383,12 @@ pub(crate) fn answer_batch(
                     compute_us: us_between(dispatch, done),
                 };
                 stats.record_timing(timing);
+                sink.request(
+                    request.trace_id,
+                    timing.queue_us,
+                    timing.batch_us,
+                    timing.compute_us,
+                );
                 let _ = request.reply.send(Ok(Response {
                     id: request.id,
                     out,
@@ -362,6 +417,7 @@ fn serve_loop(
     net: Network,
     params: Vec<ArrayF32>,
     batcher: Batcher<Request>,
+    sink: TraceSink,
 ) -> ServeReport {
     let mut stats = StatsAccum::default();
     while let Some(mut batch) = batcher.next_batch() {
@@ -369,7 +425,7 @@ fn serve_loop(
         let xs = take_batch_inputs(&mut batch);
         let result = engine.infer(&net, &params, &xs);
         let done = Instant::now();
-        answer_batch(result, batch, dispatch, done, &mut stats);
+        answer_batch(result, batch, dispatch, done, &mut stats, &sink);
     }
     stats.finish()
 }

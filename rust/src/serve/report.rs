@@ -5,12 +5,18 @@
 //! lifecycle (DESIGN.md "Serving layer"): **queue** (bounded input
 //! queue, the 4 kB-input-buffer twin) → **batch** (waiting inside a
 //! forming micro-batch) → **compute** (the pooled batched forward).
-//! All figures are microseconds; order statistics use
-//! [`crate::metrics::percentile`].
+//! All figures are microseconds. Order statistics of a finished run
+//! come out of bounded [`crate::telemetry::Histogram`]s (exact
+//! count/sum/min/max, bucket-interpolated p50/p99 via
+//! [`crate::metrics::histogram_quantile`]) — a long-running serve
+//! holds four fixed-size histograms per app instead of an unbounded
+//! per-request `Vec<f64>`. [`LatencyStats::from_us`] keeps the exact
+//! sorted-sample path for callers that hold their own samples.
 
 use std::time::Instant;
 
 use crate::metrics::{mean, percentile_sorted};
+use crate::telemetry::{Histogram, HistogramSnapshot};
 
 /// Where one request's latency went, in microseconds.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -57,6 +63,28 @@ impl LatencyStats {
             max_us: sorted.last().copied().unwrap_or(0.0),
         }
     }
+
+    /// Summarise a bounded histogram: mean and max are exact, p50/p99
+    /// are bucket-interpolated (exact for single-sample series,
+    /// clamped to the observed range, monotone p50 ≤ p99 ≤ max).
+    pub fn from_histogram(h: &HistogramSnapshot) -> LatencyStats {
+        LatencyStats {
+            mean_us: h.mean(),
+            p50_us: h.quantile(50.0),
+            p99_us: h.quantile(99.0),
+            max_us: h.max,
+        }
+    }
+
+    /// Serialise as `{mean_us, p50_us, p99_us, max_us}`.
+    pub fn to_json(&self) -> crate::telemetry::json::Json {
+        use crate::telemetry::json::Json;
+        Json::obj()
+            .with("mean_us", Json::Num(self.mean_us))
+            .with("p50_us", Json::Num(self.p50_us))
+            .with("p99_us", Json::Num(self.p99_us))
+            .with("max_us", Json::Num(self.max_us))
+    }
 }
 
 /// Running accumulation of one dispatch stream's timings — the mutable
@@ -66,12 +94,16 @@ impl LatencyStats {
 /// per-app latency splits fall out of shared dispatch for free. (Not
 /// to be confused with the public [`ServeStats`](super::ServeStats)
 /// summary every [`Service`](super::Service) implementation answers.)
+/// Memory is bounded: each latency phase accumulates into a
+/// fixed-bucket [`Histogram`] (exact count/sum/min/max), so a serve
+/// that answers millions of requests holds four histograms here, not
+/// four million-entry `Vec`s.
 #[derive(Debug, Default)]
 pub(crate) struct StatsAccum {
-    queue_us: Vec<f64>,
-    batch_us: Vec<f64>,
-    compute_us: Vec<f64>,
-    total_us: Vec<f64>,
+    queue_us: Histogram,
+    batch_us: Histogram,
+    compute_us: Histogram,
+    total_us: Histogram,
     batches: usize,
     errors: usize,
     /// First dispatch -> last completion.
@@ -88,10 +120,10 @@ impl StatsAccum {
 
     /// Note one successfully answered request's latency split.
     pub(crate) fn record_timing(&mut self, timing: RequestTiming) {
-        self.queue_us.push(timing.queue_us);
-        self.batch_us.push(timing.batch_us);
-        self.compute_us.push(timing.compute_us);
-        self.total_us.push(timing.total_us());
+        self.queue_us.observe(timing.queue_us);
+        self.batch_us.observe(timing.batch_us);
+        self.compute_us.observe(timing.compute_us);
+        self.total_us.observe(timing.total_us());
     }
 
     /// Note `n` requests answered with an error.
@@ -102,16 +134,20 @@ impl StatsAccum {
     /// Freeze the accumulation into the aggregate [`ServeReport`].
     pub(crate) fn finish(&self) -> ServeReport {
         ServeReport {
-            requests: self.total_us.len() + self.errors,
+            requests: self.total_us.count() as usize + self.errors,
             batches: self.batches,
             errors: self.errors,
             wall_s: self.span.map_or(0.0, |(start, end)| {
                 end.saturating_duration_since(start).as_secs_f64()
             }),
-            total: LatencyStats::from_us(&self.total_us),
-            queue: LatencyStats::from_us(&self.queue_us),
-            batch_wait: LatencyStats::from_us(&self.batch_us),
-            compute: LatencyStats::from_us(&self.compute_us),
+            total: LatencyStats::from_histogram(&self.total_us.snapshot()),
+            queue: LatencyStats::from_histogram(&self.queue_us.snapshot()),
+            batch_wait: LatencyStats::from_histogram(
+                &self.batch_us.snapshot(),
+            ),
+            compute: LatencyStats::from_histogram(
+                &self.compute_us.snapshot(),
+            ),
         }
     }
 }
@@ -170,6 +206,28 @@ impl ServeReport {
             errors: self.errors,
             wall_s: self.wall_s,
         }
+    }
+
+    /// Serialise under the shared report schema
+    /// ([`crate::telemetry::REPORT_SCHEMA`], kind `"serve"`).
+    pub fn to_json(&self) -> crate::telemetry::json::Json {
+        use crate::telemetry::json::Json;
+        Json::obj()
+            .with(
+                "schema",
+                Json::Str(crate::telemetry::REPORT_SCHEMA.to_string()),
+            )
+            .with("kind", Json::Str("serve".to_string()))
+            .with("requests", Json::Int(self.requests as i64))
+            .with("batches", Json::Int(self.batches as i64))
+            .with("errors", Json::Int(self.errors as i64))
+            .with("wall_s", Json::Num(self.wall_s))
+            .with("mean_batch", Json::Num(self.mean_batch()))
+            .with("throughput_rps", Json::Num(self.throughput_rps()))
+            .with("total", self.total.to_json())
+            .with("queue", self.queue.to_json())
+            .with("batch_wait", self.batch_wait.to_json())
+            .with("compute", self.compute.to_json())
     }
 
     /// Human-readable multi-line summary (what `restream serve`
@@ -259,6 +317,44 @@ mod tests {
         let empty = StatsAccum::default().finish();
         assert_eq!(empty.requests, 0);
         assert_eq!(empty.wall_s, 0.0);
+    }
+
+    #[test]
+    fn report_serialises_and_reparses() {
+        use crate::telemetry::json;
+        let r = ServeReport {
+            requests: 12,
+            batches: 4,
+            errors: 1,
+            wall_s: 2.0,
+            total: LatencyStats {
+                mean_us: 5.0,
+                p50_us: 4.0,
+                p99_us: 9.0,
+                max_us: 9.5,
+            },
+            ..Default::default()
+        };
+        let text = r.to_json().to_string();
+        let doc = json::parse(&text).expect("valid json");
+        assert_eq!(doc.to_string(), text);
+        assert_eq!(
+            doc.get("schema").and_then(json::Json::as_str),
+            Some(crate::telemetry::REPORT_SCHEMA)
+        );
+        assert_eq!(
+            doc.get("kind").and_then(json::Json::as_str),
+            Some("serve")
+        );
+        assert_eq!(
+            doc.get("requests").and_then(json::Json::as_i64),
+            Some(12)
+        );
+        let p99 = doc
+            .get("total")
+            .and_then(|t| t.get("p99_us"))
+            .and_then(json::Json::as_f64);
+        assert_eq!(p99, Some(9.0));
     }
 
     #[test]

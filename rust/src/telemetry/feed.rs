@@ -1,0 +1,187 @@
+//! Feeders: fold each finished report struct into registry series.
+//!
+//! All feeding happens at the CLI layer after a run completes — the
+//! library paths stay pure and tests can use scoped registries. Names
+//! follow `subsystem.metric` (and `subsystem.app.<name>.metric` for
+//! per-app series), so snapshots group naturally when sorted.
+
+use super::registry::Registry;
+use crate::chip::MultiServeReport;
+use crate::cluster::ClusterReport;
+use crate::coordinator::{ExecReport, PipelineReport, TrainReport};
+use crate::serve::ServeReport;
+use crate::sim::PipelineCost;
+
+impl Registry {
+    /// Fold one single-app serving report into the registry.
+    pub fn record_serve(&self, app: &str, r: &ServeReport) {
+        self.counter("serve.requests").add(r.requests as u64);
+        self.counter("serve.errors").add(r.errors as u64);
+        self.counter("serve.batches").add(r.batches as u64);
+        self.gauge("serve.wall_s").add(r.wall_s);
+        self.gauge(&format!("serve.app.{app}.rps"))
+            .set(r.throughput_rps());
+        self.gauge(&format!("serve.app.{app}.p50_us")).set(r.total.p50_us);
+        self.gauge(&format!("serve.app.{app}.p99_us")).set(r.total.p99_us);
+        self.gauge(&format!("serve.app.{app}.mean_batch"))
+            .set(r.mean_batch());
+    }
+
+    /// Fold one multi-tenant chip report (and its per-app serves).
+    pub fn record_multi(&self, r: &MultiServeReport) {
+        self.counter("chip.swaps").add(r.swaps as u64);
+        self.counter("chip.evictions").add(r.evictions as u64);
+        self.gauge("chip.occupancy_pct").set(r.occupancy_pct);
+        self.gauge("chip.reconfig_s").add(r.reconfig_total_s);
+        for app in &r.apps {
+            self.record_serve(&app.app, &app.serve);
+        }
+    }
+
+    /// Fold one fleet report (and every chip under it).
+    pub fn record_cluster(&self, r: &ClusterReport) {
+        self.gauge("cluster.chips").set(r.n_chips as f64);
+        self.gauge("cluster.wall_s").set(r.wall_s);
+        for chip in &r.chips {
+            self.counter("cluster.routed").add(chip.routed);
+            self.gauge("cluster.energy_j").add(chip.modeled_energy_j);
+            self.record_multi(&chip.serve);
+        }
+    }
+
+    /// Fold one training run.
+    pub fn record_train(&self, r: &TrainReport) {
+        self.counter("train.epochs").add(r.epochs as u64);
+        self.counter("train.samples").add(r.samples_seen as u64);
+        self.counter("pool.recovered_shards")
+            .add(r.recovered_shards as u64);
+        self.gauge("train.wall_s").add(r.wall_s);
+        self.gauge("train.grad_s").add(r.grad_wall_s);
+        self.gauge("train.apply_s").add(r.apply_wall_s);
+        self.gauge("pool.busy_s")
+            .add(r.shard_busy_s.iter().fold(0.0f64, |acc, s| acc + s));
+        if let Some(&loss) = r.loss_curve.last() {
+            self.gauge("train.last_loss").set(loss as f64);
+        }
+    }
+
+    /// Fold one sharded-operation report from the worker pool.
+    pub fn record_exec(&self, r: &ExecReport) {
+        self.counter("pool.shards").add(r.shards.len() as u64);
+        self.counter("pool.recovered_shards")
+            .add(r.recovered_shards.len() as u64);
+        self.gauge("pool.workers").set(r.workers as f64);
+        self.gauge("pool.busy_s").add(r.busy_s());
+    }
+
+    /// Fold one pipelined-execution report (per-stage busy/stall).
+    pub fn record_pipeline(&self, r: &PipelineReport) {
+        self.counter("pipeline.samples").add(r.samples as u64);
+        self.gauge("pipeline.replicas").set(r.replicas as f64);
+        let mut busy = 0.0;
+        let mut stall = 0.0;
+        let mut idle = 0.0;
+        for stage in &r.stages {
+            busy += stage.busy_s;
+            stall += stage.stall_s;
+            idle += stage.idle_s;
+            self.gauge(&format!(
+                "pipeline.stage{}.occupancy_pct",
+                stage.stage
+            ))
+            .set(stage.occupancy() * 100.0);
+        }
+        self.gauge("pipeline.busy_s").add(busy);
+        self.gauge("pipeline.stall_s").add(stall);
+        self.gauge("pipeline.idle_s").add(idle);
+    }
+
+    /// Fold the modeled NoC charges of one pipeline placement.
+    pub fn record_pipeline_cost(&self, c: &PipelineCost) {
+        self.gauge("noc.hop_energy_j").add(c.hop_energy_j);
+        self.gauge("noc.hop_s")
+            .add(c.hop_time_s.iter().fold(0.0f64, |acc, h| acc + h));
+        self.gauge(&format!("noc.app.{}.interval_s", c.app))
+            .set(c.interval_s());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::StageReport;
+    use crate::serve::LatencyStats;
+
+    fn serve_report() -> ServeReport {
+        ServeReport {
+            requests: 10,
+            batches: 2,
+            errors: 1,
+            wall_s: 0.5,
+            total: LatencyStats {
+                mean_us: 4.0,
+                p50_us: 3.0,
+                p99_us: 9.0,
+                max_us: 9.0,
+            },
+            queue: LatencyStats::default(),
+            batch_wait: LatencyStats::default(),
+            compute: LatencyStats::default(),
+        }
+    }
+
+    fn counter_of(reg: &Registry, name: &str) -> u64 {
+        reg.counter(name).get()
+    }
+
+    #[test]
+    fn serve_reports_feed_counters_and_per_app_gauges() {
+        let reg = Registry::new();
+        reg.record_serve("iris", &serve_report());
+        reg.record_serve("iris", &serve_report());
+        assert_eq!(counter_of(&reg, "serve.requests"), 20);
+        assert_eq!(counter_of(&reg, "serve.errors"), 2);
+        assert_eq!(reg.gauge("serve.wall_s").get(), 1.0);
+        assert_eq!(reg.gauge("serve.app.iris.p99_us").get(), 9.0);
+        assert_eq!(reg.gauge("serve.app.iris.mean_batch").get(), 5.0);
+    }
+
+    #[test]
+    fn train_and_pipeline_reports_feed_stage_gauges() {
+        let reg = Registry::new();
+        reg.record_train(&TrainReport {
+            loss_curve: vec![0.5, 0.25],
+            epochs: 2,
+            samples_seen: 200,
+            wall_s: 1.0,
+            batch: 4,
+            workers: 2,
+            grad_wall_s: 0.6,
+            apply_wall_s: 0.1,
+            shard_busy_s: vec![0.3, 0.2],
+            recovered_shards: 1,
+        });
+        assert_eq!(counter_of(&reg, "train.epochs"), 2);
+        assert_eq!(counter_of(&reg, "pool.recovered_shards"), 1);
+        assert_eq!(reg.gauge("pool.busy_s").get(), 0.5);
+        assert_eq!(reg.gauge("train.last_loss").get(), 0.25);
+
+        reg.record_pipeline(&PipelineReport {
+            op: "fwd".to_string(),
+            stages: vec![StageReport {
+                stage: 0,
+                layers: (0, 2),
+                chunks: 4,
+                busy_s: 0.08,
+                stall_s: 0.02,
+                idle_s: 0.0,
+            }],
+            replicas: 1,
+            wall_s: 0.1,
+            samples: 64,
+        });
+        assert_eq!(counter_of(&reg, "pipeline.samples"), 64);
+        let occ = reg.gauge("pipeline.stage0.occupancy_pct").get();
+        assert!((occ - 80.0).abs() < 1e-9, "occupancy {occ}");
+    }
+}

@@ -1,0 +1,274 @@
+//! Observability layer: a process-wide metrics registry,
+//! request-scoped tracing, and machine-readable export surfaces.
+//!
+//! Three pieces, used together by the CLI and independently by tests:
+//!
+//! * **[`Registry`]** — named counters, gauges, and fixed-bucket
+//!   histograms behind lock-cheap `Arc`-atomic handles. Snapshots are
+//!   `BTreeMap`-ordered, so the same state always serialises to the
+//!   same bytes. [`global()`] is the process-wide instance every
+//!   finished report feeds (see `feed.rs`); scoped registries keep
+//!   tests hermetic.
+//! * **[`Tracer`] / [`TraceSink`]** — a trace id minted at
+//!   `serve::Client::submit` rides the request through batching, DRR
+//!   dispatch, and cluster routing; the reply path records one span
+//!   per request (queue/batch/compute split) into a bounded ring
+//!   buffer exported as chrome `trace_event` JSON. A [`TraceSink`]
+//!   without a tracer is a no-op: no clock reads, no locks, no
+//!   allocation — telemetry disabled costs nothing.
+//! * **[`SnapshotWriter`]** — a background thread appending one
+//!   metrics-snapshot JSON line per period, for long-running serves.
+//!
+//! **Determinism.** Telemetry only *observes*: spans are recorded
+//! after compute completes and no recorded value ever feeds back into
+//! batching, dispatch, routing, or kernels, so every numeric output is
+//! bitwise-identical with tracing on or off
+//! (`tests/telemetry_determinism.rs` pins this). The module is
+//! lint-tagged D1/D2: no hash-ordered iteration anywhere, and all
+//! wall-clock reads go through the sanctioned
+//! [`metrics::Stopwatch`](crate::metrics::Stopwatch) doorway.
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::dbg_macro))]
+
+pub mod json;
+
+mod feed;
+mod registry;
+mod trace;
+
+pub use json::Json;
+pub use registry::{
+    Counter, Gauge, Histogram, HistogramSnapshot, Registry, Snapshot,
+    METRICS_SCHEMA,
+};
+pub use trace::{
+    EventKind, TraceEvent, TraceSink, Tracer, DEFAULT_TRACE_CAPACITY,
+};
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::metrics;
+
+/// Schema tag stamped on every report struct's `to_json()` — one
+/// version string for `ServeReport`, `MultiServeReport`,
+/// `ClusterReport`, `TrainReport`, `ExecReport`, and
+/// `PipelineReport`, each discriminated by its `"kind"` member.
+pub const REPORT_SCHEMA: &str = "restream.report.v1";
+
+/// Counters pre-registered on the global registry so `report
+/// --metrics` shows the full schema (at zero) before any run fed it.
+const BASELINE_COUNTERS: &[&str] = &[
+    "chip.evictions",
+    "chip.swaps",
+    "cluster.routed",
+    "pipeline.samples",
+    "pool.recovered_shards",
+    "pool.shards",
+    "serve.batches",
+    "serve.errors",
+    "serve.requests",
+    "trace.batches",
+    "trace.requests",
+    "trace.routed",
+    "train.epochs",
+    "train.samples",
+];
+
+/// Gauges pre-registered on the global registry.
+const BASELINE_GAUGES: &[&str] = &[
+    "chip.occupancy_pct",
+    "chip.reconfig_s",
+    "cluster.chips",
+    "cluster.energy_j",
+    "cluster.wall_s",
+    "noc.hop_energy_j",
+    "noc.hop_s",
+    "pipeline.busy_s",
+    "pipeline.idle_s",
+    "pipeline.replicas",
+    "pipeline.stall_s",
+    "pool.busy_s",
+    "pool.workers",
+    "serve.wall_s",
+    "train.apply_s",
+    "train.grad_s",
+    "train.last_loss",
+    "train.wall_s",
+];
+
+/// Histograms pre-registered on the global registry.
+const BASELINE_HISTOGRAMS: &[&str] = &[
+    "serve.batch_size",
+    "serve.compute_us",
+    "serve.queue_us",
+    "serve.total_us",
+];
+
+/// The process-wide registry. Everything the CLI runs feeds this; the
+/// `report --metrics` surface reads it.
+pub fn global() -> &'static Registry {
+    static GLOBAL: std::sync::OnceLock<Registry> = std::sync::OnceLock::new();
+    GLOBAL.get_or_init(|| {
+        let reg = Registry::new();
+        for name in BASELINE_COUNTERS {
+            reg.counter(name);
+        }
+        for name in BASELINE_GAUGES {
+            reg.gauge(name);
+        }
+        for name in BASELINE_HISTOGRAMS {
+            reg.histogram(name);
+        }
+        reg
+    })
+}
+
+/// How often the writer thread polls its stop flag between snapshots.
+const WRITER_SLICE: Duration = Duration::from_millis(20);
+
+/// Background thread appending one metrics-snapshot JSON line per
+/// period to a JSONL file — the long-running-serve export surface.
+/// A final snapshot is always written on [`SnapshotWriter::finish`]
+/// (or drop), so even a short run leaves at least one line.
+pub struct SnapshotWriter {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    path: PathBuf,
+}
+
+impl SnapshotWriter {
+    /// Start writing snapshots of `registry` to `path` every `every`.
+    /// The file is created (truncated) up front so open errors surface
+    /// here, not in the thread.
+    pub fn spawn(
+        path: &Path,
+        every: Duration,
+        registry: &'static Registry,
+    ) -> std::io::Result<SnapshotWriter> {
+        use std::io::Write as _;
+        let mut file = std::fs::File::create(path)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let thread_stop = stop.clone();
+        let period_s = every.as_secs_f64().max(1e-3);
+        let handle = std::thread::Builder::new()
+            .name("telemetry-snapshots".to_string())
+            .spawn(move || {
+                let clock = metrics::Stopwatch::start();
+                let mut due_s = period_s;
+                let mut write_line = move |file: &mut std::fs::File,
+                                           uptime_s: f64| {
+                    let line = registry
+                        .snapshot()
+                        .to_json()
+                        .with("uptime_s", Json::Num(uptime_s))
+                        .to_string();
+                    // Disk-full on a metrics sidecar must not take the
+                    // serve down; drop the line.
+                    let _ = writeln!(file, "{line}");
+                };
+                while !thread_stop.load(Ordering::Relaxed) {
+                    std::thread::sleep(WRITER_SLICE);
+                    let now_s = clock.elapsed_s();
+                    if now_s >= due_s {
+                        write_line(&mut file, now_s);
+                        due_s = now_s + period_s;
+                    }
+                }
+                write_line(&mut file, clock.elapsed_s());
+                let _ = file.flush();
+            })?;
+        Ok(SnapshotWriter {
+            stop,
+            handle: Some(handle),
+            path: path.to_path_buf(),
+        })
+    }
+
+    /// The file being written.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Stop the thread, write the final snapshot line, and join.
+    pub fn finish(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(handle) = self.handle.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for SnapshotWriter {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn global_registry_has_the_baseline_schema_at_zero() {
+        let snap = global().snapshot();
+        let counter_names: Vec<&str> =
+            snap.counters.iter().map(|(k, _)| k.as_str()).collect();
+        for name in BASELINE_COUNTERS {
+            assert!(
+                counter_names.contains(name),
+                "missing baseline counter {name}"
+            );
+        }
+        let hist_names: Vec<&str> =
+            snap.histograms.iter().map(|(k, _)| k.as_str()).collect();
+        for name in BASELINE_HISTOGRAMS {
+            assert!(
+                hist_names.contains(name),
+                "missing baseline histogram {name}"
+            );
+        }
+        // and the whole snapshot serialises + reparses
+        let text = snap.to_json().to_string();
+        assert!(json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn snapshot_writer_appends_parseable_jsonl() {
+        let dir = std::env::temp_dir()
+            .join(format!("restream-telemetry-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).expect("tmp dir");
+        let path = dir.join("metrics.jsonl");
+        let writer = SnapshotWriter::spawn(
+            &path,
+            Duration::from_millis(30),
+            global(),
+        )
+        .expect("spawn writer");
+        std::thread::sleep(Duration::from_millis(120));
+        writer.finish();
+
+        let text = std::fs::read_to_string(&path).expect("read jsonl");
+        let lines: Vec<&str> =
+            text.lines().filter(|l| !l.is_empty()).collect();
+        assert!(
+            lines.len() >= 2,
+            "expected periodic + final lines, got {}",
+            lines.len()
+        );
+        for line in lines {
+            let doc = json::parse(line).expect("each line parses");
+            assert_eq!(
+                doc.get("schema").and_then(Json::as_str),
+                Some(METRICS_SCHEMA)
+            );
+            assert!(doc.get("uptime_s").and_then(Json::as_f64).is_some());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,539 @@
+//! Process-wide metrics registry: counters, gauges, and fixed-bucket
+//! histograms behind lock-cheap handles.
+//!
+//! The registry itself holds a single mutex that is touched only at
+//! registration and snapshot time; the handles handed back to hot
+//! paths are `Arc`-shared atomics, so recording a sample is a handful
+//! of relaxed atomic ops and never blocks. Snapshots walk a
+//! `BTreeMap`, so two snapshots of the same state serialise to the
+//! same bytes — the determinism contract (lint D1) holds because no
+//! hash-ordered container is ever iterated.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::json::Json;
+use crate::metrics;
+
+/// Schema tag stamped on every serialised snapshot.
+pub const METRICS_SCHEMA: &str = "restream.metrics.v1";
+
+/// Histogram bucket layout: log-spaced bounds covering 0.1 µs .. 10 s
+/// (8 buckets per decade), one underflow-inclusive first bucket and
+/// one overflow bucket past the last bound. Values are microseconds
+/// for latency series; dimensionless series (batch sizes) reuse the
+/// same grid — only relative resolution matters.
+const BOUND_DECADE_LO: i32 = -1;
+const BOUND_DECADE_HI: i32 = 7;
+const BOUNDS_PER_DECADE: usize = 8;
+
+fn bucket_bounds() -> &'static [f64] {
+    static BOUNDS: std::sync::OnceLock<Vec<f64>> =
+        std::sync::OnceLock::new();
+    BOUNDS.get_or_init(|| {
+        let steps =
+            (BOUND_DECADE_HI - BOUND_DECADE_LO) as usize * BOUNDS_PER_DECADE;
+        (0..=steps)
+            .map(|k| {
+                let exp = BOUND_DECADE_LO as f64
+                    + k as f64 / BOUNDS_PER_DECADE as f64;
+                10f64.powf(exp)
+            })
+            .collect()
+    })
+}
+
+/// Lock-free add of an f64 stored as bits in an `AtomicU64`.
+fn atomic_f64_add(cell: &AtomicU64, v: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let next = (f64::from_bits(cur) + v).to_bits();
+        match cell.compare_exchange_weak(
+            cur,
+            next,
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+        ) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+fn atomic_f64_extreme(cell: &AtomicU64, v: f64, want_max: bool) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let seen = f64::from_bits(cur);
+        let better = if want_max { v > seen } else { v < seen };
+        if !better {
+            return;
+        }
+        match cell.compare_exchange_weak(
+            cur,
+            v.to_bits(),
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+        ) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+/// Monotonic event count. Cloning shares the underlying cell.
+#[derive(Clone, Debug, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    /// Add one.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins float (occupancy %, wall seconds, joules).
+/// Cloning shares the underlying cell.
+#[derive(Clone, Debug, Default)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    /// Overwrite the value.
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Accumulate into the value.
+    pub fn add(&self, v: f64) {
+        atomic_f64_add(&self.0, v);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+#[derive(Debug)]
+struct HistCore {
+    /// One slot per bound plus a final overflow slot.
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_bits: AtomicU64,
+    min_bits: AtomicU64,
+    max_bits: AtomicU64,
+}
+
+impl HistCore {
+    fn new() -> HistCore {
+        let bounds = bucket_bounds();
+        HistCore {
+            buckets: (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+            min_bits: AtomicU64::new(f64::INFINITY.to_bits()),
+            max_bits: AtomicU64::new(f64::NEG_INFINITY.to_bits()),
+        }
+    }
+}
+
+/// Fixed-bucket histogram with exact count/sum/min/max and
+/// bucket-interpolated quantiles. Cloning shares the cells.
+#[derive(Clone, Debug)]
+pub struct Histogram(Arc<HistCore>);
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram(Arc::new(HistCore::new()))
+    }
+}
+
+impl Histogram {
+    /// A histogram not attached to any registry (report accumulators).
+    pub fn standalone() -> Histogram {
+        Histogram::default()
+    }
+
+    /// Record one sample. Negative and non-finite samples clamp to 0,
+    /// so a histogram can never be poisoned by a NaN.
+    pub fn observe(&self, v: f64) {
+        let v = if v.is_finite() && v > 0.0 { v } else { 0.0 };
+        let core = &self.0;
+        let bounds = bucket_bounds();
+        let idx = bounds.partition_point(|&b| b < v);
+        if let Some(slot) = core.buckets.get(idx) {
+            slot.fetch_add(1, Ordering::Relaxed);
+        }
+        core.count.fetch_add(1, Ordering::Relaxed);
+        atomic_f64_add(&core.sum_bits, v);
+        atomic_f64_extreme(&core.min_bits, v, false);
+        atomic_f64_extreme(&core.max_bits, v, true);
+    }
+
+    /// Samples recorded so far.
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    /// A point-in-time copy of the distribution.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let core = &self.0;
+        let count = core.count.load(Ordering::Relaxed);
+        let min = f64::from_bits(core.min_bits.load(Ordering::Relaxed));
+        let max = f64::from_bits(core.max_bits.load(Ordering::Relaxed));
+        HistogramSnapshot {
+            count,
+            sum: f64::from_bits(core.sum_bits.load(Ordering::Relaxed)),
+            min: if count == 0 { 0.0 } else { min },
+            max: if count == 0 { 0.0 } else { max },
+            bounds: bucket_bounds().to_vec(),
+            buckets: core
+                .buckets
+                .iter()
+                .map(|b| b.load(Ordering::Relaxed))
+                .collect(),
+        }
+    }
+}
+
+/// Frozen view of one histogram.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HistogramSnapshot {
+    /// Samples recorded.
+    pub count: u64,
+    /// Exact sum of samples.
+    pub sum: f64,
+    /// Exact smallest sample (0 when empty).
+    pub min: f64,
+    /// Exact largest sample (0 when empty).
+    pub max: f64,
+    /// Upper bucket bounds; `buckets` has one extra overflow slot.
+    pub bounds: Vec<f64>,
+    /// Per-bucket sample counts.
+    pub buckets: Vec<u64>,
+}
+
+impl HistogramSnapshot {
+    /// Exact mean (sum/count), 0 when empty.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Bucket-interpolated quantile, `q` in percent (50.0 = median).
+    /// Exact at q=100 and for single-sample series; always clamped to
+    /// the observed `[min, max]` and monotone in `q`.
+    pub fn quantile(&self, q: f64) -> f64 {
+        metrics::histogram_quantile(
+            &self.bounds,
+            &self.buckets,
+            self.min,
+            self.max,
+            q,
+        )
+    }
+
+    /// Serialise: exact stats, p50/p99, and the non-empty buckets as
+    /// `[upper_bound_or_null, count]` pairs.
+    pub fn to_json(&self) -> Json {
+        let mut cells = Vec::new();
+        for (i, &n) in self.buckets.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            let le = match self.bounds.get(i) {
+                Some(&b) => Json::Num(b),
+                None => Json::Null, // overflow bucket
+            };
+            cells.push(Json::Arr(vec![le, Json::Int(n as i64)]));
+        }
+        Json::obj()
+            .with("count", Json::Int(self.count as i64))
+            .with("sum", Json::Num(self.sum))
+            .with("min", Json::Num(self.min))
+            .with("max", Json::Num(self.max))
+            .with("mean", Json::Num(self.mean()))
+            .with("p50", Json::Num(self.quantile(50.0)))
+            .with("p99", Json::Num(self.quantile(99.0)))
+            .with("buckets", Json::Arr(cells))
+    }
+}
+
+#[derive(Default)]
+struct Inner {
+    counters: BTreeMap<String, Counter>,
+    gauges: BTreeMap<String, Gauge>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+/// The registry: named series, lock-cheap handles, ordered snapshots.
+#[derive(Default)]
+pub struct Registry {
+    inner: Mutex<Inner>,
+}
+
+impl Registry {
+    /// An empty registry (tests and scoped tracers; production code
+    /// uses [`crate::telemetry::global`]).
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    fn locked(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Get-or-register the counter `name`.
+    pub fn counter(&self, name: &str) -> Counter {
+        self.locked()
+            .counters
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    /// Get-or-register the gauge `name`.
+    pub fn gauge(&self, name: &str) -> Gauge {
+        self.locked()
+            .gauges
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    /// Get-or-register the histogram `name`.
+    pub fn histogram(&self, name: &str) -> Histogram {
+        self.locked()
+            .histograms
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    /// A frozen, name-ordered view of every registered series.
+    pub fn snapshot(&self) -> Snapshot {
+        let inner = self.locked();
+        Snapshot {
+            counters: inner
+                .counters
+                .iter()
+                .map(|(k, v)| (k.clone(), v.get()))
+                .collect(),
+            gauges: inner
+                .gauges
+                .iter()
+                .map(|(k, v)| (k.clone(), v.get()))
+                .collect(),
+            histograms: inner
+                .histograms
+                .iter()
+                .map(|(k, v)| (k.clone(), v.snapshot()))
+                .collect(),
+        }
+    }
+}
+
+/// Point-in-time view of a [`Registry`], names sorted.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Snapshot {
+    /// `(name, value)` for every counter, name-ordered.
+    pub counters: Vec<(String, u64)>,
+    /// `(name, value)` for every gauge, name-ordered.
+    pub gauges: Vec<(String, f64)>,
+    /// `(name, view)` for every histogram, name-ordered.
+    pub histograms: Vec<(String, HistogramSnapshot)>,
+}
+
+impl Snapshot {
+    /// Serialise under the [`METRICS_SCHEMA`] envelope.
+    pub fn to_json(&self) -> Json {
+        let mut counters = Json::obj();
+        for (name, v) in &self.counters {
+            counters.set(name, Json::Int(*v as i64));
+        }
+        let mut gauges = Json::obj();
+        for (name, v) in &self.gauges {
+            gauges.set(name, Json::Num(*v));
+        }
+        let mut histograms = Json::obj();
+        for (name, h) in &self.histograms {
+            histograms.set(name, h.to_json());
+        }
+        Json::obj()
+            .with("schema", Json::Str(METRICS_SCHEMA.to_string()))
+            .with("counters", counters)
+            .with("gauges", gauges)
+            .with("histograms", histograms)
+    }
+
+    /// Human-readable table for `restream report --metrics`.
+    pub fn summary(&self) -> String {
+        let mut out = String::new();
+        out.push_str("counters:\n");
+        for (name, v) in &self.counters {
+            out.push_str(&format!("  {name:<32} {v}\n"));
+        }
+        out.push_str("gauges:\n");
+        for (name, v) in &self.gauges {
+            out.push_str(&format!("  {name:<32} {v:.4}\n"));
+        }
+        out.push_str("histograms:\n");
+        for (name, h) in &self.histograms {
+            out.push_str(&format!(
+                "  {name:<32} n={} mean={:.1} p50={:.1} p99={:.1} max={:.1}\n",
+                h.count,
+                h.mean(),
+                h.quantile(50.0),
+                h.quantile(99.0),
+                h.max,
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_share_cells_across_clones() {
+        let reg = Registry::new();
+        let c = reg.counter("serve.requests");
+        reg.counter("serve.requests").add(4);
+        c.inc();
+        assert_eq!(reg.counter("serve.requests").get(), 5);
+
+        let g = reg.gauge("serve.wall_s");
+        g.set(1.5);
+        reg.gauge("serve.wall_s").add(0.25);
+        assert_eq!(g.get(), 1.75);
+    }
+
+    #[test]
+    fn histogram_keeps_exact_count_sum_min_max() {
+        let h = Histogram::standalone();
+        for v in [3.0, 1.0, 12.0, 8.0] {
+            h.observe(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 4);
+        assert_eq!(s.sum, 24.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 12.0);
+        assert_eq!(s.mean(), 6.0);
+        assert_eq!(s.buckets.iter().sum::<u64>(), 4);
+    }
+
+    #[test]
+    fn histogram_quantiles_are_monotone_and_clamped() {
+        let h = Histogram::standalone();
+        for v in [5.0, 50.0, 500.0, 5000.0, 50000.0] {
+            h.observe(v);
+        }
+        let s = h.snapshot();
+        let mut prev = f64::NEG_INFINITY;
+        for q in [0.0, 10.0, 25.0, 50.0, 75.0, 90.0, 99.0, 100.0] {
+            let v = s.quantile(q);
+            assert!(v >= prev, "quantile({q}) = {v} < {prev}");
+            assert!((s.min..=s.max).contains(&v));
+            prev = v;
+        }
+        assert_eq!(s.quantile(100.0), 50000.0);
+    }
+
+    #[test]
+    fn single_sample_quantiles_are_exact() {
+        let h = Histogram::standalone();
+        h.observe(42.0);
+        let s = h.snapshot();
+        assert_eq!(s.quantile(50.0), 42.0);
+        assert_eq!(s.quantile(99.0), 42.0);
+    }
+
+    #[test]
+    fn hostile_samples_clamp_to_zero() {
+        let h = Histogram::standalone();
+        h.observe(f64::NAN);
+        h.observe(-3.0);
+        h.observe(f64::INFINITY);
+        let s = h.snapshot();
+        assert_eq!(s.count, 3);
+        assert_eq!(s.min, 0.0);
+        assert_eq!(s.max, 0.0);
+        assert_eq!(s.quantile(99.0), 0.0);
+    }
+
+    #[test]
+    fn empty_histogram_snapshot_is_all_zeros() {
+        let s = Histogram::standalone().snapshot();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.min, 0.0);
+        assert_eq!(s.max, 0.0);
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.quantile(50.0), 0.0);
+    }
+
+    #[test]
+    fn snapshots_come_out_name_ordered() {
+        let reg = Registry::new();
+        // register in scrambled order
+        for name in ["zeta", "alpha", "mid"] {
+            reg.counter(name).inc();
+            reg.gauge(&format!("g.{name}")).set(1.0);
+            reg.histogram(&format!("h.{name}")).observe(1.0);
+        }
+        let snap = reg.snapshot();
+        let names: Vec<&str> =
+            snap.counters.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(names, ["alpha", "mid", "zeta"]);
+        // stable: a second snapshot of unchanged state is identical
+        assert_eq!(reg.snapshot(), snap);
+        assert_eq!(
+            reg.snapshot().to_json().to_string(),
+            snap.to_json().to_string()
+        );
+    }
+
+    #[test]
+    fn snapshot_json_round_trips() {
+        let reg = Registry::new();
+        reg.counter("serve.requests").add(7);
+        reg.gauge("serve.wall_s").set(0.125);
+        let h = reg.histogram("serve.total_us");
+        h.observe(10.0);
+        h.observe(90.0);
+        let text = reg.snapshot().to_json().to_string();
+        let doc = super::super::json::parse(&text).expect("valid json");
+        assert_eq!(doc.to_string(), text);
+        assert_eq!(
+            doc.get("schema").and_then(Json::as_str),
+            Some(METRICS_SCHEMA)
+        );
+        assert_eq!(
+            doc.get("counters")
+                .and_then(|c| c.get("serve.requests"))
+                .and_then(Json::as_i64),
+            Some(7)
+        );
+        let hist = doc
+            .get("histograms")
+            .and_then(|h| h.get("serve.total_us"))
+            .expect("histogram present");
+        assert_eq!(hist.get("count").and_then(Json::as_i64), Some(2));
+        assert_eq!(hist.get("sum").and_then(Json::as_f64), Some(100.0));
+    }
+}

@@ -1,0 +1,504 @@
+//! Request-scoped tracing: trace ids minted at `Client::submit`,
+//! spans recorded at the reply path into a bounded ring buffer, and a
+//! chrome `trace_event`-compatible exporter (`chrome://tracing` /
+//! Perfetto "JSON Array with metadata" flavour).
+//!
+//! Everything here *observes* — span recording happens after the
+//! compute result exists and never feeds a value back into batching,
+//! dispatch, routing, or the kernels, which is why tracing on vs. off
+//! is bitwise-identical in all numeric outputs (pinned by
+//! `tests/telemetry_determinism.rs`). All wall-clock reads route
+//! through the sanctioned [`metrics::Stopwatch`] doorway, keeping the
+//! lint D2 contract intact.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::json::Json;
+use super::registry::{Counter, Histogram, Registry};
+use crate::metrics;
+
+/// Default ring capacity: enough for every request of a replay run
+/// while bounding a long-running serve to a few MB.
+pub const DEFAULT_TRACE_CAPACITY: usize = 65_536;
+
+/// What a [`TraceEvent`] describes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// One served request: queued → batched → computed → replied.
+    Request,
+    /// One dispatched batch (its compute window).
+    Batch,
+    /// A cluster routing decision (instant event).
+    Route,
+    /// A coarse phase (training epochs, stage summaries).
+    Phase,
+}
+
+/// One recorded span/instant. Timestamps are microseconds since the
+/// tracer was created.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    /// Event class.
+    pub kind: EventKind,
+    /// App (or phase) name the event belongs to.
+    pub name: Arc<str>,
+    /// Request trace id, 0 when the event is not request-scoped.
+    pub trace_id: u64,
+    /// Span start, µs since tracer start.
+    pub ts_us: f64,
+    /// Span duration in µs (0 for instants).
+    pub dur_us: f64,
+    /// Request split: time spent queued.
+    pub queue_us: f64,
+    /// Request split: time spent waiting for the batch to fill.
+    pub batch_us: f64,
+    /// Request split: time spent in compute.
+    pub compute_us: f64,
+    /// Batch size (Batch) or chip index (Route); 0 otherwise.
+    pub n: u64,
+}
+
+/// The tracing backend: mints ids, owns the bounded ring, and feeds
+/// the latency histograms of its [`Registry`].
+pub struct Tracer {
+    anchor: metrics::Stopwatch,
+    capacity: usize,
+    seq: AtomicU64,
+    dropped: AtomicU64,
+    requests: AtomicU64,
+    ring: Mutex<VecDeque<TraceEvent>>,
+    c_requests: Counter,
+    c_batches: Counter,
+    c_routed: Counter,
+    h_queue_us: Histogram,
+    h_compute_us: Histogram,
+    h_total_us: Histogram,
+    h_batch_size: Histogram,
+}
+
+impl std::fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Tracer")
+            .field("capacity", &self.capacity)
+            .field("spans", &self.spans())
+            .field("dropped", &self.dropped())
+            .finish()
+    }
+}
+
+impl Tracer {
+    /// A tracer whose aggregate series live in `registry`. Capacity 0
+    /// is clamped to 1 so the ring always holds the latest event.
+    pub fn new(capacity: usize, registry: &Registry) -> Arc<Tracer> {
+        Arc::new(Tracer {
+            anchor: metrics::Stopwatch::start(),
+            capacity: capacity.max(1),
+            seq: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            requests: AtomicU64::new(0),
+            ring: Mutex::new(VecDeque::new()),
+            c_requests: registry.counter("trace.requests"),
+            c_batches: registry.counter("trace.batches"),
+            c_routed: registry.counter("trace.routed"),
+            h_queue_us: registry.histogram("serve.queue_us"),
+            h_compute_us: registry.histogram("serve.compute_us"),
+            h_total_us: registry.histogram("serve.total_us"),
+            h_batch_size: registry.histogram("serve.batch_size"),
+        })
+    }
+
+    /// Mint the next trace id (ids start at 1; 0 means "untraced").
+    pub fn mint(&self) -> u64 {
+        self.seq.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Microseconds since the tracer was created.
+    pub fn now_us(&self) -> f64 {
+        self.anchor.elapsed_s() * 1e6
+    }
+
+    fn push(&self, ev: TraceEvent) {
+        let mut ring = self.ring.lock().unwrap_or_else(|e| e.into_inner());
+        if ring.len() >= self.capacity {
+            ring.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.push_back(ev);
+    }
+
+    pub(super) fn record_request(
+        &self,
+        app: &Arc<str>,
+        trace_id: u64,
+        queue_us: f64,
+        batch_us: f64,
+        compute_us: f64,
+    ) {
+        let total_us = queue_us + batch_us + compute_us;
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.c_requests.inc();
+        self.h_queue_us.observe(queue_us);
+        self.h_compute_us.observe(compute_us);
+        self.h_total_us.observe(total_us);
+        self.push(TraceEvent {
+            kind: EventKind::Request,
+            name: app.clone(),
+            trace_id,
+            ts_us: (self.now_us() - total_us).max(0.0),
+            dur_us: total_us,
+            queue_us,
+            batch_us,
+            compute_us,
+            n: 1,
+        });
+    }
+
+    pub(super) fn record_batch(
+        &self,
+        app: &Arc<str>,
+        n: usize,
+        compute_us: f64,
+    ) {
+        self.c_batches.inc();
+        self.h_batch_size.observe(n as f64);
+        self.push(TraceEvent {
+            kind: EventKind::Batch,
+            name: app.clone(),
+            trace_id: 0,
+            ts_us: (self.now_us() - compute_us).max(0.0),
+            dur_us: compute_us,
+            queue_us: 0.0,
+            batch_us: 0.0,
+            compute_us,
+            n: n as u64,
+        });
+    }
+
+    pub(super) fn record_route(
+        &self,
+        app: &Arc<str>,
+        trace_id: u64,
+        chip: usize,
+    ) {
+        self.c_routed.inc();
+        self.push(TraceEvent {
+            kind: EventKind::Route,
+            name: app.clone(),
+            trace_id,
+            ts_us: self.now_us(),
+            dur_us: 0.0,
+            queue_us: 0.0,
+            batch_us: 0.0,
+            compute_us: 0.0,
+            n: chip as u64,
+        });
+    }
+
+    /// Record a coarse phase span (training epochs, report windows).
+    pub fn phase(&self, name: &str, ts_us: f64, dur_us: f64) {
+        self.push(TraceEvent {
+            kind: EventKind::Phase,
+            name: Arc::from(name),
+            trace_id: 0,
+            ts_us: ts_us.max(0.0),
+            dur_us: dur_us.max(0.0),
+            queue_us: 0.0,
+            batch_us: 0.0,
+            compute_us: 0.0,
+            n: 0,
+        });
+    }
+
+    /// Request spans recorded over the tracer's lifetime (not capped
+    /// by the ring).
+    pub fn spans(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    /// Events evicted from the ring (oldest-dropped).
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Copy of the retained events, oldest first.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.ring
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .iter()
+            .cloned()
+            .collect()
+    }
+
+    /// Export as a chrome `trace_event` document. Thread ids are
+    /// assigned from the sorted set of app names, so the export is
+    /// deterministic given the same events.
+    pub fn to_chrome_json(&self) -> Json {
+        let events = self.events();
+        let mut tids: BTreeMap<Arc<str>, i64> = BTreeMap::new();
+        for ev in &events {
+            let next = tids.len() as i64 + 1;
+            tids.entry(ev.name.clone()).or_insert(next);
+        }
+        // re-number in name order for stability across runs
+        for (i, tid) in tids.values_mut().enumerate() {
+            *tid = i as i64 + 1;
+        }
+        let mut out = Vec::with_capacity(events.len() + tids.len());
+        for (name, tid) in &tids {
+            out.push(
+                Json::obj()
+                    .with("name", Json::Str("thread_name".to_string()))
+                    .with("ph", Json::Str("M".to_string()))
+                    .with("pid", Json::Int(1))
+                    .with("tid", Json::Int(*tid))
+                    .with(
+                        "args",
+                        Json::obj()
+                            .with("name", Json::Str(name.to_string())),
+                    ),
+            );
+        }
+        for ev in &events {
+            let tid = Json::Int(*tids.get(&ev.name).unwrap_or(&0));
+            let base = Json::obj()
+                .with("name", Json::Str(ev.name.to_string()))
+                .with("pid", Json::Int(1))
+                .with("tid", tid)
+                .with("ts", Json::Num(ev.ts_us));
+            let item = match ev.kind {
+                EventKind::Request => base
+                    .with("ph", Json::Str("X".to_string()))
+                    .with("cat", Json::Str("request".to_string()))
+                    .with("dur", Json::Num(ev.dur_us))
+                    .with(
+                        "args",
+                        Json::obj()
+                            .with("trace_id", Json::Int(ev.trace_id as i64))
+                            .with("queue_us", Json::Num(ev.queue_us))
+                            .with("batch_us", Json::Num(ev.batch_us))
+                            .with(
+                                "compute_us",
+                                Json::Num(ev.compute_us),
+                            ),
+                    ),
+                EventKind::Batch => base
+                    .with("ph", Json::Str("X".to_string()))
+                    .with("cat", Json::Str("dispatch".to_string()))
+                    .with("dur", Json::Num(ev.dur_us))
+                    .with(
+                        "args",
+                        Json::obj().with("n", Json::Int(ev.n as i64)),
+                    ),
+                EventKind::Route => base
+                    .with("ph", Json::Str("i".to_string()))
+                    .with("cat", Json::Str("route".to_string()))
+                    .with("s", Json::Str("t".to_string()))
+                    .with(
+                        "args",
+                        Json::obj()
+                            .with("trace_id", Json::Int(ev.trace_id as i64))
+                            .with("chip", Json::Int(ev.n as i64)),
+                    ),
+                EventKind::Phase => base
+                    .with("ph", Json::Str("X".to_string()))
+                    .with("cat", Json::Str("train".to_string()))
+                    .with("dur", Json::Num(ev.dur_us))
+                    .with("args", Json::obj()),
+            };
+            out.push(item);
+        }
+        Json::obj()
+            .with("displayTimeUnit", Json::Str("ms".to_string()))
+            .with("traceEvents", Json::Arr(out))
+    }
+
+    /// Write the chrome trace to `path`.
+    pub fn write_chrome(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_chrome_json().to_string())
+    }
+}
+
+/// Cheap cloneable recorder handed to one app's reply path. When the
+/// tracer is absent every method is a no-op on an `Option` — the
+/// disabled path does no clock reads, no allocation, no locking.
+#[derive(Clone, Debug, Default)]
+pub struct TraceSink {
+    inner: Option<(Arc<Tracer>, Arc<str>)>,
+}
+
+impl TraceSink {
+    /// The no-op sink.
+    pub fn disabled() -> TraceSink {
+        TraceSink { inner: None }
+    }
+
+    /// A sink recording under `app`, or the no-op sink when tracing
+    /// is off.
+    pub fn for_app(tracer: Option<Arc<Tracer>>, app: &str) -> TraceSink {
+        TraceSink {
+            inner: tracer.map(|t| (t, Arc::from(app))),
+        }
+    }
+
+    /// Whether this sink records anywhere.
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Record one replied request with its latency split.
+    pub fn request(
+        &self,
+        trace_id: Option<u64>,
+        queue_us: f64,
+        batch_us: f64,
+        compute_us: f64,
+    ) {
+        if let Some((tracer, app)) = &self.inner {
+            tracer.record_request(
+                app,
+                trace_id.unwrap_or(0),
+                queue_us,
+                batch_us,
+                compute_us,
+            );
+        }
+    }
+
+    /// Record one dispatched batch of `n` requests.
+    pub fn batch(&self, n: usize, compute_us: f64) {
+        if let Some((tracer, app)) = &self.inner {
+            tracer.record_batch(app, n, compute_us);
+        }
+    }
+
+    /// Record a cluster routing decision.
+    pub fn route(&self, trace_id: Option<u64>, chip: usize) {
+        if let Some((tracer, app)) = &self.inner {
+            tracer.record_route(app, trace_id.unwrap_or(0), chip);
+        }
+    }
+
+    /// Mint a trace id, or `None` when tracing is off.
+    pub fn mint(&self) -> Option<u64> {
+        self.inner.as_ref().map(|(t, _)| t.mint())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn request_events(t: &Tracer) -> Vec<TraceEvent> {
+        t.events()
+            .into_iter()
+            .filter(|e| e.kind == EventKind::Request)
+            .collect()
+    }
+
+    #[test]
+    fn sink_records_requests_batches_and_routes() {
+        let reg = Registry::new();
+        let tracer = Tracer::new(16, &reg);
+        let sink = TraceSink::for_app(Some(tracer.clone()), "iris");
+        assert!(sink.is_enabled());
+
+        let id = sink.mint();
+        assert_eq!(id, Some(1));
+        sink.route(id, 3);
+        sink.batch(2, 40.0);
+        sink.request(id, 10.0, 5.0, 40.0);
+        sink.request(None, 1.0, 1.0, 1.0);
+
+        assert_eq!(tracer.spans(), 2);
+        assert_eq!(tracer.dropped(), 0);
+        let reqs = request_events(&tracer);
+        assert_eq!(reqs.len(), 2);
+        assert_eq!(reqs[0].trace_id, 1);
+        assert_eq!(reqs[0].dur_us, 55.0);
+        assert_eq!(reqs[1].trace_id, 0);
+
+        let snap = reg.snapshot();
+        let get = |n: &str| {
+            snap.counters
+                .iter()
+                .find(|(k, _)| k == n)
+                .map(|(_, v)| *v)
+        };
+        assert_eq!(get("trace.requests"), Some(2));
+        assert_eq!(get("trace.batches"), Some(1));
+        assert_eq!(get("trace.routed"), Some(1));
+    }
+
+    #[test]
+    fn disabled_sink_is_a_no_op() {
+        let sink = TraceSink::disabled();
+        assert!(!sink.is_enabled());
+        assert_eq!(sink.mint(), None);
+        sink.request(None, 1.0, 1.0, 1.0);
+        sink.batch(4, 1.0);
+        sink.route(None, 0);
+        // Default is the disabled sink too.
+        assert!(!TraceSink::default().is_enabled());
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_counts() {
+        let reg = Registry::new();
+        let tracer = Tracer::new(8, &reg);
+        let sink = TraceSink::for_app(Some(tracer.clone()), "kdd");
+        for _ in 0..20 {
+            let id = sink.mint();
+            sink.request(id, 1.0, 0.0, 1.0);
+        }
+        assert_eq!(tracer.spans(), 20);
+        assert_eq!(tracer.dropped(), 12);
+        let reqs = request_events(&tracer);
+        assert_eq!(reqs.len(), 8);
+        // oldest dropped: ids 13..=20 remain, in order
+        let ids: Vec<u64> = reqs.iter().map(|e| e.trace_id).collect();
+        assert_eq!(ids, (13..=20).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn chrome_export_is_valid_and_complete() {
+        let reg = Registry::new();
+        let tracer = Tracer::new(64, &reg);
+        let a = TraceSink::for_app(Some(tracer.clone()), "iris");
+        let b = TraceSink::for_app(Some(tracer.clone()), "adult");
+        a.request(a.mint(), 1.0, 2.0, 3.0);
+        b.request(b.mint(), 4.0, 5.0, 6.0);
+        b.batch(2, 6.0);
+        b.route(Some(9), 1);
+        tracer.phase("epoch0", 0.0, 100.0);
+
+        let text = tracer.to_chrome_json().to_string();
+        let doc = super::super::json::parse(&text).expect("valid json");
+        assert_eq!(
+            doc.get("displayTimeUnit").and_then(Json::as_str),
+            Some("ms")
+        );
+        let evs = doc.get("traceEvents").expect("events").items();
+        let cat = |c: &str| {
+            evs.iter()
+                .filter(|e| {
+                    e.get("cat").and_then(Json::as_str) == Some(c)
+                })
+                .count()
+        };
+        assert_eq!(cat("request"), 2);
+        assert_eq!(cat("dispatch"), 1);
+        assert_eq!(cat("route"), 1);
+        assert_eq!(cat("train"), 1);
+        // thread metadata rows name every distinct track
+        let meta = evs
+            .iter()
+            .filter(|e| {
+                e.get("ph").and_then(Json::as_str) == Some("M")
+            })
+            .count();
+        assert_eq!(meta, 3); // iris, adult, epoch0
+    }
+}

@@ -57,7 +57,7 @@ fn concurrent_requests_match_single_sample_sequential() {
                 let cfg = ServeConfig {
                     max_batch,
                     max_wait: Duration::from_millis(2),
-                    queue_capacity: None,
+                    ..ServeConfig::default()
                 };
                 let server = Server::start(
                     Engine::native().with_workers(2),

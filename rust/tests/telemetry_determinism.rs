@@ -1,0 +1,265 @@
+//! Telemetry determinism: tracing must be a pure *observer*.
+//!
+//! The observability layer (PR 10) records spans and metrics strictly
+//! after compute completes and never feeds a recorded value back into
+//! batching, dispatch, routing, or the kernels. This suite pins the
+//! resulting contract:
+//!
+//! * **Bit-identity** — every served output is bitwise-identical with
+//!   tracing on or off, across apps × exec modes × worker counts, and
+//!   across all three serving granularities (dedicated server,
+//!   multi-tenant chip, multi-chip cluster).
+//! * **Completeness** — the chrome `trace_event` export holds exactly
+//!   one request span per request served, and one route instant per
+//!   cluster-routed request.
+//! * **Boundedness** — the span ring drops oldest and counts what it
+//!   dropped; the span total is not capped.
+//! * **Stability** — metrics snapshots serialise to the same bytes for
+//!   the same state, whatever order the series were registered in.
+
+use std::time::Duration;
+
+use restream::chip::{ChipApp, ChipConfig, ChipScheduler};
+use restream::cluster::{Cluster, ClusterApp, ClusterConfig};
+use restream::config::{apps, Network};
+use restream::coordinator::{init_conductances, Engine, ExecMode};
+use restream::runtime::ArrayF32;
+use restream::serve::{ServeConfig, Server, Service};
+use restream::telemetry::{json, Json, Registry, Tracer};
+use restream::testing::{drive_service, Rng};
+
+const APPS: [&str; 3] = ["iris_ae", "iris_class", "kdd_ae"];
+const SAMPLES: usize = 32;
+
+struct Fixture {
+    net: Network,
+    params: Vec<ArrayF32>,
+    xs: Vec<Vec<f32>>,
+}
+
+fn fixture(app: &str) -> Fixture {
+    let net = apps::network(app).unwrap().clone();
+    let params = init_conductances(net.layers, 11);
+    let mut rng = Rng::seeded(0x7E1E ^ net.layers[0] as u64);
+    let xs: Vec<Vec<f32>> = (0..SAMPLES)
+        .map(|_| rng.vec_uniform(net.layers[0], -0.5, 0.5))
+        .collect();
+    Fixture { net, params, xs }
+}
+
+fn serve_cfg(trace: Option<std::sync::Arc<Tracer>>) -> ServeConfig {
+    ServeConfig {
+        max_wait: Duration::from_millis(2),
+        trace,
+        ..ServeConfig::default()
+    }
+}
+
+/// Serve `xs` through a dedicated server at the given engine shape,
+/// optionally traced, and return the outputs in request order.
+fn run_server(
+    f: &Fixture,
+    app: &str,
+    workers: usize,
+    exec: ExecMode,
+    trace: Option<std::sync::Arc<Tracer>>,
+    clients: usize,
+) -> Vec<Vec<f32>> {
+    let engine = Engine::native().with_workers(workers).with_exec(exec);
+    let server = Server::start(
+        engine,
+        f.net.clone(),
+        f.params.clone(),
+        serve_cfg(trace),
+    );
+    let outs = drive_service(&server, app, &f.xs, clients);
+    server.shutdown();
+    outs
+}
+
+#[test]
+fn tracing_is_bitwise_invisible_in_every_mode() {
+    for app in APPS {
+        let f = fixture(app);
+        for &workers in &[1usize, 4] {
+            for &exec in &[ExecMode::DataParallel, ExecMode::Pipelined] {
+                let plain =
+                    run_server(&f, app, workers, exec, None, 4);
+                let reg = Registry::new();
+                let tracer = Tracer::new(4096, &reg);
+                let traced = run_server(
+                    &f,
+                    app,
+                    workers,
+                    exec,
+                    Some(tracer.clone()),
+                    4,
+                );
+                assert_eq!(
+                    plain, traced,
+                    "{app}: tracing changed outputs at workers={workers}, \
+                     exec={exec}"
+                );
+                // one span per request, none lost at this capacity
+                assert_eq!(tracer.spans(), SAMPLES as u64);
+                assert_eq!(tracer.dropped(), 0);
+            }
+        }
+    }
+}
+
+#[test]
+fn chip_and_cluster_traces_hold_one_span_per_request() {
+    let fixtures: Vec<Fixture> = APPS.iter().map(|a| fixture(a)).collect();
+    // Baseline: untraced multi-tenant chip.
+    let chip_apps = |fs: &[Fixture]| -> Vec<ChipApp> {
+        fs.iter()
+            .map(|f| ChipApp { net: f.net.clone(), params: f.params.clone() })
+            .collect()
+    };
+    let cfg = |trace| ChipConfig {
+        max_wait: Duration::from_millis(2),
+        trace,
+        ..ChipConfig::default()
+    };
+    let chip =
+        ChipScheduler::start(Engine::native(), chip_apps(&fixtures), cfg(None))
+            .unwrap();
+    let expect: Vec<Vec<Vec<f32>>> = fixtures
+        .iter()
+        .enumerate()
+        .map(|(a, f)| drive_service(&chip, APPS[a], &f.xs, 4))
+        .collect();
+    chip.shutdown();
+
+    // Traced chip: identical outputs, one request span per request.
+    let reg = Registry::new();
+    let tracer = Tracer::new(4096, &reg);
+    let chip = ChipScheduler::start(
+        Engine::native(),
+        chip_apps(&fixtures),
+        cfg(Some(tracer.clone())),
+    )
+    .unwrap();
+    for (a, f) in fixtures.iter().enumerate() {
+        let outs = drive_service(&chip, APPS[a], &f.xs, 4);
+        assert_eq!(expect[a], outs, "{}: traced chip diverged", APPS[a]);
+    }
+    let report = chip.shutdown();
+    assert_eq!(report.total_requests(), 3 * SAMPLES);
+    assert_eq!(tracer.spans(), 3 * SAMPLES as u64);
+
+    let doc_text = tracer.to_chrome_json().to_string();
+    let doc = json::parse(&doc_text).expect("chrome export parses");
+    let evs = doc.get("traceEvents").expect("traceEvents").items();
+    let cat = |c: &str| {
+        evs.iter()
+            .filter(|e| e.get("cat").and_then(Json::as_str) == Some(c))
+            .count()
+    };
+    assert_eq!(cat("request"), 3 * SAMPLES, "one span per served request");
+    assert_eq!(cat("route"), 0, "no cluster, no route instants");
+    // every request span names a distinct minted trace id
+    let mut ids: Vec<i64> = evs
+        .iter()
+        .filter(|e| e.get("cat").and_then(Json::as_str) == Some("request"))
+        .filter_map(|e| {
+            e.get("args")
+                .and_then(|a| a.get("trace_id"))
+                .and_then(Json::as_i64)
+        })
+        .collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), 3 * SAMPLES, "trace ids must be unique");
+    assert!(ids.iter().all(|&id| id > 0), "served spans carry real ids");
+
+    // Traced cluster: identical outputs again, plus one route instant
+    // per request.
+    let reg = Registry::new();
+    let tracer = Tracer::new(4096, &reg);
+    let hosted: Vec<ClusterApp> = fixtures
+        .iter()
+        .map(|f| {
+            ClusterApp::new(f.net.clone(), f.params.clone()).replicated(2)
+        })
+        .collect();
+    let cluster = Cluster::start(
+        hosted,
+        ClusterConfig { chips: 2, chip: cfg(Some(tracer.clone())) },
+        |_chip| Ok(Engine::native()),
+    )
+    .unwrap();
+    for (a, f) in fixtures.iter().enumerate() {
+        let outs = drive_service(&cluster, APPS[a], &f.xs, 4);
+        assert_eq!(expect[a], outs, "{}: traced cluster diverged", APPS[a]);
+    }
+    let report = cluster.shutdown();
+    assert_eq!(report.total_requests(), 3 * SAMPLES);
+    assert_eq!(tracer.spans(), 3 * SAMPLES as u64);
+    let doc_text = tracer.to_chrome_json().to_string();
+    let doc = json::parse(&doc_text).expect("chrome export parses");
+    let evs = doc.get("traceEvents").expect("traceEvents").items();
+    let cat = |c: &str| {
+        evs.iter()
+            .filter(|e| e.get("cat").and_then(Json::as_str) == Some(c))
+            .count()
+    };
+    assert_eq!(cat("request"), 3 * SAMPLES);
+    assert_eq!(cat("route"), 3 * SAMPLES, "every submit routes once");
+}
+
+#[test]
+fn trace_ring_overflow_drops_oldest_and_counts() {
+    let f = fixture(APPS[0]);
+    let reg = Registry::new();
+    let tracer = Tracer::new(4, &reg);
+    let server = Server::start(
+        Engine::native(),
+        f.net.clone(),
+        f.params.clone(),
+        serve_cfg(Some(tracer.clone())),
+    );
+    drive_service(&server, APPS[0], &f.xs, 4);
+    let report = server.shutdown();
+    assert_eq!(report.requests, SAMPLES);
+    // the span total is not capped by the ring…
+    assert_eq!(tracer.spans(), SAMPLES as u64);
+    // …the retained window is…
+    assert_eq!(tracer.events().len(), 4);
+    // …and every evicted event (request + batch spans share the ring)
+    // is counted.
+    assert_eq!(
+        tracer.dropped(),
+        (report.requests + report.batches) as u64 - 4
+    );
+}
+
+#[test]
+fn snapshots_are_ordered_and_stable() {
+    // Two registries fed the same state in different registration
+    // orders must serialise to the same bytes.
+    let a = Registry::new();
+    a.counter("serve.requests").add(7);
+    a.counter("chip.swaps").add(2);
+    a.gauge("serve.wall_s").set(1.5);
+    a.histogram("serve.total_us").observe(120.0);
+
+    let b = Registry::new();
+    b.histogram("serve.total_us").observe(120.0);
+    b.gauge("serve.wall_s").set(1.5);
+    b.counter("chip.swaps").add(2);
+    b.counter("serve.requests").add(7);
+
+    let ja = a.snapshot().to_json().to_string();
+    let jb = b.snapshot().to_json().to_string();
+    assert_eq!(ja, jb, "registration order leaked into the snapshot");
+
+    // and the document round-trips byte-stably
+    let doc = json::parse(&ja).expect("snapshot parses");
+    assert_eq!(doc.to_string(), ja);
+    assert_eq!(
+        doc.get("schema").and_then(Json::as_str),
+        Some(restream::telemetry::METRICS_SCHEMA)
+    );
+}
